@@ -1,0 +1,85 @@
+//! DNN inference (paper Fig 10): map the MLP's four fully-connected
+//! layers onto all five accelerator styles with FLASH, then actually run
+//! a batch-128 inference through the AOT JAX+Pallas MLP artifact on the
+//! PJRT runtime — the workload the projected numbers describe.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dnn_inference
+//! ```
+
+use std::time::Instant;
+
+use flash_gemm::arch::HwConfig;
+use flash_gemm::runtime::{default_artifacts_dir, MlpRunner, Runtime};
+use flash_gemm::workloads::MlpSpec;
+
+fn rand_vec(n: usize, scale: f32, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            (((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5)
+                * scale
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- Fig 10: projected runtime/energy per FC layer per style ----
+    let spec = MlpSpec::paper_mnist();
+    println!(
+        "MLP {:?}, batch {} ({} MACs/inference)\n",
+        spec.dims,
+        spec.batch,
+        spec.total_macs()
+    );
+    let t = flash_gemm::experiments::fig10(&HwConfig::edge());
+    println!("{}", t.render());
+
+    // ---- real inference through the AOT artifact ----
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("(skipping real inference: run `make artifacts` first)");
+        return Ok(());
+    }
+    let mut rt = Runtime::load(&dir)?;
+    let d = MlpRunner::DIMS;
+    let batch = MlpRunner::BATCH as usize;
+    let x = rand_vec(batch * d[0] as usize, 1.0, 11);
+    let ws: Vec<Vec<f32>> = (0..4)
+        .map(|i| rand_vec((d[i] * d[i + 1]) as usize, 0.1, 20 + i as u64))
+        .collect();
+
+    // warm-up compiles the executable once (off the request path)
+    rt.warm("mlp")?;
+    let iters = 10;
+    let t0 = Instant::now();
+    let mut logits = Vec::new();
+    for _ in 0..iters {
+        logits = MlpRunner::forward(&mut rt, &x, &ws)?;
+    }
+    let per_batch = t0.elapsed() / iters;
+    let macs = MlpSpec::paper_mnist().total_macs();
+    println!(
+        "real PJRT inference: {iters} batches of {batch}, {per_batch:?}/batch, {:.2} GFLOP/s",
+        macs as f64 / per_batch.as_secs_f64() / 1e9
+    );
+    assert_eq!(logits.len(), batch * 10);
+
+    // batch accuracy proxy: argmax distribution sanity
+    let mut class_counts = [0usize; 10];
+    for row in logits.chunks(10) {
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        class_counts[arg] += 1;
+    }
+    println!("argmax distribution over batch: {class_counts:?}");
+    println!("OK — Fig 10 projections + real MLP inference complete.");
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT pipeline: lower L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Python runs ONCE (``make artifacts``); the Rust binary is self-contained
+afterwards. HLO **text** is the interchange format, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+
+Artifacts
+---------
+* ``gemm_tile_{t}.hlo.txt``  — tile FMA unit ``acc + a @ b`` for each
+  square tile size the Rust tiled executor may choose (t in TILE_SIZES).
+* ``gemm_full_{m}x{k}x{n}.hlo.txt`` — whole small GEMMs for validation.
+* ``mlp.hlo.txt``            — Fig 10 MLP forward (batch 128).
+* ``manifest.json``          — machine-readable index (name, path, arg
+  shapes/dtypes) consumed by ``rust/src/runtime/artifacts.rs``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Square tile shapes offered to the Rust executor. Small enough that
+# interpret-mode execution on CPU is fast, MXU-aligned for the TPU story.
+# 128 added by the §Perf pass: it cuts the executor's PJRT dispatch count
+# 8x for 256-class workloads (dispatch, not FLOPs, dominates per call).
+TILE_SIZES = (16, 32, 64, 128)
+
+# (M, K, N) whole-GEMM validation artifacts.
+FULL_GEMMS = ((32, 32, 32), (64, 48, 80), (128, 128, 128))
+
+MLP_BATCH = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg_meta(specs):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+
+    def emit(name: str, fn, specs):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": name, "path": path, "args": _arg_meta(specs)}
+        )
+        print(f"  {name}: {len(text)} chars, {len(specs)} args")
+
+    for t in TILE_SIZES:
+        emit(
+            f"gemm_tile_{t}",
+            model.gemm_tile_fma,
+            [_spec((t, t)), _spec((t, t)), _spec((t, t))],
+        )
+
+    for m, k, n in FULL_GEMMS:
+        emit(
+            f"gemm_full_{m}x{k}x{n}",
+            lambda a, b: model.gemm_full(a, b, tm=32, tn=32, tk=32),
+            [_spec((m, k)), _spec((k, n))],
+        )
+
+    d = model.MLP_DIMS
+    emit(
+        "mlp",
+        model.mlp_forward,
+        [_spec((MLP_BATCH, d[0]))] + [_spec((d[i], d[i + 1])) for i in range(4)],
+    )
+
+    # training path: dA/dB for one small GEMM shape
+    m, k, n = 64, 48, 80
+    emit(
+        f"gemm_grads_{m}x{k}x{n}",
+        model.gemm_grads,
+        [_spec((m, k)), _spec((k, n)), _spec((m, n))],
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # Line-based twin of manifest.json for the Rust loader (the build
+    # image has no Rust JSON dep): `name path shape shape ...` with
+    # shapes like `128x784` (all artifacts are f32).
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name path arg-shapes...\n")
+        for a in manifest["artifacts"]:
+            shapes = " ".join("x".join(str(d) for d in arg["shape"]) for arg in a["args"])
+            f.write(f"{a['name']} {a['path']} {shapes}\n")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    print(f"AOT: lowering artifacts into {args.out_dir}")
+    m = build_artifacts(args.out_dir)
+    print(f"AOT: wrote {len(m['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only) and their pure-jnp oracles."""
+
+from compile.kernels.tiled_gemm import gemm_accumulate_tile, tiled_gemm  # noqa: F401

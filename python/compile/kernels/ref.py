@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel and every L2
+graph is pytest-checked against these with ``assert_allclose`` (hypothesis
+sweeps shapes and dtypes). No pallas, no tiling — just the math.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """f32 reference ``a @ b`` (accumulate in f32 like the kernel)."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gemm_accumulate(acc: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference for the tile FMA unit used by the Rust executor."""
+    return acc + gemm(a, b)
+
+
+def gemm_grads(a: jax.Array, b: jax.Array, dc: jax.Array):
+    """Reference training-path gradients: dA = dC·Bᵀ, dB = Aᵀ·dC."""
+    return gemm(dc, b.T), gemm(a.T, dc)
+
+
+def mlp_forward(x: jax.Array, weights) -> jax.Array:
+    """Reference MLP: GEMM chain with ReLU between hidden layers."""
+    h = x
+    for i, w in enumerate(weights):
+        h = gemm(h, w)
+        if i != len(weights) - 1:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,97 @@
+"""L1 — Pallas tiled GEMM kernel.
+
+The paper's compute hot-spot is the GEMM itself; the Pallas BlockSpec grid
+below is the direct analogue of the paper's *inter-cluster* tile schedule:
+
+  * S2 (global scratchpad)  <-> HBM-resident operands
+  * S1 (per-PE scratchpad)  <-> VMEM blocks selected by BlockSpec
+  * outer TemporalMap loops <-> the (m, n, k) Pallas grid
+  * intra-cluster spatial-K reduction <-> the MXU dot inside a block plus
+    accumulation across the k grid dimension
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so TPU lowering is compile-only; correctness is validated
+through the interpret path against the pure-jnp oracle in ``ref.py``.
+
+Hardware adaptation (DESIGN.md §1): tiles default to MXU-friendly
+multiples of 8/128 and accumulation is always f32 (the kernel's output is
+the f32 accumulator; callers cast), mirroring the systolic array's
+accumulate-in-higher-precision behaviour for bf16 inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    """One (tm, tn) f32 output block, accumulated over the k grid axis.
+
+    The output BlockSpec ignores the k index, so the same block stays
+    resident (output-stationary, like the paper's partial-sum cluster)
+    while k — the innermost grid axis, i.e. the <m, n, k> loop order —
+    sweeps the reduction.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def tiled_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tm: int = 128,
+    tn: int = 128,
+    tk: int = 128,
+) -> jax.Array:
+    """Tiled GEMM ``a @ b`` -> f32, via a Pallas kernel.
+
+    Shapes must be divisible by the tile sizes; ``model.tiled_matmul`` pads
+    arbitrary shapes before calling this.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if m % tm or n % tn or k % tk:
+        raise ValueError(
+            f"shape ({m},{n},{k}) not divisible by tiles ({tm},{tn},{tk})"
+        )
+
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def gemm_accumulate_tile(acc: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Single-tile fused multiply-accumulate ``acc + a @ b`` (all f32).
+
+    This is the unit of work the Rust tiled executor (L3 ``runtime``)
+    drives: it slices the operand matrices per the FLASH-selected outer
+    tiling and invokes the AOT artifact of this function once per
+    (m, n, k) outer tile, accumulating C in Rust — the functional mirror
+    of the accelerator's time-multiplexed tile schedule.
+    """
+    tm, tk = a.shape
+    _, tn = b.shape
+    return acc + tiled_gemm(a, b, tm=tm, tn=tn, tk=tk)

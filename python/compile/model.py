@@ -1,0 +1,88 @@
+"""L2 — JAX compute graphs calling the L1 Pallas kernel.
+
+Build-time only: these functions are lowered once by ``aot.py`` to HLO
+text and never imported at runtime. The Rust coordinator (L3) loads the
+artifacts via PJRT.
+
+Two graph families:
+
+* ``tiled_matmul`` / ``gemm_tile_fma`` — GEMM through the Pallas kernel,
+  with padding so arbitrary (M, N, K) work on MXU-aligned tiles.
+* ``mlp_forward`` — the paper's Fig 10 MLP (784 -> 512 -> 256 -> 128 -> 10)
+  as a chain of kernel GEMMs, one artifact for the DNN-inference example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.tiled_gemm import gemm_accumulate_tile, tiled_gemm
+
+# Fig 10 MLP: MNIST input (28*28) -> three hidden layers -> 10 classes.
+MLP_DIMS = (784, 512, 256, 128, 10)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _round_up(v: int, t: int) -> int:
+    return (v + t - 1) // t * t
+
+
+def tiled_matmul(
+    a: jax.Array, b: jax.Array, *, tm: int = 128, tn: int = 128, tk: int = 128
+) -> jax.Array:
+    """``a @ b`` (f32 result) for arbitrary shapes: pad to tile multiples,
+    run the Pallas kernel, slice back. Tile sizes are clamped to the padded
+    problem so tiny operands don't force huge zero blocks."""
+    m, k = a.shape
+    _, n = b.shape
+    tm = min(tm, _round_up(m, 8))
+    tn = min(tn, _round_up(n, 8))
+    tk = min(tk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, tm), _round_up(n, tn), _round_up(k, tk)
+    out = tiled_gemm(_pad_to(a, mp, kp), _pad_to(b, kp, np_), tm=tm, tn=tn, tk=tk)
+    return out[:m, :n]
+
+
+def gemm_tile_fma(acc: jax.Array, a: jax.Array, b: jax.Array):
+    """The Rust tiled executor's unit of work: ``acc + a @ b`` (1-tuple).
+
+    One artifact is emitted per tile shape used by the executor; the
+    leader slices operands per the FLASH-selected outer tiling and calls
+    this once per (m, n, k) outer step.
+    """
+    return (gemm_accumulate_tile(acc, a, b),)
+
+
+def gemm_full(a: jax.Array, b: jax.Array, *, tm=128, tn=128, tk=128):
+    """Whole-GEMM artifact (1-tuple) for small workloads / validation."""
+    return (tiled_matmul(a, b, tm=tm, tn=tn, tk=tk),)
+
+
+def gemm_grads(a: jax.Array, b: jax.Array, dc: jax.Array):
+    """Training-path GEMMs (the paper's §1/§5.4 training claim): given
+    dL/dC, produce (dL/dA, dL/dB) — two more GEMMs through the same
+    Pallas kernel: dA = dC·Bᵀ, dB = Aᵀ·dC."""
+    da = tiled_matmul(dc, b.T)
+    db = tiled_matmul(a.T, dc)
+    return (da, db)
+
+
+def mlp_forward(x: jax.Array, w1, w2, w3, w4):
+    """Fig 10 MLP inference: four FC layers, ReLU between hidden layers.
+
+    Each FC layer is exactly one of the paper's Fig 10 GEMM workloads:
+    (batch x in_dim) @ (in_dim x out_dim).
+    """
+    h = x
+    for i, w in enumerate((w1, w2, w3, w4)):
+        h = tiled_matmul(h, w)
+        if i != 3:
+            h = jax.nn.relu(h)
+    return (h,)

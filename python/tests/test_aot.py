@@ -1,0 +1,66 @@
+"""AOT pipeline: artifacts are valid HLO text and the manifest is consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_artifacts(str(out))
+    return str(out), manifest
+
+
+def test_manifest_lists_all_files(built):
+    out, manifest = built
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "mlp" in names
+    for t in aot.TILE_SIZES:
+        assert f"gemm_tile_{t}" in names
+    for m, k, n in aot.FULL_GEMMS:
+        assert f"gemm_full_{m}x{k}x{n}" in names
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(out, a["path"]))
+
+
+def test_hlo_text_has_entry(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["path"])).read()
+        assert "ENTRY" in text, a["name"]
+        assert "HloModule" in text, a["name"]
+
+
+def test_manifest_arg_shapes(built):
+    _, manifest = built
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    t = aot.TILE_SIZES[0]
+    tile = by_name[f"gemm_tile_{t}"]
+    assert [a["shape"] for a in tile["args"]] == [[t, t]] * 3
+    mlp = by_name["mlp"]
+    d = model.MLP_DIMS
+    assert mlp["args"][0]["shape"] == [aot.MLP_BATCH, d[0]]
+    assert [a["shape"] for a in mlp["args"][1:]] == [
+        [d[i], d[i + 1]] for i in range(4)
+    ]
+
+
+def test_manifest_json_roundtrip(built):
+    out, manifest = built
+    on_disk = json.load(open(os.path.join(out, "manifest.json")))
+    assert on_disk == manifest
+    assert on_disk["format"] == "hlo-text"
+
+
+def test_no_mosaic_custom_calls(built):
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would
+    be unloadable by the CPU PJRT client."""
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = open(os.path.join(out, a["path"])).read()
+        assert "tpu_custom_call" not in text, a["name"]
+        assert "mosaic" not in text.lower(), a["name"]

@@ -1,0 +1,40 @@
+//! Microbench — MAESTRO-BLAS evaluation throughput (the search's inner
+//! loop; the §Perf L3 hot path).
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::cost::CostModel;
+use flash_gemm::flash::candidates;
+use flash_gemm::workloads::Gemm;
+
+fn main() {
+    let budget = harness::default_budget();
+    harness::section("cost-model single evaluation");
+    for style in Style::ALL {
+        let acc = Accelerator::of_style(style, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let cs = candidates::enumerate(&acc, &wl);
+        let model = CostModel::new(acc.clone());
+        let mapping = cs.mappings[cs.mappings.len() / 2].clone();
+        harness::bench(&format!("evaluate/{style}"), budget, 2_000_000, || {
+            let c = model.evaluate(&mapping, &wl);
+            assert!(c.runtime_cycles() > 0);
+        });
+    }
+
+    harness::section("cost-model bulk evaluation (candidate set of VI)");
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::new("VI", 512, 256, 256);
+    let cs = candidates::enumerate(&acc, &wl);
+    let model = CostModel::new(acc.clone());
+    println!("set size: {}", cs.mappings.len());
+    harness::bench("evaluate/maeri-full-set", budget, 10_000, || {
+        let mut best = u64::MAX;
+        for m in &cs.mappings {
+            best = best.min(model.evaluate(m, &wl).runtime_cycles());
+        }
+        assert!(best < u64::MAX);
+    });
+}

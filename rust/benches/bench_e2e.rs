@@ -1,0 +1,85 @@
+//! Bench — the end-to-end path: PJRT tile-kernel FMA latency, tiled
+//! GEMM execution, MLP inference, and a full service round.
+//! Skips (with a notice) when `make artifacts` has not run.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::coordinator::{GemmService, ServiceConfig};
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::{default_artifacts_dir, MlpRunner, Runtime, TiledExecutor};
+use flash_gemm::workloads::Gemm;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("bench e2e: SKIPPED (no artifacts; run `make artifacts`)");
+        return;
+    }
+    let budget = harness::default_budget();
+
+    harness::section("PJRT tile-kernel FMA latency");
+    let mut rt = Runtime::load(&dir).unwrap();
+    for t in rt.manifest().tile_sizes() {
+        let name = format!("gemm_tile_{t}");
+        rt.warm(&name).unwrap();
+        let n = (t * t) as usize;
+        let (acc, a, b) = (vec![0f32; n], rand_vec(n, 1), rand_vec(n, 2));
+        let shape = [t, t];
+        harness::bench(&format!("tile_fma/{t}"), budget, 100_000, || {
+            let out = rt
+                .run_f32(&name, &[(&acc, shape), (&a, shape), (&b, shape)])
+                .unwrap();
+            assert_eq!(out.len(), n);
+        });
+    }
+
+    harness::section("tiled GEMM executor (256x256x256)");
+    let wl = Gemm::new("sq", 256, 256, 256);
+    let a = rand_vec((wl.m * wl.k) as usize, 3);
+    let b = rand_vec((wl.k * wl.n) as usize, 4);
+    for t in [32usize, 64, 128] {
+        harness::bench(&format!("executor/tile{t}"), budget, 1000, || {
+            let mut exec = TiledExecutor::new(&mut rt, t, LoopOrder::MNK).unwrap();
+            let c = exec.gemm(&wl, &a, &b).unwrap();
+            assert_eq!(c.len(), (wl.m * wl.n) as usize);
+        });
+    }
+
+    harness::section("MLP inference (batch 128)");
+    let d = MlpRunner::DIMS;
+    let x = rand_vec(128 * d[0] as usize, 5);
+    let ws: Vec<Vec<f32>> = (0..4)
+        .map(|i| rand_vec((d[i] * d[i + 1]) as usize, 6 + i as u64))
+        .collect();
+    rt.warm("mlp").unwrap();
+    harness::bench("mlp/batch128", budget, 1000, || {
+        let out = MlpRunner::forward(&mut rt, &x, &ws).unwrap();
+        assert_eq!(out.len(), 1280);
+    });
+
+    harness::section("service round (8 requests, verify off)");
+    let requests: Vec<Gemm> = (0..8)
+        .map(|i| Gemm::new(&format!("r{}", i % 3), 128, 128, 128))
+        .collect();
+    harness::bench("service/8-requests", budget, 100, || {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let runtime = Runtime::load(&dir).unwrap();
+        let mut svc = GemmService::new(acc, runtime, ServiceConfig::default());
+        let rep = svc.serve(&requests).unwrap();
+        assert_eq!(rep.metrics.requests, 8);
+    });
+}

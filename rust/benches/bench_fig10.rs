@@ -1,0 +1,16 @@
+//! Bench Fig 10 — five mapping styles on the MLP's FC-layer GEMMs.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::HwConfig;
+use flash_gemm::experiments::fig10;
+
+fn main() {
+    harness::section("Fig 10 (MLP FC layers, edge)");
+    print!("{}", fig10(&HwConfig::edge()).render());
+    harness::bench("fig10/regenerate", harness::default_budget(), 100, || {
+        let t = fig10(&HwConfig::edge());
+        assert!(!t.is_empty());
+    });
+}

@@ -1,0 +1,26 @@
+//! Bench Fig 7 — histogram of projected runtimes over the pruned
+//! NVDLA-style candidates for the 8192³ GEMM.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::HwConfig;
+use flash_gemm::experiments::fig7;
+use flash_gemm::report::histogram;
+
+fn main() {
+    harness::section("Fig 7 (NVDLA-style candidate runtimes, workload I)");
+    let d = fig7(&HwConfig::edge());
+    println!(
+        "{} candidates, best {:.2} ms, worst {:.2} ms, spread {:.2}x (paper: 7387 cands, 4.02x)",
+        d.candidates,
+        d.best_ms,
+        d.worst_ms,
+        d.worst_to_best()
+    );
+    print!("{}", histogram(&d.runtimes_ms, 20, 50));
+    harness::bench("fig7/regenerate", harness::default_budget(), 100, || {
+        let d = fig7(&HwConfig::edge());
+        assert!(d.candidates > 0);
+    });
+}

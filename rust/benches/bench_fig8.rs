@@ -1,0 +1,19 @@
+//! Bench Fig 8 — the §5.4 evaluation grid (5 styles × Table 3
+//! workloads × edge/cloud).
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::HwConfig;
+use flash_gemm::experiments::fig8;
+
+fn main() {
+    for cfg in [HwConfig::edge(), HwConfig::cloud()] {
+        harness::section(&format!("Fig 8 ({})", cfg.name));
+        print!("{}", fig8(&cfg, &["I", "II", "III", "IV", "V", "VI"]).render());
+    }
+    harness::bench("fig8/edge-all-workloads", harness::default_budget(), 50, || {
+        let t = fig8(&HwConfig::edge(), &["I", "II", "III", "IV", "V", "VI"]);
+        assert!(!t.is_empty());
+    });
+}

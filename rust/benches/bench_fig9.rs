@@ -1,0 +1,15 @@
+//! Bench Fig 9 — MAERI-style loop-order sweep on workloads IV and V.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::experiments::fig9;
+
+fn main() {
+    harness::section("Fig 9 (loop-order sweep, workloads IV & V)");
+    print!("{}", fig9().render());
+    harness::bench("fig9/regenerate", harness::default_budget(), 100, || {
+        let t = fig9();
+        assert!(!t.is_empty());
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench §5.2 — pruning statistics regeneration (the paper's 256³
+//! MAERI-style instance) and candidate-generation throughput per style.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::experiments::pruning_report;
+use flash_gemm::flash::candidates;
+use flash_gemm::workloads::Gemm;
+
+fn main() {
+    harness::section("§5.2 pruning (paper: 7.25e9 -> 1.5e7 sets, 483x, 99.9% time)");
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::new("sq256", 256, 256, 256);
+    let r = pruning_report(&acc, &wl);
+    print!("{}", r.to_table().render());
+
+    harness::section("candidate generation throughput");
+    let budget = harness::default_budget();
+    for style in Style::ALL {
+        let acc = Accelerator::of_style(style, HwConfig::edge());
+        let wl = Gemm::new("sq256", 256, 256, 256);
+        harness::bench(&format!("enumerate/{style}"), budget, 1000, || {
+            let cs = candidates::enumerate(&acc, &wl);
+            assert!(!cs.mappings.is_empty());
+        });
+    }
+}

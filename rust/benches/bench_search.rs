@@ -1,0 +1,33 @@
+//! Microbench — end-to-end FLASH search latency per (style, workload),
+//! plus the random-sampling baseline for the §5.2 comparison.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::baselines::random_search;
+use flash_gemm::flash;
+use flash_gemm::workloads::Gemm;
+
+fn main() {
+    let budget = harness::default_budget();
+    harness::section("FLASH search latency");
+    for style in Style::ALL {
+        for id in ["I", "IV", "VI"] {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let wl = Gemm::by_id(id).unwrap();
+            harness::bench(&format!("search/{style}/{id}"), budget, 500, || {
+                let r = flash::search(&acc, &wl).unwrap();
+                assert!(r.candidates > 0);
+            });
+        }
+    }
+
+    harness::section("random-sampling baseline (2000 samples)");
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::by_id("VI").unwrap();
+    harness::bench("random/maeri/VI", budget, 200, || {
+        let r = random_search(&acc, &wl, 2000, 42);
+        assert!(r.best.is_some());
+    });
+}

@@ -1,0 +1,33 @@
+//! Microbench — the cycle-approximate simulator, plus the model-vs-sim
+//! validation sweep (the reproduction's analogue of the paper's RTL
+//! validation).
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::experiments::validate_all;
+use flash_gemm::flash;
+use flash_gemm::sim::simulate;
+use flash_gemm::workloads::Gemm;
+
+fn main() {
+    harness::section("model vs simulator validation sweep");
+    let (table, worst) = validate_all();
+    print!("{}", table.render());
+    println!("worst model/sim deviation: {worst:.2}x");
+
+    harness::section("simulator throughput");
+    let budget = harness::default_budget();
+    for (m, n, k) in [(16u64, 16u64, 16u64), (32, 32, 32)] {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let wl = Gemm::new("sim", m, n, k);
+        let best = flash::search(&acc, &wl).unwrap();
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.01).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 * 0.02).collect();
+        harness::bench(&format!("simulate/{m}x{n}x{k}"), budget, 10_000, || {
+            let r = simulate(&acc, best.mapping(), &wl, &a, &b);
+            assert_eq!(r.macs, wl.macs());
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench Table 5 — tiled vs non-tiled MAERI mappings on workload VI:
+//! regenerates the table and times its production.
+
+#[path = "harness.rs"]
+mod harness;
+
+use flash_gemm::experiments::table5;
+
+fn main() {
+    harness::section("Table 5 (tiling impact, workload VI, edge)");
+    print!("{}", table5().render());
+    harness::bench("table5/regenerate", harness::default_budget(), 100, || {
+        let t = table5();
+        assert!(!t.is_empty());
+    });
+}

@@ -1,0 +1,41 @@
+//! Minimal bench harness shared by all `harness = false` bench binaries
+//! (the build image is offline, so no criterion; see DESIGN.md §5).
+//!
+//! Each bench binary prints one line per case:
+//! `bench <name>: mean <t> (min <t>, <n> iters)` — `cargo bench` collects
+//! them; `bench_output.txt` records the run.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly (after one warm-up) until ~`budget` elapses or
+/// `max_iters` is hit; print mean/min.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: u32, mut f: F) {
+    f(); // warm-up
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && (times.len() as u32) < max_iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let n = times.len().max(1) as u32;
+    let total: Duration = times.iter().sum();
+    let mean = total / n;
+    let min = times.iter().min().copied().unwrap_or_default();
+    println!("bench {name}: mean {mean:?} (min {min:?}, {n} iters)");
+}
+
+/// Default budget for a bench case.
+pub fn default_budget() -> Duration {
+    Duration::from_millis(
+        std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1500),
+    )
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

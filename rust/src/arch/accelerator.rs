@@ -1,0 +1,207 @@
+//! An accelerator *instance*: a style plus the shared hardware resources,
+//! with mapping validation against its dataflow + buffer constraints.
+
+use std::fmt;
+
+use thiserror::Error;
+
+use crate::arch::{HwConfig, Noc, Style};
+use crate::dataflow::{Dim, Mapping};
+
+/// Why a mapping is illegal on an accelerator.
+#[derive(Debug, Error, PartialEq)]
+pub enum MappingError {
+    #[error("mapping is structurally malformed")]
+    Malformed,
+    #[error("{0:?} cannot be inter-cluster spatial on this style")]
+    BadInterSpatial(Dim),
+    #[error("{0:?} cannot be intra-cluster spatial on this style")]
+    BadIntraSpatial(Dim),
+    #[error("loop order not supported by this style")]
+    BadLoopOrder,
+    #[error("cluster size {0} not supported (legal: {1:?})")]
+    BadClusterSize(u64, Vec<u64>),
+    #[error("parallelizing K requires NoC spatial-reduction support")]
+    NoSpatialReduction,
+    #[error("outer tiles need {need} elements of S2 but only {have} fit (Eq. 1, double-buffered)")]
+    S2Overflow { need: u64, have: u64 },
+    #[error("inner tiles need {need} elements of S1 but only {have} fit (Eq. 2, double-buffered)")]
+    S1Overflow { need: u64, have: u64 },
+}
+
+/// A concrete accelerator under evaluation: style + hardware + NoC.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub style: Style,
+    pub config: HwConfig,
+    pub noc: Noc,
+}
+
+impl Accelerator {
+    pub fn of_style(style: Style, config: HwConfig) -> Self {
+        Accelerator {
+            style,
+            noc: style.noc(),
+            config,
+        }
+    }
+
+    /// All five styles over one hardware configuration (the paper's
+    /// evaluation grid rows).
+    pub fn all_styles(config: &HwConfig) -> Vec<Accelerator> {
+        Style::ALL
+            .iter()
+            .map(|&s| Accelerator::of_style(s, config.clone()))
+            .collect()
+    }
+
+    /// Validate a mapping against the style's dataflow constraints
+    /// (Table 2) and the buffer constraints (Eqs. 1–2, double-buffered).
+    pub fn validate(&self, m: &Mapping) -> Result<(), MappingError> {
+        if !m.is_well_formed() {
+            return Err(MappingError::Malformed);
+        }
+        if !self.style.inter_spatial_dims().contains(&m.inter_spatial) {
+            return Err(MappingError::BadInterSpatial(m.inter_spatial));
+        }
+        if !self.style.intra_spatial_dims().contains(&m.intra_spatial) {
+            return Err(MappingError::BadIntraSpatial(m.intra_spatial));
+        }
+        if !self.style.inter_orders().contains(&m.inter_order)
+            || !self.style.intra_orders().contains(&m.intra_order)
+        {
+            return Err(MappingError::BadLoopOrder);
+        }
+        let legal = self.style.cluster_sizes(self.config.pes);
+        if !legal.contains(&m.cluster_size) {
+            return Err(MappingError::BadClusterSize(m.cluster_size, legal));
+        }
+        if (m.inter_spatial == Dim::K || m.intra_spatial == Dim::K)
+            && !self.noc.spatial_reduction
+        {
+            return Err(MappingError::NoSpatialReduction);
+        }
+        // Eq. 1: inter-cluster working set fits half of S2 (double buffer).
+        let need2 = m.s2_working_set(self.config.pes);
+        let have2 = self.config.beta() / 2;
+        if need2 > have2 {
+            return Err(MappingError::S2Overflow {
+                need: need2,
+                have: have2,
+            });
+        }
+        // Eq. 2: per-PE inner tiles fit half of S1 (double buffer).
+        let need1 = m.inner.footprint();
+        let have1 = self.config.alpha() / 2;
+        if need1 > have1 {
+            return Err(MappingError::S1Overflow {
+                need: need1,
+                have: have1,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Accelerator {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}-style ({}) on {}",
+            self.style,
+            self.style.mapping_name(),
+            self.config
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{LoopOrder, Tiles};
+
+    fn maeri_fig5(pes: u64) -> (Accelerator, Mapping) {
+        let mut cfg = HwConfig::tiny();
+        cfg.pes = pes;
+        let acc = Accelerator::of_style(Style::Maeri, cfg);
+        let m = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 1, 4),
+            inner: Tiles::new(1, 1, 1),
+        };
+        (acc, m)
+    }
+
+    #[test]
+    fn fig5_mapping_is_valid_on_maeri() {
+        let (acc, m) = maeri_fig5(16);
+        assert_eq!(acc.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn k_parallel_rejected_on_shidiannao() {
+        let (_, m) = maeri_fig5(16);
+        let acc = Accelerator::of_style(Style::ShiDianNao, HwConfig::tiny());
+        // intra spatial K is illegal for SDN (no spatial reduction and
+        // not in its intra dims); both error paths are exercised.
+        assert!(matches!(
+            acc.validate(&m),
+            Err(MappingError::BadInterSpatial(_) | MappingError::BadIntraSpatial(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_loop_order_rejected() {
+        let (_, mut m) = maeri_fig5(16);
+        let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+        m.inter_spatial = Dim::N;
+        m.intra_spatial = Dim::K;
+        m.cluster_size = 16;
+        m.inter_order = LoopOrder::MNK; // NVDLA requires NKM
+        assert_eq!(acc.validate(&m), Err(MappingError::BadLoopOrder));
+    }
+
+    #[test]
+    fn s2_overflow_detected() {
+        let (acc, mut m) = maeri_fig5(16);
+        m.outer = Tiles::new(2000, 2000, 4); // tiny config: β = 2048
+        m.inner = Tiles::new(1, 1, 1);
+        assert!(matches!(
+            acc.validate(&m),
+            Err(MappingError::S2Overflow { .. })
+        ));
+    }
+
+    #[test]
+    fn s1_overflow_detected() {
+        let (acc, mut m) = maeri_fig5(16);
+        m.outer = Tiles::new(8, 8, 4);
+        m.inner = Tiles::new(8, 8, 1); // footprint 8+8+64=144 > α/2=32
+        assert!(matches!(
+            acc.validate(&m),
+            Err(MappingError::S1Overflow { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_cluster_size_reports_legal_set() {
+        let (acc, mut m) = maeri_fig5(16);
+        m.cluster_size = 5; // MAERI wants powers of two
+        match acc.validate(&m) {
+            Err(MappingError::BadClusterSize(5, legal)) => {
+                assert!(legal.contains(&4));
+            }
+            other => panic!("expected BadClusterSize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn all_styles_builds_five() {
+        let v = Accelerator::all_styles(&HwConfig::edge());
+        assert_eq!(v.len(), 5);
+    }
+}

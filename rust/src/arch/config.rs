@@ -1,0 +1,132 @@
+//! Hardware configurations (paper Table 4).
+
+use std::fmt;
+
+/// Shared hardware resources given to *every* accelerator style — the
+/// paper's apples-to-apples methodology (§3.1): same PE count, buffer
+/// sizes, NoC bandwidth and clock for all five styles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub name: &'static str,
+    /// Total number of PEs (P).
+    pub pes: u64,
+    /// Per-PE local scratchpad (S1 / α) in bytes.
+    pub s1_bytes: u64,
+    /// Global shared scratchpad (S2 / β) in bytes.
+    pub s2_bytes: u64,
+    /// NoC bandwidth, bytes per second.
+    pub noc_bytes_per_sec: u64,
+    /// Clock frequency, Hz (paper assumes 1 GHz @ 28 nm).
+    pub clock_hz: u64,
+    /// Element width in bytes. The paper's accelerators are fixed-point
+    /// 16-bit datapaths (Eyeriss, NVDLA int16 config); 2 bytes also makes
+    /// the Table 5 runtime magnitudes line up (see `cost::runtime`).
+    pub elem_bytes: u64,
+}
+
+impl HwConfig {
+    /// Table 4 "Edge": 256 PEs, 0.5 KB S1, 100 KB S2, 32 GB/s, DRAM.
+    pub fn edge() -> Self {
+        HwConfig {
+            name: "edge",
+            pes: 256,
+            s1_bytes: 512,
+            s2_bytes: 100 * 1024,
+            noc_bytes_per_sec: 32 * 1_000_000_000,
+            clock_hz: 1_000_000_000,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Table 4 "Cloud": 2048 PEs, 0.5 KB S1, 800 KB S2, 256 GB/s, HBM.
+    pub fn cloud() -> Self {
+        HwConfig {
+            name: "cloud",
+            pes: 2048,
+            s1_bytes: 512,
+            s2_bytes: 800 * 1024,
+            noc_bytes_per_sec: 256 * 1_000_000_000,
+            clock_hz: 1_000_000_000,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Tiny config for unit tests and the discrete-event simulator
+    /// (small enough to simulate exhaustively).
+    pub fn tiny() -> Self {
+        HwConfig {
+            name: "tiny",
+            pes: 16,
+            s1_bytes: 128,
+            s2_bytes: 4 * 1024,
+            noc_bytes_per_sec: 8 * 1_000_000_000,
+            clock_hz: 1_000_000_000,
+            elem_bytes: 2,
+        }
+    }
+
+    /// α — S1 capacity in *elements* (the unit of Eq. 2).
+    pub fn alpha(&self) -> u64 {
+        self.s1_bytes / self.elem_bytes
+    }
+
+    /// β — S2 capacity in *elements* (the unit of Eq. 1).
+    pub fn beta(&self) -> u64 {
+        self.s2_bytes / self.elem_bytes
+    }
+
+    /// NoC bandwidth in elements per clock cycle.
+    pub fn noc_elems_per_cycle(&self) -> f64 {
+        self.noc_bytes_per_sec as f64 / self.clock_hz as f64 / self.elem_bytes as f64
+    }
+
+    /// Peak throughput in MACs per second (1 MAC/PE/cycle).
+    pub fn peak_macs_per_sec(&self) -> f64 {
+        self.pes as f64 * self.clock_hz as f64
+    }
+
+    /// Paper's "Perf FLOPS" column (Table 4 counts 1 MAC = 1 FLOP:
+    /// 256 PEs @ 1 GHz ⇒ 256 GFLOPS).
+    pub fn peak_flops(&self) -> f64 {
+        self.peak_macs_per_sec()
+    }
+}
+
+impl fmt::Display for HwConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {} PEs, S1 {} B, S2 {} KB, NoC {} GB/s, {} GHz",
+            self.name,
+            self.pes,
+            self.s1_bytes,
+            self.s2_bytes / 1024,
+            self.noc_bytes_per_sec / 1_000_000_000,
+            self.clock_hz / 1_000_000_000
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_edge() {
+        let e = HwConfig::edge();
+        assert_eq!(e.pes, 256);
+        assert_eq!(e.alpha(), 256); // 0.5 KB / 2 B
+        assert_eq!(e.beta(), 51_200); // 100 KB / 2 B
+        // paper: 256 GFLOPS peak
+        assert_eq!(e.peak_flops(), 256e9);
+        assert_eq!(e.noc_elems_per_cycle(), 16.0);
+    }
+
+    #[test]
+    fn table4_cloud() {
+        let c = HwConfig::cloud();
+        assert_eq!(c.pes, 2048);
+        assert_eq!(c.beta(), 409_600);
+        assert_eq!(c.noc_elems_per_cycle(), 128.0);
+    }
+}

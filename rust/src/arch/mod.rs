@@ -1,0 +1,15 @@
+//! Spatial-accelerator architecture models: the five styles of Table 1,
+//! their dataflow constraints (Table 2), NoC capabilities, and the
+//! edge/cloud hardware configurations (Table 4).
+
+mod accelerator;
+mod config;
+mod noc;
+mod offchip;
+mod style;
+
+pub use accelerator::Accelerator;
+pub use config::HwConfig;
+pub use noc::{Noc, Topology};
+pub use offchip::{MemTech, Offchip};
+pub use style::Style;

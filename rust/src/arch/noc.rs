@@ -1,0 +1,135 @@
+//! Network-on-chip capability models (paper Table 1, §2.2).
+//!
+//! The cost model and the mapping validator only need the *capabilities*
+//! of a NoC (can it multicast? can it spatially reduce? at what hop cost?),
+//! not its full microarchitecture; the discrete-event simulator in
+//! `crate::sim` models per-hop contention on top of these.
+
+use std::fmt;
+
+/// NoC topology of each accelerator (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Topology {
+    /// Eyeriss: hierarchical buses (X/Y bus).
+    Buses,
+    /// NVDLA: broadcast bus + adder tree.
+    BusTree,
+    /// TPUv2: 2-D mesh (systolic store-and-forward).
+    Mesh,
+    /// MAERI: fat-tree distribution + augmented reduction tree.
+    FatTree,
+}
+
+/// Capability summary of a NoC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Noc {
+    pub topology: Topology,
+    /// Can the same datum be delivered to many PEs in one transfer
+    /// (multicast/broadcast)? Enables *spatial reuse* (§2.2).
+    pub multicast: bool,
+    /// Can partial sums be reduced across PEs in the network (reduction
+    /// tree or store-and-forward chain)? Required to parallelize K.
+    pub spatial_reduction: bool,
+    /// Can adjacent PEs forward operands (store-and-forward) enabling
+    /// *spatio-temporal reuse*?
+    pub forwarding: bool,
+    /// Average hop count factor for an S2→PE transfer, used by the energy
+    /// model (wire energy scales with distance travelled).
+    pub avg_hops: f64,
+}
+
+impl Noc {
+    pub fn of(topology: Topology) -> Self {
+        match topology {
+            // Eyeriss buses: multicast yes; reduction via inter-PE
+            // store-and-forward across a column (paper §3.1).
+            Topology::Buses => Noc {
+                topology,
+                multicast: true,
+                spatial_reduction: true,
+                forwarding: true,
+                avg_hops: 2.0,
+            },
+            // NVDLA: broadcast bus + adder tree.
+            Topology::BusTree => Noc {
+                topology,
+                multicast: true,
+                spatial_reduction: true,
+                forwarding: false,
+                avg_hops: 1.5,
+            },
+            // TPU mesh: systolic forwarding in both directions; reduction
+            // by store-and-forward down columns; no single-hop broadcast
+            // (operands ripple), so multicast is "effective" via skew.
+            Topology::Mesh => Noc {
+                topology,
+                multicast: true,
+                spatial_reduction: true,
+                forwarding: true,
+                avg_hops: 8.0,
+            },
+            // MAERI fat tree: configurable multicast + augmented
+            // reduction tree.
+            Topology::FatTree => Noc {
+                topology,
+                multicast: true,
+                spatial_reduction: true,
+                forwarding: true,
+                avg_hops: 2.0,
+            },
+        }
+    }
+
+    /// ShiDianNao's mesh: neighbour forwarding but **no** spatial
+    /// reduction — the reason Table 2 maps K temporally there.
+    pub fn shidiannao_mesh() -> Self {
+        Noc {
+            topology: Topology::Mesh,
+            multicast: true,
+            spatial_reduction: false,
+            forwarding: true,
+            avg_hops: 4.0,
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Topology::Buses => "Buses",
+            Topology::BusTree => "Bus+Tree",
+            Topology::Mesh => "Mesh",
+            Topology::FatTree => "Fat Tree",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_support_matches_table2() {
+        // Eyeriss/NVDLA/TPU/MAERI support spatial reduction; ShiDianNao
+        // does not (hence K must be temporal there).
+        assert!(Noc::of(Topology::Buses).spatial_reduction);
+        assert!(Noc::of(Topology::BusTree).spatial_reduction);
+        assert!(Noc::of(Topology::Mesh).spatial_reduction);
+        assert!(Noc::of(Topology::FatTree).spatial_reduction);
+        assert!(!Noc::shidiannao_mesh().spatial_reduction);
+    }
+
+    #[test]
+    fn all_nocs_multicast() {
+        for t in [
+            Topology::Buses,
+            Topology::BusTree,
+            Topology::Mesh,
+            Topology::FatTree,
+        ] {
+            assert!(Noc::of(t).multicast);
+            assert!(Noc::of(t).avg_hops >= 1.0);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Off-chip memory model (Table 4's "Off-chip Mem" column: DRAM for
+//! edge, HBM for cloud).
+//!
+//! The paper's reported energy excludes off-chip traffic because it "is
+//! similar across mappings" (§5.1) — true for *energy*, but the off-chip
+//! *bandwidth roofline* still bounds runtime: the compulsory traffic
+//! (A + B in, C out) must stream through the memory interface. This
+//! model adds that bound and the optional off-chip energy term so users
+//! can see total-system numbers.
+
+use crate::workloads::Gemm;
+
+/// Off-chip memory technology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTech {
+    /// LPDDR4-class (edge): ~25 GB/s, ~40 pJ/byte.
+    Dram,
+    /// HBM2-class (cloud): ~300 GB/s, ~4 pJ/byte.
+    Hbm,
+}
+
+/// Off-chip interface model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Offchip {
+    pub tech: MemTech,
+    pub bytes_per_sec: f64,
+    pub energy_per_byte_j: f64,
+}
+
+impl Offchip {
+    pub fn of(tech: MemTech) -> Self {
+        match tech {
+            MemTech::Dram => Offchip {
+                tech,
+                bytes_per_sec: 25e9,
+                energy_per_byte_j: 40e-12,
+            },
+            MemTech::Hbm => Offchip {
+                tech,
+                bytes_per_sec: 300e9,
+                energy_per_byte_j: 4e-12,
+            },
+        }
+    }
+
+    /// For a hardware config name ("edge" ⇒ DRAM, "cloud" ⇒ HBM).
+    pub fn for_config(name: &str) -> Self {
+        if name == "cloud" {
+            Offchip::of(MemTech::Hbm)
+        } else {
+            Offchip::of(MemTech::Dram)
+        }
+    }
+
+    /// Compulsory off-chip bytes for a GEMM (A + B in, C out, once each —
+    /// §5.1's "total off-chip data movement … remains similar across
+    /// mappings").
+    pub fn compulsory_bytes(wl: &Gemm, elem_bytes: u64) -> u64 {
+        wl.footprint_elems() * elem_bytes
+    }
+
+    /// Lower bound on runtime from off-chip streaming (seconds).
+    pub fn min_runtime_secs(&self, wl: &Gemm, elem_bytes: u64) -> f64 {
+        Self::compulsory_bytes(wl, elem_bytes) as f64 / self.bytes_per_sec
+    }
+
+    /// Off-chip energy for the compulsory traffic (joules).
+    pub fn energy_j(&self, wl: &Gemm, elem_bytes: u64) -> f64 {
+        Self::compulsory_bytes(wl, elem_bytes) as f64 * self.energy_per_byte_j
+    }
+
+    /// Is a projected on-chip runtime feasible under the off-chip
+    /// roofline, and if not, what does it stretch to?
+    pub fn clamp_runtime_secs(&self, wl: &Gemm, elem_bytes: u64, onchip_secs: f64) -> f64 {
+        onchip_secs.max(self.min_runtime_secs(wl, elem_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hbm_faster_cheaper_per_byte() {
+        let d = Offchip::of(MemTech::Dram);
+        let h = Offchip::of(MemTech::Hbm);
+        assert!(h.bytes_per_sec > d.bytes_per_sec);
+        assert!(h.energy_per_byte_j < d.energy_per_byte_j);
+        assert_eq!(Offchip::for_config("cloud").tech, MemTech::Hbm);
+        assert_eq!(Offchip::for_config("edge").tech, MemTech::Dram);
+    }
+
+    #[test]
+    fn compulsory_traffic_and_roofline() {
+        let wl = Gemm::new("t", 1024, 1024, 1024);
+        let bytes = Offchip::compulsory_bytes(&wl, 2);
+        assert_eq!(bytes, 3 * 1024 * 1024 * 2);
+        let d = Offchip::of(MemTech::Dram);
+        let t = d.min_runtime_secs(&wl, 2);
+        assert!(t > 0.0);
+        // compute-bound case unclamped, memory-bound case clamped
+        assert_eq!(d.clamp_runtime_secs(&wl, 2, 1.0), 1.0);
+        assert_eq!(d.clamp_runtime_secs(&wl, 2, 0.0), t);
+    }
+
+    #[test]
+    fn square_gemm_is_compute_bound_on_both() {
+        // 1024³ at 2 B: 6 MB traffic vs 1.07 G MACs — arithmetic
+        // intensity is high enough that the off-chip roofline never
+        // binds on either config for the FLASH-tiled mapping.
+        use crate::arch::{Accelerator, HwConfig, Style};
+        let wl = Gemm::new("sq", 1024, 1024, 1024);
+        for cfg in [HwConfig::edge(), HwConfig::cloud()] {
+            let acc = Accelerator::of_style(Style::Nvdla, cfg.clone());
+            let best = crate::flash::search(&acc, &wl).unwrap();
+            let onchip = best.cost().runtime_ms() / 1e3;
+            let off = Offchip::for_config(cfg.name);
+            assert_eq!(
+                off.clamp_runtime_secs(&wl, cfg.elem_bytes, onchip),
+                onchip,
+                "{}",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn rank_k_update_is_memory_bound_on_edge() {
+        // K=4 rank-k update: intensity ~2 MACs/elem — the off-chip
+        // roofline dominates (the CSE-workload regime).
+        let wl = Gemm::new("rank4", 4096, 4096, 4);
+        let off = Offchip::of(MemTech::Dram);
+        let onchip = wl.macs() as f64 / 256e9; // compute bound @ edge peak
+        assert!(off.clamp_runtime_secs(&wl, 2, onchip) > onchip);
+    }
+}

@@ -1,0 +1,247 @@
+//! The five accelerator styles and their dataflow constraints
+//! (paper Tables 1 and 2).
+//!
+//! As in the paper (§3.1, footnote 3), these are "*-style" models: each
+//! style pins which dims may be parallelized at each level, which loop
+//! orders the microarchitecture supports, and the legal cluster sizes —
+//! while all styles receive identical hardware resources (Table 4).
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::arch::noc::{Noc, Topology};
+use crate::dataflow::{Dim, LoopOrder};
+
+/// Accelerator style under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    /// Eyeriss: input(A)-row-stationary, STT_TTS-MNK.
+    Eyeriss,
+    /// NVDLA: weight(B)-stationary, STT_TTS-NKM.
+    Nvdla,
+    /// TPUv2: weight(B)-stationary systolic, STT_TTS-NMK.
+    Tpu,
+    /// ShiDianNao: output(C)-stationary, STT_TST-MNK (no spatial reduction).
+    ShiDianNao,
+    /// MAERI: flexible dataflow, TST_TTS with any loop order.
+    Maeri,
+}
+
+impl Style {
+    pub const ALL: [Style; 5] = [
+        Style::Eyeriss,
+        Style::Nvdla,
+        Style::Tpu,
+        Style::ShiDianNao,
+        Style::Maeri,
+    ];
+
+    /// Which dim may be partitioned across clusters (Table 2 row
+    /// "Dataflow: Parallel Dim / Inter-Cluster").
+    pub fn inter_spatial_dims(self) -> &'static [Dim] {
+        match self {
+            Style::Eyeriss | Style::ShiDianNao => &[Dim::M],
+            Style::Nvdla | Style::Tpu => &[Dim::N],
+            Style::Maeri => &[Dim::M, Dim::N, Dim::K],
+        }
+    }
+
+    /// Which dim may be partitioned across the PEs within a cluster.
+    pub fn intra_spatial_dims(self) -> &'static [Dim] {
+        match self {
+            // spatial reduction over the NoC makes K parallelizable
+            Style::Eyeriss | Style::Nvdla | Style::Tpu => &[Dim::K],
+            // no spatial reduction: parallelism comes from N instead
+            Style::ShiDianNao => &[Dim::N],
+            Style::Maeri => &[Dim::M, Dim::N, Dim::K],
+        }
+    }
+
+    /// Legal inter-cluster loop orders (Table 2 "Compute Order").
+    pub fn inter_orders(self) -> &'static [LoopOrder] {
+        match self {
+            Style::Eyeriss | Style::ShiDianNao => &[LoopOrder::MNK],
+            Style::Nvdla => &[LoopOrder::NKM],
+            Style::Tpu => &[LoopOrder::NMK],
+            Style::Maeri => &LoopOrder::ALL,
+        }
+    }
+
+    /// Legal intra-cluster loop orders.
+    pub fn intra_orders(self) -> &'static [LoopOrder] {
+        match self {
+            Style::Eyeriss | Style::ShiDianNao => &[LoopOrder::MNK],
+            Style::Nvdla | Style::Tpu => &[LoopOrder::NMK],
+            Style::Maeri => &LoopOrder::ALL,
+        }
+    }
+
+    /// Legal cluster sizes λ for a PE budget (Table 2 "Cluster Size").
+    ///
+    /// MAERI's λ is tied to the tile size of the last dimension
+    /// (λ = T^out of the intra-spatial dim); the explorer enumerates
+    /// powers of two and lets the tile-size constraints bind it.
+    pub fn cluster_sizes(self, pes: u64) -> Vec<u64> {
+        let isqrt = |v: u64| (v as f64).sqrt().round() as u64;
+        let mut out: Vec<u64> = match self {
+            // compile-time flexible: 1 ≤ λ ≤ 12
+            Style::Eyeriss => (1..=12.min(pes)).collect(),
+            // design-time flexible: 16 ≤ λ ≤ 64 (any integer in range —
+            // Fig 7 enumerates "every cluster size"). On arrays smaller
+            // than 16 PEs the whole array forms one cluster.
+            Style::Nvdla => {
+                let v: Vec<u64> = (16..=64).filter(|&l| l <= pes).collect();
+                if v.is_empty() {
+                    vec![pes]
+                } else {
+                    v
+                }
+            }
+            // 256 or √P
+            Style::Tpu => vec![256.min(pes), isqrt(pes)],
+            // 8 or √P
+            Style::ShiDianNao => vec![8.min(pes), isqrt(pes)],
+            // flexible fat tree: any power-of-two partition
+            Style::Maeri => {
+                let mut v = Vec::new();
+                let mut l = 1;
+                while l <= pes {
+                    v.push(l);
+                    l *= 2;
+                }
+                v
+            }
+        };
+        out.retain(|&l| l >= 1 && l <= pes);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// NoC capability model (Table 1).
+    pub fn noc(self) -> Noc {
+        match self {
+            Style::Eyeriss => Noc::of(Topology::Buses),
+            Style::Nvdla => Noc::of(Topology::BusTree),
+            Style::Tpu => Noc::of(Topology::Mesh),
+            Style::ShiDianNao => Noc::shidiannao_mesh(),
+            Style::Maeri => Noc::of(Topology::FatTree),
+        }
+    }
+
+    /// Paper mapping name, e.g. `STT_TTS-NKM (NVDLA-style)`.
+    pub fn mapping_name(self) -> &'static str {
+        match self {
+            Style::Eyeriss => "STT_TTS-MNK",
+            Style::Nvdla => "STT_TTS-NKM",
+            Style::Tpu => "STT_TTS-NMK",
+            Style::ShiDianNao => "STT_TST-MNK",
+            Style::Maeri => "TST_TTS-MNK",
+        }
+    }
+
+    /// Which GEMM matrix the style keeps stationary (Table 1 note:
+    /// input-/weight-/output-stationary ⇔ A-/B-/C-stationary).
+    pub fn stationary(self) -> &'static str {
+        match self {
+            Style::Eyeriss => "A (input rows)",
+            Style::Nvdla | Style::Tpu => "B (weights)",
+            Style::ShiDianNao => "C (outputs)",
+            Style::Maeri => "flexible",
+        }
+    }
+}
+
+impl fmt::Display for Style {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Style::Eyeriss => "Eyeriss",
+            Style::Nvdla => "NVDLA",
+            Style::Tpu => "TPU",
+            Style::ShiDianNao => "ShiDianNao",
+            Style::Maeri => "MAERI",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for Style {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "eyeriss" => Ok(Style::Eyeriss),
+            "nvdla" => Ok(Style::Nvdla),
+            "tpu" | "tpuv2" => Ok(Style::Tpu),
+            "shidiannao" | "sdn" => Ok(Style::ShiDianNao),
+            "maeri" => Ok(Style::Maeri),
+            _ => Err(format!(
+                "unknown style {s:?} (want eyeriss|nvdla|tpu|shidiannao|maeri)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_parallel_dims() {
+        assert_eq!(Style::Eyeriss.inter_spatial_dims(), &[Dim::M]);
+        assert_eq!(Style::Eyeriss.intra_spatial_dims(), &[Dim::K]);
+        assert_eq!(Style::Nvdla.inter_spatial_dims(), &[Dim::N]);
+        assert_eq!(Style::Tpu.intra_spatial_dims(), &[Dim::K]);
+        assert_eq!(Style::ShiDianNao.intra_spatial_dims(), &[Dim::N]);
+        assert_eq!(Style::Maeri.inter_spatial_dims().len(), 3);
+    }
+
+    #[test]
+    fn table2_loop_orders() {
+        assert_eq!(Style::Eyeriss.inter_orders(), &[LoopOrder::MNK]);
+        assert_eq!(Style::Nvdla.inter_orders(), &[LoopOrder::NKM]);
+        assert_eq!(Style::Nvdla.intra_orders(), &[LoopOrder::NMK]);
+        assert_eq!(Style::Tpu.inter_orders(), &[LoopOrder::NMK]);
+        assert_eq!(Style::Maeri.inter_orders().len(), 6);
+    }
+
+    #[test]
+    fn cluster_sizes_respect_table2() {
+        assert_eq!(Style::Eyeriss.cluster_sizes(256), (1..=12).collect::<Vec<_>>());
+        assert_eq!(Style::Nvdla.cluster_sizes(256), (16..=64).collect::<Vec<_>>());
+        assert_eq!(Style::Tpu.cluster_sizes(256), vec![16, 256]);
+        assert_eq!(Style::Tpu.cluster_sizes(2048), vec![45, 256]);
+        assert_eq!(Style::ShiDianNao.cluster_sizes(256), vec![8, 16]);
+        let maeri = Style::Maeri.cluster_sizes(256);
+        assert!(maeri.contains(&1) && maeri.contains(&256));
+        assert_eq!(maeri.len(), 9); // 2^0..2^8
+    }
+
+    #[test]
+    fn only_shidiannao_lacks_spatial_reduction() {
+        for s in Style::ALL {
+            assert_eq!(
+                s.noc().spatial_reduction,
+                s != Style::ShiDianNao,
+                "{s}"
+            );
+        }
+    }
+
+    #[test]
+    fn style_parse_roundtrip() {
+        for s in Style::ALL {
+            assert_eq!(s.to_string().parse::<Style>().unwrap(), s);
+        }
+        assert!("foo".parse::<Style>().is_err());
+    }
+
+    #[test]
+    fn mapping_names_match_table2() {
+        assert_eq!(Style::Eyeriss.mapping_name(), "STT_TTS-MNK");
+        assert_eq!(Style::Nvdla.mapping_name(), "STT_TTS-NKM");
+        assert_eq!(Style::Tpu.mapping_name(), "STT_TTS-NMK");
+        assert_eq!(Style::ShiDianNao.mapping_name(), "STT_TST-MNK");
+        assert_eq!(Style::Maeri.mapping_name(), "TST_TTS-MNK");
+    }
+}

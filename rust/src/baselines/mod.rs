@@ -1,0 +1,20 @@
+//! Baselines the paper compares against:
+//!
+//! * [`nontiled`] — the degenerate non-tiled mappings of §3.2 (Table 5's
+//!   NT rows).
+//! * [`random_search`] — Timeloop-style random sampling over the mapping
+//!   space (§5.2: "We also ran random sampling [26] and found that FLASH
+//!   consistently provided the same or better quality of mappings").
+//! * [`exhaustive`] — bounded exhaustive enumeration of the *unpruned*
+//!   space, used to verify on small problems that pruning never loses
+//!   the optimum.
+
+pub mod exhaustive;
+pub mod nontiled;
+pub mod random_search;
+pub mod summa;
+
+pub use exhaustive::exhaustive_best;
+pub use nontiled::non_tiled_mapping;
+pub use random_search::{random_search, RandomSearchResult};
+pub use summa::{compare as summa_compare, summa_best, SummaComparison};

@@ -1,0 +1,105 @@
+//! Non-tiled baseline mappings (paper §3.2, Table 5's "NT" rows).
+//!
+//! "Given any loop order, if the parallelism in the outer cluster is only
+//! on the innermost dimension and the tile sizes of two outer dimensions
+//! are set to 1, we call this a non-tiled mapping." Concretely: all
+//! temporal outer tiles are 1; the spatial dims are sized to fill the
+//! array; inner tiles are all 1.
+
+use crate::arch::{Accelerator, Style};
+use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
+use crate::workloads::Gemm;
+
+/// Build the non-tiled mapping for a style + loop order.
+///
+/// For MAERI (flexible): inter-spatial is the order's middle loop,
+/// intra-spatial its innermost, λ defaults to a small cluster (4) as in
+/// the paper's Fig 6(a) walk-through. For fixed styles the spatial dims
+/// come from Table 2 and λ is the smallest legal cluster.
+pub fn non_tiled_mapping(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Option<Mapping> {
+    let (inter_sp, intra_sp, lambda) = match acc.style {
+        Style::Maeri => {
+            let lambda = 4u64.min(acc.config.pes);
+            (order.0[1], order.0[2], lambda)
+        }
+        s => {
+            if !s.inter_orders().contains(&order) {
+                return None;
+            }
+            let lambda = *s.cluster_sizes(acc.config.pes).first()?;
+            (s.inter_spatial_dims()[0], s.intra_spatial_dims()[0], lambda)
+        }
+    };
+    if inter_sp == intra_sp {
+        return None;
+    }
+    let clusters = (acc.config.pes / lambda).max(1);
+    let dim_of = |d: Dim| match d {
+        Dim::M => wl.m,
+        Dim::N => wl.n,
+        Dim::K => wl.k,
+    };
+
+    let mut outer = Tiles::ones();
+    // spatial dims fill the array; temporal dims stay at 1 (non-tiled)
+    outer.set(inter_sp, dim_of(inter_sp).div_ceil(clusters).max(1));
+    outer.set(intra_sp, lambda.min(dim_of(intra_sp)).max(1));
+    let mut inner = Tiles::ones();
+    // intra-spatial chunk per PE: 1 for MAERI; for fixed styles the
+    // non-tiled variant also degenerates to chunk 1.
+    inner.set(intra_sp, 1);
+
+    let m = Mapping {
+        inter_order: order,
+        intra_order: order,
+        inter_spatial: inter_sp,
+        intra_spatial: intra_sp,
+        cluster_size: lambda,
+        outer,
+        inner,
+    };
+    m.is_well_formed().then_some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwConfig;
+    use crate::cost::CostModel;
+
+    #[test]
+    fn nt_is_non_tiled_by_definition() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for order in LoopOrder::ALL {
+            let m = non_tiled_mapping(&acc, &wl, order).unwrap();
+            assert!(m.is_non_tiled(), "{order}: {m}");
+            assert!(m.is_well_formed());
+        }
+    }
+
+    #[test]
+    fn nt_exists_for_fixed_styles_native_order() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in [Style::Eyeriss, Style::Nvdla, Style::Tpu, Style::ShiDianNao] {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let order = style.inter_orders()[0];
+            assert!(non_tiled_mapping(&acc, &wl, order).is_some(), "{style}");
+            // unsupported orders yield None
+            assert!(non_tiled_mapping(&acc, &wl, LoopOrder::KNM).is_none());
+        }
+    }
+
+    #[test]
+    fn table5_nt_slower_than_flash_tiled() {
+        // the headline: FLASH tiling reduces runtime 94% / energy 96%.
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let nt = non_tiled_mapping(&acc, &wl, LoopOrder::MNK).unwrap();
+        let model = CostModel::new(acc.clone());
+        let nt_cost = model.evaluate(&nt, &wl);
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        assert!(best.cost().runtime_cycles() * 5 < nt_cost.runtime_cycles());
+        assert!(best.cost().energy_j * 5.0 < nt_cost.energy_j);
+    }
+}

@@ -1,0 +1,114 @@
+//! SUMMA / LAP-style baseline (related work, §6): Pedram et al.'s Linear
+//! Algebra Core/Processor runs GEMM with the SUMMA algorithm, which the
+//! paper characterizes as "a subset of the MAERI-style TST_TTS mapping
+//! with the ⟨k,m,n⟩ / ⟨k,n,m⟩ loop order" (§3.1, footnote 4).
+//!
+//! This module builds that restricted mapping family so FLASH's full
+//! flexibility can be compared against a SUMMA-only accelerator.
+
+use anyhow::Result;
+
+use crate::arch::Accelerator;
+use crate::cost::CostModel;
+use crate::dataflow::LoopOrder;
+use crate::flash::{search_with, EvaluatedMapping, SearchOpts};
+use crate::workloads::Gemm;
+
+/// The SUMMA loop orders.
+pub const SUMMA_ORDERS: [LoopOrder; 2] = [LoopOrder::KMN, LoopOrder::KNM];
+
+/// Best SUMMA-style mapping (MAERI substrate restricted to the K-outer
+/// orders). Errors if the accelerator cannot express them.
+pub fn summa_best(acc: &Accelerator, wl: &Gemm) -> Result<EvaluatedMapping> {
+    let mut best: Option<EvaluatedMapping> = None;
+    for order in SUMMA_ORDERS {
+        if let Ok(r) = search_with(
+            acc,
+            wl,
+            &SearchOpts {
+                order: Some(order),
+                ..Default::default()
+            },
+        ) {
+            let better = match &best {
+                Some(b) => r.best.cost.runtime_cycles() < b.cost.runtime_cycles(),
+                None => true,
+            };
+            if better {
+                best = Some(r.best);
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no SUMMA-style mapping feasible on {}", acc.style))
+}
+
+/// Comparison row: SUMMA best vs FLASH's fully flexible best.
+#[derive(Debug)]
+pub struct SummaComparison {
+    pub summa: EvaluatedMapping,
+    pub flexible: EvaluatedMapping,
+}
+
+impl SummaComparison {
+    /// How much runtime the full loop-order flexibility buys over
+    /// SUMMA-only hardware (≥ 1).
+    pub fn flexibility_speedup(&self) -> f64 {
+        self.summa.cost.runtime_cycles() as f64 / self.flexible.cost.runtime_cycles() as f64
+    }
+}
+
+/// Compare on one workload.
+pub fn compare(acc: &Accelerator, wl: &Gemm) -> Result<SummaComparison> {
+    let summa = summa_best(acc, wl)?;
+    let flexible = crate::flash::search(acc, wl)?.best;
+    // sanity: both were evaluated under the same model
+    let model = CostModel::new(acc.clone());
+    debug_assert_eq!(
+        model.evaluate(&summa.mapping, wl).runtime_cycles(),
+        summa.cost.runtime_cycles()
+    );
+    Ok(SummaComparison { summa, flexible })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    #[test]
+    fn summa_is_k_outer() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::by_id("VI").unwrap();
+        let s = summa_best(&acc, &wl).unwrap();
+        assert!(SUMMA_ORDERS.contains(&s.mapping.inter_order));
+    }
+
+    #[test]
+    fn flexible_never_loses_to_summa() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        for id in ["IV", "V", "VI"] {
+            let wl = Gemm::by_id(id).unwrap();
+            let c = compare(&acc, &wl).unwrap();
+            assert!(
+                c.flexibility_speedup() >= 1.0 - 1e-9,
+                "{id}: {}",
+                c.flexibility_speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn summa_infeasible_on_fixed_order_styles() {
+        // TPU-style hardware can't run K-outer orders.
+        let acc = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        assert!(summa_best(&acc, &Gemm::by_id("VI").unwrap()).is_err());
+    }
+
+    #[test]
+    fn flexibility_pays_on_skewed_workloads() {
+        // On IV (tall-skinny B), free loop order beats SUMMA-only.
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let c = compare(&acc, &Gemm::by_id("IV").unwrap()).unwrap();
+        assert!(c.flexibility_speedup() > 1.0);
+    }
+}

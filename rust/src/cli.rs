@@ -1,0 +1,380 @@
+//! Hand-rolled CLI for the `repro` binary (the build image is offline,
+//! so no `clap`; see DESIGN.md §5 Substitutions).
+//!
+//! `repro <subcommand> [--key value ...]` — one subcommand per paper
+//! table/figure plus `search`, `validate` and `serve`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::arch::{Accelerator, HwConfig, Style};
+use crate::experiments;
+use crate::report::histogram;
+use crate::runtime::{default_artifacts_dir, Runtime};
+use crate::workloads::{read_trace, Gemm, WorkloadGen};
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut it = raw.into_iter();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {arg:?}"))?;
+            let value = it
+                .next()
+                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn config(&self) -> Result<HwConfig> {
+        match self.get("config").unwrap_or("edge") {
+            "edge" => Ok(HwConfig::edge()),
+            "cloud" => Ok(HwConfig::cloud()),
+            "tiny" => Ok(HwConfig::tiny()),
+            other => bail!("unknown --config {other:?} (edge|cloud|tiny)"),
+        }
+    }
+
+    pub fn style(&self) -> Result<Style> {
+        self.get("style")
+            .unwrap_or("maeri")
+            .parse()
+            .map_err(|e: String| anyhow!(e))
+    }
+
+    pub fn workload(&self) -> Result<Gemm> {
+        if let Some(id) = self.get("workload") {
+            return Gemm::by_id(id).ok_or_else(|| anyhow!("unknown workload id {id:?}"));
+        }
+        Ok(Gemm::new(
+            "cli",
+            self.get_u64("m", 512)?,
+            self.get_u64("n", 256)?,
+            self.get_u64("k", 256)?,
+        ))
+    }
+}
+
+const HELP: &str = "\
+repro — FLASH + MAESTRO-BLAS reproduction (CS.DC 2021)
+
+usage: repro <command> [--key value ...]
+
+paper artifacts:
+  table2               mapping constraints per accelerator style
+  table3               the GEMM workload suite
+  table4               hardware configurations
+  table5               tiled vs non-tiled MAERI mappings (workload VI, edge)
+  table6               candidate tile-size bounds  [--workload VI] [--config edge]
+  pruning              §5.2 pruning statistics     [--m 256 --n 256 --k 256] [--style maeri]
+  fig7                 candidate-runtime histogram [--config edge] [--bins 100]
+  fig8                 5 styles × workloads        [--config edge] [--workloads I,II,III,IV]
+  fig9                 MAERI loop-order sweep (workloads IV and V)
+  fig10                5 styles × MLP FC layers    [--config edge]
+
+extensions:
+  pareto               runtime/energy Pareto frontier  [--style --config --workload|-m-n-k] [--weight 0.5]
+  route                heterogeneous-node routing of Table 3 [--config edge] [--objective runtime|energy|edp]
+  summa                SUMMA/LAP-only vs flexible MAERI (Table 3)  [--config edge]
+  resnet               conv-as-GEMM ResNet-50 layers × 5 styles    [--config edge] [--batch 1]
+  sweep-cluster        cluster-size ablation  [--style maeri] [--config edge] [--workload VI]
+  export-mapping       best mapping in MAESTRO directive syntax [--style --config --workload|-m-n-k]
+
+tools:
+  search               one FLASH search  [--style maeri] [--config edge] [--m --n --k | --workload ID]
+  validate             analytical model vs cycle simulator
+  serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style --config]
+  help                 this text
+";
+
+/// Run the CLI; returns the text to print.
+pub fn run(args: Args) -> Result<String> {
+    match args.command.as_str() {
+        "table2" => Ok(experiments::table2().render()),
+        "table3" => Ok(experiments::table3().render()),
+        "table4" => Ok(experiments::table4().render()),
+        "table5" => Ok(experiments::table5().render()),
+        "table6" => Ok(experiments::table6(&args.workload()?, &args.config()?).render()),
+        "pruning" => {
+            let wl = if args.get("workload").is_some() || args.get("m").is_some() {
+                args.workload()?
+            } else {
+                Gemm::new("sq256", 256, 256, 256) // the §5.2 instance
+            };
+            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            Ok(experiments::pruning_report(&acc, &wl).to_table().render())
+        }
+        "fig7" => {
+            let bins = args.get_u64("bins", 100)? as usize;
+            let d = experiments::fig7(&args.config()?);
+            let mut out = format!(
+                "NVDLA-style candidates for workload I: {} mappings, best {:.2} ms, worst {:.2} ms ({:.2}x)\n",
+                d.candidates,
+                d.best_ms,
+                d.worst_ms,
+                d.worst_to_best()
+            );
+            out.push_str(&histogram(&d.runtimes_ms, bins, 60));
+            Ok(out)
+        }
+        "fig8" => {
+            let ids_raw = args.get("workloads").unwrap_or("I,II,III,IV,V,VI");
+            let ids: Vec<&str> = ids_raw.split(',').collect();
+            Ok(experiments::fig8(&args.config()?, &ids).render())
+        }
+        "fig9" => Ok(experiments::fig9().render()),
+        "fig10" => Ok(experiments::fig10(&args.config()?).render()),
+        "search" => {
+            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let wl = args.workload()?;
+            let r = crate::flash::search(&acc, &wl)?;
+            let c = r.cost();
+            let eb = &c.energy_breakdown;
+            Ok(format!(
+                "workload {} on {}\nbest mapping: {}\ndirectives:\n{}\nprojected: {:.4} ms, {:.3} mJ, {:.1} GFLOPS, reuse {:.1}, util {:.2}\narithmetic intensity: {:.1} MACs/S2-access; NoC BW requirement {:.1} GB/s (provisioned {})\nenergy breakdown: S1 {:.1}% S2 {:.1}% MAC {:.1}% NoC {:.1}%\ncandidates: {} (unpruned space {:.3e}, reduction {:.0}x) in {:?}\n",
+                wl,
+                acc,
+                r.mapping(),
+                r.mapping().level_spec(),
+                c.runtime_ms(),
+                c.energy_mj(),
+                c.throughput_gflops(),
+                c.reuse_factor(),
+                c.utilization(),
+                c.arithmetic_intensity(),
+                c.noc_bw_requirement_bytes_per_sec(acc.config.elem_bytes, acc.config.clock_hz)
+                    / 1e9,
+                format!("{} GB/s", acc.config.noc_bytes_per_sec / 1_000_000_000),
+                100.0 * eb.s1_j / c.energy_j,
+                100.0 * eb.s2_j / c.energy_j,
+                100.0 * eb.mac_j / c.energy_j,
+                100.0 * eb.noc_j / c.energy_j,
+                r.candidates,
+                r.unpruned as f64,
+                r.reduction_factor(),
+                r.elapsed,
+            ))
+        }
+        "pareto" => {
+            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let wl = args.workload()?;
+            let frontier = crate::flash::pareto_frontier(&acc, &wl)?;
+            let mut t = crate::report::Table::new(&["runtime ms", "energy mJ", "mapping"]);
+            for p in &frontier {
+                t.row(&[
+                    format!("{:.4}", p.runtime_ms),
+                    format!("{:.3}", p.energy_mj),
+                    p.mapping.mapping.name(),
+                ]);
+            }
+            let w: f64 = args
+                .get("weight")
+                .unwrap_or("0.5")
+                .parse()
+                .context("--weight")?;
+            let pick = crate::flash::select_weighted(&frontier, w)
+                .map(|p| format!("{} ({:.4} ms, {:.3} mJ)", p.mapping.mapping, p.runtime_ms, p.energy_mj))
+                .unwrap_or_default();
+            Ok(format!(
+                "{}\n{} frontier points; weighted pick (w={w}): {pick}\n",
+                t.render(),
+                frontier.len()
+            ))
+        }
+        "route" => {
+            use crate::coordinator::{Objective, Router};
+            let obj = match args.get("objective").unwrap_or("runtime") {
+                "runtime" => Objective::Runtime,
+                "energy" => Objective::Energy,
+                "edp" => Objective::Edp,
+                other => bail!("unknown --objective {other:?}"),
+            };
+            let pool = Accelerator::all_styles(&args.config()?);
+            let mut router = Router::new(pool)?;
+            let mut t = crate::report::Table::new(&["workload", "routed to", "mapping", "score"]);
+            for wl in Gemm::table3() {
+                let r = router.route(&wl, obj)?;
+                t.row(&[
+                    wl.name.clone(),
+                    router.pool()[r.accelerator_idx].style.to_string(),
+                    r.best.mapping.name(),
+                    r.scores
+                        .get(r.accelerator_idx)
+                        .and_then(|s| *s)
+                        .map(|s| format!("{s:.4}"))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            Ok(t.render())
+        }
+        "summa" => Ok(experiments::summa_table(&args.config()?).render()),
+        "resnet" => {
+            let batch = args.get_u64("batch", 1)?;
+            Ok(experiments::resnet_table(&args.config()?, batch).render())
+        }
+        "sweep-cluster" => {
+            let wl = args.workload().unwrap_or_else(|_| Gemm::by_id("VI").unwrap());
+            Ok(experiments::cluster_sweep(args.style()?, &args.config()?, &wl).render())
+        }
+        "export-mapping" => {
+            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let wl = args.workload()?;
+            let r = crate::flash::search(&acc, &wl)?;
+            Ok(crate::dataflow::maestro_fmt::to_maestro(&r.mapping().level_spec()))
+        }
+        "validate" => {
+            let (t, worst) = experiments::validate_all();
+            Ok(format!(
+                "{}\nworst model/sim deviation: {:.2}x\n",
+                t.render(),
+                worst
+            ))
+        }
+        "serve" => serve(&args),
+        "help" | "" => Ok(HELP.to_string()),
+        other => bail!("unknown command {other:?}\n\n{HELP}"),
+    }
+}
+
+fn serve(args: &Args) -> Result<String> {
+    use crate::coordinator::{GemmService, ServiceConfig};
+
+    let requests: Vec<Gemm> = if let Some(path) = args.get("trace") {
+        read_trace(std::path::Path::new(path))?
+    } else {
+        let n = args.get_u64("random", 16)? as usize;
+        let mut gen = WorkloadGen::new(args.get_u64("seed", 42)?);
+        gen.take(n)
+            .into_iter()
+            .map(|mut g| {
+                // keep numeric execution tractable on CPU
+                g.m = g.m.min(256);
+                g.n = g.n.min(256);
+                g.k = g.k.min(256);
+                g
+            })
+            .collect()
+    };
+    let acc = Accelerator::of_style(args.style()?, args.config()?);
+    let runtime = Runtime::load(&default_artifacts_dir())?;
+    let cfg = ServiceConfig {
+        verify: args.get("verify").map(|v| v == "true").unwrap_or(false),
+        max_exec_dim: args.get_u64("max-exec-dim", 512)?,
+        tile: args.get_u64("tile", 0)?,
+    };
+    let mut svc = GemmService::new(acc, runtime, cfg);
+    let report = svc.serve(&requests)?;
+
+    let mut out = String::new();
+    for o in &report.outcomes {
+        out.push_str(&format!(
+            "{:<14} {:>6}x{:<6}x{:<6} {} proj={:.3}ms exec={} verified={:?} latency={}µs\n",
+            o.workload.name,
+            o.workload.m,
+            o.workload.n,
+            o.workload.k,
+            o.mapping_name,
+            o.projected_ms,
+            o.executed,
+            o.verified,
+            o.latency_us
+        ));
+    }
+    let m = &report.metrics;
+    out.push_str(&format!(
+        "\nrequests={} batches={} cache hit/miss={}/{} macs={} \nlatency: {}\nsearch={:?} exec={:?} exec-throughput={:.3} GFLOP/s\n",
+        m.requests,
+        m.batches,
+        m.mapping_cache_hits,
+        m.mapping_cache_misses,
+        m.macs_executed,
+        m.latency.summary(),
+        m.search_time,
+        m.exec_time,
+        m.exec_throughput_gflops()
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(["search", "--m", "64", "--style", "tpu"].map(String::from)).unwrap();
+        assert_eq!(a.command, "search");
+        assert_eq!(a.get_u64("m", 0).unwrap(), 64);
+        assert_eq!(a.style().unwrap(), Style::Tpu);
+        assert_eq!(a.get_u64("n", 7).unwrap(), 7); // default
+    }
+
+    #[test]
+    fn parse_rejects_bad_flags() {
+        assert!(Args::parse(["x", "oops"].map(String::from)).is_err());
+        assert!(Args::parse(["x", "--dangling"].map(String::from)).is_err());
+        let a = Args::parse(["x", "--m", "NaN"].map(String::from)).unwrap();
+        assert!(a.get_u64("m", 0).is_err());
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run(Args::parse(["help".to_string()]).unwrap())
+            .unwrap()
+            .contains("table5"));
+        assert!(run(Args::parse(["nope".to_string()]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn quick_commands_work() {
+        for cmd in ["table2", "table3", "table4"] {
+            let out = run(Args::parse([cmd.to_string()]).unwrap()).unwrap();
+            assert!(out.lines().count() > 3, "{cmd}");
+        }
+    }
+
+    #[test]
+    fn search_command_renders() {
+        let a = Args::parse(
+            ["search", "--style", "nvdla", "--workload", "VI"].map(String::from),
+        )
+        .unwrap();
+        let out = run(a).unwrap();
+        assert!(out.contains("best mapping"));
+        assert!(out.contains("STT_TTS-NKM"));
+    }
+
+    #[test]
+    fn workload_lookup_and_custom() {
+        let a = Args::parse(["search", "--workload", "III"].map(String::from)).unwrap();
+        assert_eq!(a.workload().unwrap().k, 8192);
+        let b = Args::parse(["search", "--m", "10", "--n", "20", "--k", "30"].map(String::from))
+            .unwrap();
+        let wl = b.workload().unwrap();
+        assert_eq!((wl.m, wl.n, wl.k), (10, 20, 30));
+    }
+}

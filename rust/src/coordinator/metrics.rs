@@ -1,0 +1,121 @@
+//! Service metrics: latency distribution and throughput counters.
+
+use std::time::Duration;
+
+/// Online latency statistics (min / mean / p50 / p95 / max over a
+/// bounded reservoir).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    fn sorted(&self) -> Vec<u64> {
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let s = self.sorted();
+        if s.is_empty() {
+            return 0;
+        }
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    pub fn min_us(&self) -> u64 {
+        self.samples_us.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.samples_us.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} min={}µs mean={:.0}µs p50={}µs p95={}µs max={}µs",
+            self.count(),
+            self.min_us(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.max_us()
+        )
+    }
+}
+
+/// Aggregate service counters.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub mapping_cache_hits: u64,
+    pub mapping_cache_misses: u64,
+    pub macs_executed: u64,
+    pub latency: LatencyStats,
+    pub search_time: Duration,
+    pub exec_time: Duration,
+}
+
+impl ServiceMetrics {
+    /// Achieved numeric throughput over the execution time (GFLOP/s,
+    /// 1 MAC = 1 FLOP as in the paper).
+    pub fn exec_throughput_gflops(&self) -> f64 {
+        let secs = self.exec_time.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.macs_executed as f64 / secs / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            l.record(Duration::from_micros(us));
+        }
+        assert_eq!(l.count(), 5);
+        assert_eq!(l.min_us(), 100);
+        assert_eq!(l.max_us(), 1000);
+        assert_eq!(l.percentile_us(50.0), 300);
+        assert!(l.mean_us() > 300.0 && l.mean_us() < 500.0);
+        assert!(l.summary().contains("p95"));
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::default();
+        assert_eq!(l.percentile_us(95.0), 0);
+        assert_eq!(l.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn throughput_accounting() {
+        let mut m = ServiceMetrics::default();
+        m.macs_executed = 2_000_000_000;
+        m.exec_time = Duration::from_secs(2);
+        assert!((m.exec_throughput_gflops() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordination: parallel mapping-search orchestration and the GEMM
+//! service that ties FLASH to the PJRT runtime.
+//!
+//! * [`orchestrator`] — fan a grid of (accelerator × workload) FLASH
+//!   searches over a worker pool (std::thread; the paper's §5.4
+//!   evaluation sweep is embarrassingly parallel).
+//! * [`service`] — the request loop of the end-to-end example: accept
+//!   GEMM requests (trace or generator), batch identical shapes, search
+//!   (with a mapping cache), execute numerically through the tile
+//!   artifact, report per-request latency and aggregate throughput.
+//! * [`metrics`] — latency/throughput accounting.
+
+mod metrics;
+mod orchestrator;
+mod router;
+mod service;
+
+pub use metrics::{LatencyStats, ServiceMetrics};
+pub use orchestrator::{search_grid, GridResult};
+pub use router::{Objective, Route, Router};
+pub use service::{GemmService, RequestOutcome, ServiceConfig, ServiceReport};

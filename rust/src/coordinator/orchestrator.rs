@@ -1,0 +1,112 @@
+//! Parallel search orchestration: run FLASH over a grid of
+//! (accelerator × workload) pairs on a worker pool.
+//!
+//! The evaluation sweeps of §5.4 (5 styles × 2 configs × 6 workloads)
+//! are embarrassingly parallel; a shared work queue + `thread::scope`
+//! keeps this dependency-free.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use crate::arch::Accelerator;
+use crate::flash::{self, SearchResult};
+use crate::workloads::Gemm;
+
+/// One cell of the evaluation grid.
+#[derive(Debug)]
+pub struct GridResult {
+    pub accelerator: Accelerator,
+    pub workload: Gemm,
+    pub result: anyhow::Result<SearchResult>,
+}
+
+/// Search every (accelerator, workload) pair using up to `threads`
+/// workers (0 ⇒ `available_parallelism`). Results preserve input order.
+pub fn search_grid(
+    accelerators: &[Accelerator],
+    workloads: &[Gemm],
+    threads: usize,
+) -> Vec<GridResult> {
+    let pairs: Vec<(usize, &Accelerator, &Gemm)> = accelerators
+        .iter()
+        .flat_map(|a| workloads.iter().map(move |w| (a, w)))
+        .enumerate()
+        .map(|(i, (a, w))| (i, a, w))
+        .collect();
+
+    let threads = if threads == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+    .min(pairs.len().max(1));
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<GridResult>>> =
+        Mutex::new((0..pairs.len()).map(|_| None).collect());
+
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let pairs = &pairs;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= pairs.len() {
+                    break;
+                }
+                let (idx, acc, wl) = pairs[i];
+                // search outside the lock; store under it
+                let result = flash::search(acc, wl);
+                let cell = GridResult {
+                    accelerator: (*acc).clone(),
+                    workload: (*wl).clone(),
+                    result,
+                };
+                slots.lock().expect("slots lock")[idx] = Some(cell);
+            });
+        }
+    });
+
+    slots
+        .into_inner()
+        .expect("slots lock")
+        .into_iter()
+        .map(|s| s.expect("every grid cell filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    #[test]
+    fn grid_covers_all_pairs_in_order() {
+        let accs = Accelerator::all_styles(&HwConfig::edge());
+        let wls = vec![Gemm::new("a", 64, 64, 64), Gemm::new("b", 8, 128, 32)];
+        let grid = search_grid(&accs, &wls, 2);
+        assert_eq!(grid.len(), 10);
+        // order: acc-major, workload-minor
+        assert_eq!(grid[0].workload.name, "a");
+        assert_eq!(grid[1].workload.name, "b");
+        assert_eq!(grid[0].accelerator.style, Style::Eyeriss);
+        assert_eq!(grid[9].accelerator.style, Style::Maeri);
+        for cell in &grid {
+            assert!(cell.result.is_ok(), "{}", cell.accelerator);
+        }
+    }
+
+    #[test]
+    fn single_thread_matches_multi() {
+        let accs = vec![Accelerator::of_style(Style::Maeri, HwConfig::edge())];
+        let wls = vec![Gemm::new("x", 128, 64, 32)];
+        let a = search_grid(&accs, &wls, 1);
+        let b = search_grid(&accs, &wls, 4);
+        let ra = a[0].result.as_ref().unwrap();
+        let rb = b[0].result.as_ref().unwrap();
+        assert_eq!(ra.cost().runtime_cycles(), rb.cost().runtime_cycles());
+        assert_eq!(ra.mapping(), rb.mapping());
+    }
+}

@@ -1,0 +1,166 @@
+//! Heterogeneous-node request router — the paper's conclusion points at
+//! "a heterogeneous HPC node with these accelerators"; this router is
+//! that node's front-end: given one request and a pool of attached
+//! accelerators (different styles and/or configs), route it to the
+//! accelerator whose best FLASH mapping minimizes the chosen objective.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::arch::Accelerator;
+use crate::flash::{self, EvaluatedMapping};
+use crate::workloads::Gemm;
+
+/// Routing objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    Runtime,
+    Energy,
+    /// Energy–delay product.
+    Edp,
+}
+
+/// A routing decision for one request.
+#[derive(Debug)]
+pub struct Route {
+    /// Index of the chosen accelerator in the pool.
+    pub accelerator_idx: usize,
+    pub best: EvaluatedMapping,
+    /// Per-accelerator scores (same order as the pool; `None` =
+    /// infeasible).
+    pub scores: Vec<Option<f64>>,
+}
+
+/// The router: an accelerator pool plus a per-(shape, objective)
+/// decision cache.
+pub struct Router {
+    pool: Vec<Accelerator>,
+    cache: HashMap<(u64, u64, u64, u8), usize>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl Router {
+    pub fn new(pool: Vec<Accelerator>) -> Result<Self> {
+        if pool.is_empty() {
+            bail!("router needs a non-empty accelerator pool");
+        }
+        Ok(Router {
+            pool,
+            cache: HashMap::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+
+    pub fn pool(&self) -> &[Accelerator] {
+        &self.pool
+    }
+
+    fn score(e: &EvaluatedMapping, obj: Objective) -> f64 {
+        match obj {
+            Objective::Runtime => e.cost.runtime_ms(),
+            Objective::Energy => e.cost.energy_j,
+            Objective::Edp => e.cost.energy_j * e.cost.runtime_ms(),
+        }
+    }
+
+    /// Route one request: search every pool member, pick the argmin.
+    pub fn route(&mut self, wl: &Gemm, obj: Objective) -> Result<Route> {
+        let key = (wl.m, wl.n, wl.k, obj as u8);
+        if let Some(&idx) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            // re-derive the mapping for the cached winner only
+            let best = flash::search(&self.pool[idx], wl)?.best;
+            return Ok(Route {
+                accelerator_idx: idx,
+                best,
+                scores: Vec::new(),
+            });
+        }
+        self.cache_misses += 1;
+
+        let mut scores = Vec::with_capacity(self.pool.len());
+        let mut best: Option<(usize, EvaluatedMapping, f64)> = None;
+        for (i, acc) in self.pool.iter().enumerate() {
+            match flash::search(acc, wl) {
+                Ok(r) => {
+                    let s = Self::score(&r.best, obj);
+                    scores.push(Some(s));
+                    let better = match &best {
+                        Some((_, _, bs)) => s < *bs,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, r.best, s));
+                    }
+                }
+                Err(_) => scores.push(None),
+            }
+        }
+        let Some((idx, best, _)) = best else {
+            bail!("no accelerator in the pool can run {wl}");
+        };
+        self.cache.insert(key, idx);
+        Ok(Route {
+            accelerator_idx: idx,
+            best,
+            scores,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    fn pool() -> Vec<Accelerator> {
+        Accelerator::all_styles(&HwConfig::edge())
+    }
+
+    #[test]
+    fn router_picks_argmin_per_objective() {
+        let mut router = Router::new(pool()).unwrap();
+        let wl = Gemm::by_id("VI").unwrap();
+        let r = router.route(&wl, Objective::Runtime).unwrap();
+        let chosen = r.scores[r.accelerator_idx].unwrap();
+        for s in r.scores.iter().flatten() {
+            assert!(chosen <= *s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn objectives_can_disagree() {
+        // at least for some workload, the runtime winner and energy
+        // winner differ (that is the point of a heterogeneous node)
+        let mut router = Router::new(pool()).unwrap();
+        let mut any_disagree = false;
+        for id in ["I", "II", "III", "IV", "V", "VI"] {
+            let wl = Gemm::by_id(id).unwrap();
+            let rt = router.route(&wl, Objective::Runtime).unwrap();
+            let en = router.route(&wl, Objective::Energy).unwrap();
+            if rt.accelerator_idx != en.accelerator_idx {
+                any_disagree = true;
+            }
+        }
+        assert!(any_disagree, "runtime and energy routing never disagreed");
+    }
+
+    #[test]
+    fn cache_serves_repeats() {
+        let mut router = Router::new(pool()).unwrap();
+        let wl = Gemm::new("r", 128, 128, 128);
+        let a = router.route(&wl, Objective::Edp).unwrap();
+        let b = router.route(&wl, Objective::Edp).unwrap();
+        assert_eq!(a.accelerator_idx, b.accelerator_idx);
+        assert_eq!(router.cache_hits, 1);
+        assert_eq!(router.cache_misses, 1);
+    }
+
+    #[test]
+    fn empty_pool_rejected() {
+        assert!(Router::new(Vec::new()).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! The GEMM service: the end-to-end request loop.
+//!
+//! Requests (GEMM workloads with operand data generated per request)
+//! flow through three stages, Python nowhere on the path:
+//!
+//! 1. **Batching** — consecutive requests with identical shape are
+//!    grouped; one FLASH search serves the whole batch (and a mapping
+//!    cache serves repeat shapes across batches).
+//! 2. **Search** — FLASH + MAESTRO-BLAS select the mapping; its
+//!    projected cost is attached to the response.
+//! 3. **Execution** — the tiled executor drives the AOT Pallas tile
+//!    kernel over the mapping's loop order via PJRT, producing real
+//!    numbers; results are checked against a Rust reference GEMM when
+//!    `verify` is set.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::arch::Accelerator;
+use crate::dataflow::LoopOrder;
+use crate::flash::{self};
+use crate::runtime::{Runtime, TiledExecutor};
+use crate::workloads::Gemm;
+
+use super::metrics::ServiceMetrics;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Verify every result against a Rust reference GEMM.
+    pub verify: bool,
+    /// Cap on M/N/K for numeric execution (tile artifacts are small;
+    /// huge workloads get search-only responses).
+    pub max_exec_dim: u64,
+    /// Force a specific tile artifact (0 ⇒ auto).
+    pub tile: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            verify: false,
+            max_exec_dim: 512,
+            tile: 0,
+        }
+    }
+}
+
+/// Per-request outcome.
+#[derive(Debug)]
+pub struct RequestOutcome {
+    pub workload: Gemm,
+    pub mapping_name: String,
+    pub projected_ms: f64,
+    pub executed: bool,
+    pub verified: Option<bool>,
+    pub latency_us: u64,
+}
+
+/// Final report of a service run.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub outcomes: Vec<RequestOutcome>,
+    pub metrics: ServiceMetrics,
+}
+
+/// The service itself: owns the runtime + mapping cache.
+pub struct GemmService {
+    accelerator: Accelerator,
+    runtime: Runtime,
+    config: ServiceConfig,
+    mapping_cache: HashMap<(u64, u64, u64), (String, f64, LoopOrder)>,
+}
+
+impl GemmService {
+    pub fn new(accelerator: Accelerator, runtime: Runtime, config: ServiceConfig) -> Self {
+        GemmService {
+            accelerator,
+            runtime,
+            config,
+            mapping_cache: HashMap::new(),
+        }
+    }
+
+    /// Deterministic operand data for a request.
+    fn operands(wl: &Gemm, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut state = seed.max(1);
+        let mut gen = |n: u64| -> Vec<f32> {
+            (0..n)
+                .map(|_| {
+                    state ^= state >> 12;
+                    state ^= state << 25;
+                    state ^= state >> 27;
+                    ((state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
+                        - 0.5
+                })
+                .collect()
+        };
+        (gen(wl.m * wl.k), gen(wl.k * wl.n))
+    }
+
+    fn reference_gemm(wl: &Gemm, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a[i * k + kk];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let brow = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// Serve a trace of requests; batches consecutive same-shape
+    /// requests (one search per distinct shape).
+    pub fn serve(&mut self, requests: &[Gemm]) -> Result<ServiceReport> {
+        let mut metrics = ServiceMetrics::default();
+        let mut outcomes = Vec::with_capacity(requests.len());
+
+        let mut i = 0usize;
+        while i < requests.len() {
+            // batch = maximal run of identical shapes
+            let shape = (requests[i].m, requests[i].n, requests[i].k);
+            let mut j = i;
+            while j < requests.len()
+                && (requests[j].m, requests[j].n, requests[j].k) == shape
+            {
+                j += 1;
+            }
+            metrics.batches += 1;
+
+            // one search per shape (cached)
+            let (mapping_name, projected_ms, order) =
+                if let Some(hit) = self.mapping_cache.get(&shape) {
+                    metrics.mapping_cache_hits += 1;
+                    hit.clone()
+                } else {
+                    metrics.mapping_cache_misses += 1;
+                    let t0 = Instant::now();
+                    let r = flash::search(&self.accelerator, &requests[i])?;
+                    metrics.search_time += t0.elapsed();
+                    let entry = (
+                        r.mapping().name(),
+                        r.cost().runtime_ms(),
+                        r.mapping().inter_order,
+                    );
+                    self.mapping_cache.insert(shape, entry.clone());
+                    entry
+                };
+
+            for (b, wl) in requests[i..j].iter().enumerate() {
+                let t0 = Instant::now();
+                let can_exec = wl.m.max(wl.n).max(wl.k) <= self.config.max_exec_dim;
+                let mut verified = None;
+                if can_exec {
+                    let (a, bm) = Self::operands(wl, 0x5EED + i as u64 + b as u64);
+                    let tile = if self.config.tile > 0 {
+                        self.config.tile
+                    } else {
+                        TiledExecutor::auto_tile(&self.runtime, wl)
+                    };
+                    let te0 = Instant::now();
+                    let mut exec = TiledExecutor::new(&mut self.runtime, tile as usize, order)?;
+                    let c = exec.gemm(wl, &a, &bm)?;
+                    metrics.exec_time += te0.elapsed();
+                    metrics.macs_executed += wl.macs();
+                    if self.config.verify {
+                        let r = Self::reference_gemm(wl, &a, &bm);
+                        let ok = c.iter().zip(&r).all(|(x, y)| {
+                            (x - y).abs() <= 1e-3 * (1.0 + y.abs())
+                        });
+                        verified = Some(ok);
+                    }
+                }
+                let latency = t0.elapsed();
+                metrics.latency.record(latency);
+                metrics.requests += 1;
+                outcomes.push(RequestOutcome {
+                    workload: wl.clone(),
+                    mapping_name: mapping_name.clone(),
+                    projected_ms,
+                    executed: can_exec,
+                    verified,
+                    latency_us: latency.as_micros() as u64,
+                });
+            }
+            i = j;
+        }
+
+        Ok(ServiceReport { outcomes, metrics })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}

@@ -1,0 +1,33 @@
+//! MAESTRO-BLAS — the analytical cost model (paper §3.3).
+//!
+//! Given an accelerator, a mapping, and a GEMM workload, produce the
+//! projected runtime, per-level buffer-access counts, energy, utilization
+//! and data-reuse metrics. The equations are documented per sub-module:
+//!
+//! * [`access`] — S1/S2 buffer-access counting from reuse analysis,
+//!   anchored to the paper's Table 5 (e.g. S1 counts for workload VI
+//!   reproduce the 3.3E7 / 6.6E7 / 6.7E7 magnitudes exactly).
+//! * [`runtime`] — compute-vs-NoC roofline per outer step with double
+//!   buffering (Table 5: tiled ⟨m,n,k⟩ ⇒ compute-bound 0.131 ms on edge;
+//!   non-tiled ⇒ NoC-bound ≈ 2.1 ms).
+//! * [`energy`]  — per-access energy constants (28 nm-calibrated, see
+//!   `EnergyModel` docs) combining buffer, MAC and NoC-wire energy.
+
+mod access;
+mod energy;
+mod model;
+mod runtime;
+
+pub use access::{AccessCounts, PerMatrix};
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use model::{Cost, CostModel};
+pub use runtime::RuntimeBreakdown;
+
+use crate::dataflow::Mapping;
+use crate::workloads::Gemm;
+
+/// Outer steps per dim (`ceil(dim / step_span)`) — shared with the
+/// simulator so both execute the identical outer loop nest.
+pub fn steps_for(map: &Mapping, wl: &Gemm, pes: u64) -> [u64; 3] {
+    access::steps(map, wl, pes)
+}

@@ -1,0 +1,162 @@
+//! The top-level MAESTRO-BLAS interface: evaluate a mapping, get a `Cost`.
+
+use crate::arch::Accelerator;
+use crate::dataflow::Mapping;
+use crate::workloads::Gemm;
+
+use super::access::{self, AccessCounts};
+use super::energy::{EnergyBreakdown, EnergyModel};
+use super::runtime::{self, RuntimeBreakdown};
+
+/// Full cost report for one (accelerator, mapping, workload) triple —
+/// the outputs MAESTRO-BLAS produces (§3.3): runtime, buffer accesses,
+/// energy, plus the derived throughput / reuse metrics of Fig 8.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cost {
+    pub accesses: AccessCounts,
+    pub runtime: RuntimeBreakdown,
+    pub energy_j: f64,
+    pub energy_breakdown: EnergyBreakdown,
+    clock_hz: u64,
+}
+
+impl Cost {
+    pub fn runtime_cycles(&self) -> u64 {
+        self.runtime.total_cycles
+    }
+
+    pub fn runtime_ms(&self) -> f64 {
+        self.runtime.total_cycles as f64 / self.clock_hz as f64 * 1e3
+    }
+
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_j * 1e3
+    }
+
+    /// Achieved throughput in GFLOPS (paper counts 1 MAC = 1 FLOP).
+    pub fn throughput_gflops(&self) -> f64 {
+        let secs = self.runtime.total_cycles as f64 / self.clock_hz as f64;
+        self.accesses.macs as f64 / secs / 1e9
+    }
+
+    /// Fig 8 data-reuse metric: S1 accesses / S2 accesses.
+    pub fn reuse_factor(&self) -> f64 {
+        self.accesses.reuse_factor()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.runtime.utilization
+    }
+
+    /// Arithmetic intensity (MACs per S2 access) — one of MAESTRO's
+    /// reported outputs (§3.3); high intensity ⇒ compute-bound.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.accesses.macs as f64 / (self.accesses.s2.total() as f64).max(1.0)
+    }
+
+    /// NoC bandwidth *requirement* in bytes/s for the mapping to stay
+    /// compute-bound (another MAESTRO output): total NoC traffic divided
+    /// by the pure-compute time.
+    pub fn noc_bw_requirement_bytes_per_sec(&self, elem_bytes: u64, clock_hz: u64) -> f64 {
+        let bytes = (self.accesses.s2_reads.total() * elem_bytes) as f64;
+        let compute_secs = self.runtime.compute_cycles.max(1) as f64 / clock_hz as f64;
+        bytes / compute_secs
+    }
+}
+
+/// MAESTRO-BLAS: analytical evaluation of GEMM mappings on an accelerator.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub accelerator: Accelerator,
+    pub energy: EnergyModel,
+}
+
+impl CostModel {
+    pub fn new(accelerator: Accelerator) -> Self {
+        CostModel {
+            accelerator,
+            energy: EnergyModel::default(),
+        }
+    }
+
+    /// Evaluate one mapping. The mapping is assumed valid (callers that
+    /// generate mappings go through [`crate::arch::Accelerator::validate`]
+    /// or FLASH, which only emits valid candidates).
+    pub fn evaluate(&self, mapping: &Mapping, workload: &Gemm) -> Cost {
+        let accesses = access::count(&self.accelerator, mapping, workload);
+        let rt = runtime::evaluate(&self.accelerator, mapping, workload, &accesses);
+        let energy_breakdown = self.energy.breakdown(&self.accelerator, &accesses);
+        Cost {
+            energy_j: energy_breakdown.total_j(),
+            accesses,
+            runtime: rt,
+            energy_breakdown,
+            clock_hz: self.accelerator.config.clock_hz,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::dataflow::{Dim, LoopOrder, Tiles};
+
+    fn setup() -> (CostModel, Gemm, Mapping) {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let m = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 32,
+            outer: Tiles::new(32, 32, 32),
+            inner: Tiles::new(8, 8, 1),
+        };
+        (CostModel::new(acc), wl, m)
+    }
+
+    #[test]
+    fn table5_tiled_energy_in_paper_range() {
+        let (cm, wl, m) = setup();
+        let c = cm.evaluate(&m, &wl);
+        // paper: 21.22 mJ for tiled ⟨m,n,k⟩; we calibrate to the same
+        // order of magnitude (10–60 mJ).
+        let mj = c.energy_mj();
+        assert!(mj > 10.0 && mj < 60.0, "tiled energy {mj} mJ");
+    }
+
+    #[test]
+    fn table5_energy_reduction_by_tiling() {
+        let (cm, wl, mut nt) = setup();
+        let tiled = cm.evaluate(&nt.clone(), &wl);
+        nt.cluster_size = 4;
+        nt.outer = Tiles::new(1, 4, 4);
+        nt.inner = Tiles::new(1, 1, 1);
+        let non_tiled = cm.evaluate(&nt, &wl);
+        // paper: 96% energy reduction (570 → 21 mJ). Our constants give
+        // ≥ 85% — the shape (an order of magnitude) is what must hold.
+        let red = 1.0 - tiled.energy_j / non_tiled.energy_j;
+        assert!(red > 0.85, "energy reduction {red}");
+    }
+
+    #[test]
+    fn throughput_bounded_by_peak() {
+        let (cm, wl, m) = setup();
+        let c = cm.evaluate(&m, &wl);
+        let peak = cm.accelerator.config.peak_flops() / 1e9;
+        assert!(c.throughput_gflops() <= peak + 1e-9);
+        assert!(c.throughput_gflops() > 0.5 * peak); // tiled: near-peak
+    }
+
+    #[test]
+    fn cost_metrics_consistent() {
+        let (cm, wl, m) = setup();
+        let c = cm.evaluate(&m, &wl);
+        assert_eq!(c.runtime_cycles(), c.runtime.total_cycles);
+        assert!(c.runtime_ms() > 0.0);
+        assert!(c.reuse_factor() > 1.0);
+        assert!(c.utilization() > 0.0 && c.utilization() <= 1.0);
+    }
+}

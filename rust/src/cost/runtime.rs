@@ -1,0 +1,221 @@
+//! Runtime model: compute-vs-communication roofline with double buffering.
+//!
+//! ## Model
+//!
+//! Per outer step, each active PE executes its serial share of the tile:
+//! `work(d) = T^in(d)` for the intra-spatial dim (its chunk), `T^out(d)`
+//! otherwise — one MAC per cycle. The S2 buffers are double-buffered
+//! (§5.1), so tile prefetch overlaps compute and a step costs
+//! `max(compute, NoC)` cycles; the totals therefore satisfy
+//!
+//! `runtime ≈ max(Σ compute, Σ NoC) + fill/drain`,
+//!
+//! where `Σ NoC = S2 traffic (elements) / NoC elements-per-cycle`.
+//! When the communication delay for a tile exceeds its compute delay,
+//! latency hiding fails and the mapping goes NoC-bound — the effect the
+//! paper observes for non-tiled mappings on the edge accelerator (§5.4).
+//!
+//! Anchors (workload VI, edge, Table 5): tiled ⟨m,n,k⟩ is compute-bound at
+//! `MACs/P = 2^25/256 = 131072` cycles = **0.131 ms** (paper: 0.13 ms);
+//! the non-tiled variant moves ≈ 3.4E7 elements over a 16 elem/cycle NoC
+//! ⇒ **≈ 2.1 ms** (paper: 2.23 ms).
+
+use crate::arch::Accelerator;
+use crate::dataflow::{Dim, Mapping};
+use crate::workloads::Gemm;
+
+use super::access::AccessCounts;
+
+/// Cycle-level runtime decomposition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeBreakdown {
+    /// Serial compute cycles (critical path over PEs).
+    pub compute_cycles: u64,
+    /// NoC transfer cycles for all S2-level traffic.
+    pub noc_cycles: u64,
+    /// Pipeline fill/drain cycles (one step each side).
+    pub fill_drain_cycles: u64,
+    /// Total = max(compute, noc) + fill/drain.
+    pub total_cycles: u64,
+    /// Fraction of provisioned PE-cycles doing real MACs.
+    pub utilization: f64,
+}
+
+impl RuntimeBreakdown {
+    pub fn is_compute_bound(&self) -> bool {
+        self.compute_cycles >= self.noc_cycles
+    }
+}
+
+/// Per-PE serial MAC count in one outer step.
+pub(crate) fn cycles_per_step(map: &Mapping) -> u64 {
+    Dim::ALL
+        .iter()
+        .map(|&d| {
+            if d == map.intra_spatial {
+                map.inner.get(d)
+            } else {
+                map.outer.get(d)
+            }
+        })
+        .product()
+}
+
+/// Evaluate the runtime of a mapping (see module docs).
+pub fn evaluate(
+    acc: &Accelerator,
+    map: &Mapping,
+    wl: &Gemm,
+    counts: &AccessCounts,
+) -> RuntimeBreakdown {
+    let per_step = cycles_per_step(map).max(1);
+    let compute_cycles = counts.total_steps() * per_step;
+
+    let traffic_elems = counts.s2_reads.total() + wl.m * wl.k + wl.k * wl.n + wl.m * wl.n;
+    let epc = acc.config.noc_elems_per_cycle();
+    let noc_cycles = (traffic_elems as f64 / epc).ceil() as u64;
+
+    let fill_drain_cycles = 2 * per_step;
+    let total_cycles = compute_cycles.max(noc_cycles) + fill_drain_cycles;
+
+    // Real MACs vs provisioned PE-cycles.
+    let provisioned = compute_cycles.saturating_mul(acc.config.pes).max(1);
+    let utilization = (counts.macs as f64 / provisioned as f64).min(1.0);
+
+    RuntimeBreakdown {
+        compute_cycles,
+        noc_cycles,
+        fill_drain_cycles,
+        total_cycles,
+        utilization,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::cost::access;
+    use crate::dataflow::{LoopOrder, Tiles};
+
+    fn edge_maeri() -> Accelerator {
+        Accelerator::of_style(Style::Maeri, HwConfig::edge())
+    }
+
+    fn wl_vi() -> Gemm {
+        Gemm::new("VI", 512, 256, 256)
+    }
+
+    fn tiled_mnk() -> Mapping {
+        Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 32,
+            outer: Tiles::new(32, 32, 32),
+            inner: Tiles::new(8, 8, 1),
+        }
+    }
+
+    fn nt_mnk() -> Mapping {
+        Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 4, 4),
+            inner: Tiles::new(1, 1, 1),
+        }
+    }
+
+    #[test]
+    fn table5_tiled_runtime_is_0p13ms() {
+        let acc = edge_maeri();
+        let wl = wl_vi();
+        let m = tiled_mnk();
+        let c = access::count(&acc, &m, &wl);
+        let rt = evaluate(&acc, &m, &wl, &c);
+        assert!(rt.is_compute_bound());
+        let ms = rt.total_cycles as f64 / acc.config.clock_hz as f64 * 1e3;
+        // paper: 0.13 ms
+        assert!((ms - 0.131).abs() < 0.01, "got {ms} ms");
+        assert!(rt.utilization > 0.99);
+    }
+
+    #[test]
+    fn table5_nt_runtime_is_noc_bound_2ms() {
+        let acc = edge_maeri();
+        let wl = wl_vi();
+        let m = nt_mnk();
+        let c = access::count(&acc, &m, &wl);
+        let rt = evaluate(&acc, &m, &wl, &c);
+        assert!(!rt.is_compute_bound());
+        let ms = rt.total_cycles as f64 / acc.config.clock_hz as f64 * 1e3;
+        // paper: 2.23 ms; we model ≈ 2.1 ms
+        assert!(ms > 1.5 && ms < 3.0, "got {ms} ms");
+    }
+
+    #[test]
+    fn tiling_speedup_matches_paper_94pct() {
+        // Table 5 headline: tiling reduces runtime by 94%.
+        let acc = edge_maeri();
+        let wl = wl_vi();
+        let nt = {
+            let m = nt_mnk();
+            let c = access::count(&acc, &m, &wl);
+            evaluate(&acc, &m, &wl, &c).total_cycles
+        };
+        let t = {
+            let m = tiled_mnk();
+            let c = access::count(&acc, &m, &wl);
+            evaluate(&acc, &m, &wl, &c).total_cycles
+        };
+        let reduction = 1.0 - t as f64 / nt as f64;
+        assert!(reduction > 0.90, "runtime reduction {reduction}");
+    }
+
+    #[test]
+    fn cloud_bandwidth_unblocks_nt() {
+        // §5.4: NT-ish mappings become compute-bound when NoC BW is 8×.
+        let wl = wl_vi();
+        let m = nt_mnk();
+        let edge = edge_maeri();
+        let cloud = Accelerator::of_style(Style::Maeri, HwConfig::cloud());
+        let ce = access::count(&edge, &m, &wl);
+        let cc = access::count(&cloud, &m, &wl);
+        let re = evaluate(&edge, &m, &wl, &ce);
+        let rc = evaluate(&cloud, &m, &wl, &cc);
+        assert!(rc.noc_cycles * 7 < re.noc_cycles);
+    }
+
+    #[test]
+    fn utilization_drops_with_idle_clusters() {
+        // Fig 6(b): Tn_out=2 with 4 clusters on N=4 leaves half idle.
+        let mut cfg = HwConfig::tiny();
+        cfg.pes = 8;
+        let acc = Accelerator::of_style(Style::Maeri, cfg);
+        let wl = Gemm::new("fig6", 4, 4, 4);
+        let bad = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 2,
+            outer: Tiles::new(2, 2, 2),
+            inner: Tiles::new(2, 2, 1),
+        };
+        let good = Mapping {
+            outer: Tiles::new(2, 1, 2),
+            inner: Tiles::new(2, 1, 1),
+            ..bad.clone()
+        };
+        let cb = access::count(&acc, &bad, &wl);
+        let cg = access::count(&acc, &good, &wl);
+        let rb = evaluate(&acc, &bad, &wl, &cb);
+        let rg = evaluate(&acc, &good, &wl, &cg);
+        assert!(rg.utilization > rb.utilization);
+        assert!(rg.compute_cycles < rb.compute_cycles);
+    }
+}

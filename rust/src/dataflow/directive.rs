@@ -1,0 +1,158 @@
+//! MAESTRO dataflow directives (paper Fig 4): `TemporalMap`, `SpatialMap`
+//! and `Cluster`, plus the two-level `LevelSpec` a GEMM mapping lowers to.
+
+use std::fmt;
+
+use super::loop_order::Dim;
+
+/// Whether a dimension is iterated over time (same data across PEs) or
+/// space (partitioned across PEs / clusters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DirectiveKind {
+    /// `TemporalMap(size, offset) dim` — data changes over time, identical
+    /// across PEs at a given step.
+    Temporal,
+    /// `SpatialMap(size, offset) dim` — data partitioned across PEs
+    /// (parallelism); needs multicast/reduction support depending on dim.
+    Spatial,
+}
+
+/// One `TemporalMap`/`SpatialMap` directive binding a GEMM dim with a tile
+/// `size` and step `offset` (the paper always uses `offset == size`, i.e.
+/// non-overlapping tiles, since GEMM has no sliding windows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Directive {
+    pub kind: DirectiveKind,
+    pub dim: Dim,
+    pub size: u64,
+    pub offset: u64,
+}
+
+impl Directive {
+    pub fn temporal(dim: Dim, size: u64) -> Self {
+        Directive {
+            kind: DirectiveKind::Temporal,
+            dim,
+            size,
+            offset: size,
+        }
+    }
+
+    pub fn spatial(dim: Dim, size: u64) -> Self {
+        Directive {
+            kind: DirectiveKind::Spatial,
+            dim,
+            size,
+            offset: size,
+        }
+    }
+
+    pub fn is_spatial(&self) -> bool {
+        self.kind == DirectiveKind::Spatial
+    }
+}
+
+impl fmt::Display for Directive {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self.kind {
+            DirectiveKind::Temporal => "TemporalMap",
+            DirectiveKind::Spatial => "SpatialMap",
+        };
+        write!(
+            f,
+            "{}({},{}) {}",
+            name,
+            self.size,
+            self.offset,
+            self.dim.letter().to_ascii_uppercase()
+        )
+    }
+}
+
+/// The full two-level directive program of a GEMM mapping: three
+/// directives above the `Cluster(λ)` directive (inter-cluster) and three
+/// below it (intra-cluster), listed outermost-first. This is exactly the
+/// textual form of the paper's Table 2 / Fig 5(c).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LevelSpec {
+    pub inter: [Directive; 3],
+    pub cluster_size: u64,
+    pub intra: [Directive; 3],
+}
+
+impl LevelSpec {
+    /// Abbreviated name, e.g. `STT_TTS` (S = SpatialMap, T = TemporalMap,
+    /// `_` = the Cluster boundary), as used throughout the paper.
+    pub fn shape_code(&self) -> String {
+        let code = |d: &Directive| match d.kind {
+            DirectiveKind::Spatial => 'S',
+            DirectiveKind::Temporal => 'T',
+        };
+        let inter: String = self.inter.iter().map(code).collect();
+        let intra: String = self.intra.iter().map(code).collect();
+        format!("{inter}_{intra}")
+    }
+
+    pub fn inter_spatial(&self) -> Option<&Directive> {
+        self.inter.iter().find(|d| d.is_spatial())
+    }
+
+    pub fn intra_spatial(&self) -> Option<&Directive> {
+        self.intra.iter().find(|d| d.is_spatial())
+    }
+}
+
+impl fmt::Display for LevelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for d in &self.inter {
+            writeln!(f, "{d}")?;
+        }
+        writeln!(f, "Cluster({})", self.cluster_size)?;
+        for d in &self.intra {
+            writeln!(f, "{d}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn maeri_example() -> LevelSpec {
+        // Fig 5(c): TST_TTS with M=N=K=4 on 16 PEs, cluster of 4.
+        LevelSpec {
+            inter: [
+                Directive::temporal(Dim::M, 1),
+                Directive::spatial(Dim::N, 1),
+                Directive::temporal(Dim::K, 4),
+            ],
+            cluster_size: 4,
+            intra: [
+                Directive::temporal(Dim::M, 1),
+                Directive::temporal(Dim::N, 1),
+                Directive::spatial(Dim::K, 1),
+            ],
+        }
+    }
+
+    #[test]
+    fn shape_code_matches_paper_naming() {
+        assert_eq!(maeri_example().shape_code(), "TST_TTS");
+    }
+
+    #[test]
+    fn spatial_lookup() {
+        let s = maeri_example();
+        assert_eq!(s.inter_spatial().unwrap().dim, Dim::N);
+        assert_eq!(s.intra_spatial().unwrap().dim, Dim::K);
+    }
+
+    #[test]
+    fn display_is_directive_program() {
+        let text = maeri_example().to_string();
+        assert!(text.contains("SpatialMap(1,1) N"));
+        assert!(text.contains("Cluster(4)"));
+        assert!(text.contains("TemporalMap(4,4) K"));
+    }
+}

@@ -1,0 +1,217 @@
+//! GEMM dimensions and loop orders.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// One of the three GEMM iteration dimensions (C\[m\]\[n\] += A\[m\]\[k\]·B\[k\]\[n\]).
+///
+/// `K` is the *reduction* dimension: parallelizing it requires NoC support
+/// for spatial reduction (store-and-forward chain or an adder tree).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    M,
+    N,
+    K,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 3] = [Dim::M, Dim::N, Dim::K];
+
+    /// Which matrices a dimension indexes: loops over a dim force
+    /// re-touching exactly these operands.
+    pub fn touches(self) -> [Matrix; 2] {
+        match self {
+            Dim::M => [Matrix::A, Matrix::C],
+            Dim::N => [Matrix::B, Matrix::C],
+            Dim::K => [Matrix::A, Matrix::B],
+        }
+    }
+
+    pub fn letter(self) -> char {
+        match self {
+            Dim::M => 'm',
+            Dim::N => 'n',
+            Dim::K => 'k',
+        }
+    }
+}
+
+/// GEMM operand / result matrices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Matrix {
+    A,
+    B,
+    C,
+}
+
+impl Matrix {
+    pub const ALL: [Matrix; 3] = [Matrix::A, Matrix::B, Matrix::C];
+
+    /// The two dims that index this matrix (A: M×K, B: K×N, C: M×N).
+    pub fn dims(self) -> [Dim; 2] {
+        match self {
+            Matrix::A => [Dim::M, Dim::K],
+            Matrix::B => [Dim::K, Dim::N],
+            Matrix::C => [Dim::M, Dim::N],
+        }
+    }
+
+    /// The dim *not* indexing this matrix; iterating it leaves the matrix
+    /// stationary (the paper's "input/weight/output-stationary").
+    pub fn free_dim(self) -> Dim {
+        match self {
+            Matrix::A => Dim::N,
+            Matrix::B => Dim::M,
+            Matrix::C => Dim::K,
+        }
+    }
+}
+
+/// An ordering of the three GEMM loops, outermost first, e.g. `<m, n, k>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LoopOrder(pub [Dim; 3]);
+
+impl LoopOrder {
+    pub const MNK: LoopOrder = LoopOrder([Dim::M, Dim::N, Dim::K]);
+    pub const MKN: LoopOrder = LoopOrder([Dim::M, Dim::K, Dim::N]);
+    pub const NMK: LoopOrder = LoopOrder([Dim::N, Dim::M, Dim::K]);
+    pub const NKM: LoopOrder = LoopOrder([Dim::N, Dim::K, Dim::M]);
+    pub const KMN: LoopOrder = LoopOrder([Dim::K, Dim::M, Dim::N]);
+    pub const KNM: LoopOrder = LoopOrder([Dim::K, Dim::N, Dim::M]);
+
+    /// All six permutations (the MAERI-style search space).
+    pub const ALL: [LoopOrder; 6] = [
+        LoopOrder::MNK,
+        LoopOrder::MKN,
+        LoopOrder::NMK,
+        LoopOrder::NKM,
+        LoopOrder::KMN,
+        LoopOrder::KNM,
+    ];
+
+    pub fn outermost(self) -> Dim {
+        self.0[0]
+    }
+
+    pub fn innermost(self) -> Dim {
+        self.0[2]
+    }
+
+    /// Position of a dim: 0 = outermost … 2 = innermost.
+    pub fn position(self, d: Dim) -> usize {
+        self.0.iter().position(|&x| x == d).expect("dim present")
+    }
+
+    /// The matrix left stationary by the innermost loop: it is not indexed
+    /// by that loop, so its tile is maximally reused across the fastest-
+    /// changing iterations.
+    pub fn innermost_stationary(self) -> Matrix {
+        match self.innermost() {
+            Dim::N => Matrix::A,
+            Dim::M => Matrix::B,
+            Dim::K => Matrix::C,
+        }
+    }
+}
+
+impl fmt::Display for LoopOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "<{},{},{}>",
+            self.0[0].letter(),
+            self.0[1].letter(),
+            self.0[2].letter()
+        )
+    }
+}
+
+impl FromStr for LoopOrder {
+    type Err = String;
+
+    /// Parse `"mnk"`, `"MNK"`, or `"<m,n,k>"`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let letters: Vec<char> = s
+            .chars()
+            .filter(|c| c.is_ascii_alphabetic())
+            .map(|c| c.to_ascii_lowercase())
+            .collect();
+        if letters.len() != 3 {
+            return Err(format!("bad loop order {s:?}"));
+        }
+        let mut dims = [Dim::M; 3];
+        for (i, c) in letters.iter().enumerate() {
+            dims[i] = match c {
+                'm' => Dim::M,
+                'n' => Dim::N,
+                'k' => Dim::K,
+                _ => return Err(format!("bad loop-order letter {c:?} in {s:?}")),
+            };
+        }
+        let mut seen = [false; 3];
+        for d in dims {
+            let idx = d as usize;
+            if seen[idx] {
+                return Err(format!("duplicate dim in {s:?}"));
+            }
+            seen[idx] = true;
+        }
+        Ok(LoopOrder(dims))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_orders_are_permutations() {
+        for o in LoopOrder::ALL {
+            let mut dims = o.0.to_vec();
+            dims.sort();
+            assert_eq!(dims, vec![Dim::M, Dim::N, Dim::K]);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for o in LoopOrder::ALL {
+            let s = o.to_string();
+            assert_eq!(s.parse::<LoopOrder>().unwrap(), o);
+        }
+        assert_eq!("mnk".parse::<LoopOrder>().unwrap(), LoopOrder::MNK);
+        assert!("mmk".parse::<LoopOrder>().is_err());
+        assert!("mn".parse::<LoopOrder>().is_err());
+        assert!("mnx".parse::<LoopOrder>().is_err());
+    }
+
+    #[test]
+    fn stationary_matrix_matches_paper() {
+        // paper §3.1: N outermost/innermost-free keeps B (weights)
+        // stationary (TPU/NVDLA); M keeps A (Eyeriss); K innermost would
+        // spoil C-reuse, K-innermost keeps C stationary.
+        assert_eq!(LoopOrder::MNK.innermost_stationary(), Matrix::C);
+        assert_eq!(LoopOrder::MKN.innermost_stationary(), Matrix::A);
+        assert_eq!(LoopOrder::NKM.innermost_stationary(), Matrix::B);
+    }
+
+    #[test]
+    fn touches_and_dims_are_inverse() {
+        for m in Matrix::ALL {
+            for d in m.dims() {
+                assert!(d.touches().contains(&m));
+            }
+            assert!(!m.free_dim().touches().contains(&m));
+        }
+    }
+
+    #[test]
+    fn position_is_consistent() {
+        let o = LoopOrder::NKM;
+        assert_eq!(o.position(Dim::N), 0);
+        assert_eq!(o.position(Dim::K), 1);
+        assert_eq!(o.position(Dim::M), 2);
+        assert_eq!(o.outermost(), Dim::N);
+        assert_eq!(o.innermost(), Dim::M);
+    }
+}

@@ -1,0 +1,181 @@
+//! MAESTRO directive-file interchange.
+//!
+//! MAESTRO-BLAS's contribution over MAESTRO is a *native BLAS frontend*
+//! (§3.3). This module serializes our `LevelSpec`s into MAESTRO's
+//! textual directive format (the Fig 4/5 syntax) and parses it back, so
+//! mappings can be exchanged with the upstream MAESTRO tooling.
+
+
+use anyhow::{bail, Context, Result};
+
+use super::directive::{Directive, LevelSpec};
+use super::loop_order::Dim;
+
+/// Serialize to MAESTRO's directive syntax:
+/// ```text
+/// TemporalMap(1,1) M;
+/// SpatialMap(1,1) N;
+/// TemporalMap(4,4) K;
+/// Cluster(4, P);
+/// ...
+/// ```
+pub fn to_maestro(spec: &LevelSpec) -> String {
+    let mut out = String::new();
+    for d in &spec.inter {
+        out.push_str(&format!("{d};\n"));
+    }
+    out.push_str(&format!("Cluster({}, P);\n", spec.cluster_size));
+    for d in &spec.intra {
+        out.push_str(&format!("{d};\n"));
+    }
+    out
+}
+
+fn parse_directive(line: &str) -> Result<Directive> {
+    // e.g. `TemporalMap(4,4) K`
+    let line = line.trim().trim_end_matches(';').trim();
+    let (head, dim_s) = line
+        .rsplit_once(' ')
+        .with_context(|| format!("directive needs a dim: {line:?}"))?;
+    let dim = match dim_s.trim().to_ascii_uppercase().as_str() {
+        "M" => Dim::M,
+        "N" => Dim::N,
+        "K" => Dim::K,
+        other => bail!("unknown dim {other:?} in {line:?}"),
+    };
+    let (name, args) = head
+        .split_once('(')
+        .with_context(|| format!("directive needs args: {line:?}"))?;
+    let args = args.trim_end_matches(')');
+    let mut nums = args.split(',').map(|s| s.trim().parse::<u64>());
+    let size = nums
+        .next()
+        .context("missing size")?
+        .with_context(|| format!("bad size in {line:?}"))?;
+    let offset = nums
+        .next()
+        .context("missing offset")?
+        .with_context(|| format!("bad offset in {line:?}"))?;
+    let mut d = match name.trim() {
+        "TemporalMap" => Directive::temporal(dim, size),
+        "SpatialMap" => Directive::spatial(dim, size),
+        other => bail!("unknown directive {other:?}"),
+    };
+    d.offset = offset;
+    Ok(d)
+}
+
+/// Parse a MAESTRO directive program back into a `LevelSpec`. Requires
+/// exactly three directives on each side of one `Cluster` line.
+pub fn from_maestro(text: &str) -> Result<LevelSpec> {
+    let mut inter: Vec<Directive> = Vec::new();
+    let mut intra: Vec<Directive> = Vec::new();
+    let mut cluster: Option<u64> = None;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("Cluster(") {
+            if cluster.is_some() {
+                bail!("multiple Cluster directives");
+            }
+            let num = rest.split([',', ')']).next().unwrap_or("").trim();
+            cluster = Some(num.parse().with_context(|| format!("bad Cluster: {line:?}"))?);
+            continue;
+        }
+        let d = parse_directive(line)?;
+        if cluster.is_none() {
+            inter.push(d);
+        } else {
+            intra.push(d);
+        }
+    }
+    let cluster_size = cluster.context("no Cluster directive")?;
+    let to3 = |v: Vec<Directive>, what: &str| -> Result<[Directive; 3]> {
+        v.try_into()
+            .map_err(|v: Vec<_>| anyhow::anyhow!("{what}: want 3 directives, got {}", v.len()))
+    };
+    Ok(LevelSpec {
+        inter: to3(inter, "inter-cluster")?,
+        cluster_size,
+        intra: to3(intra, "intra-cluster")?,
+    })
+}
+
+/// Convenience: parse `"m"`/`"N"`… (used by CLI tooling).
+pub fn parse_dim(s: &str) -> Result<Dim> {
+    Dim::from_str_letter(s)
+}
+
+impl Dim {
+    fn from_str_letter(s: &str) -> Result<Dim> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "m" => Ok(Dim::M),
+            "n" => Ok(Dim::N),
+            "k" => Ok(Dim::K),
+            other => bail!("unknown dim {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{LoopOrder, Mapping, Tiles};
+
+    fn fig5_spec() -> LevelSpec {
+        Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 1, 4),
+            inner: Tiles::new(1, 1, 1),
+        }
+        .level_spec()
+    }
+
+    #[test]
+    fn roundtrip_fig5() {
+        let spec = fig5_spec();
+        let text = to_maestro(&spec);
+        assert!(text.contains("SpatialMap(1,1) N;"));
+        assert!(text.contains("Cluster(4, P);"));
+        let back = from_maestro(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn roundtrip_all_styles_best_mappings() {
+        use crate::arch::{Accelerator, HwConfig, Style};
+        use crate::workloads::Gemm;
+        let wl = Gemm::by_id("VI").unwrap();
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let best = crate::flash::search(&acc, &wl).unwrap();
+            let spec = best.mapping().level_spec();
+            let back = from_maestro(&to_maestro(&spec)).unwrap();
+            assert_eq!(back, spec, "{style}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(from_maestro("TemporalMap(1,1) M;\n").is_err()); // no cluster
+        assert!(from_maestro("Cluster(4, P);\n").is_err()); // no directives
+        assert!(from_maestro("Bogus(1,1) M;\nCluster(2, P);\n").is_err());
+        assert!(from_maestro("TemporalMap(x,1) M;\nCluster(2, P);\n").is_err());
+        let two_clusters = "TemporalMap(1,1) M;\nTemporalMap(1,1) N;\nTemporalMap(1,1) K;\nCluster(2, P);\nCluster(3, P);\n";
+        assert!(from_maestro(two_clusters).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let spec = fig5_spec();
+        let mut text = String::from("// mapping for fig 5\n\n");
+        text.push_str(&to_maestro(&spec));
+        assert_eq!(from_maestro(&text).unwrap(), spec);
+    }
+}

@@ -1,0 +1,310 @@
+//! The GEMM `Mapping`: dataflow + tile sizes + cluster size.
+
+use std::fmt;
+
+use super::directive::{Directive, LevelSpec};
+use super::loop_order::{Dim, LoopOrder};
+
+/// Per-dimension tile sizes for one level (inter- or intra-cluster).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tiles {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Tiles {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        Tiles { m, n, k }
+    }
+
+    pub fn ones() -> Self {
+        Tiles::new(1, 1, 1)
+    }
+
+    pub fn get(&self, d: Dim) -> u64 {
+        match d {
+            Dim::M => self.m,
+            Dim::N => self.n,
+            Dim::K => self.k,
+        }
+    }
+
+    pub fn set(&mut self, d: Dim, v: u64) {
+        match d {
+            Dim::M => self.m = v,
+            Dim::N => self.n = v,
+            Dim::K => self.k = v,
+        }
+    }
+
+    /// Element footprint of the three matrix tiles A(m×k) + B(k×n) + C(m×n)
+    /// — the left-hand side of the paper's Eq. 1/2 buffer constraints.
+    pub fn footprint(&self) -> u64 {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+
+    /// True iff every dim of `self` is ≤ the matching dim of `outer`
+    /// (inner tiles must be subsets of outer tiles, §4).
+    pub fn fits_within(&self, outer: &Tiles) -> bool {
+        self.m <= outer.m && self.n <= outer.n && self.k <= outer.k
+    }
+}
+
+impl fmt::Display for Tiles {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(Tm={}, Tn={}, Tk={})", self.m, self.n, self.k)
+    }
+}
+
+/// A complete GEMM mapping for a spatial accelerator (paper Fig 2):
+/// loop orders and parallel dims at both levels, cluster size λ, and the
+/// outer (S2-level) / inner (S1-level) tile sizes.
+///
+/// Style-specific *constraints* on these fields (which dims may be
+/// spatial, which orders are legal, the λ range) live in
+/// [`crate::arch::Accelerator`]; `Mapping` itself is style-agnostic so the
+/// cost model and the simulator can treat all five accelerators uniformly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    /// Loop order of the inter-cluster (outer, S2-level) loops.
+    pub inter_order: LoopOrder,
+    /// Loop order of the intra-cluster (inner, S1-level) loops.
+    pub intra_order: LoopOrder,
+    /// Dim partitioned across *clusters*.
+    pub inter_spatial: Dim,
+    /// Dim partitioned across the PEs *within* a cluster.
+    pub intra_spatial: Dim,
+    /// Cluster size λ (PEs per cluster).
+    pub cluster_size: u64,
+    /// Inter-cluster tile sizes T^out (per cluster).
+    pub outer: Tiles,
+    /// Intra-cluster tile sizes T^in (per PE iteration).
+    pub inner: Tiles,
+}
+
+impl Mapping {
+    /// Number of clusters for a PE budget (floor division; leftover PEs
+    /// idle, which the utilization model accounts for).
+    pub fn clusters(&self, pes: u64) -> u64 {
+        (pes / self.cluster_size).max(1)
+    }
+
+    /// Abbreviated paper name, e.g. `STT_TTS-MNK`.
+    pub fn name(&self) -> String {
+        format!(
+            "{}-{}",
+            self.level_spec().shape_code(),
+            self.inter_order
+                .0
+                .iter()
+                .map(|d| d.letter().to_ascii_uppercase())
+                .collect::<String>()
+        )
+    }
+
+    /// Lower to the two-level MAESTRO directive program (Table 2 style):
+    /// directives appear in loop order; the spatial dim at each level uses
+    /// `SpatialMap`; the inter-level temporal size of the intra-spatial
+    /// dim is scaled by λ so one outer step covers the whole cluster.
+    pub fn level_spec(&self) -> LevelSpec {
+        let inter = self.inter_order.0.map(|d| {
+            if d == self.inter_spatial {
+                Directive::spatial(d, self.outer.get(d))
+            } else if d == self.intra_spatial {
+                // One outer step must cover the whole cluster: λ PEs each
+                // handling an `inner` chunk of this dim (Table 2's
+                // `TMap(T×λ)` rows; for MAERI λ=T_K^out with chunk 1).
+                Directive::temporal(d, self.cluster_size * self.inner.get(d))
+            } else {
+                Directive::temporal(d, self.outer.get(d))
+            }
+        });
+        let intra = self.intra_order.0.map(|d| {
+            if d == self.intra_spatial {
+                Directive::spatial(d, self.inner.get(d))
+            } else {
+                Directive::temporal(d, self.inner.get(d))
+            }
+        });
+        LevelSpec {
+            inter,
+            cluster_size: self.cluster_size,
+            intra,
+        }
+    }
+
+    /// Elements of dimension `d` covered by ONE outer (inter-cluster)
+    /// step across the whole array:
+    /// * inter-spatial dim: every cluster works a disjoint `T^out` chunk;
+    /// * intra-spatial dim: the λ PEs of a cluster each hold an `T^in`
+    ///   chunk (Table 2's `TMap(T×λ)` inter rows);
+    /// * plain temporal dim: one `T^out` tile.
+    pub fn step_span(&self, d: Dim, pes: u64) -> u64 {
+        if d == self.inter_spatial {
+            self.outer.get(d) * self.clusters(pes)
+        } else if d == self.intra_spatial {
+            self.cluster_size * self.inner.get(d)
+        } else {
+            self.outer.get(d)
+        }
+    }
+
+    /// S2-resident working-set (elements) of one outer step — the
+    /// left-hand side of the paper's Eq. 1 generalized to any style.
+    pub fn s2_working_set(&self, pes: u64) -> u64 {
+        let m = self.step_span(Dim::M, pes);
+        let n = self.step_span(Dim::N, pes);
+        let k = self.step_span(Dim::K, pes);
+        m * k + k * n + m * n
+    }
+
+    /// Structural validity independent of any accelerator: non-zero tiles,
+    /// inner ⊆ outer, λ ≥ 1.
+    pub fn is_well_formed(&self) -> bool {
+        self.inter_spatial != self.intra_spatial
+            && self.cluster_size >= 1
+            && self.outer.m >= 1
+            && self.outer.n >= 1
+            && self.outer.k >= 1
+            && self.inner.fits_within(&self.outer)
+            && self.inner.m >= 1
+            && self.inner.n >= 1
+            && self.inner.k >= 1
+    }
+
+    /// The "non-tiled" degenerate mapping of §3.2: all temporal tile sizes
+    /// 1, spatial dims sized to fill the array (Table 5's NT rows).
+    pub fn is_non_tiled(&self) -> bool {
+        let mut nt = true;
+        for d in Dim::ALL {
+            if d != self.inter_spatial && d != self.intra_spatial {
+                nt &= self.outer.get(d) == 1;
+            }
+        }
+        nt
+    }
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} λ={} outer{} inner{}",
+            self.name(),
+            self.cluster_size,
+            self.outer,
+            self.inner
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig 5 MAERI-style example: 16 PEs, λ=4, M=N=K=4.
+    fn fig5_mapping() -> Mapping {
+        Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 1, 1),
+            inner: Tiles::new(1, 1, 1),
+        }
+    }
+
+    #[test]
+    fn fig5_name_is_tst_tts_mnk() {
+        assert_eq!(fig5_mapping().name(), "TST_TTS-MNK");
+    }
+
+    #[test]
+    fn fig5_level_spec_matches_paper() {
+        let spec = fig5_mapping().level_spec();
+        // inter: TMap(1,1) M / SMap(1,1) N / TMap(4,4) K  (K scaled by λ)
+        assert_eq!(spec.inter[0], Directive::temporal(Dim::M, 1));
+        assert_eq!(spec.inter[1], Directive::spatial(Dim::N, 1));
+        assert_eq!(spec.inter[2], Directive::temporal(Dim::K, 4));
+        // intra: TMap M / TMap N / SMap(1,1) K
+        assert_eq!(spec.intra[2], Directive::spatial(Dim::K, 1));
+        assert_eq!(spec.cluster_size, 4);
+    }
+
+    #[test]
+    fn clusters_and_wellformedness() {
+        let m = fig5_mapping();
+        assert_eq!(m.clusters(16), 4);
+        assert_eq!(m.clusters(2), 1); // degenerate: fewer PEs than λ
+        assert!(m.is_well_formed());
+        assert!(m.is_non_tiled());
+
+        let mut tiled = m.clone();
+        tiled.outer = Tiles::new(2, 1, 2);
+        tiled.inner = Tiles::new(2, 1, 1);
+        assert!(tiled.is_well_formed());
+        assert!(!tiled.is_non_tiled());
+
+        let mut bad = tiled.clone();
+        bad.inner.m = 4; // inner > outer
+        assert!(!bad.is_well_formed());
+    }
+
+    #[test]
+    fn fig5_step_span_covers_whole_array() {
+        let m = fig5_mapping();
+        // 4 clusters × Tn_out=1 on N; λ=4 PEs × 1 on K; Tm_out=1 on M.
+        assert_eq!(m.step_span(Dim::M, 16), 1);
+        assert_eq!(m.step_span(Dim::N, 16), 4);
+        assert_eq!(m.step_span(Dim::K, 16), 4);
+        // Eq 1 LHS: 1·4 (A) + 4·4 (B) + 1·4 (C)
+        assert_eq!(m.s2_working_set(16), 24);
+    }
+
+    #[test]
+    fn same_spatial_dim_both_levels_is_malformed() {
+        let mut m = fig5_mapping();
+        m.intra_spatial = m.inter_spatial;
+        assert!(!m.is_well_formed());
+    }
+
+    #[test]
+    fn footprint_is_eq1_lhs() {
+        let t = Tiles::new(2, 3, 4);
+        assert_eq!(t.footprint(), 2 * 4 + 4 * 3 + 2 * 3);
+        assert!(Tiles::ones().fits_within(&t));
+        assert!(!t.fits_within(&Tiles::ones()));
+    }
+
+    #[test]
+    fn eyeriss_style_name() {
+        // STT_TTS-MNK per Table 2.
+        let m = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::M,
+            intra_spatial: Dim::K,
+            cluster_size: 12,
+            outer: Tiles::new(4, 4, 4),
+            inner: Tiles::new(2, 2, 4),
+        };
+        assert_eq!(m.name(), "STT_TTS-MNK");
+    }
+
+    #[test]
+    fn shidiannao_style_name() {
+        // STT_TST-MNK per Table 2 (intra spatial is N, second position).
+        let m = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::M,
+            intra_spatial: Dim::N,
+            cluster_size: 8,
+            outer: Tiles::new(4, 4, 4),
+            inner: Tiles::new(2, 2, 2),
+        };
+        assert_eq!(m.name(), "STT_TST-MNK");
+    }
+}

@@ -1,0 +1,15 @@
+//! MAESTRO dataflow directives and the GEMM `Mapping` representation.
+//!
+//! A **mapping** (paper §2.3) is the dataflow of the accelerator plus the
+//! concrete tile sizes and cluster size used for a specific GEMM: it fully
+//! determines which data sits in which buffer at which time, and therefore
+//! the buffer-access counts / runtime / energy that MAESTRO-BLAS reports.
+
+mod directive;
+pub(crate) mod loop_order;
+pub mod maestro_fmt;
+mod mapping;
+
+pub use directive::{Directive, DirectiveKind, LevelSpec};
+pub use loop_order::{Dim, LoopOrder, Matrix};
+pub use mapping::{Mapping, Tiles};

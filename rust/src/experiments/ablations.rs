@@ -1,0 +1,158 @@
+//! Ablations the paper mentions but does not plot:
+//!
+//! * **cluster-size sweep** (§5.4: "We also swept the cluster size …
+//!   it affects utilization, which in turn affects runtime and energy
+//!   (up to 42% in our results)").
+//! * **SUMMA-only vs flexible** (§3.1 footnote 4 / §6: LAP's SUMMA is a
+//!   restricted TST_TTS subset).
+//! * **ResNet conv-as-GEMM suite** (the §1 claim that GEMM underlies
+//!   DNN inference beyond MLPs).
+
+use crate::arch::{Accelerator, HwConfig, Style};
+use crate::baselines::summa_compare;
+use crate::coordinator::search_grid;
+use crate::flash::{self, SearchOpts};
+use crate::report::Table;
+use crate::workloads::{resnet50_gemms, Gemm};
+
+/// Cluster-size sweep: best mapping per λ for one style/workload.
+pub fn cluster_sweep(style: Style, cfg: &HwConfig, wl: &Gemm) -> Table {
+    let acc = Accelerator::of_style(style, cfg.clone());
+    let mut t = Table::new(&["λ", "runtime ms", "energy mJ", "util", "mapping"]);
+    for lambda in style.cluster_sizes(cfg.pes) {
+        // restrict the search to one λ by filtering candidates
+        let Ok(r) = flash::search_with(
+            &acc,
+            wl,
+            &SearchOpts {
+                keep_all: true,
+                ..Default::default()
+            },
+        ) else {
+            continue;
+        };
+        let best = r
+            .all
+            .iter()
+            .filter(|e| e.mapping.cluster_size == lambda)
+            .min_by_key(|e| e.cost.runtime_cycles());
+        if let Some(e) = best {
+            t.row(&[
+                lambda.to_string(),
+                format!("{:.4}", e.cost.runtime_ms()),
+                format!("{:.3}", e.cost.energy_mj()),
+                format!("{:.2}", e.cost.utilization()),
+                e.mapping.name(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Utilization / runtime spread across cluster sizes (the ≤42% claim).
+pub fn cluster_sweep_spread(style: Style, cfg: &HwConfig, wl: &Gemm) -> Option<f64> {
+    let acc = Accelerator::of_style(style, cfg.clone());
+    let r = flash::search_with(
+        &acc,
+        wl,
+        &SearchOpts {
+            keep_all: true,
+            ..Default::default()
+        },
+    )
+    .ok()?;
+    let mut per_lambda: Vec<u64> = Vec::new();
+    for lambda in style.cluster_sizes(cfg.pes) {
+        if let Some(e) = r
+            .all
+            .iter()
+            .filter(|e| e.mapping.cluster_size == lambda)
+            .min_by_key(|e| e.cost.runtime_cycles())
+        {
+            per_lambda.push(e.cost.runtime_cycles());
+        }
+    }
+    let min = *per_lambda.iter().min()?;
+    let max = *per_lambda.iter().max()?;
+    Some(1.0 - min as f64 / max as f64)
+}
+
+/// SUMMA-only vs fully flexible MAERI, across Table 3.
+pub fn summa_table(cfg: &HwConfig) -> Table {
+    let acc = Accelerator::of_style(Style::Maeri, cfg.clone());
+    let mut t = Table::new(&[
+        "workload",
+        "SUMMA ms",
+        "flexible ms",
+        "speedup",
+        "SUMMA order",
+        "flexible order",
+    ]);
+    for wl in Gemm::table3() {
+        if let Ok(c) = summa_compare(&acc, &wl) {
+            t.row(&[
+                wl.name.clone(),
+                format!("{:.3}", c.summa.cost.runtime_ms()),
+                format!("{:.3}", c.flexible.cost.runtime_ms()),
+                format!("{:.2}x", c.flexibility_speedup()),
+                c.summa.mapping.inter_order.to_string(),
+                c.flexible.mapping.inter_order.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// ResNet-50 conv-as-GEMM layers across all styles (batch 1, edge).
+pub fn resnet_table(cfg: &HwConfig, batch: u64) -> Table {
+    let accs = Accelerator::all_styles(cfg);
+    let wls = resnet50_gemms(batch);
+    let grid = search_grid(&accs, &wls, 0);
+    let mut t = Table::new(&["layer", "style", "runtime ms", "energy mJ", "util"]);
+    for cell in grid {
+        if let Ok(r) = cell.result {
+            t.row(&[
+                cell.workload.name.clone(),
+                cell.accelerator.style.to_string(),
+                format!("{:.4}", r.cost().runtime_ms()),
+                format!("{:.3}", r.cost().energy_mj()),
+                format!("{:.2}", r.cost().utilization()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_sweep_has_rows_and_spread() {
+        let wl = Gemm::by_id("VI").unwrap();
+        let t = cluster_sweep(Style::Maeri, &HwConfig::edge(), &wl);
+        assert!(t.render().lines().count() > 4);
+        // §5.4: cluster size affects runtime measurably for some
+        // style/workload pair.
+        let mut max_spread: f64 = 0.0;
+        for style in Style::ALL {
+            if let Some(s) = cluster_sweep_spread(style, &HwConfig::edge(), &wl) {
+                max_spread = max_spread.max(s);
+            }
+        }
+        assert!(max_spread > 0.05, "cluster size had no effect: {max_spread}");
+    }
+
+    #[test]
+    fn summa_table_runs() {
+        let t = summa_table(&HwConfig::edge());
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn resnet_table_covers_grid() {
+        let t = resnet_table(&HwConfig::edge(), 1);
+        // 8 layers × 5 styles
+        assert_eq!(t.render().lines().count(), 2 + 40);
+    }
+}

@@ -1,0 +1,215 @@
+//! Paper figures 7, 8, 9 and 10 as data + tables.
+
+use crate::arch::{Accelerator, HwConfig, Style};
+use crate::coordinator::search_grid;
+use crate::flash::{self, SearchOpts};
+use crate::report::Table;
+use crate::workloads::{mlp_layers, Gemm};
+
+/// Fig 7 data: the projected runtimes (ms) of every pruned candidate for
+/// an NVDLA-style mapping of the 8192³ GEMM.
+#[derive(Debug)]
+pub struct Fig7Data {
+    pub runtimes_ms: Vec<f64>,
+    pub candidates: usize,
+    pub best_ms: f64,
+    pub worst_ms: f64,
+}
+
+impl Fig7Data {
+    /// The paper's observation: a bad mapping is ~4× slower than best.
+    pub fn worst_to_best(&self) -> f64 {
+        self.worst_ms / self.best_ms.max(f64::EPSILON)
+    }
+}
+
+/// Fig 7: histogram input for NVDLA-style candidates on (8192²)×(8192²).
+pub fn fig7(cfg: &HwConfig) -> Fig7Data {
+    let acc = Accelerator::of_style(Style::Nvdla, cfg.clone());
+    let wl = Gemm::by_id("I").expect("workload I");
+    let r = flash::search_with(
+        &acc,
+        &wl,
+        &SearchOpts {
+            keep_all: true,
+            ..Default::default()
+        },
+    )
+    .expect("NVDLA search on I");
+    let runtimes_ms: Vec<f64> = r.all.iter().map(|e| e.cost.runtime_ms()).collect();
+    let best_ms = runtimes_ms.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst_ms = runtimes_ms.iter().cloned().fold(0.0, f64::max);
+    Fig7Data {
+        candidates: runtimes_ms.len(),
+        runtimes_ms,
+        best_ms,
+        worst_ms,
+    }
+}
+
+/// Fig 8: runtime, energy, throughput and data reuse of all five
+/// mapping styles across the Table 3 workloads on one configuration.
+pub fn fig8(cfg: &HwConfig, workload_ids: &[&str]) -> Table {
+    let accs = Accelerator::all_styles(cfg);
+    let wls: Vec<Gemm> = workload_ids
+        .iter()
+        .filter_map(|id| Gemm::by_id(id))
+        .collect();
+    let grid = search_grid(&accs, &wls, 0);
+    let mut t = Table::new(&[
+        "workload",
+        "style",
+        "mapping",
+        "runtime ms",
+        "energy mJ",
+        "GFLOPS",
+        "reuse (S1/S2)",
+        "util",
+    ]);
+    for cell in grid {
+        match cell.result {
+            Ok(r) => {
+                let c = r.cost();
+                t.row(&[
+                    cell.workload.name.clone(),
+                    cell.accelerator.style.to_string(),
+                    r.mapping().name(),
+                    format!("{:.3}", c.runtime_ms()),
+                    format!("{:.2}", c.energy_mj()),
+                    format!("{:.1}", c.throughput_gflops()),
+                    format!("{:.1}", c.reuse_factor()),
+                    format!("{:.2}", c.utilization()),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[
+                    cell.workload.name.clone(),
+                    cell.accelerator.style.to_string(),
+                    format!("infeasible: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 9: MAERI-style loop-order sweep on workloads IV and V, both
+/// configurations.
+pub fn fig9() -> Table {
+    let mut t = Table::new(&[
+        "config", "workload", "order", "runtime ms", "energy mJ", "GFLOPS",
+    ]);
+    for cfg in [HwConfig::edge(), HwConfig::cloud()] {
+        let acc = Accelerator::of_style(Style::Maeri, cfg.clone());
+        for id in ["IV", "V"] {
+            let wl = Gemm::by_id(id).unwrap();
+            for (order, r) in flash::search_all_orders(&acc, &wl) {
+                let c = r.cost();
+                t.row(&[
+                    cfg.name.to_string(),
+                    id.to_string(),
+                    order.to_string(),
+                    format!("{:.3}", c.runtime_ms()),
+                    format!("{:.2}", c.energy_mj()),
+                    format!("{:.1}", c.throughput_gflops()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig 10: five mapping styles on the four MLP FC-layer GEMMs (edge).
+pub fn fig10(cfg: &HwConfig) -> Table {
+    let accs = Accelerator::all_styles(cfg);
+    let wls = mlp_layers();
+    let grid = search_grid(&accs, &wls, 0);
+    let mut t = Table::new(&[
+        "layer", "style", "mapping", "runtime ms", "energy mJ", "reuse",
+    ]);
+    for cell in grid {
+        if let Ok(r) = cell.result {
+            let c = r.cost();
+            t.row(&[
+                cell.workload.name.clone(),
+                cell.accelerator.style.to_string(),
+                r.mapping().name(),
+                format!("{:.4}", c.runtime_ms()),
+                format!("{:.3}", c.energy_mj()),
+                format!("{:.1}", c.reuse_factor()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_worst_to_best_is_multiple() {
+        let d = fig7(&HwConfig::edge());
+        assert!(d.candidates > 100, "only {} candidates", d.candidates);
+        // paper: a bad mapping is up to 4.02× slower than the best;
+        // require a meaningful (≥1.5×) spread across candidates.
+        assert!(d.worst_to_best() > 1.5, "spread {}", d.worst_to_best());
+    }
+
+    #[test]
+    fn fig8_small_workloads_all_styles() {
+        let t = fig8(&HwConfig::edge(), &["IV", "VI"]);
+        // 2 workloads × 5 styles + header + rule
+        assert_eq!(t.render().lines().count(), 2 + 10);
+    }
+
+    #[test]
+    fn fig9_trends_transpose_between_iv_and_v() {
+        // Paper §5.4: "The trend reverses in workload V because
+        // workloads IV and V are transposes." Concretely: the same loop
+        // order performs differently on IV vs V, while swapping m↔n in
+        // the order recovers the cost; and loop order matters (the edge
+        // spread is ~4×, vanishing on cloud).
+        use crate::dataflow::LoopOrder;
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let cost = |id: &str, o: LoopOrder| {
+            let wl = Gemm::by_id(id).unwrap();
+            flash::search_with(
+                &acc,
+                &wl,
+                &SearchOpts {
+                    order: Some(o),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .cost()
+            .runtime_cycles()
+        };
+        // ⟨k,n,m⟩ is a bad order for IV (tall-skinny B) but fine for V;
+        // ⟨k,m,n⟩ is its mirror.
+        let iv_knm = cost("IV", LoopOrder::KNM);
+        let iv_kmn = cost("IV", LoopOrder::KMN);
+        let v_kmn = cost("V", LoopOrder::KMN);
+        // same order, transposed workload ⇒ different runtime
+        assert!(iv_knm > 2 * iv_kmn, "iv knm {iv_knm} vs kmn {iv_kmn}");
+        // m↔n-swapped order on the transpose recovers the cost
+        assert_eq!(iv_knm, v_kmn);
+        // loop order matters on edge: ≥2× spread across orders on IV
+        let sweep = flash::search_all_orders(&acc, &Gemm::by_id("IV").unwrap());
+        let min = sweep.iter().map(|(_, r)| r.cost().runtime_cycles()).min().unwrap();
+        let max = sweep.iter().map(|(_, r)| r.cost().runtime_cycles()).max().unwrap();
+        assert!(max > 2 * min, "edge loop-order spread {max}/{min}");
+    }
+
+    #[test]
+    fn fig10_covers_all_layers_and_styles() {
+        let t = fig10(&HwConfig::edge());
+        assert_eq!(t.render().lines().count(), 2 + 20); // 4 layers × 5 styles
+    }
+}

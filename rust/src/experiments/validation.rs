@@ -1,0 +1,69 @@
+//! Model-vs-simulator validation sweep (the reproduction's analogue of
+//! the paper's chip/RTL validation of MAESTRO, §3.3).
+
+use crate::arch::{Accelerator, HwConfig, Style};
+use crate::flash;
+use crate::report::Table;
+use crate::sim::validate_mapping;
+use crate::workloads::Gemm;
+
+/// Validate the analytical model against the simulator for FLASH's best
+/// mapping on a set of small workloads, all styles. Returns the table
+/// and the worst observed ratio.
+pub fn validate_all() -> (Table, f64) {
+    let workloads = [
+        Gemm::new("16x16x16", 16, 16, 16),
+        Gemm::new("32x8x16", 32, 8, 16),
+        Gemm::new("8x32x24", 8, 32, 24),
+        Gemm::new("24x24x24", 24, 24, 24),
+    ];
+    let mut t = Table::new(&[
+        "style",
+        "workload",
+        "mapping",
+        "sim cycles",
+        "model cycles",
+        "cycle ratio",
+        "sim S2",
+        "model S2",
+        "S2 ratio",
+    ]);
+    let mut worst: f64 = 1.0;
+    for style in Style::ALL {
+        let acc = Accelerator::of_style(style, HwConfig::tiny());
+        for wl in &workloads {
+            let Ok(best) = flash::search(&acc, wl) else {
+                continue;
+            };
+            let rep = validate_mapping(&acc, best.mapping(), wl);
+            let dev = |r: f64| if r < 1.0 { 1.0 / r } else { r };
+            worst = worst.max(dev(rep.cycle_ratio)).max(dev(rep.s2_ratio));
+            t.row(&[
+                style.to_string(),
+                wl.name.clone(),
+                rep.mapping.clone(),
+                rep.sim_cycles.to_string(),
+                rep.model_cycles.to_string(),
+                format!("{:.2}", rep.cycle_ratio),
+                rep.sim_s2.to_string(),
+                rep.model_s2.to_string(),
+                format!("{:.2}", rep.s2_ratio),
+            ]);
+        }
+    }
+    (t, worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_sweep_within_tolerance() {
+        let (t, worst) = validate_all();
+        assert!(!t.is_empty());
+        // the analytical model must track the simulator within 3×
+        // across every style/workload pair (typically much closer).
+        assert!(worst <= 3.0, "worst deviation {worst}");
+    }
+}

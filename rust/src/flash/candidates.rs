@@ -1,0 +1,460 @@
+//! Mapping-candidate generation — the paper's Algorithm 2.
+//!
+//! For each feasible (loop order, cluster size) pair of the target style,
+//! compute the candidate tile sizes from the Table 6 closed forms
+//! ([`super::tiles`]), combine them, and keep only combinations that pass
+//! the exact dataflow + buffer validation ([`Accelerator::validate`]).
+//!
+//! The *unpruned* baseline space (§5.2) — every tile size `1..=dim` for
+//! each free dimension, every inner ≤ outer — is counted analytically by
+//! [`unpruned_space`]; enumerating it is exactly what FLASH avoids
+//! (7.25 × 10⁹ combinations for a 256³ MAERI-style search in the paper;
+//! our formula yields the same order: ~6.5 × 10⁹).
+
+use crate::arch::{Accelerator, Style};
+use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
+use crate::workloads::Gemm;
+
+use super::tiles::{inner_bound, outer_bound_fixed, outer_bound_maeri, pow2_candidates, pow2_into};
+
+/// The pruned candidate set for one (accelerator, workload) pair.
+#[derive(Debug, Clone)]
+pub struct CandidateSet {
+    pub mappings: Vec<Mapping>,
+    /// Analytic size of the unpruned tile-size space (§5.2 baseline).
+    pub unpruned: u128,
+}
+
+impl CandidateSet {
+    /// §5.2 headline: factor by which pruning shrank the space.
+    pub fn reduction_factor(&self) -> f64 {
+        self.unpruned as f64 / (self.mappings.len() as f64).max(1.0)
+    }
+}
+
+fn dim_of(wl: &Gemm, d: Dim) -> u64 {
+    match d {
+        Dim::M => wl.m,
+        Dim::N => wl.n,
+        Dim::K => wl.k,
+    }
+}
+
+/// §4's overflow rule: the spatial dim's outer tile is pinned to its
+/// closed-form ideal (`λD/P`), but "we iteratively decrease the largest
+/// tile size when the tiles do not fit in the S2 buffer" — halve the
+/// spatial tile until a minimal candidate (all free tiles = 1) satisfies
+/// Eq. 1. `min_ws(span)` computes that minimal working set.
+fn feasible_spatial_tile(
+    ideal: u64,
+    dim: u64,
+    clusters: u64,
+    beta: u64,
+    min_ws: impl Fn(u64) -> u64,
+) -> u64 {
+    let mut t = ideal.min(dim).max(1);
+    loop {
+        let span = (t * clusters).min(dim);
+        if min_ws(span) <= beta / 2 || t == 1 {
+            return t;
+        }
+        t = (t / 2).max(1);
+    }
+}
+
+/// Working set A+B+C from per-dim spans.
+fn ws_of_spans(sm: u64, sn: u64, sk: u64) -> u64 {
+    sm * sk + sk * sn + sm * sn
+}
+
+/// Candidates for one loop order + cluster size on a fixed-dataflow style
+/// (Eyeriss / NVDLA / TPU / ShiDianNao).
+fn fixed_style_candidates(
+    acc: &Accelerator,
+    wl: &Gemm,
+    inter_order: LoopOrder,
+    intra_order: LoopOrder,
+    lambda: u64,
+    out: &mut Vec<Mapping>,
+) {
+    let style = acc.style;
+    let p = acc.config.pes;
+    let beta = acc.config.beta();
+    let alpha = acc.config.alpha();
+    let inter_sp = style.inter_spatial_dims()[0];
+    let intra_sp = style.intra_spatial_dims()[0];
+
+    let d_sp = dim_of(wl, inter_sp);
+    let clusters = (p / lambda).max(1);
+    // T^out of the inter-spatial dim: Table 6's `λD/P` (each cluster's
+    // share of the fully-spanned dim), decreased per §4's overflow rule
+    // until a minimal candidate fits Eq. 1.
+    let t_sp_ideal = d_sp.div_ceil(clusters).max(1);
+    let min_ws = |span_sp: u64| {
+        let span_of = |d: Dim| {
+            if d == inter_sp {
+                span_sp
+            } else if d == intra_sp {
+                lambda // λ PEs × minimal chunk 1
+            } else {
+                1
+            }
+        };
+        ws_of_spans(span_of(Dim::M), span_of(Dim::N), span_of(Dim::K))
+    };
+    let t_sp_out = feasible_spatial_tile(t_sp_ideal, d_sp, clusters, beta, min_ws);
+    let span_sp = (t_sp_out * clusters).min(d_sp);
+
+    // The two non-inter-spatial dims are bounded by the Table 6
+    // quadratic (equal-tiles assumption) — plus the *solo* bound of each
+    // dim with the other at 1 (§4's caveat: "corner cases might occur
+    // due to assumptions like T_K^out and T_M^out are the same"). The
+    // working set is linear in one tile with the other fixed, so the
+    // exact solo bound is closed-form; invalid combinations are filtered
+    // by the exact Eq. 1 validation below.
+    let free: Vec<Dim> = Dim::ALL.iter().copied().filter(|&d| d != inter_sp).collect();
+    let bound = outer_bound_fixed(span_sp, lambda, beta);
+    let ws_with = |vm: u64, vn: u64, vk: u64| {
+        let span_of = |d: Dim, v: u64| {
+            if d == inter_sp {
+                span_sp
+            } else if d == intra_sp {
+                lambda * v
+            } else {
+                v
+            }
+        };
+        ws_of_spans(
+            span_of(Dim::M, vm),
+            span_of(Dim::N, vn),
+            span_of(Dim::K, vk),
+        )
+    };
+    let solo = |d: Dim| -> u64 {
+        let pick = |x: Dim, v: u64| if x == d { v } else { 1 };
+        let c0 = ws_with(pick(Dim::M, 0), pick(Dim::N, 0), pick(Dim::K, 0));
+        let c1 = ws_with(pick(Dim::M, 1), pick(Dim::N, 1), pick(Dim::K, 1)).saturating_sub(c0);
+        if c1 == 0 || beta / 2 <= c0 {
+            return 1;
+        }
+        ((beta / 2 - c0) / c1).max(1)
+    };
+    let cands: Vec<Vec<u64>> = free
+        .iter()
+        .map(|&d| pow2_candidates(bound.max(solo(d)), dim_of(wl, d)))
+        .collect();
+
+    // §Perf: hoisted out of the (t0, t1) loop — reused buffers instead
+    // of fresh Vec allocations per candidate pair.
+    let inner_free: Vec<Dim> = Dim::ALL
+        .iter()
+        .copied()
+        .filter(|&d| d != intra_sp)
+        .collect();
+    let (mut ic0, mut ic1) = (Vec::new(), Vec::new());
+
+    {
+        for &t0 in &cands[0] {
+            for &t1 in &cands[1] {
+                let mut outer = Tiles::ones();
+                outer.set(inter_sp, t_sp_out);
+                outer.set(free[0], t0);
+                outer.set(free[1], t1);
+
+                // Inner tiles: the intra-spatial dim is style-fixed to
+                // its outer tile (Table 6: T^in = T^out for K / N
+                // resp.); the other two are bounded by Eq. 2.
+                let t_fix = outer.get(intra_sp);
+                let ib = inner_bound(t_fix, alpha);
+                pow2_into(
+                    &mut ic0,
+                    ib.min(outer.get(inner_free[0])),
+                    dim_of(wl, inner_free[0]),
+                );
+                pow2_into(
+                    &mut ic1,
+                    ib.min(outer.get(inner_free[1])),
+                    dim_of(wl, inner_free[1]),
+                );
+                for &i0 in &ic0 {
+                    for &i1 in &ic1 {
+                        let mut inner = Tiles::ones();
+                        inner.set(intra_sp, t_fix);
+                        inner.set(inner_free[0], i0);
+                        inner.set(inner_free[1], i1);
+                        let m = Mapping {
+                            inter_order,
+                            intra_order,
+                            inter_spatial: inter_sp,
+                            intra_spatial: intra_sp,
+                            cluster_size: lambda,
+                            outer,
+                            inner,
+                        };
+                        if acc.validate(&m).is_ok() {
+                            out.push(m);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Candidates for one loop order on MAERI (TST_TTS): the inter-spatial
+/// dim is the order's *middle* loop, the intra-spatial dim its innermost
+/// loop, and λ equals the outer tile of the intra-spatial dim (Table 2).
+fn maeri_candidates(
+    acc: &Accelerator,
+    wl: &Gemm,
+    order: LoopOrder,
+    out: &mut Vec<Mapping>,
+) {
+    let p = acc.config.pes;
+    let beta = acc.config.beta();
+    let alpha = acc.config.alpha();
+    let u = order.0[0]; // outermost, temporal
+    let s = order.0[1]; // inter-spatial
+    let t = order.0[2]; // intra-spatial; λ = T_t^out
+
+    let s_dim = dim_of(wl, s);
+    // λ range: bounded by the most permissive spatial span (span → 1).
+    let lambda_bound = outer_bound_maeri(1, beta);
+
+    // λ = T_t^out: powers of two ≤ min(P, bound, dim_t) — MAERI's fat
+    // tree partitions in powers of two (Table 2).
+    for lambda in pow2_candidates(lambda_bound.min(p), dim_of(wl, t)) {
+        if !lambda.is_power_of_two() {
+            continue;
+        }
+        let clusters = (p / lambda).max(1);
+        // Eq. 3's T_s^out = S·λ/P (full spatial span), decreased per
+        // §4's overflow rule until a minimal candidate fits Eq. 1.
+        let t_s_ideal = s_dim.div_ceil(clusters).max(1);
+        let min_ws = |span_s: u64| {
+            let span_of = |d: Dim| {
+                if d == s {
+                    span_s
+                } else if d == t {
+                    lambda
+                } else {
+                    1
+                }
+            };
+            ws_of_spans(span_of(Dim::M), span_of(Dim::N), span_of(Dim::K))
+        };
+        let t_s_out = feasible_spatial_tile(t_s_ideal, s_dim, clusters, beta, min_ws);
+        let span_s = (t_s_out * clusters).min(s_dim);
+        // equal-tiles bound plus the solo bound of the free dim (the
+        // working set is linear in T_u with λ fixed; §4 corner cases).
+        let eq_bound = outer_bound_maeri(span_s, beta);
+        let c0 = min_ws(span_s).saturating_sub(lambda + span_s); // terms without T_u
+        let c1 = lambda + span_s; // A + C coefficients of T_u
+        let solo = if beta / 2 > c0 { ((beta / 2 - c0) / c1).max(1) } else { 1 };
+        let bound = eq_bound.max(solo);
+
+        let ib = inner_bound(1, alpha);
+        {
+            let mut outer_base = Tiles::ones();
+            outer_base.set(s, t_s_out);
+            outer_base.set(t, lambda);
+
+            // §Perf: reused buffers instead of per-candidate Vecs.
+            let inner_free = [u, s];
+            let (mut ic0, mut ic1) = (Vec::new(), Vec::new());
+            for &t_u in &pow2_candidates(bound, dim_of(wl, u)) {
+                let mut outer = outer_base;
+                outer.set(u, t_u);
+
+                pow2_into(&mut ic0, ib.min(outer.get(u)), dim_of(wl, u));
+                pow2_into(&mut ic1, ib.min(outer.get(s)), dim_of(wl, s));
+                for &i0 in &ic0 {
+                    for &i1 in &ic1 {
+                        let mut inner = Tiles::ones();
+                        inner.set(t, 1);
+                        inner.set(inner_free[0], i0);
+                        inner.set(inner_free[1], i1);
+                        let m = Mapping {
+                            inter_order: order,
+                            intra_order: order,
+                            inter_spatial: s,
+                            intra_spatial: t,
+                            cluster_size: lambda,
+                            outer,
+                            inner,
+                        };
+                        if acc.validate(&m).is_ok() {
+                            out.push(m);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Algorithm 2: generate the pruned mapping-candidate set.
+pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
+    let mut mappings = Vec::new();
+    match acc.style {
+        Style::Maeri => {
+            for &order in acc.style.inter_orders() {
+                maeri_candidates(acc, wl, order, &mut mappings);
+            }
+        }
+        _ => {
+            let inter = acc.style.inter_orders()[0];
+            let intra = acc.style.intra_orders()[0];
+            for lambda in acc.style.cluster_sizes(acc.config.pes) {
+                fixed_style_candidates(acc, wl, inter, intra, lambda, &mut mappings);
+            }
+        }
+    }
+    CandidateSet {
+        unpruned: unpruned_space(acc, wl),
+        mappings,
+    }
+}
+
+/// Candidates restricted to one inter-cluster loop order (Fig 9 sweeps).
+pub fn enumerate_for_order(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Vec<Mapping> {
+    let mut mappings = Vec::new();
+    match acc.style {
+        Style::Maeri => maeri_candidates(acc, wl, order, &mut mappings),
+        _ => {
+            if acc.style.inter_orders().contains(&order) {
+                let intra = acc.style.intra_orders()[0];
+                for lambda in acc.style.cluster_sizes(acc.config.pes) {
+                    fixed_style_candidates(acc, wl, order, intra, lambda, &mut mappings);
+                }
+            }
+        }
+    }
+    mappings
+}
+
+/// Analytic size of the **unpruned** tile-size space (§5.2 baseline):
+/// every outer tile `1..=dim` for each free dim, every inner tile
+/// `1..=outer` for each free inner dim, across all feasible loop orders
+/// and cluster sizes. (Σ_{x=1..D} x = D(D+1)/2 per outer/inner pair.)
+pub fn unpruned_space(acc: &Accelerator, wl: &Gemm) -> u128 {
+    let pair = |d: u64| -> u128 { (d as u128) * (d as u128 + 1) / 2 };
+    match acc.style {
+        Style::Maeri => {
+            // per order: Tu_out × Tu_in pairs × Tt_out (λ) choices ×
+            // Ts_in ≤ Ts_out(λ) choices; Ts_out and Tk_in are derived.
+            let mut total: u128 = 0;
+            for order in LoopOrder::ALL {
+                let u = dim_of(wl, order.0[0]);
+                let t = dim_of(wl, order.0[2]);
+                let s = dim_of(wl, order.0[1]);
+                // Σ over Tt_out choices of (pairs for u) × (Ts_in ≤ Ts_out)
+                // with Ts_out ≈ s·Tt_out/P capped to [1, s].
+                let mut per_order: u128 = 0;
+                for tt in 1..=t {
+                    let ts_out = ((s as u128 * tt as u128) / acc.config.pes as u128)
+                        .clamp(1, s as u128);
+                    per_order += pair(u) * ts_out;
+                }
+                total += per_order;
+            }
+            total
+        }
+        _ => {
+            let inter_sp = acc.style.inter_spatial_dims()[0];
+            let free: Vec<Dim> = Dim::ALL
+                .iter()
+                .copied()
+                .filter(|&d| d != inter_sp)
+                .collect();
+            let per_lambda: u128 = free.iter().map(|&d| pair(dim_of(wl, d))).product();
+            per_lambda * acc.style.cluster_sizes(acc.config.pes).len() as u128
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::HwConfig;
+
+    #[test]
+    fn sec52_unpruned_count_matches_paper_magnitude() {
+        // §5.2: 256³ MAERI-style ⇒ paper reports 7,250,826,667 possible
+        // tile-size sets. Our enumeration convention lands within 2×.
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("sq256", 256, 256, 256);
+        let n = unpruned_space(&acc, &wl);
+        assert!(
+            n > 3_000_000_000 && n < 15_000_000_000,
+            "unpruned count {n}"
+        );
+    }
+
+    #[test]
+    fn pruning_reduction_exceeds_99pct() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("sq256", 256, 256, 256);
+        let cs = enumerate(&acc, &wl);
+        assert!(!cs.mappings.is_empty());
+        let reduction = 1.0 - cs.mappings.len() as f64 / cs.unpruned as f64;
+        assert!(reduction > 0.997, "reduction {reduction}");
+        assert!(cs.reduction_factor() > 400.0);
+    }
+
+    #[test]
+    fn all_candidates_valid_on_every_style() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let cs = enumerate(&acc, &wl);
+            assert!(!cs.mappings.is_empty(), "{style}: no candidates");
+            for m in &cs.mappings {
+                assert_eq!(acc.validate(m), Ok(()), "{style}: invalid {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn maeri_covers_all_six_orders() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let cs = enumerate(&acc, &wl);
+        for order in LoopOrder::ALL {
+            assert!(
+                cs.mappings.iter().any(|m| m.inter_order == order),
+                "missing order {order}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_styles_single_order() {
+        let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let cs = enumerate(&acc, &wl);
+        assert!(cs.mappings.iter().all(|m| m.inter_order == LoopOrder::NKM));
+    }
+
+    #[test]
+    fn enumerate_for_order_filters() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let only = enumerate_for_order(&acc, &wl, LoopOrder::KNM);
+        assert!(!only.is_empty());
+        assert!(only.iter().all(|m| m.inter_order == LoopOrder::KNM));
+        // Eyeriss can't do KNM
+        let ey = Accelerator::of_style(Style::Eyeriss, HwConfig::edge());
+        assert!(enumerate_for_order(&ey, &wl, LoopOrder::KNM).is_empty());
+    }
+
+    #[test]
+    fn tiny_workload_still_searchable() {
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let wl = Gemm::new("tiny", 8, 8, 8);
+            let cs = enumerate(&acc, &wl);
+            assert!(!cs.mappings.is_empty(), "{style}");
+        }
+    }
+}

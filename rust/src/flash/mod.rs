@@ -1,0 +1,19 @@
+//! FLASH — Flexible Linear Algebra dataflow via Spatio-temporal
+//! Hierarchical-mapping (paper §4).
+//!
+//! The mapping explorer: derive candidate tile sizes analytically
+//! ([`tiles`], Table 6 closed forms), generate the pruned candidate set
+//! ([`candidates`], Algorithm 2), and select the best mapping by
+//! projected runtime using MAESTRO-BLAS ([`search`]).
+
+pub mod candidates;
+pub mod pareto;
+pub mod search;
+pub mod tiles;
+
+pub use candidates::{enumerate, unpruned_space, CandidateSet};
+pub use pareto::{pareto_frontier, select_weighted, ParetoPoint};
+pub use search::{
+    search, search_all_orders, search_with, EvaluatedMapping, SearchOpts, SearchResult,
+};
+pub use tiles::{inner_bound, outer_bound_fixed, outer_bound_maeri, pow2_candidates};

@@ -1,0 +1,116 @@
+//! Multi-objective mapping selection — the paper's stated future work
+//! (§5.2: "We plan to explore the multi-objective problem of choosing
+//! the mapping that is good in more than one quantity of interest").
+//!
+//! We implement it: extract the runtime/energy Pareto frontier from the
+//! evaluated candidate set and select by scalarization weights.
+
+use crate::arch::Accelerator;
+use crate::workloads::Gemm;
+
+use super::search::{search_with, EvaluatedMapping, SearchOpts};
+
+/// A point on the runtime/energy frontier.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub mapping: EvaluatedMapping,
+    pub runtime_ms: f64,
+    pub energy_mj: f64,
+}
+
+/// The runtime/energy Pareto frontier of the pruned candidate set,
+/// sorted by ascending runtime.
+pub fn pareto_frontier(acc: &Accelerator, wl: &Gemm) -> anyhow::Result<Vec<ParetoPoint>> {
+    let r = search_with(
+        acc,
+        wl,
+        &SearchOpts {
+            keep_all: true,
+            ..Default::default()
+        },
+    )?;
+    let mut pts: Vec<ParetoPoint> = r
+        .all
+        .into_iter()
+        .map(|e| ParetoPoint {
+            runtime_ms: e.cost.runtime_ms(),
+            energy_mj: e.cost.energy_mj(),
+            mapping: e,
+        })
+        .collect();
+    // sort by runtime, then sweep keeping strictly improving energy
+    pts.sort_by(|a, b| {
+        a.runtime_ms
+            .partial_cmp(&b.runtime_ms)
+            .unwrap()
+            .then(a.energy_mj.partial_cmp(&b.energy_mj).unwrap())
+    });
+    let mut frontier: Vec<ParetoPoint> = Vec::new();
+    let mut best_energy = f64::INFINITY;
+    for p in pts {
+        if p.energy_mj < best_energy {
+            best_energy = p.energy_mj;
+            frontier.push(p);
+        }
+    }
+    Ok(frontier)
+}
+
+/// Pick from the frontier by scalarization: minimize
+/// `w · runtime_norm + (1-w) · energy_norm` (w = 1 ⇒ pure runtime,
+/// w = 0 ⇒ pure energy).
+pub fn select_weighted(frontier: &[ParetoPoint], w: f64) -> Option<&ParetoPoint> {
+    if frontier.is_empty() {
+        return None;
+    }
+    let rt_max = frontier.iter().map(|p| p.runtime_ms).fold(f64::MIN, f64::max);
+    let en_max = frontier.iter().map(|p| p.energy_mj).fold(f64::MIN, f64::max);
+    frontier.iter().min_by(|a, b| {
+        let score = |p: &ParetoPoint| {
+            w * p.runtime_ms / rt_max.max(f64::EPSILON)
+                + (1.0 - w) * p.energy_mj / en_max.max(f64::EPSILON)
+        };
+        score(a).partial_cmp(&score(b)).unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    fn frontier_vi() -> Vec<ParetoPoint> {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::by_id("VI").unwrap();
+        pareto_frontier(&acc, &wl).unwrap()
+    }
+
+    #[test]
+    fn frontier_is_nondominated_and_sorted() {
+        let f = frontier_vi();
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].runtime_ms <= w[1].runtime_ms);
+            assert!(w[0].energy_mj > w[1].energy_mj, "dominated point on frontier");
+        }
+    }
+
+    #[test]
+    fn frontier_head_is_runtime_optimum() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::by_id("VI").unwrap();
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        let f = frontier_vi();
+        assert!((f[0].runtime_ms - best.cost().runtime_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weights_interpolate_extremes() {
+        let f = frontier_vi();
+        let fastest = select_weighted(&f, 1.0).unwrap();
+        let greenest = select_weighted(&f, 0.0).unwrap();
+        assert!(fastest.runtime_ms <= greenest.runtime_ms);
+        assert!(greenest.energy_mj <= fastest.energy_mj);
+        assert!(select_weighted(&[], 0.5).is_none());
+    }
+}

@@ -1,0 +1,142 @@
+//! Candidate tile-size derivation — the paper's Eq. 1–4 and Table 6.
+//!
+//! The S2 constraint (Eq. 1, double-buffered) on the per-step working set
+//! `span_m·span_k + span_k·span_n + span_m·span_n ≤ β/2` reduces, per
+//! style, to a quadratic in the free outer tile size `x`:
+//!
+//! * **fixed-dataflow styles** (Eyeriss/NVDLA/TPU/ShiDianNao): the
+//!   inter-spatial dim `D` is fully spanned (`T_D^out = λD/P` per
+//!   cluster), giving `λx² + D(λ+1)x ≤ β/2` and the Table 6 bound
+//!   `x ≤ (√(D²(λ+1)² + 2βλ) − D(λ+1)) / 2λ`.
+//! * **MAERI-style**: λ equals the outer tile of the intra-spatial dim,
+//!   the inter-spatial dim `S` is fully spanned, giving
+//!   `x² + 2Sx ≤ β/2` and the Eq. 3 bound `x ≤ √(β/2 + S²) − S`.
+//!
+//! The S1 constraint (Eq. 2, double-buffered) with the style-fixed inner
+//! dim `t` gives `y² + 2ty ≤ α/2` ⇒ `y ≤ √(α/2 + t²) − t` (Eq. 4 is the
+//! `t = 1` case: `y ≤ √((α+2)/2) − 1`).
+//!
+//! FLASH enumerates powers of two within these bounds (§4: "the largest
+//! power of two … results in better performance"), keeping the bound
+//! itself as an extra candidate when it is not a power of two.
+
+/// Largest `x ≥ 1` with `λx² + d(λ+1)x ≤ β/2` — the Table 6 outer bound
+/// for fixed-dataflow styles (`d` = size of the inter-spatial dim).
+pub fn outer_bound_fixed(d: u64, lambda: u64, beta: u64) -> u64 {
+    let (d, l, b) = (d as f64, lambda as f64, beta as f64);
+    let disc = d * d * (l + 1.0) * (l + 1.0) + 2.0 * b * l;
+    let x = (disc.sqrt() - d * (l + 1.0)) / (2.0 * l);
+    (x.floor() as u64).max(1)
+}
+
+/// Largest `x ≥ 1` with `x² + 2sx ≤ β/2` — the Eq. 3 bound for
+/// MAERI-style mappings (`s` = size of the inter-spatial dim).
+pub fn outer_bound_maeri(s: u64, beta: u64) -> u64 {
+    let (s, b) = (s as f64, beta as f64);
+    let x = (b / 2.0 + s * s).sqrt() - s;
+    (x.floor() as u64).max(1)
+}
+
+/// Largest `y ≥ 1` with `y² + 2ty ≤ α/2` — the Eq. 4 / Table 6 inner
+/// bound (`t` = style-fixed inner tile of the intra-spatial dim).
+pub fn inner_bound(t: u64, alpha: u64) -> u64 {
+    let (t, a) = (t as f64, alpha as f64);
+    let y = (a / 2.0 + t * t).sqrt() - t;
+    (y.floor() as u64).max(1)
+}
+
+/// Candidate values for one tile dimension: powers of two in
+/// `[1, min(bound, dim)]`, plus the bound and the dim themselves
+/// (deduplicated, ascending).
+pub fn pow2_candidates(bound: u64, dim: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    pow2_into(&mut v, bound, dim);
+    v
+}
+
+/// Allocation-free variant of [`pow2_candidates`]: fills `out` (§Perf —
+/// the candidate generators call this in their inner loops).
+pub fn pow2_into(out: &mut Vec<u64>, bound: u64, dim: u64) {
+    out.clear();
+    let cap = bound.min(dim).max(1);
+    let mut p = 1u64;
+    while p <= cap {
+        out.push(p);
+        if p > u64::MAX / 2 {
+            break;
+        }
+        p *= 2;
+    }
+    if *out.last().expect("non-empty") != cap {
+        out.push(cap);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_paper_anchor() {
+        // §5.2 setting: workload VI, edge (β = 51200 elems), N = 256:
+        // x ≤ √(25600 + 65536) − 256 = 45.9…
+        assert_eq!(outer_bound_maeri(256, 51_200), 45);
+    }
+
+    #[test]
+    fn eq4_paper_anchor() {
+        // α = 256 elems, MAERI Tk_in = 1: y ≤ √((256+2)/2) − 1 = 10.3…
+        // (√(α/2 + 1) − 1 = √129 − 1 = 10.357)
+        assert_eq!(inner_bound(1, 256), 10);
+    }
+
+    #[test]
+    fn bounds_satisfy_their_quadratics() {
+        for &(d, l, b) in &[(256u64, 16u64, 51_200u64), (8192, 64, 409_600), (8, 12, 51_200)] {
+            let x = outer_bound_fixed(d, l, b);
+            // x == 1 is the fallback when no tile satisfies the quadratic
+            // (the spatial dim alone overflows S2); candidates.rs then
+            // relies on Accelerator::validate to cap the spatial span.
+            assert!(
+                l * x * x + d * (l + 1) * x <= b / 2 || x == 1,
+                "fixed bound violated"
+            );
+            let x1 = x + 1;
+            assert!(
+                l * x1 * x1 + d * (l + 1) * x1 > b / 2 || x == 1,
+                "fixed bound not tight"
+            );
+        }
+        for &(s, b) in &[(256u64, 51_200u64), (8192, 409_600), (8, 51_200)] {
+            let x = outer_bound_maeri(s, b);
+            assert!(x * x + 2 * s * x <= b / 2);
+            let x1 = x + 1;
+            assert!(x1 * x1 + 2 * s * x1 > b / 2 || x == 1);
+        }
+        for &(t, a) in &[(1u64, 256u64), (32, 256), (45, 256)] {
+            let y = inner_bound(t, a);
+            assert!(y * y + 2 * t * y <= a / 2 || y == 1);
+        }
+    }
+
+    #[test]
+    fn bounds_monotone_in_buffer_size() {
+        assert!(outer_bound_maeri(256, 409_600) > outer_bound_maeri(256, 51_200));
+        assert!(outer_bound_fixed(256, 16, 409_600) > outer_bound_fixed(256, 16, 51_200));
+        assert!(inner_bound(1, 1024) > inner_bound(1, 256));
+    }
+
+    #[test]
+    fn bounds_shrink_with_spatial_dim() {
+        assert!(outer_bound_maeri(8, 51_200) > outer_bound_maeri(8192, 51_200));
+        assert!(outer_bound_fixed(8, 16, 51_200) > outer_bound_fixed(8192, 16, 51_200));
+    }
+
+    #[test]
+    fn pow2_candidates_cover_range() {
+        assert_eq!(pow2_candidates(45, 256), vec![1, 2, 4, 8, 16, 32, 45]);
+        assert_eq!(pow2_candidates(64, 256), vec![1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(pow2_candidates(1000, 8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_candidates(0, 8), vec![1]);
+    }
+}

@@ -1,0 +1,45 @@
+//! # flash-gemm — evaluating spatial accelerators with tiled GEMM
+//!
+//! Reproduction of *"Evaluating Spatial Accelerator Architectures with
+//! Tiled Matrix-Matrix Multiplication"* (CS.DC 2021): the **FLASH**
+//! mapping explorer plus the **MAESTRO-BLAS** analytical cost model,
+//! evaluated over five spatial-accelerator styles (Eyeriss, NVDLA, TPUv2,
+//! ShiDianNao, MAERI) on edge and cloud configurations.
+//!
+//! Layer map (see `DESIGN.md`):
+//! * L3 (this crate): accelerator models, dataflow directives, cost model,
+//!   FLASH search, baselines, a cycle-approximate simulator substrate, the
+//!   PJRT runtime, and the search/serve coordinator.
+//! * L2/L1 (`python/compile`): JAX GEMM/MLP graphs calling the Pallas
+//!   tiled-GEMM kernel, AOT-lowered once to `artifacts/*.hlo.txt`.
+//!
+//! Quick start:
+//! ```no_run
+//! use flash_gemm::prelude::*;
+//!
+//! let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+//! let wl  = Gemm::new("sq", 1024, 1024, 1024);
+//! let best = flash_gemm::flash::search(&acc, &wl).expect("searchable");
+//! println!("best mapping: {} -> {:.3} ms", best.mapping().name(), best.cost().runtime_ms());
+//! ```
+
+pub mod arch;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod dataflow;
+pub mod experiments;
+pub mod flash;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod workloads;
+
+/// Convenient re-exports of the types almost every consumer needs.
+pub mod prelude {
+    pub use crate::arch::{Accelerator, HwConfig, Style};
+    pub use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
+    pub use crate::workloads::Gemm;
+}

@@ -1,0 +1,22 @@
+//! `repro` — the leader entrypoint: regenerate any paper table/figure,
+//! run one-off FLASH searches, validate the cost model against the
+//! simulator, or serve GEMM requests end-to-end (see `repro help`).
+
+use flash_gemm::cli::{self, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match cli::run(args) {
+        Ok(text) => print!("{text}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

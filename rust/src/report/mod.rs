@@ -1,0 +1,150 @@
+//! Reporting: aligned text tables, CSV emission, and the ASCII histogram
+//! used to regenerate the paper's figures on a terminal.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: ToString>(header: &[S]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: ToString>(&mut self, cells: &[S]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}  ", c, w = width[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&mut out, &self.header);
+        let total: usize = width.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            fmt_row(&mut out, r);
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let line = |cells: &[String]| {
+            cells.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+        };
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII histogram (Fig 7): bin values uniformly, draw proportional bars.
+pub fn histogram(values: &[f64], bins: usize, max_bar: usize) -> String {
+    if values.is_empty() || bins == 0 {
+        return String::from("(empty)\n");
+    }
+    let lo = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = ((hi - lo) / bins as f64).max(f64::EPSILON);
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        let b = (((v - lo) / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (i, &c) in counts.iter().enumerate() {
+        let bar = "#".repeat(c * max_bar / peak);
+        let _ = writeln!(
+            out,
+            "[{:>10.3}, {:>10.3})  {:>6}  {}",
+            lo + i as f64 * width,
+            lo + (i + 1) as f64 * width,
+            c,
+            bar
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "runtime"]);
+        t.row(&["a", "1.0"]).row(&["long-name", "22.5"]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+        // all rows same width
+        let lens: Vec<usize> = s.lines().map(|l| l.trim_end().len()).collect();
+        assert!(lens[2] >= "long-name".len());
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x,y", "z"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\",z"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        Table::new(&["a", "b"]).row(&["only-one"]);
+    }
+
+    #[test]
+    fn histogram_bins_and_bars() {
+        let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let h = histogram(&vals, 10, 40);
+        assert_eq!(h.lines().count(), 10);
+        assert!(h.contains('#'));
+        assert_eq!(histogram(&[], 10, 40), "(empty)\n");
+    }
+}

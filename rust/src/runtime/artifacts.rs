@@ -1,0 +1,138 @@
+//! The artifact manifest: what the AOT pipeline produced.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` (line-based; the build
+//! image is offline so the Rust side avoids a JSON dependency):
+//! `name path shape shape ...`, shapes like `128x784`, all f32.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact: a lowered HLO-text computation and its argument
+/// shapes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    /// Argument shapes, row-major, all f32.
+    pub arg_shapes: Vec<Vec<u64>>,
+}
+
+impl ArtifactMeta {
+    /// Total argument elements (sanity/cost accounting).
+    pub fn arg_elems(&self) -> u64 {
+        self.arg_shapes
+            .iter()
+            .map(|s| s.iter().product::<u64>())
+            .sum()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(path)) = (parts.next(), parts.next()) else {
+                bail!("manifest line {}: want `name path shapes...`", lineno + 1);
+            };
+            let mut arg_shapes = Vec::new();
+            for shape in parts {
+                let dims: Result<Vec<u64>, _> =
+                    shape.split('x').map(|d| d.parse::<u64>()).collect();
+                arg_shapes.push(dims.with_context(|| {
+                    format!("manifest line {}: bad shape {shape:?}", lineno + 1)
+                })?);
+            }
+            artifacts.push(ArtifactMeta {
+                name: name.to_string(),
+                path: dir.join(path),
+                arg_shapes,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Square tile sizes for which a `gemm_tile_{t}` artifact exists,
+    /// ascending.
+    pub fn tile_sizes(&self) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .artifacts
+            .iter()
+            .filter_map(|a| a.name.strip_prefix("gemm_tile_")?.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+gemm_tile_16 gemm_tile_16.hlo.txt 16x16 16x16 16x16
+mlp mlp.hlo.txt 128x784 784x512 512x256 256x128 128x10
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let t = m.get("gemm_tile_16").unwrap();
+        assert_eq!(t.arg_shapes, vec![vec![16, 16]; 3]);
+        assert_eq!(t.arg_elems(), 3 * 256);
+        assert_eq!(m.tile_sizes(), vec![16]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Manifest::parse(Path::new("."), "name-only\n").is_err());
+        assert!(Manifest::parse(Path::new("."), "a b 12xfoo\n").is_err());
+        assert!(Manifest::parse(Path::new("."), "# empty\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration smoke when `make artifacts` has run
+        let dir = crate::runtime::default_artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("mlp").is_some());
+            assert!(!m.tile_sizes().is_empty());
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Compile-once PJRT executable cache.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::Manifest;
+
+/// The L3 runtime: a PJRT CPU client plus compiled-executable cache over
+/// the AOT artifact set.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    /// Cumulative compile time (perf accounting).
+    pub compile_time: Duration,
+    /// Executions served.
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: HashMap::new(),
+            compile_time: Duration::ZERO,
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            let start = Instant::now();
+            let proto = HloModuleProto::from_text_file(&meta.path)
+                .map_err(|e| anyhow!("parsing {}: {e}", meta.path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.compile_time += start.elapsed();
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Pre-compile an artifact (warm-up outside the serving hot path).
+    pub fn warm(&mut self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute an artifact. All artifacts are lowered with
+    /// `return_tuple=True`; this unwraps the tuple and returns its
+    /// elements.
+    pub fn run(&mut self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        if args.len() != meta.arg_shapes.len() {
+            anyhow::bail!(
+                "{name}: want {} args, got {}",
+                meta.arg_shapes.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        self.executions += 1;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e}"))
+    }
+
+    /// Convenience: run a 1-output artifact on f32 matrices, returning
+    /// the flattened f32 output.
+    pub fn run_f32(&mut self, name: &str, args: &[(&[f32], [u64; 2])]) -> Result<Vec<f32>> {
+        let literals: Vec<Literal> = args
+            .iter()
+            .map(|(data, shape)| {
+                Literal::vec1(data)
+                    .reshape(&[shape[0] as i64, shape[1] as i64])
+                    .map_err(|e| anyhow!("reshape to {shape:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let out = self.run(name, &literals)?;
+        let first = out
+            .into_iter()
+            .next()
+            .context("artifact returned empty tuple")?;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("result to f32: {e}"))
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("compiled", &self.executables.len())
+            .field("executions", &self.executions)
+            .finish()
+    }
+}

@@ -1,0 +1,192 @@
+//! The tiled GEMM executor: L3 drives the L1 kernel artifact over the
+//! FLASH-selected outer schedule.
+//!
+//! `gemm_tile_{t}` computes `acc + A_tile · B_tile` for t×t f32 tiles
+//! (the Pallas kernel's FMA unit). The executor pads the operands to
+//! tile multiples, walks the (m, n, k) tile grid in the mapping's
+//! inter-cluster loop order, and accumulates C — the functional mirror
+//! of the accelerator time-multiplexing its PE array over outer tiles.
+
+use anyhow::{anyhow, Result};
+
+use crate::dataflow::{Dim, LoopOrder};
+use crate::workloads::Gemm;
+
+use super::client::Runtime;
+
+/// Pad a row-major `rows×cols` matrix to `prows×pcols`.
+fn pad(m: &[f32], rows: usize, cols: usize, prows: usize, pcols: usize) -> Vec<f32> {
+    let mut out = vec![0f32; prows * pcols];
+    for r in 0..rows {
+        out[r * pcols..r * pcols + cols].copy_from_slice(&m[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// Extract the t×t tile at (tile row `i`, tile col `j`) of a padded
+/// matrix with `pcols` columns.
+fn tile(m: &[f32], pcols: usize, i: usize, j: usize, t: usize, out: &mut Vec<f32>) {
+    out.clear();
+    for r in 0..t {
+        let base = (i * t + r) * pcols + j * t;
+        out.extend_from_slice(&m[base..base + t]);
+    }
+}
+
+/// Tiled GEMM over the PJRT tile artifact.
+pub struct TiledExecutor<'r> {
+    runtime: &'r mut Runtime,
+    /// Square tile size t (must have a `gemm_tile_{t}` artifact).
+    pub tile: usize,
+    /// Tile-grid traversal order (from the FLASH mapping).
+    pub order: LoopOrder,
+    /// Kernel invocations performed.
+    pub tile_calls: u64,
+}
+
+impl<'r> TiledExecutor<'r> {
+    /// Pick the largest available tile not exceeding the workload dims.
+    pub fn auto_tile(runtime: &Runtime, wl: &Gemm) -> u64 {
+        let dims_min = wl.m.min(wl.n).min(wl.k);
+        let sizes = runtime.manifest().tile_sizes();
+        sizes
+            .iter()
+            .rev()
+            .find(|&&t| t <= dims_min.next_power_of_two())
+            .copied()
+            .or_else(|| sizes.first().copied())
+            .unwrap_or(16)
+    }
+
+    pub fn new(runtime: &'r mut Runtime, tile: usize, order: LoopOrder) -> Result<Self> {
+        let name = format!("gemm_tile_{tile}");
+        if runtime.manifest().get(&name).is_none() {
+            return Err(anyhow!(
+                "no tile artifact {name}; available tiles: {:?}",
+                runtime.manifest().tile_sizes()
+            ));
+        }
+        runtime.warm(&name)?;
+        Ok(TiledExecutor {
+            runtime,
+            tile,
+            order,
+            tile_calls: 0,
+        })
+    }
+
+    /// Compute `A · B` (row-major f32) through the tile artifact.
+    pub fn gemm(&mut self, wl: &Gemm, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
+        anyhow::ensure!(a.len() == m * k, "A len {} != {}", a.len(), m * k);
+        anyhow::ensure!(b.len() == k * n, "B len {} != {}", b.len(), k * n);
+        let t = self.tile;
+        let name = format!("gemm_tile_{t}");
+        let (pm, pn, pk) = (m.div_ceil(t) * t, n.div_ceil(t) * t, k.div_ceil(t) * t);
+        let pa = pad(a, m, k, pm, pk);
+        let pb = pad(b, k, n, pk, pn);
+        let (gm, gn, gk) = (pm / t, pn / t, pk / t);
+
+        // C accumulators, one t×t buffer per (i, j) tile.
+        let mut c_tiles: Vec<Vec<f32>> = vec![vec![0f32; t * t]; gm * gn];
+        let mut ta = Vec::with_capacity(t * t);
+        let mut tb = Vec::with_capacity(t * t);
+
+        // Walk the tile grid in the mapping's inter-cluster loop order.
+        let counts = |d: Dim| match d {
+            Dim::M => gm,
+            Dim::N => gn,
+            Dim::K => gk,
+        };
+        let dims = self.order.0;
+        let shape = [t as u64, t as u64];
+        for x0 in 0..counts(dims[0]) {
+            for x1 in 0..counts(dims[1]) {
+                for x2 in 0..counts(dims[2]) {
+                    let idx = |d: Dim| {
+                        let pos = self.order.position(d);
+                        [x0, x1, x2][pos]
+                    };
+                    let (i, j, kk) = (idx(Dim::M), idx(Dim::N), idx(Dim::K));
+                    tile(&pa, pk, i, kk, t, &mut ta);
+                    tile(&pb, pn, kk, j, t, &mut tb);
+                    let acc = &c_tiles[i * gn + j];
+                    let out = self.runtime.run_f32(
+                        &name,
+                        &[(acc, shape), (&ta, shape), (&tb, shape)],
+                    )?;
+                    c_tiles[i * gn + j] = out;
+                    self.tile_calls += 1;
+                }
+            }
+        }
+
+        // Reassemble the unpadded C.
+        let mut c = vec![0f32; m * n];
+        for i in 0..gm {
+            for j in 0..gn {
+                let src = &c_tiles[i * gn + j];
+                for r in 0..t {
+                    let row = i * t + r;
+                    if row >= m {
+                        break;
+                    }
+                    let col0 = j * t;
+                    let w = t.min(n.saturating_sub(col0));
+                    if w == 0 {
+                        continue;
+                    }
+                    c[row * n + col0..row * n + col0 + w].copy_from_slice(&src[r * t..r * t + w]);
+                }
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Run the Fig 10 MLP artifact (batch 128 MNIST classifier).
+pub struct MlpRunner;
+
+impl MlpRunner {
+    /// Dims of the paper's MLP (must match `python/compile/model.py`).
+    pub const DIMS: [u64; 5] = [784, 512, 256, 128, 10];
+    pub const BATCH: u64 = 128;
+
+    /// Execute one inference batch; returns the (BATCH × 10) logits.
+    pub fn forward(runtime: &mut Runtime, x: &[f32], weights: &[Vec<f32>]) -> Result<Vec<f32>> {
+        anyhow::ensure!(weights.len() == 4, "want 4 weight matrices");
+        let d = Self::DIMS;
+        let mut args: Vec<(&[f32], [u64; 2])> = vec![(x, [Self::BATCH, d[0]])];
+        for (i, w) in weights.iter().enumerate() {
+            anyhow::ensure!(
+                w.len() as u64 == d[i] * d[i + 1],
+                "weight {i} len {} != {}",
+                w.len(),
+                d[i] * d[i + 1]
+            );
+            args.push((w, [d[i], d[i + 1]]));
+        }
+        runtime.run_f32("mlp", &args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_tile_roundtrip() {
+        // 2×3 matrix padded to 4×4
+        let m = [1., 2., 3., 4., 5., 6.];
+        let p = pad(&m, 2, 3, 4, 4);
+        assert_eq!(p[0..3], [1., 2., 3.]);
+        assert_eq!(p[3], 0.0);
+        assert_eq!(p[4..7], [4., 5., 6.]);
+        assert_eq!(p[8..], [0.0; 8][..]);
+        let mut t2 = Vec::new();
+        tile(&p, 4, 0, 0, 2, &mut t2);
+        assert_eq!(t2, vec![1., 2., 4., 5.]);
+        tile(&p, 4, 0, 1, 2, &mut t2);
+        assert_eq!(t2, vec![3., 0., 6., 0.]);
+    }
+}

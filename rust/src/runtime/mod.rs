@@ -1,0 +1,28 @@
+//! PJRT runtime — load and execute the AOT artifacts from the L3 hot
+//! path. Python never runs here: `make artifacts` lowered the L2/L1 JAX +
+//! Pallas graphs to HLO text once; this module compiles them on the PJRT
+//! CPU client and executes them with concrete buffers.
+//!
+//! * [`artifacts`] — the `artifacts/manifest.txt` index.
+//! * [`client`]    — compile-once executable cache over `xla::PjRtClient`.
+//! * [`executor`]  — the tiled GEMM executor: drives the single-tile FMA
+//!   artifact over a FLASH-selected outer schedule, accumulating C in
+//!   Rust (the functional mirror of the accelerator's tile
+//!   time-multiplexing), plus whole-graph helpers (full GEMM, MLP).
+
+mod artifacts;
+mod client;
+mod executor;
+
+pub use artifacts::{ArtifactMeta, Manifest};
+pub use client::Runtime;
+pub use executor::{MlpRunner, TiledExecutor};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$FLASH_GEMM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("FLASH_GEMM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

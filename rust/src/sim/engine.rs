@@ -1,0 +1,374 @@
+//! The simulator core: step-by-step execution of a mapping's schedule.
+//!
+//! One **outer step** is one iteration of the inter-cluster loop nest.
+//! Within a step:
+//!
+//! 1. *Transfer phase*: for each matrix, the S2-level tile needed this
+//!    step is compared against the resident-tile table; only changed
+//!    tiles are (re)fetched — S2 reads and NoC transfer cycles accrue,
+//!    multicast delivering shared operands once.
+//! 2. *Compute phase*: each cluster takes its slice of the inter-spatial
+//!    dim, each PE its chunk of the intra-spatial dim, and executes its
+//!    MACs serially (1 MAC/cycle), really accumulating into C. The
+//!    step's compute time is the max over PEs.
+//! 3. With double-buffered S2 the step costs `max(compute, transfer)`.
+//!
+//! C partial sums: if K is spatial at either level the per-PE partials
+//! reduce over the NoC (spatial reduction); the surviving partial is
+//! written back to S2 when the outer step leaves the (m, n) tile, and
+//! read back when it returns — emergent output revisit counting.
+
+use crate::arch::Accelerator;
+use crate::dataflow::{Dim, Mapping};
+use crate::cost::PerMatrix;
+use crate::workloads::Gemm;
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total cycles (Σ per-step max(compute, transfer) + fill/drain).
+    pub cycles: u64,
+    /// Compute-only cycles (Σ per-step PE critical path).
+    pub compute_cycles: u64,
+    /// Transfer-only cycles.
+    pub noc_cycles: u64,
+    /// S1 accesses per matrix (reads + writes + fills), summed over PEs.
+    pub s1: PerMatrix,
+    /// S2 accesses per matrix (reads + writes).
+    pub s2: PerMatrix,
+    /// MACs actually executed.
+    pub macs: u64,
+    /// The computed output, row-major M×N.
+    pub c: Vec<f32>,
+    /// Number of outer steps executed.
+    pub steps: u64,
+}
+
+impl SimResult {
+    pub fn reuse_factor(&self) -> f64 {
+        self.s1.total() as f64 / (self.s2.total() as f64).max(1.0)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct TileCoord(u64, u64);
+
+struct Range {
+    start: u64,
+    end: u64,
+}
+
+impl Range {
+    fn len(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// Tile index range of dim `d` at outer step `step_idx`.
+fn outer_range(map: &Mapping, wl: &Gemm, pes: u64, d: Dim, step_idx: u64) -> Range {
+    let span = map.step_span(d, pes).max(1);
+    let dim = dim_of(wl, d);
+    let start = (step_idx * span).min(dim);
+    Range {
+        start,
+        end: (start + span).min(dim),
+    }
+}
+
+fn dim_of(wl: &Gemm, d: Dim) -> u64 {
+    match d {
+        Dim::M => wl.m,
+        Dim::N => wl.n,
+        Dim::K => wl.k,
+    }
+}
+
+/// Simulate `map` running `wl` on `acc`. Panics if any MAC would be
+/// executed twice (mapping must partition the iteration space).
+///
+/// Complexity is Θ(M·N·K) — use small workloads (≤ ~64³).
+pub fn simulate(acc: &Accelerator, map: &Mapping, wl: &Gemm, a: &[f32], b: &[f32]) -> SimResult {
+    assert_eq!(a.len() as u64, wl.m * wl.k, "A shape");
+    assert_eq!(b.len() as u64, wl.k * wl.n, "B shape");
+    let pes = acc.config.pes;
+    let clusters = map.clusters(pes);
+    let lambda = map.cluster_size;
+    let epc = acc.config.noc_elems_per_cycle();
+
+    let steps = crate::cost::steps_for(map, wl, pes);
+    let order = map.inter_order;
+
+    let mut c = vec![0f32; (wl.m * wl.n) as usize];
+    let mut hit = vec![false; (wl.m * wl.n * wl.k) as usize];
+
+    let mut s1 = PerMatrix::default();
+    let mut s2 = PerMatrix::default();
+    let mut macs = 0u64;
+    let mut compute_cycles = 0u64;
+    let mut noc_cycles = 0u64;
+    let mut total_steps = 0u64;
+
+    // Resident S2-level tiles (coords in step indices per matrix dims).
+    let mut resident_a: Option<TileCoord> = None;
+    let mut resident_b: Option<TileCoord> = None;
+    let mut resident_c: Option<TileCoord> = None;
+
+    // outer loop nest in inter_order
+    let idx_of = |d: Dim| order.position(d);
+    let counts = [
+        steps[order.0[0] as usize],
+        steps[order.0[1] as usize],
+        steps[order.0[2] as usize],
+    ];
+
+    for i0 in 0..counts[0] {
+        for i1 in 0..counts[1] {
+            for i2 in 0..counts[2] {
+                total_steps += 1;
+                let step_of = |d: Dim| [i0, i1, i2][idx_of(d)];
+                let rm = outer_range(map, wl, pes, Dim::M, step_of(Dim::M));
+                let rn = outer_range(map, wl, pes, Dim::N, step_of(Dim::N));
+                let rk = outer_range(map, wl, pes, Dim::K, step_of(Dim::K));
+                if rm.len() == 0 || rn.len() == 0 || rk.len() == 0 {
+                    continue;
+                }
+
+                // ---- transfer phase ----
+                let mut transfer_elems = 0u64;
+                let ta = TileCoord(step_of(Dim::M), step_of(Dim::K));
+                if resident_a != Some(ta) {
+                    let elems = rm.len() * rk.len();
+                    s2.a += elems; // S2 read
+                    s1.a += elems; // S1 fill
+                    transfer_elems += elems;
+                    resident_a = Some(ta);
+                }
+                let tb = TileCoord(step_of(Dim::K), step_of(Dim::N));
+                if resident_b != Some(tb) {
+                    let elems = rk.len() * rn.len();
+                    s2.b += elems;
+                    s1.b += elems;
+                    transfer_elems += elems;
+                    resident_b = Some(tb);
+                }
+                // C: on leaving an (m,n) tile with unfinished K, the
+                // partial is spilled to S2 and read back on return.
+                let tc = TileCoord(step_of(Dim::M), step_of(Dim::N));
+                if resident_c != Some(tc) {
+                    let elems = rm.len() * rn.len();
+                    if let Some(_prev) = resident_c {
+                        // spill previous partial tile: S2 write
+                        // (approximate previous tile size by current).
+                        s2.c += elems;
+                        transfer_elems += elems;
+                    }
+                    if step_of(Dim::K) > 0 {
+                        // returning mid-reduction: read partial back
+                        s2.c += elems;
+                        transfer_elems += elems;
+                    }
+                    resident_c = Some(tc);
+                }
+
+                // ---- compute phase ----
+                // Partition inter-spatial dim across clusters, intra-
+                // spatial across PEs; each PE runs its sub-range serially.
+                let mut pe_max = 0u64;
+                for cl in 0..clusters {
+                    // cluster's slice of the inter-spatial dim
+                    let (cm, cn, ck) = slice_for(map, (&rm, &rn, &rk), map.inter_spatial, cl, clusters);
+                    if cm.len() == 0 || cn.len() == 0 || ck.len() == 0 {
+                        continue;
+                    }
+                    for pe in 0..lambda {
+                        let (pm, pn, pk) =
+                            slice_for(map, (&cm, &cn, &ck), map.intra_spatial, pe, lambda);
+                        let work = pm.len() * pn.len() * pk.len();
+                        if work == 0 {
+                            continue;
+                        }
+                        pe_max = pe_max.max(work);
+                        for m in pm.start..pm.end {
+                            for n in pn.start..pn.end {
+                                for k in pk.start..pk.end {
+                                    let h = ((m * wl.n + n) * wl.k + k) as usize;
+                                    assert!(!hit[h], "MAC ({m},{n},{k}) executed twice");
+                                    hit[h] = true;
+                                    c[(m * wl.n + n) as usize] +=
+                                        a[(m * wl.k + k) as usize] * b[(k * wl.n + n) as usize];
+                                    macs += 1;
+                                }
+                            }
+                        }
+                        // S1 traffic: operand read per MAC, C update r+w
+                        s1.a += work;
+                        s1.b += work;
+                        s1.c += 2 * work;
+                    }
+                }
+                compute_cycles += pe_max;
+                let t = (transfer_elems as f64 / epc).ceil() as u64;
+                noc_cycles += t;
+            }
+        }
+    }
+
+    // final C drain to S2/DRAM
+    s2.c += wl.m * wl.n;
+    // compulsory fills of A and B into S2 from DRAM
+    s2.a += wl.m * wl.k;
+    s2.b += wl.k * wl.n;
+
+    // every MAC must have been executed exactly once
+    debug_assert_eq!(macs, wl.macs());
+
+    let cycles = compute_cycles.max(noc_cycles)
+        + 2 * compute_cycles / total_steps.max(1); // fill/drain ≈ one step
+    SimResult {
+        cycles,
+        compute_cycles,
+        noc_cycles,
+        s1,
+        s2,
+        macs,
+        c,
+        steps: total_steps,
+    }
+}
+
+/// Slice ranges for worker `idx` of `count` along the partition dim `d`:
+/// the partition dim is chunked, other dims pass through.
+fn slice_for(
+    _map: &Mapping,
+    (rm, rn, rk): (&Range, &Range, &Range),
+    d: Dim,
+    idx: u64,
+    count: u64,
+) -> (Range, Range, Range) {
+    let chunk = |r: &Range| -> Range {
+        let len = r.len();
+        let per = len.div_ceil(count).max(1);
+        let start = (r.start + idx * per).min(r.end);
+        Range {
+            start,
+            end: (start + per).min(r.end),
+        }
+    };
+    let pass = |r: &Range| Range {
+        start: r.start,
+        end: r.end,
+    };
+    match d {
+        Dim::M => (chunk(rm), pass(rn), pass(rk)),
+        Dim::N => (pass(rm), chunk(rn), pass(rk)),
+        Dim::K => (pass(rm), pass(rn), chunk(rk)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::dataflow::{LoopOrder, Tiles};
+
+    fn rand_mat(n: usize, seed: u64) -> Vec<f32> {
+        let mut state = seed.max(1);
+        (0..n)
+            .map(|_| {
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                (state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / 1e6
+            })
+            .collect()
+    }
+
+    fn ref_gemm(wl: &Gemm, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0f32; (wl.m * wl.n) as usize];
+        for m in 0..wl.m {
+            for n in 0..wl.n {
+                let mut acc = 0f32;
+                for k in 0..wl.k {
+                    acc += a[(m * wl.k + k) as usize] * b[(k * wl.n + n) as usize];
+                }
+                c[(m * wl.n + n) as usize] = acc;
+            }
+        }
+        c
+    }
+
+    fn assert_close(x: &[f32], y: &[f32]) {
+        assert_eq!(x.len(), y.len());
+        for (i, (a, b)) in x.iter().zip(y).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                "elem {i}: {a} vs {b}"
+            );
+        }
+    }
+
+    fn tiny_acc(style: Style) -> Accelerator {
+        Accelerator::of_style(style, HwConfig::tiny())
+    }
+
+    #[test]
+    fn fig5_schedule_computes_correct_gemm() {
+        let acc = tiny_acc(Style::Maeri);
+        let wl = Gemm::new("fig5", 4, 4, 4);
+        let map = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 1, 4),
+            inner: Tiles::new(1, 1, 1),
+        };
+        let a = rand_mat(16, 1);
+        let b = rand_mat(16, 2);
+        let r = simulate(&acc, &map, &wl, &a, &b);
+        assert_close(&r.c, &ref_gemm(&wl, &a, &b));
+        assert_eq!(r.macs, 64);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn every_style_flash_best_is_functionally_correct() {
+        // FLASH's selected mapping must partition the iteration space:
+        // run it through the simulator and check the numbers.
+        let wl = Gemm::new("t", 16, 12, 8);
+        let a = rand_mat(16 * 8, 3);
+        let b = rand_mat(8 * 12, 4);
+        let reference = ref_gemm(&wl, &a, &b);
+        for style in Style::ALL {
+            let acc = tiny_acc(style);
+            let best = crate::flash::search(&acc, &wl).unwrap();
+            let r = simulate(&acc, best.mapping(), &wl, &a, &b);
+            assert_close(&r.c, &reference);
+            assert_eq!(r.macs, wl.macs(), "{style}");
+        }
+    }
+
+    #[test]
+    fn sim_reuse_improves_with_tiling() {
+        let acc = tiny_acc(Style::Maeri);
+        let wl = Gemm::new("t", 16, 16, 16);
+        let a = rand_mat(256, 5);
+        let b = rand_mat(256, 6);
+        let nt = crate::baselines::non_tiled_mapping(&acc, &wl, LoopOrder::MNK).unwrap();
+        let tiled = crate::flash::search(&acc, &wl).unwrap();
+        let r_nt = simulate(&acc, &nt, &wl, &a, &b);
+        let r_t = simulate(&acc, tiled.mapping(), &wl, &a, &b);
+        assert!(r_t.s2.total() <= r_nt.s2.total());
+        assert!(r_t.reuse_factor() >= r_nt.reuse_factor());
+    }
+
+    #[test]
+    #[should_panic(expected = "A shape")]
+    fn shape_mismatch_panics() {
+        let acc = tiny_acc(Style::Maeri);
+        let wl = Gemm::new("t", 4, 4, 4);
+        let map = crate::flash::search(&acc, &wl).unwrap().best.mapping;
+        simulate(&acc, &map, &wl, &[0.0; 3], &[0.0; 16]);
+    }
+}

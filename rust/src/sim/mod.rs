@@ -1,0 +1,22 @@
+//! Cycle-approximate spatial-accelerator simulator — the validation
+//! substrate for MAESTRO-BLAS.
+//!
+//! The paper validated MAESTRO against the Eyeriss chip and MAERI RTL
+//! (§3.3); we have neither, so this module provides the independent,
+//! finer-grained ground truth instead (DESIGN.md §5): it *executes* a
+//! mapping's schedule over a small GEMM — really multiplying the
+//! matrices — while counting per-step compute/NoC cycles and S1/S2
+//! accesses with *emergent* reuse (a resident-tile table, not the
+//! analytical model's closed-form revisit factors).
+//!
+//! Two guarantees fall out:
+//! * **functional**: the produced C equals A·B ⇔ the mapping covers the
+//!   MAC iteration space exactly once (`engine` checks this per MAC);
+//! * **performance**: cycle and access counts that `validate` compares
+//!   against the analytical model on small problems.
+
+mod engine;
+mod validate;
+
+pub use engine::{simulate, SimResult};
+pub use validate::{validate_mapping, ValidationReport};

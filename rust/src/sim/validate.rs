@@ -1,0 +1,95 @@
+//! Cross-validation of the analytical model against the simulator.
+//!
+//! On problems small enough to simulate, the two must agree on the
+//! *structure* of the cost: total MACs exactly; runtime and S2 traffic
+//! within a bounded factor (the analytical model is deliberately
+//! conservative about revisits; the simulator observes emergent reuse).
+//! This plays the role of the paper's "validated against the Eyeriss
+//! chip and RTL simulations of MAERI" (§3.3).
+
+use crate::arch::Accelerator;
+use crate::cost::CostModel;
+use crate::dataflow::Mapping;
+use crate::workloads::Gemm;
+
+use super::engine::{simulate, SimResult};
+
+/// Agreement report between analytical model and simulator.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub workload: String,
+    pub mapping: String,
+    pub sim_cycles: u64,
+    pub model_cycles: u64,
+    pub sim_s2: u64,
+    pub model_s2: u64,
+    /// model / sim ratios
+    pub cycle_ratio: f64,
+    pub s2_ratio: f64,
+}
+
+impl ValidationReport {
+    /// Within-tolerance check: both ratios inside [1/tol, tol].
+    pub fn agrees(&self, tol: f64) -> bool {
+        let ok = |r: f64| r >= 1.0 / tol && r <= tol;
+        ok(self.cycle_ratio) && ok(self.s2_ratio)
+    }
+}
+
+/// Run both the simulator (with synthetic data) and the analytical model
+/// for one mapping; return the comparison.
+pub fn validate_mapping(acc: &Accelerator, map: &Mapping, wl: &Gemm) -> ValidationReport {
+    let a: Vec<f32> = (0..wl.m * wl.k).map(|i| (i % 31) as f32 * 0.25).collect();
+    let b: Vec<f32> = (0..wl.k * wl.n).map(|i| (i % 29) as f32 * 0.5).collect();
+    let sim: SimResult = simulate(acc, map, wl, &a, &b);
+    let cost = CostModel::new(acc.clone()).evaluate(map, wl);
+
+    let sim_cycles = sim.cycles.max(1);
+    let model_cycles = cost.runtime_cycles().max(1);
+    let sim_s2 = sim.s2.total().max(1);
+    let model_s2 = cost.accesses.s2.total().max(1);
+    ValidationReport {
+        workload: wl.name.clone(),
+        mapping: map.name(),
+        sim_cycles,
+        model_cycles,
+        sim_s2,
+        model_s2,
+        cycle_ratio: model_cycles as f64 / sim_cycles as f64,
+        s2_ratio: model_s2 as f64 / sim_s2 as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    #[test]
+    fn model_agrees_with_sim_on_flash_best() {
+        let wl = Gemm::new("val", 16, 16, 16);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::tiny());
+            let best = crate::flash::search(&acc, &wl).unwrap();
+            let rep = validate_mapping(&acc, best.mapping(), &wl);
+            assert!(
+                rep.agrees(3.0),
+                "{style}: cycles {}/{} s2 {}/{}",
+                rep.model_cycles,
+                rep.sim_cycles,
+                rep.model_s2,
+                rep.sim_s2
+            );
+        }
+    }
+
+    #[test]
+    fn validation_detects_disagreement_fields() {
+        let wl = Gemm::new("val", 8, 8, 8);
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        let rep = validate_mapping(&acc, best.mapping(), &wl);
+        assert!(rep.cycle_ratio > 0.0 && rep.s2_ratio > 0.0);
+        assert!(!rep.agrees(1.0 + f64::EPSILON) || rep.cycle_ratio == 1.0);
+    }
+}

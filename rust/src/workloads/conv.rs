@@ -1,0 +1,132 @@
+//! Convolutions as GEMMs (im2col lowering) and DNN layer suites.
+//!
+//! The paper evaluates DNNs where "GEMM kernel is foundational" (§1, §5.4)
+//! and notes that four of the five accelerators are natively convolution
+//! engines mapped to GEMM (§3.1 footnote 2). This module goes the other
+//! way: lower CONV2D layers to the GEMM the accelerator actually runs
+//! (im2col: M = output pixels × batch, N = output channels, K = input
+//! channels × kernel window), so whole CNNs become GEMM workload suites.
+
+use super::gemm::Gemm;
+
+/// A CONV2D layer description (square kernels/strides, same-style padding).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Conv2d {
+    pub name: String,
+    pub batch: u64,
+    pub in_ch: u64,
+    pub out_ch: u64,
+    pub in_hw: u64,
+    pub kernel: u64,
+    pub stride: u64,
+    pub padding: u64,
+}
+
+impl Conv2d {
+    /// Output spatial size.
+    pub fn out_hw(&self) -> u64 {
+        (self.in_hw + 2 * self.padding - self.kernel) / self.stride + 1
+    }
+
+    /// The im2col GEMM this layer lowers to:
+    /// (batch·out_hw²) × (in_ch·k²) @ (in_ch·k²) × out_ch.
+    pub fn to_gemm(&self) -> Gemm {
+        let out = self.out_hw();
+        Gemm::new(
+            &self.name,
+            self.batch * out * out,
+            self.out_ch,
+            self.in_ch * self.kernel * self.kernel,
+        )
+    }
+
+    /// MACs of the convolution (must equal the GEMM's MACs — im2col is
+    /// compute-preserving).
+    pub fn macs(&self) -> u64 {
+        let out = self.out_hw();
+        self.batch * out * out * self.out_ch * self.in_ch * self.kernel * self.kernel
+    }
+}
+
+/// A ResNet-50-style layer suite (one representative layer per stage;
+/// batch 1 inference). Dims follow He et al. [22].
+pub fn resnet50_layers(batch: u64) -> Vec<Conv2d> {
+    let conv = |name: &str, in_ch, out_ch, in_hw, kernel, stride, padding| Conv2d {
+        name: name.to_string(),
+        batch,
+        in_ch,
+        out_ch,
+        in_hw,
+        kernel,
+        stride,
+        padding,
+    };
+    vec![
+        conv("conv1", 3, 64, 224, 7, 2, 3),
+        conv("res2-1x1a", 64, 64, 56, 1, 1, 0),
+        conv("res2-3x3", 64, 64, 56, 3, 1, 1),
+        conv("res2-1x1b", 64, 256, 56, 1, 1, 0),
+        conv("res3-3x3", 128, 128, 28, 3, 1, 1),
+        conv("res4-3x3", 256, 256, 14, 3, 1, 1),
+        conv("res5-3x3", 512, 512, 7, 3, 1, 1),
+        conv("res5-1x1b", 512, 2048, 7, 1, 1, 0),
+    ]
+}
+
+/// The GEMM workload suite of a CNN (one GEMM per layer).
+pub fn resnet50_gemms(batch: u64) -> Vec<Gemm> {
+    resnet50_layers(batch).iter().map(Conv2d::to_gemm).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_size_formula() {
+        let c = Conv2d {
+            name: "t".into(),
+            batch: 1,
+            in_ch: 3,
+            out_ch: 64,
+            in_hw: 224,
+            kernel: 7,
+            stride: 2,
+            padding: 3,
+        };
+        assert_eq!(c.out_hw(), 112);
+    }
+
+    #[test]
+    fn im2col_preserves_macs() {
+        for c in resnet50_layers(1) {
+            assert_eq!(c.macs(), c.to_gemm().macs(), "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn resnet_conv1_gemm_shape() {
+        let g = resnet50_gemms(1)[0].clone();
+        // (1·112·112) × (3·49) @ ... × 64
+        assert_eq!((g.m, g.n, g.k), (112 * 112, 64, 147));
+    }
+
+    #[test]
+    fn resnet_total_macs_order_of_4_gflops() {
+        // ResNet-50 is ~3.8 GFLOPs total; our representative subset must
+        // be the right order of magnitude (fraction of the full net).
+        let total: u64 = resnet50_layers(1).iter().map(Conv2d::macs).sum();
+        assert!(total > 400_000_000 && total < 4_000_000_000, "{total}");
+    }
+
+    #[test]
+    fn batch_scales_m_only() {
+        let b1 = resnet50_gemms(1);
+        let b8 = resnet50_gemms(8);
+        for (a, b) in b1.iter().zip(&b8) {
+            assert_eq!(b.m, 8 * a.m);
+            assert_eq!(b.n, a.n);
+            assert_eq!(b.k, a.k);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! GEMM workload definitions (paper Table 3) and a random generator.
+
+use std::fmt;
+
+/// A GEMM workload: C(M×N) = A(M×K) · B(K×N).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub name: String,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Gemm {
+    pub fn new(name: &str, m: u64, n: u64, k: u64) -> Self {
+        Gemm {
+            name: name.to_string(),
+            m,
+            n,
+            k,
+        }
+    }
+
+    /// Total multiply-accumulate operations (M·N·K).
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// GFLOPs as the paper reports it (Table 3 counts 1 MAC = 1 FLOP:
+    /// 8192³ ⇒ 549.8 GFLOPs).
+    pub fn gflops(&self) -> f64 {
+        self.macs() as f64 / 1e9
+    }
+
+    /// Total operand + result elements (compulsory traffic lower bound).
+    pub fn footprint_elems(&self) -> u64 {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+
+    /// Table 3: the six evaluation workloads I–VI.
+    pub fn table3() -> Vec<Gemm> {
+        vec![
+            Gemm::new("I", 8192, 8192, 8192),   // large square
+            Gemm::new("II", 1024, 1024, 8192),  // short-and-fat (K >> M,N)
+            Gemm::new("III", 8, 8, 8192),       // extreme inner-product
+            Gemm::new("IV", 8, 8192, 1024),     // short-fat A × tall-skinny B
+            Gemm::new("V", 8192, 8, 1024),      // transpose of IV
+            Gemm::new("VI", 512, 256, 256),     // small (Table 5 workload)
+        ]
+    }
+
+    /// Lookup a Table 3 workload by its roman-numeral id.
+    pub fn by_id(id: &str) -> Option<Gemm> {
+        Gemm::table3()
+            .into_iter()
+            .find(|g| g.name.eq_ignore_ascii_case(id))
+    }
+}
+
+impl fmt::Display for Gemm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: ({}x{})x({}x{}) [{:.3} GFLOPs]",
+            self.name,
+            self.m,
+            self.k,
+            self.k,
+            self.n,
+            self.gflops()
+        )
+    }
+}
+
+/// Deterministic random GEMM generator (xorshift64*), covering the shape
+/// classes the paper motivates: square, tall-skinny, short-fat, rank-k.
+#[derive(Debug)]
+pub struct WorkloadGen {
+    state: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64) -> Self {
+        WorkloadGen {
+            state: seed.max(1),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    fn dim(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    /// One random workload from the four shape classes.
+    pub fn next(&mut self) -> Gemm {
+        let class = self.next_u64() % 4;
+        let (m, n, k) = match class {
+            0 => {
+                let s = self.dim(64, 4096);
+                (s, s, s) // square
+            }
+            1 => (self.dim(2048, 8192), self.dim(4, 64), self.dim(64, 2048)), // tall-skinny
+            2 => (self.dim(4, 64), self.dim(2048, 8192), self.dim(64, 2048)), // short-fat
+            _ => (self.dim(256, 2048), self.dim(256, 2048), self.dim(4, 64)), // rank-k update
+        };
+        let n_out = Gemm::new(&format!("rand-{class}"), m, n, k);
+        n_out
+    }
+
+    pub fn take(&mut self, count: usize) -> Vec<Gemm> {
+        (0..count).map(|_| self.next()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_matches_paper() {
+        let t = Gemm::table3();
+        assert_eq!(t.len(), 6);
+        // GFLOPs row of Table 3: 549.8, 8.59, 0.001, 0.067, 0.067, 0.03
+        assert!((t[0].gflops() - 549.8).abs() < 0.1);
+        assert!((t[1].gflops() - 8.59).abs() < 0.01);
+        assert!((t[3].gflops() - 0.067).abs() < 0.001);
+        assert!((t[5].gflops() - 0.0335).abs() < 0.005);
+        assert_eq!((t[0].m, t[0].n, t[0].k), (8192, 8192, 8192));
+        assert_eq!((t[3].m, t[3].n, t[3].k), (8, 8192, 1024));
+        assert_eq!((t[4].m, t[4].n, t[4].k), (8192, 8, 1024));
+        assert_eq!((t[5].m, t[5].n, t[5].k), (512, 256, 256));
+    }
+
+    #[test]
+    fn iv_and_v_are_transposes() {
+        let t = Gemm::table3();
+        assert_eq!(t[3].m, t[4].n);
+        assert_eq!(t[3].n, t[4].m);
+        assert_eq!(t[3].k, t[4].k);
+    }
+
+    #[test]
+    fn by_id_lookup() {
+        assert_eq!(Gemm::by_id("vi").unwrap().m, 512);
+        assert!(Gemm::by_id("vii").is_none());
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_bounded() {
+        let a: Vec<Gemm> = WorkloadGen::new(42).take(32);
+        let b: Vec<Gemm> = WorkloadGen::new(42).take(32);
+        assert_eq!(a, b);
+        for g in &a {
+            assert!(g.m >= 4 && g.n >= 4 && g.k >= 4);
+            assert!(g.macs() > 0);
+        }
+        // different seeds diverge
+        let c: Vec<Gemm> = WorkloadGen::new(7).take(32);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn macs_and_footprint() {
+        let g = Gemm::new("t", 4, 5, 6);
+        assert_eq!(g.macs(), 120);
+        assert_eq!(g.footprint_elems(), 4 * 6 + 6 * 5 + 4 * 5);
+    }
+}

@@ -1,0 +1,88 @@
+//! The Fig 10 DNN workloads: fully-connected MLP layers as GEMMs.
+//!
+//! A fully-connected layer performs a GEMM of size
+//! (batch × nodes_in) × (nodes_in × nodes_out). The paper's MLP is the
+//! MNIST classifier 784 → 512 → 256 → 128 → 10 with batch 128.
+
+use super::gemm::Gemm;
+
+/// An MLP architecture: layer widths, input first, classes last.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub name: String,
+    pub batch: u64,
+    pub dims: Vec<u64>,
+}
+
+impl MlpSpec {
+    /// The paper's Fig 10 model (matches `python/compile/model.MLP_DIMS`).
+    pub fn paper_mnist() -> Self {
+        MlpSpec {
+            name: "mnist-mlp".to_string(),
+            batch: 128,
+            dims: vec![784, 512, 256, 128, 10],
+        }
+    }
+
+    /// One GEMM workload per FC layer.
+    pub fn layers(&self) -> Vec<Gemm> {
+        self.dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                Gemm::new(
+                    &format!("{}-fc{}", self.name, i + 1),
+                    self.batch,
+                    w[1],
+                    w[0],
+                )
+            })
+            .collect()
+    }
+
+    /// Total inference MACs across all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers().iter().map(Gemm::macs).sum()
+    }
+}
+
+/// Convenience: the four Fig 10 FC-layer GEMMs.
+pub fn mlp_layers() -> Vec<Gemm> {
+    MlpSpec::paper_mnist().layers()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_layer_shapes() {
+        let l = mlp_layers();
+        assert_eq!(l.len(), 4);
+        // FC1: (128×784)×(784×512)
+        assert_eq!((l[0].m, l[0].k, l[0].n), (128, 784, 512));
+        // FC4: (128×128)×(128×10)
+        assert_eq!((l[3].m, l[3].k, l[3].n), (128, 128, 10));
+    }
+
+    #[test]
+    fn total_macs_positive_and_layered() {
+        let spec = MlpSpec::paper_mnist();
+        assert_eq!(
+            spec.total_macs(),
+            128 * (784 * 512 + 512 * 256 + 256 * 128 + 128 * 10)
+        );
+    }
+
+    #[test]
+    fn custom_spec() {
+        let s = MlpSpec {
+            name: "t".into(),
+            batch: 4,
+            dims: vec![8, 6, 2],
+        };
+        let l = s.layers();
+        assert_eq!(l.len(), 2);
+        assert_eq!((l[1].m, l[1].k, l[1].n), (4, 6, 2));
+    }
+}

@@ -1,0 +1,12 @@
+//! GEMM workloads: the paper's Table 3 suite, the Fig 10 MLP layers,
+//! a random generator, and a simple trace format for the service example.
+
+mod conv;
+mod gemm;
+mod mlp;
+mod trace;
+
+pub use conv::{resnet50_gemms, resnet50_layers, Conv2d};
+pub use gemm::{Gemm, WorkloadGen};
+pub use mlp::{mlp_layers, MlpSpec};
+pub use trace::{parse_trace, read_trace, write_trace};

@@ -1,0 +1,88 @@
+//! Minimal workload-trace format for the GEMM service example:
+//! one request per line, `name m n k`, `#` comments allowed.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::gemm::Gemm;
+
+/// Parse a trace file into workloads.
+pub fn read_trace(path: &Path) -> Result<Vec<Gemm>> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_trace(&text)
+}
+
+/// Parse trace text (exposed for tests).
+pub fn parse_trace(text: &str) -> Result<Vec<Gemm>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("trace line {}: want `name m n k`, got {line:?}", lineno + 1);
+        }
+        let dim = |s: &str, what: &str| -> Result<u64> {
+            let v: u64 = s
+                .parse()
+                .with_context(|| format!("trace line {}: bad {what} {s:?}", lineno + 1))?;
+            if v == 0 {
+                bail!("trace line {}: {what} must be > 0", lineno + 1);
+            }
+            Ok(v)
+        };
+        out.push(Gemm::new(
+            parts[0],
+            dim(parts[1], "M")?,
+            dim(parts[2], "N")?,
+            dim(parts[3], "K")?,
+        ));
+    }
+    Ok(out)
+}
+
+/// Write workloads as a trace file.
+pub fn write_trace(path: &Path, workloads: &[Gemm]) -> Result<()> {
+    let mut text = String::from("# GEMM trace: name m n k\n");
+    for g in workloads {
+        text.push_str(&format!("{} {} {} {}\n", g.name, g.m, g.n, g.k));
+    }
+    fs::write(path, text).with_context(|| format!("writing trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_and_comments() {
+        let t = "# header\nsq 128 128 128\n\nfat 8 8192 1024 # trailing\n";
+        let ws = parse_trace(t).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0], Gemm::new("sq", 128, 128, 128));
+        assert_eq!(ws[1], Gemm::new("fat", 8, 8192, 1024));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse_trace("sq 1 2").is_err());
+        assert!(parse_trace("sq 1 2 x").is_err());
+        assert!(parse_trace("sq 0 2 3").is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("flash_gemm_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let ws = Gemm::table3();
+        write_trace(&path, &ws).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(ws, back);
+    }
+}

@@ -1,0 +1,101 @@
+//! Integration: the coordinator — grid orchestration and the GEMM
+//! service over the real PJRT runtime (service tests skip without
+//! artifacts).
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::coordinator::{search_grid, GemmService, ServiceConfig};
+use flash_gemm::runtime::{default_artifacts_dir, Runtime};
+use flash_gemm::workloads::{parse_trace, Gemm};
+
+#[test]
+fn grid_full_paper_sweep_small() {
+    // all 5 styles × 3 small workloads × both configs
+    for cfg in [HwConfig::edge(), HwConfig::cloud()] {
+        let accs = Accelerator::all_styles(&cfg);
+        let wls = vec![
+            Gemm::by_id("III").unwrap(),
+            Gemm::by_id("VI").unwrap(),
+            Gemm::new("sq128", 128, 128, 128),
+        ];
+        let grid = search_grid(&accs, &wls, 0);
+        assert_eq!(grid.len(), 15);
+        for cell in &grid {
+            let r = cell.result.as_ref().expect("feasible");
+            assert!(r.cost().runtime_ms() > 0.0);
+        }
+    }
+}
+
+fn service_or_skip(style: Style, verify: bool) -> Option<GemmService> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping service test: no artifacts");
+        return None;
+    }
+    let runtime = Runtime::load(&dir).expect("runtime");
+    Some(GemmService::new(
+        Accelerator::of_style(style, HwConfig::edge()),
+        runtime,
+        ServiceConfig {
+            verify,
+            max_exec_dim: 256,
+            tile: 0,
+        },
+    ))
+}
+
+#[test]
+fn service_batches_and_caches() {
+    let Some(mut svc) = service_or_skip(Style::Maeri, false) else { return };
+    let reqs = vec![
+        Gemm::new("a", 64, 64, 64),
+        Gemm::new("a", 64, 64, 64),
+        Gemm::new("a", 64, 64, 64),
+        Gemm::new("b", 32, 96, 48),
+        Gemm::new("a", 64, 64, 64), // same shape later: cache hit
+    ];
+    let rep = svc.serve(&reqs).unwrap();
+    assert_eq!(rep.metrics.requests, 5);
+    assert_eq!(rep.metrics.batches, 3); // aaa | b | a
+    assert_eq!(rep.metrics.mapping_cache_misses, 2); // two distinct shapes
+    assert_eq!(rep.metrics.mapping_cache_hits, 1);
+    assert!(rep.outcomes.iter().all(|o| o.executed));
+    assert!(rep.metrics.macs_executed > 0);
+    assert!(rep.metrics.latency.count() == 5);
+}
+
+#[test]
+fn service_verifies_numerics() {
+    let Some(mut svc) = service_or_skip(Style::Nvdla, true) else { return };
+    let reqs = vec![
+        Gemm::new("v1", 48, 80, 64),
+        Gemm::new("v2", 100, 40, 60), // ragged: padding path
+    ];
+    let rep = svc.serve(&reqs).unwrap();
+    for o in &rep.outcomes {
+        assert_eq!(o.verified, Some(true), "{}", o.workload.name);
+    }
+}
+
+#[test]
+fn service_skips_oversized_requests() {
+    let Some(mut svc) = service_or_skip(Style::Maeri, false) else { return };
+    let reqs = vec![
+        Gemm::new("big", 8192, 8192, 8192),
+        Gemm::new("small", 64, 64, 64),
+    ];
+    let rep = svc.serve(&reqs).unwrap();
+    assert!(!rep.outcomes[0].executed); // search-only response
+    assert!(rep.outcomes[0].projected_ms > 0.0);
+    assert!(rep.outcomes[1].executed);
+}
+
+#[test]
+fn trace_roundtrip_through_service() {
+    let Some(mut svc) = service_or_skip(Style::Tpu, false) else { return };
+    let text = "l1 128 96 64\nl1 128 96 64\nl2 32 32 32\n";
+    let reqs = parse_trace(text).unwrap();
+    let rep = svc.serve(&reqs).unwrap();
+    assert_eq!(rep.metrics.requests, 3);
+    assert_eq!(rep.metrics.batches, 2);
+}

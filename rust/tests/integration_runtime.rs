@@ -1,0 +1,199 @@
+//! Integration: AOT artifacts → PJRT runtime → tiled executor.
+//!
+//! Requires `make artifacts` to have run (skips otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::{default_artifacts_dir, MlpRunner, Runtime, TiledExecutor};
+use flash_gemm::workloads::Gemm;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn ref_gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn assert_close(x: &[f32], y: &[f32], tol: f32) {
+    assert_eq!(x.len(), y.len());
+    for (i, (a, b)) in x.iter().zip(y).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn full_gemm_artifact_matches_reference() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (m, k, n) = (64usize, 48usize, 80usize);
+    let a = rand_vec(m * k, 1);
+    let b = rand_vec(k * n, 2);
+    let out = rt
+        .run_f32(
+            "gemm_full_64x48x80",
+            &[(&a, [m as u64, k as u64]), (&b, [k as u64, n as u64])],
+        )
+        .expect("runs");
+    assert_close(&out, &ref_gemm(m, n, k, &a, &b), 1e-4);
+}
+
+#[test]
+fn tiled_executor_matches_reference_ragged_shape() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // ragged: forces padding in the executor
+    let wl = Gemm::new("ragged", 50, 70, 30);
+    let a = rand_vec(50 * 30, 3);
+    let b = rand_vec(30 * 70, 4);
+    let mut exec = TiledExecutor::new(&mut rt, 16, LoopOrder::MNK).expect("executor");
+    let c = exec.gemm(&wl, &a, &b).expect("gemm");
+    assert_close(&c, &ref_gemm(50, 70, 30, &a, &b), 1e-4);
+    assert!(exec.tile_calls > 0);
+}
+
+#[test]
+fn tiled_executor_loop_order_invariant() {
+    // any tile traversal order must give the same numbers
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let wl = Gemm::new("sq", 64, 64, 64);
+    let a = rand_vec(64 * 64, 5);
+    let b = rand_vec(64 * 64, 6);
+    let mut outs = Vec::new();
+    for order in [LoopOrder::MNK, LoopOrder::KNM, LoopOrder::NMK] {
+        let mut exec = TiledExecutor::new(&mut rt, 32, order).expect("executor");
+        outs.push(exec.gemm(&wl, &a, &b).expect("gemm"));
+    }
+    assert_close(&outs[0], &outs[1], 1e-4);
+    assert_close(&outs[0], &outs[2], 1e-4);
+}
+
+#[test]
+fn executor_rejects_missing_tile() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(TiledExecutor::new(&mut rt, 7, LoopOrder::MNK).is_err());
+}
+
+#[test]
+fn mlp_artifact_runs_and_matches_reference_chain() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let d = MlpRunner::DIMS;
+    let batch = MlpRunner::BATCH as usize;
+    let x = rand_vec(batch * d[0] as usize, 7);
+    let ws: Vec<Vec<f32>> = (0..4)
+        .map(|i| {
+            rand_vec((d[i] * d[i + 1]) as usize, 8 + i as u64)
+                .iter()
+                .map(|v| v * 0.05)
+                .collect()
+        })
+        .collect();
+    let logits = MlpRunner::forward(&mut rt, &x, &ws).expect("mlp runs");
+    assert_eq!(logits.len(), batch * 10);
+    assert!(logits.iter().any(|v| *v != 0.0));
+    // Fig 10 FC1..FC4 reference chain (GEMM + ReLU)
+    let relu = |v: Vec<f32>| v.into_iter().map(|x| x.max(0.0)).collect::<Vec<f32>>();
+    let h1 = relu(ref_gemm(batch, d[1] as usize, d[0] as usize, &x, &ws[0]));
+    let h2 = relu(ref_gemm(batch, d[2] as usize, d[1] as usize, &h1, &ws[1]));
+    let h3 = relu(ref_gemm(batch, d[3] as usize, d[2] as usize, &h2, &ws[2]));
+    let expect = ref_gemm(batch, d[4] as usize, d[3] as usize, &h3, &ws[3]);
+    assert_close(&logits, &expect, 1e-2);
+}
+
+#[test]
+fn training_grads_artifact_matches_reference() {
+    // dA = dC·Bᵀ, dB = Aᵀ·dC — the training-path GEMMs.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    if rt.manifest().get("gemm_grads_64x48x80").is_none() {
+        eprintln!("skipping: grads artifact not built yet");
+        return;
+    }
+    let (m, k, n) = (64usize, 48usize, 80usize);
+    let a = rand_vec(m * k, 21);
+    let b = rand_vec(k * n, 22);
+    let dc = rand_vec(m * n, 23);
+    let out = rt
+        .run("gemm_grads_64x48x80", &{
+            let mk = |d: &[f32], r: usize, c: usize| {
+                xla::Literal::vec1(d).reshape(&[r as i64, c as i64]).unwrap()
+            };
+            vec![mk(&a, m, k), mk(&b, k, n), mk(&dc, m, n)]
+        })
+        .expect("grads run");
+    assert_eq!(out.len(), 2);
+    let da = out[0].to_vec::<f32>().unwrap();
+    let db = out[1].to_vec::<f32>().unwrap();
+    // reference: dA = dC · Bᵀ (m×k), dB = Aᵀ · dC (k×n)
+    let mut rda = vec![0f32; m * k];
+    for i in 0..m {
+        for j in 0..k {
+            let mut s = 0f32;
+            for x in 0..n {
+                s += dc[i * n + x] * b[j * n + x];
+            }
+            rda[i * k + j] = s;
+        }
+    }
+    let mut rdb = vec![0f32; k * n];
+    for i in 0..k {
+        for j in 0..n {
+            let mut s = 0f32;
+            for x in 0..m {
+                s += a[x * k + i] * dc[x * n + j];
+            }
+            rdb[i * n + j] = s;
+        }
+    }
+    assert_close(&da, &rda, 1e-3);
+    assert_close(&db, &rdb, 1e-3);
+}
+
+#[test]
+fn runtime_caches_compiles() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = rand_vec(32 * 32, 9);
+    let b = rand_vec(32 * 32, 10);
+    let args = [(&a[..], [32u64, 32u64]), (&b[..], [32u64, 32u64])];
+    rt.run_f32("gemm_full_32x32x32", &args).unwrap();
+    let t_after_first = rt.compile_time;
+    rt.run_f32("gemm_full_32x32x32", &args).unwrap();
+    assert_eq!(rt.compile_time, t_after_first, "second run must not recompile");
+    assert_eq!(rt.executions, 2);
+}
+
+#[test]
+fn run_rejects_bad_arity() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = rand_vec(32 * 32, 11);
+    assert!(rt
+        .run_f32("gemm_full_32x32x32", &[(&a, [32, 32])])
+        .is_err());
+    assert!(rt.run_f32("does_not_exist", &[]).is_err());
+}

@@ -1,0 +1,199 @@
+//! Property-based invariant tests over the whole modeling stack, using
+//! the in-repo `prop` framework (offline `proptest` substitute).
+//!
+//! Every property runs a few hundred randomized cases with
+//! deterministic, replayable seeds.
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::baselines::non_tiled_mapping;
+use flash_gemm::cost::CostModel;
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::flash::{self, candidates, inner_bound, outer_bound_fixed, outer_bound_maeri};
+use flash_gemm::prop::{forall, Gen};
+use flash_gemm::sim::simulate;
+use flash_gemm::workloads::Gemm;
+
+fn random_style(g: &mut Gen) -> Style {
+    *g.choose(&Style::ALL)
+}
+
+fn random_workload(g: &mut Gen, hi: u64) -> Gemm {
+    Gemm::new("prop", g.dim(hi), g.dim(hi), g.dim(hi))
+}
+
+/// Every candidate FLASH generates is valid on its accelerator: legal
+/// dataflow dims/orders/λ and within the Eq. 1/Eq. 2 buffer budgets.
+#[test]
+fn prop_candidates_always_valid() {
+    forall(60, 0xC0FFEE, |g| {
+        let style = random_style(g);
+        let wl = random_workload(g, 2048);
+        let cfg = if g.bool() { HwConfig::edge() } else { HwConfig::cloud() };
+        let acc = Accelerator::of_style(style, cfg);
+        let cs = candidates::enumerate(&acc, &wl);
+        assert!(!cs.mappings.is_empty(), "{style} on {wl}");
+        for m in &cs.mappings {
+            assert_eq!(acc.validate(m), Ok(()), "{style}: {m} invalid on {wl}");
+            assert!(m.inner.fits_within(&m.outer));
+            // Eq. 2 with double buffering
+            assert!(m.inner.footprint() <= acc.config.alpha() / 2);
+            // Eq. 1 with double buffering
+            assert!(m.s2_working_set(acc.config.pes) <= acc.config.beta() / 2);
+        }
+    });
+}
+
+/// The closed-form tile bounds always satisfy their quadratics (or
+/// degenerate to 1 when no tile fits).
+#[test]
+fn prop_tile_bounds_satisfy_quadratics() {
+    forall(300, 0xB00B5, |g| {
+        let d = g.dim(16384);
+        let lambda = g.u64_in(1, 256);
+        let beta = g.u64_in(64, 1 << 20);
+        let x = outer_bound_fixed(d, lambda, beta);
+        assert!(
+            lambda * x * x + d * (lambda + 1) * x <= beta / 2 || x == 1,
+            "fixed: d={d} λ={lambda} β={beta} x={x}"
+        );
+        let s = g.dim(16384);
+        let y = outer_bound_maeri(s, beta);
+        assert!(
+            y * y + 2 * s * y <= beta / 2 || y == 1,
+            "maeri: s={s} β={beta} y={y}"
+        );
+        let t = g.dim(256);
+        let alpha = g.u64_in(8, 1 << 16);
+        let z = inner_bound(t, alpha);
+        assert!(
+            z * z + 2 * t * z <= alpha / 2 || z == 1,
+            "inner: t={t} α={alpha} z={z}"
+        );
+    });
+}
+
+/// Cost-model sanity on FLASH's chosen mapping: runtime is bounded below
+/// by the compute roofline, utilization ≤ 1, buffer accesses dominate
+/// compulsory traffic, throughput ≤ peak.
+#[test]
+fn prop_cost_physical_invariants() {
+    forall(60, 0xFACADE, |g| {
+        let style = random_style(g);
+        let wl = random_workload(g, 4096);
+        let acc = Accelerator::of_style(style, HwConfig::edge());
+        let Ok(r) = flash::search(&acc, &wl) else {
+            panic!("no mapping for {style} on {wl}");
+        };
+        let c = r.cost();
+        let peak = acc.config.peak_flops();
+        // roofline: cycles ≥ MACs / P
+        let roofline = wl.macs().div_ceil(acc.config.pes);
+        assert!(
+            c.runtime_cycles() >= roofline,
+            "{style} {wl}: {} < roofline {roofline}",
+            c.runtime_cycles()
+        );
+        assert!(c.utilization() <= 1.0 + 1e-9);
+        assert!(c.throughput_gflops() * 1e9 <= peak * (1.0 + 1e-9));
+        // compulsory traffic: every operand/result element moves ≥ once
+        assert!(c.accesses.s2.total() >= wl.footprint_elems());
+        // every MAC reads A and B and updates C locally
+        assert!(c.accesses.s1.a >= wl.macs());
+        assert!(c.accesses.s1.b >= wl.macs());
+        assert_eq!(c.accesses.s1.c, 2 * wl.macs());
+    });
+}
+
+/// FLASH's best never loses to the non-tiled baseline of the same order
+/// (the Table 5 claim, generalized).
+#[test]
+fn prop_flash_beats_nontiled() {
+    forall(40, 0x7AB1E5, |g| {
+        let style = random_style(g);
+        let wl = random_workload(g, 1024);
+        let acc = Accelerator::of_style(style, HwConfig::edge());
+        let model = CostModel::new(acc.clone());
+        let order = *g.choose(&LoopOrder::ALL);
+        let Some(nt) = non_tiled_mapping(&acc, &wl, order) else {
+            return; // style does not support this order
+        };
+        if acc.validate(&nt).is_err() {
+            return; // NT working set can exceed S2 for huge dims
+        }
+        let nt_cost = model.evaluate(&nt, &wl);
+        let best = flash::search(&acc, &wl).expect("search");
+        assert!(
+            best.cost().runtime_cycles() <= nt_cost.runtime_cycles(),
+            "{style} {wl}: flash {} > NT {}",
+            best.cost().runtime_cycles(),
+            nt_cost.runtime_cycles()
+        );
+    });
+}
+
+/// Functional coverage: on small problems, the FLASH mapping's simulated
+/// schedule executes each MAC exactly once and computes the right C
+/// (the simulator asserts per-MAC uniqueness internally).
+#[test]
+fn prop_sim_functional_coverage() {
+    forall(30, 0x51AB5, |g| {
+        let style = random_style(g);
+        let wl = Gemm::new("sim", g.u64_in(1, 20), g.u64_in(1, 20), g.u64_in(1, 20));
+        let acc = Accelerator::of_style(style, HwConfig::tiny());
+        let Ok(best) = flash::search(&acc, &wl) else {
+            panic!("no mapping for {style} on {wl}");
+        };
+        let a: Vec<f32> = (0..wl.m * wl.k).map(|i| (i % 17) as f32 * 0.3).collect();
+        let b: Vec<f32> = (0..wl.k * wl.n).map(|i| (i % 11) as f32 * 0.7).collect();
+        let r = simulate(&acc, best.mapping(), &wl, &a, &b);
+        assert_eq!(r.macs, wl.macs(), "{style} {wl}");
+        // spot-check one output element
+        let (m0, n0) = (wl.m - 1, wl.n - 1);
+        let mut want = 0f32;
+        for k in 0..wl.k {
+            want += a[(m0 * wl.k + k) as usize] * b[(k * wl.n + n0) as usize];
+        }
+        let got = r.c[(m0 * wl.n + n0) as usize];
+        assert!(
+            (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+            "{style} {wl}: {got} vs {want}"
+        );
+    });
+}
+
+/// Bigger hardware never hurts: doubling the S2 budget can only keep or
+/// reduce the best projected runtime (search-space monotonicity).
+#[test]
+fn prop_more_s2_never_hurts() {
+    forall(30, 0x5AFE, |g| {
+        let style = random_style(g);
+        let wl = random_workload(g, 1024);
+        let small = HwConfig::edge();
+        let mut big = HwConfig::edge();
+        big.s2_bytes *= 2;
+        let r_small = flash::search(&Accelerator::of_style(style, small), &wl).unwrap();
+        let r_big = flash::search(&Accelerator::of_style(style, big), &wl).unwrap();
+        assert!(
+            r_big.cost().runtime_cycles() <= r_small.cost().runtime_cycles(),
+            "{style} {wl}: bigger S2 got slower ({} vs {})",
+            r_big.cost().runtime_cycles(),
+            r_small.cost().runtime_cycles()
+        );
+    });
+}
+
+/// The service's operand-shape bookkeeping: mapping name and projected
+/// cost are deterministic per workload shape (cache coherence).
+#[test]
+fn prop_search_deterministic() {
+    forall(30, 0xDE7E12, |g| {
+        let style = random_style(g);
+        let wl = random_workload(g, 2048);
+        let acc = Accelerator::of_style(style, HwConfig::cloud());
+        let a = flash::search(&acc, &wl).unwrap();
+        let b = flash::search(&acc, &wl).unwrap();
+        assert_eq!(a.mapping(), b.mapping());
+        assert_eq!(a.cost().runtime_cycles(), b.cost().runtime_cycles());
+        assert_eq!(a.candidates, b.candidates);
+    });
+}
