@@ -5,7 +5,10 @@ use std::fmt;
 /// Shared hardware resources given to *every* accelerator style — the
 /// paper's apples-to-apples methodology (§3.1): same PE count, buffer
 /// sizes, NoC bandwidth and clock for all five styles.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// All fields are integral, so a config can key hash maps (the mapping
+/// cache in [`crate::flash::MappingCache`] keys on it).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct HwConfig {
     pub name: &'static str,
     /// Total number of PEs (P).

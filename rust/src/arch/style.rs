@@ -13,7 +13,7 @@ use crate::arch::noc::{Noc, Topology};
 use crate::dataflow::{Dim, LoopOrder};
 
 /// Accelerator style under evaluation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, serde::Serialize, serde::Deserialize)]
 pub enum Style {
     /// Eyeriss: input(A)-row-stationary, STT_TTS-MNK.
     Eyeriss,

@@ -3,11 +3,14 @@
 //! * [`nontiled`] — the degenerate non-tiled mappings of §3.2 (Table 5's
 //!   NT rows).
 //! * [`random_search`] — Timeloop-style random sampling over the mapping
-//!   space (§5.2: "We also ran random sampling [26] and found that FLASH
-//!   consistently provided the same or better quality of mappings").
+//!   space (§5.2: "We also ran random sampling \[26\] and found that
+//!   FLASH consistently provided the same or better quality of
+//!   mappings").
 //! * [`exhaustive`] — bounded exhaustive enumeration of the *unpruned*
 //!   space, used to verify on small problems that pruning never loses
 //!   the optimum.
+//! * [`summa`] — the SUMMA/LAP restricted mapping family (related work,
+//!   §6) for flexibility comparisons.
 
 pub mod exhaustive;
 pub mod nontiled;

@@ -1,4 +1,4 @@
-//! Timeloop-style random-sampling search baseline (§5.2, [26]).
+//! Timeloop-style random-sampling search baseline (§5.2, \[26\]).
 //!
 //! Samples uniformly from the *unpruned* mapping space (any tile size in
 //! `1..=dim`, any feasible loop order / cluster size), keeps valid

@@ -11,7 +11,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::arch::{Accelerator, HwConfig, Style};
 use crate::experiments;
 use crate::report::histogram;
-use crate::runtime::{default_artifacts_dir, Runtime};
+use crate::runtime::{default_artifacts_dir, Manifest, Runtime};
 use crate::workloads::{read_trace, Gemm, WorkloadGen};
 
 /// Parsed command line: subcommand + `--key value` flags.
@@ -105,7 +105,7 @@ extensions:
   export-mapping       best mapping in MAESTRO directive syntax [--style --config --workload|-m-n-k]
 
 tools:
-  search               one FLASH search  [--style maeri] [--config edge] [--m --n --k | --workload ID]
+  search               one FLASH search  [--style maeri] [--config edge] [--m --n --k | --workload ID] [--format json]
   validate             analytical model vs cycle simulator
   serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style --config]
   help                 this text
@@ -153,6 +153,27 @@ pub fn run(args: Args) -> Result<String> {
             let wl = args.workload()?;
             let r = crate::flash::search(&acc, &wl)?;
             let c = r.cost();
+            if args.get("format") == Some("json") {
+                let payload = serde_json::json!({
+                    "workload": &wl,
+                    "style": acc.style,
+                    "config": acc.config.name,
+                    "mapping": r.mapping().name(),
+                    "directives": r.mapping().level_spec().to_string(),
+                    "runtime_ms": c.runtime_ms(),
+                    "energy_mj": c.energy_mj(),
+                    "throughput_gflops": c.throughput_gflops(),
+                    "reuse_factor": c.reuse_factor(),
+                    "utilization": c.utilization(),
+                    "candidates": r.candidates,
+                    "unpruned": r.unpruned as f64,
+                    "reduction_factor": r.reduction_factor(),
+                    "elapsed_us": r.elapsed.as_micros() as u64,
+                });
+                let text =
+                    serde_json::to_string_pretty(&payload).expect("search report serializes");
+                return Ok(format!("{text}\n"));
+            }
             let eb = &c.energy_breakdown;
             Ok(format!(
                 "workload {} on {}\nbest mapping: {}\ndirectives:\n{}\nprojected: {:.4} ms, {:.3} mJ, {:.1} GFLOPS, reuse {:.1}, util {:.2}\narithmetic intensity: {:.1} MACs/S2-access; NoC BW requirement {:.1} GB/s (provisioned {})\nenergy breakdown: S1 {:.1}% S2 {:.1}% MAC {:.1}% NoC {:.1}%\ncandidates: {} (unpruned space {:.3e}, reduction {:.0}x) in {:?}\n",
@@ -280,7 +301,14 @@ fn serve(args: &Args) -> Result<String> {
             .collect()
     };
     let acc = Accelerator::of_style(args.style()?, args.config()?);
-    let runtime = Runtime::load(&default_artifacts_dir())?;
+    // Prefer the AOT artifacts when built; otherwise serve through the
+    // native interpreter over a synthetic tile set.
+    let dir = default_artifacts_dir();
+    let runtime = if dir.join("manifest.txt").exists() {
+        Runtime::load(&dir)?
+    } else {
+        Runtime::native(Manifest::synthetic(&[16, 32, 64]))
+    };
     let cfg = ServiceConfig {
         verify: args.get("verify").map(|v| v == "true").unwrap_or(false),
         max_exec_dim: args.get_u64("max-exec-dim", 512)?,
@@ -366,6 +394,32 @@ mod tests {
         let out = run(a).unwrap();
         assert!(out.contains("best mapping"));
         assert!(out.contains("STT_TTS-NKM"));
+    }
+
+    #[test]
+    fn serve_works_without_artifacts() {
+        let a = Args::parse(
+            ["serve", "--random", "3", "--verify", "true", "--seed", "7"].map(String::from),
+        )
+        .unwrap();
+        let out = run(a).unwrap();
+        assert!(out.contains("requests=3"), "{out}");
+        assert!(!out.contains("verified=Some(false)"), "{out}");
+    }
+
+    #[test]
+    fn search_command_renders_json() {
+        let a = Args::parse(
+            ["search", "--style", "nvdla", "--workload", "VI", "--format", "json"]
+                .map(String::from),
+        )
+        .unwrap();
+        let out = run(a).unwrap();
+        let v: serde_json::Value = serde_json::from_str(&out).expect("valid json");
+        assert_eq!(v["mapping"], "STT_TTS-NKM");
+        assert_eq!(v["workload"]["m"], 512);
+        assert!(v["runtime_ms"].as_f64().unwrap() > 0.0);
+        assert!(v["candidates"].as_u64().unwrap() > 0);
     }
 
     #[test]

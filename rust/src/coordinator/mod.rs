@@ -1,14 +1,18 @@
 //! L3 coordination: parallel mapping-search orchestration and the GEMM
-//! service that ties FLASH to the PJRT runtime.
+//! service that ties FLASH to the execution runtime.
 //!
-//! * [`orchestrator`] — fan a grid of (accelerator × workload) FLASH
+//! * [`search_grid`] — fan a grid of (accelerator × workload) FLASH
 //!   searches over a worker pool (std::thread; the paper's §5.4
-//!   evaluation sweep is embarrassingly parallel).
-//! * [`service`] — the request loop of the end-to-end example: accept
-//!   GEMM requests (trace or generator), batch identical shapes, search
-//!   (with a mapping cache), execute numerically through the tile
-//!   artifact, report per-request latency and aggregate throughput.
-//! * [`metrics`] — latency/throughput accounting.
+//!   evaluation sweep is embarrassingly parallel). Each search is itself
+//!   rayon-parallel over candidates (see [`crate::flash::search_with`]).
+//! * [`GemmService`] — the request loop of the end-to-end example:
+//!   accept GEMM requests (trace or generator), batch identical shapes,
+//!   search (through the shared [`crate::flash::MappingCache`]), execute
+//!   numerically through the tile artifact, report per-request latency
+//!   and aggregate throughput.
+//! * [`ServiceMetrics`] — latency/throughput accounting.
+//! * [`Router`] — heterogeneous-node front-end routing requests to the
+//!   accelerator that minimizes a chosen objective.
 
 mod metrics;
 mod orchestrator;

@@ -4,23 +4,23 @@
 //! flow through three stages, Python nowhere on the path:
 //!
 //! 1. **Batching** — consecutive requests with identical shape are
-//!    grouped; one FLASH search serves the whole batch (and a mapping
-//!    cache serves repeat shapes across batches).
+//!    grouped; one FLASH search serves the whole batch.
 //! 2. **Search** — FLASH + MAESTRO-BLAS select the mapping; its
-//!    projected cost is attached to the response.
+//!    projected cost is attached to the response. A shape-keyed
+//!    [`MappingCache`] (shareable across service instances via `Arc`)
+//!    lets repeat-shape traffic skip the search entirely.
 //! 3. **Execution** — the tiled executor drives the AOT Pallas tile
-//!    kernel over the mapping's loop order via PJRT, producing real
-//!    numbers; results are checked against a Rust reference GEMM when
-//!    `verify` is set.
+//!    kernel over the mapping's loop order (natively interpreted or via
+//!    PJRT, see `crate::runtime`), producing real numbers; results are
+//!    checked against a Rust reference GEMM when `verify` is set.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::arch::Accelerator;
-use crate::dataflow::LoopOrder;
-use crate::flash::{self};
+use crate::flash::MappingCache;
 use crate::runtime::{Runtime, TiledExecutor};
 use crate::workloads::Gemm;
 
@@ -66,22 +66,39 @@ pub struct ServiceReport {
     pub metrics: ServiceMetrics,
 }
 
-/// The service itself: owns the runtime + mapping cache.
+/// The service itself: owns the runtime and shares a mapping cache.
 pub struct GemmService {
     accelerator: Accelerator,
     runtime: Runtime,
     config: ServiceConfig,
-    mapping_cache: HashMap<(u64, u64, u64), (String, f64, LoopOrder)>,
+    mapping_cache: Arc<MappingCache>,
 }
 
 impl GemmService {
+    /// A service with its own private mapping cache.
     pub fn new(accelerator: Accelerator, runtime: Runtime, config: ServiceConfig) -> Self {
+        Self::with_cache(accelerator, runtime, config, Arc::new(MappingCache::new()))
+    }
+
+    /// A service sharing a mapping cache with other instances — warm
+    /// shapes hit regardless of which instance searched them first.
+    pub fn with_cache(
+        accelerator: Accelerator,
+        runtime: Runtime,
+        config: ServiceConfig,
+        mapping_cache: Arc<MappingCache>,
+    ) -> Self {
         GemmService {
             accelerator,
             runtime,
             config,
-            mapping_cache: HashMap::new(),
+            mapping_cache,
         }
+    }
+
+    /// The shared mapping cache (e.g. to pre-warm or inspect).
+    pub fn mapping_cache(&self) -> &Arc<MappingCache> {
+        &self.mapping_cache
     }
 
     /// Deterministic operand data for a request.
@@ -118,7 +135,7 @@ impl GemmService {
     }
 
     /// Serve a trace of requests; batches consecutive same-shape
-    /// requests (one search per distinct shape).
+    /// requests (one cached search per distinct shape).
     pub fn serve(&mut self, requests: &[Gemm]) -> Result<ServiceReport> {
         let mut metrics = ServiceMetrics::default();
         let mut outcomes = Vec::with_capacity(requests.len());
@@ -135,24 +152,21 @@ impl GemmService {
             }
             metrics.batches += 1;
 
-            // one search per shape (cached)
-            let (mapping_name, projected_ms, order) =
-                if let Some(hit) = self.mapping_cache.get(&shape) {
-                    metrics.mapping_cache_hits += 1;
-                    hit.clone()
-                } else {
-                    metrics.mapping_cache_misses += 1;
-                    let t0 = Instant::now();
-                    let r = flash::search(&self.accelerator, &requests[i])?;
-                    metrics.search_time += t0.elapsed();
-                    let entry = (
-                        r.mapping().name(),
-                        r.cost().runtime_ms(),
-                        r.mapping().inter_order,
-                    );
-                    self.mapping_cache.insert(shape, entry.clone());
-                    entry
-                };
+            // one search per shape, memoized in the shared cache (the
+            // cache's own hit/miss counters stay in step with ours)
+            let t0 = Instant::now();
+            let (best, hit) = self
+                .mapping_cache
+                .get_or_search(&self.accelerator, &requests[i])?;
+            if hit {
+                metrics.mapping_cache_hits += 1;
+            } else {
+                metrics.mapping_cache_misses += 1;
+                metrics.search_time += t0.elapsed();
+            }
+            let mapping_name = best.mapping.name();
+            let projected_ms = best.cost.runtime_ms();
+            let order = best.mapping.inter_order;
 
             for (b, wl) in requests[i..j].iter().enumerate() {
                 let t0 = Instant::now();

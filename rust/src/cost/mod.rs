@@ -4,14 +4,15 @@
 //! projected runtime, per-level buffer-access counts, energy, utilization
 //! and data-reuse metrics. The equations are documented per sub-module:
 //!
-//! * [`access`] — S1/S2 buffer-access counting from reuse analysis,
-//!   anchored to the paper's Table 5 (e.g. S1 counts for workload VI
-//!   reproduce the 3.3E7 / 6.6E7 / 6.7E7 magnitudes exactly).
-//! * [`runtime`] — compute-vs-NoC roofline per outer step with double
-//!   buffering (Table 5: tiled ⟨m,n,k⟩ ⇒ compute-bound 0.131 ms on edge;
-//!   non-tiled ⇒ NoC-bound ≈ 2.1 ms).
-//! * [`energy`]  — per-access energy constants (28 nm-calibrated, see
-//!   `EnergyModel` docs) combining buffer, MAC and NoC-wire energy.
+//! * `access` ([`AccessCounts`]) — S1/S2 buffer-access counting from
+//!   reuse analysis, anchored to the paper's Table 5 (e.g. S1 counts for
+//!   workload VI reproduce the 3.3E7 / 6.6E7 / 6.7E7 magnitudes exactly).
+//! * `runtime` ([`RuntimeBreakdown`]) — compute-vs-NoC roofline per outer
+//!   step with double buffering (Table 5: tiled ⟨m,n,k⟩ ⇒ compute-bound
+//!   0.131 ms on edge; non-tiled ⇒ NoC-bound ≈ 2.1 ms).
+//! * `energy` ([`EnergyModel`]) — per-access energy constants
+//!   (28 nm-calibrated, see [`EnergyModel`] docs) combining buffer, MAC
+//!   and NoC-wire energy.
 
 mod access;
 mod energy;

@@ -1,0 +1,174 @@
+//! Shape-keyed mapping cache — repeat-shape traffic skips the search.
+//!
+//! The serving path (see `coordinator::service`) sees the same GEMM
+//! shapes over and over (DNN layers, recurring CSE kernels); the FLASH
+//! search result for a shape depends only on `(shape, style, hardware
+//! config)`, never on the request instance. [`MappingCache`] memoizes the
+//! best [`EvaluatedMapping`] under exactly that key behind an `RwLock`,
+//! so any number of service threads can share one cache: reads take the
+//! shared lock, only a first-seen shape takes the exclusive lock.
+//!
+//! The key's `Gemm` component is normalized to an empty name — two
+//! requests with equal `(M, N, K)` but different names are the same
+//! shape and must hit the same entry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use anyhow::Result;
+
+use crate::arch::{Accelerator, HwConfig, Style};
+use crate::workloads::Gemm;
+
+use super::search::{self, EvaluatedMapping};
+
+/// Cache key: normalized workload shape + accelerator identity.
+type Key = (Gemm, Style, HwConfig);
+
+/// A concurrent (shape, style, config) → best-mapping cache.
+#[derive(Debug, Default)]
+pub struct MappingCache {
+    inner: RwLock<HashMap<Key, EvaluatedMapping>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MappingCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(acc: &Accelerator, wl: &Gemm) -> Key {
+        (
+            Gemm::new("", wl.m, wl.n, wl.k),
+            acc.style,
+            acc.config.clone(),
+        )
+    }
+
+    /// Cached best mapping for this shape on this accelerator, if any.
+    /// Does not touch the hit/miss counters — [`MappingCache::get_or_search`]
+    /// is the accounted path.
+    pub fn get(&self, acc: &Accelerator, wl: &Gemm) -> Option<EvaluatedMapping> {
+        self.inner
+            .read()
+            .expect("mapping cache lock")
+            .get(&Self::key(acc, wl))
+            .cloned()
+    }
+
+    /// Store the best mapping for this shape on this accelerator.
+    pub fn insert(&self, acc: &Accelerator, wl: &Gemm, best: EvaluatedMapping) {
+        self.inner
+            .write()
+            .expect("mapping cache lock")
+            .insert(Self::key(acc, wl), best);
+    }
+
+    /// Serve from the cache, or run a FLASH search and remember the
+    /// result. Returns the best mapping and whether it was a cache hit.
+    pub fn get_or_search(
+        &self,
+        acc: &Accelerator,
+        wl: &Gemm,
+    ) -> Result<(EvaluatedMapping, bool)> {
+        if let Some(best) = self.get(acc, wl) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((best, true));
+        }
+        let best = search::search(acc, wl)?.best;
+        self.insert(acc, wl, best.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((best, false))
+    }
+
+    /// Cache hits served through [`MappingCache::get_or_search`].
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (searches run) through [`MappingCache::get_or_search`].
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct (shape, style, config) entries currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("mapping cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    #[test]
+    fn miss_then_hit_returns_identical_mapping() {
+        let cache = MappingCache::new();
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::by_id("VI").unwrap();
+        let (a, hit_a) = cache.get_or_search(&acc, &wl).unwrap();
+        let (b, hit_b) = cache.get_or_search(&acc, &wl).unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.selection_key(), b.selection_key());
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn key_ignores_workload_name() {
+        let cache = MappingCache::new();
+        let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+        cache.get_or_search(&acc, &Gemm::new("first", 128, 64, 32)).unwrap();
+        let (_, hit) = cache.get_or_search(&acc, &Gemm::new("second", 128, 64, 32)).unwrap();
+        assert!(hit, "same shape under a new name must hit");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn key_separates_style_and_config() {
+        let cache = MappingCache::new();
+        let wl = Gemm::new("sq", 128, 128, 128);
+        let edge = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let cloud = Accelerator::of_style(Style::Maeri, HwConfig::cloud());
+        let tpu = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        for acc in [&edge, &cloud, &tpu] {
+            let (_, hit) = cache.get_or_search(acc, &wl).unwrap();
+            assert!(!hit);
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let cache = Arc::new(MappingCache::new());
+        let acc = Accelerator::of_style(Style::Eyeriss, HwConfig::edge());
+        let wl = Gemm::new("sq", 64, 64, 64);
+        cache.get_or_search(&acc, &wl).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cache = Arc::clone(&cache);
+            let acc = acc.clone();
+            let wl = wl.clone();
+            handles.push(std::thread::spawn(move || {
+                let (_, hit) = cache.get_or_search(&acc, &wl).unwrap();
+                hit
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap(), "warmed entry must hit from any thread");
+        }
+        assert_eq!(cache.hits(), 4);
+    }
+}

@@ -3,14 +3,18 @@
 //!
 //! The mapping explorer: derive candidate tile sizes analytically
 //! ([`tiles`], Table 6 closed forms), generate the pruned candidate set
-//! ([`candidates`], Algorithm 2), and select the best mapping by
-//! projected runtime using MAESTRO-BLAS ([`search`]).
+//! ([`candidates`], Algorithm 2), select the best mapping by projected
+//! runtime using MAESTRO-BLAS with a rayon-parallel evaluation pipeline
+//! ([`search`]), and memoize per-shape results for serving traffic
+//! ([`cache`]).
 
+pub mod cache;
 pub mod candidates;
 pub mod pareto;
 pub mod search;
 pub mod tiles;
 
+pub use cache::MappingCache;
 pub use candidates::{enumerate, unpruned_space, CandidateSet};
 pub use pareto::{pareto_frontier, select_weighted, ParetoPoint};
 pub use search::{

@@ -1,9 +1,33 @@
 //! Mapping selection: evaluate the pruned candidates with MAESTRO-BLAS
 //! and pick the best by projected runtime (paper §4, last step).
+//!
+//! ## Parallel evaluation pipeline
+//!
+//! Candidate evaluation is embarrassingly parallel — each mapping's cost
+//! is a closed-form computation over the same immutable `(accelerator,
+//! workload)` pair — so [`search_with`] fans the candidate vector over a
+//! rayon pool:
+//!
+//! * the best-only path splits the candidates into fixed-size chunks
+//!   (`par_chunks`), takes a serial minimum per chunk, and reduces the
+//!   chunk minima with a parallel min-reduction;
+//! * the `keep_all` path evaluates via an indexed `par_iter().map()`
+//!   whose `collect` preserves the candidate-generator ordering exactly,
+//!   so Fig 7 histograms and ordering-sensitive consumers are stable;
+//! * [`search_all_orders`] additionally fans the (up to six) per-order
+//!   searches across threads; rayon's work stealing nests them under the
+//!   same pool.
+//!
+//! Determinism: the selection key `(runtime_cycles, energy, candidate
+//! index)` is totally ordered and the min-reduction is associative and
+//! commutative, so the parallel search returns bit-identical results to
+//! a sequential first-wins scan regardless of thread count or schedule
+//! (asserted by `tests/parallel_equivalence.rs`).
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+use rayon::prelude::*;
 
 use crate::arch::Accelerator;
 use crate::cost::{Cost, CostModel};
@@ -11,6 +35,11 @@ use crate::dataflow::{LoopOrder, Mapping};
 use crate::workloads::Gemm;
 
 use super::candidates;
+
+/// Candidates evaluated per parallel work unit. Large enough to amortize
+/// rayon's scheduling overhead over the ~µs-scale cost evaluations, small
+/// enough to load-balance the few-thousand-candidate searches.
+const EVAL_CHUNK: usize = 128;
 
 /// A candidate mapping with its evaluated cost.
 #[derive(Debug, Clone)]
@@ -20,10 +49,10 @@ pub struct EvaluatedMapping {
 }
 
 impl EvaluatedMapping {
-    /// Selection key: lowest projected runtime, energy as tie-break
-    /// (§5.2: "selects the best mapping based on the lowest projected
-    /// runtime").
-    fn key(&self) -> (u64, u64) {
+    /// Selection key: lowest projected runtime, energy (in pJ) as the
+    /// tie-break (§5.2: "selects the best mapping based on the lowest
+    /// projected runtime").
+    pub fn selection_key(&self) -> (u64, u64) {
         (
             self.cost.runtime_cycles(),
             (self.cost.energy_j * 1e12) as u64,
@@ -31,22 +60,28 @@ impl EvaluatedMapping {
     }
 }
 
+/// Pick the lower (selection key, candidate index) of two evaluated
+/// candidates — the associative/commutative reduction operator of the
+/// parallel search. The index tie-break reproduces the sequential
+/// first-wins scan exactly.
+fn min_indexed(
+    a: (usize, EvaluatedMapping),
+    b: (usize, EvaluatedMapping),
+) -> (usize, EvaluatedMapping) {
+    if (b.1.selection_key(), b.0) < (a.1.selection_key(), a.0) {
+        b
+    } else {
+        a
+    }
+}
+
 /// Search options.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SearchOpts {
     /// Keep every evaluated candidate (needed for the Fig 7 histogram).
     pub keep_all: bool,
     /// Restrict to one inter-cluster loop order (Fig 9 sweeps).
     pub order: Option<LoopOrder>,
-}
-
-impl Default for SearchOpts {
-    fn default() -> Self {
-        SearchOpts {
-            keep_all: false,
-            order: None,
-        }
-    }
 }
 
 /// Outcome of a FLASH search.
@@ -59,7 +94,8 @@ pub struct SearchResult {
     pub unpruned: u128,
     /// Wall-clock time of generation + evaluation.
     pub elapsed: Duration,
-    /// All evaluated candidates, if `keep_all` was set.
+    /// All evaluated candidates, if `keep_all` was set, in candidate-
+    /// generation order.
     pub all: Vec<EvaluatedMapping>,
 }
 
@@ -85,7 +121,7 @@ impl SearchResult {
     }
 }
 
-/// Run FLASH with options.
+/// Run FLASH with options (see the module docs for the parallel design).
 pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<SearchResult> {
     let start = Instant::now();
     let (mappings, unpruned) = match opts.order {
@@ -108,23 +144,54 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
     }
 
     let model = CostModel::new(acc.clone());
-    let mut best: Option<EvaluatedMapping> = None;
-    let mut all = Vec::with_capacity(if opts.keep_all { mappings.len() } else { 0 });
     let candidates = mappings.len();
-    for mapping in mappings {
-        let cost = model.evaluate(&mapping, wl);
-        let ev = EvaluatedMapping { mapping, cost };
-        match &best {
-            Some(b) if b.key() <= ev.key() => {}
-            _ => best = Some(ev.clone()),
+
+    let (best, all) = if opts.keep_all {
+        // Indexed map + collect preserves candidate-generation order.
+        let all: Vec<EvaluatedMapping> = mappings
+            .into_par_iter()
+            .map(|mapping| {
+                let cost = model.evaluate(&mapping, wl);
+                EvaluatedMapping { mapping, cost }
+            })
+            .collect();
+        let mut bi = 0usize;
+        for (i, e) in all.iter().enumerate().skip(1) {
+            if e.selection_key() < all[bi].selection_key() {
+                bi = i;
+            }
         }
-        if opts.keep_all {
-            all.push(ev);
-        }
-    }
+        (all[bi].clone(), all)
+    } else {
+        // Chunked parallel min-reduction: serial minimum per chunk, then
+        // a parallel reduce over the chunk minima.
+        let (_, best) = mappings
+            .par_chunks(EVAL_CHUNK)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                chunk
+                    .iter()
+                    .enumerate()
+                    .map(|(i, mapping)| {
+                        let cost = model.evaluate(mapping, wl);
+                        (
+                            ci * EVAL_CHUNK + i,
+                            EvaluatedMapping {
+                                mapping: mapping.clone(),
+                                cost,
+                            },
+                        )
+                    })
+                    .reduce(min_indexed)
+                    .expect("chunks are non-empty")
+            })
+            .reduce_with(min_indexed)
+            .expect("non-empty candidate set");
+        (best, Vec::new())
+    };
 
     Ok(SearchResult {
-        best: best.expect("non-empty candidates"),
+        best,
         candidates,
         unpruned,
         elapsed: start.elapsed(),
@@ -137,11 +204,12 @@ pub fn search(acc: &Accelerator, wl: &Gemm) -> Result<SearchResult> {
     search_with(acc, wl, &SearchOpts::default())
 }
 
-/// One search per feasible inter-cluster loop order (the Fig 9 sweep).
+/// One search per feasible inter-cluster loop order (the Fig 9 sweep),
+/// fanned across threads; results keep the `inter_orders()` ordering.
 pub fn search_all_orders(acc: &Accelerator, wl: &Gemm) -> Vec<(LoopOrder, SearchResult)> {
     acc.style
         .inter_orders()
-        .iter()
+        .par_iter()
         .filter_map(|&o| {
             search_with(
                 acc,
@@ -194,6 +262,25 @@ mod tests {
     }
 
     #[test]
+    fn keep_all_and_best_only_agree() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let fast = search(&acc, &wl).unwrap();
+        let full = search_with(
+            &acc,
+            &wl,
+            &SearchOpts {
+                keep_all: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(fast.best.selection_key(), full.best.selection_key());
+        assert_eq!(fast.best.mapping, full.best.mapping);
+        assert_eq!(full.all.len(), full.candidates);
+    }
+
+    #[test]
     fn all_styles_search_all_table3_small() {
         // Fast subset: III, IV, VI complete quickly on every style.
         for id in ["III", "IV", "VI"] {
@@ -229,5 +316,12 @@ mod tests {
         let acc = Accelerator::of_style(Style::Tpu, HwConfig::edge());
         let wl = Gemm::by_id("VI").unwrap();
         assert_eq!(search_all_orders(&acc, &wl).len(), 1);
+    }
+
+    #[test]
+    fn default_opts_are_unrestricted() {
+        let opts = SearchOpts::default();
+        assert!(!opts.keep_all);
+        assert!(opts.order.is_none());
     }
 }

@@ -1,26 +1,37 @@
-//! # flash-gemm — evaluating spatial accelerators with tiled GEMM
+//! # flash_gemm — evaluating spatial accelerators with tiled GEMM
 //!
 //! Reproduction of *"Evaluating Spatial Accelerator Architectures with
-//! Tiled Matrix-Matrix Multiplication"* (CS.DC 2021): the **FLASH**
+//! Tiled Matrix-Matrix Multiplication"* (cs.DC 2021): the **FLASH**
 //! mapping explorer plus the **MAESTRO-BLAS** analytical cost model,
 //! evaluated over five spatial-accelerator styles (Eyeriss, NVDLA, TPUv2,
 //! ShiDianNao, MAERI) on edge and cloud configurations.
 //!
-//! Layer map (see `DESIGN.md`):
-//! * L3 (this crate): accelerator models, dataflow directives, cost model,
-//!   FLASH search, baselines, a cycle-approximate simulator substrate, the
-//!   PJRT runtime, and the search/serve coordinator.
+//! Layer map (see `DESIGN.md` for the full architecture, `README.md` for
+//! the quickstart):
+//! * L3 (this crate): accelerator models ([`arch`]), dataflow directives
+//!   ([`dataflow`]), cost model ([`cost`]), the rayon-parallel FLASH
+//!   search with its shape-keyed mapping cache ([`flash`]), baselines
+//!   ([`baselines`]), a cycle-approximate simulator substrate ([`sim`]),
+//!   the execution runtime ([`runtime`]), and the search/serve
+//!   coordinator ([`coordinator`]).
 //! * L2/L1 (`python/compile`): JAX GEMM/MLP graphs calling the Pallas
 //!   tiled-GEMM kernel, AOT-lowered once to `artifacts/*.hlo.txt`.
 //!
-//! Quick start:
-//! ```no_run
+//! Quick start — search the best mapping for one GEMM on one
+//! accelerator:
+//!
+//! ```
 //! use flash_gemm::prelude::*;
 //!
 //! let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
-//! let wl  = Gemm::new("sq", 1024, 1024, 1024);
+//! let wl = Gemm::new("vi-sized", 512, 256, 256);
 //! let best = flash_gemm::flash::search(&acc, &wl).expect("searchable");
-//! println!("best mapping: {} -> {:.3} ms", best.mapping().name(), best.cost().runtime_ms());
+//! assert!(best.cost().runtime_ms() > 0.0);
+//! println!(
+//!     "best mapping: {} -> {:.3} ms",
+//!     best.mapping().name(),
+//!     best.cost().runtime_ms()
+//! );
 //! ```
 
 pub mod arch;

@@ -6,7 +6,7 @@
 //! numeric values) on failure.
 //!
 //! ```
-//! use flash_gemm::prop::{forall, Gen};
+//! use flash_gemm::prop::forall;
 //! forall(200, 42, |g| {
 //!     let x = g.u64_in(1, 1000);
 //!     let y = g.u64_in(1, 1000);

@@ -80,6 +80,22 @@ impl Manifest {
         })
     }
 
+    /// An in-memory manifest of square tile kernels (`gemm_tile_{t}`),
+    /// no files behind it — for the native backend when no artifacts
+    /// directory exists (tests, demos without `make artifacts`).
+    pub fn synthetic(tiles: &[u64]) -> Self {
+        let dir = PathBuf::from("<synthetic>");
+        let artifacts = tiles
+            .iter()
+            .map(|&t| ArtifactMeta {
+                name: format!("gemm_tile_{t}"),
+                path: dir.join(format!("gemm_tile_{t}.hlo.txt")),
+                arg_shapes: vec![vec![t, t]; 3],
+            })
+            .collect();
+        Manifest { dir, artifacts }
+    }
+
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -1,57 +1,309 @@
-//! Compile-once PJRT executable cache.
+//! Execution backends behind [`Runtime`].
 //!
-//! HLO **text** is the interchange format (not serialized protos): jax
-//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see `/opt/xla-example/README.md`).
+//! Two backends implement the artifact-execution contract:
+//!
+//! * **Native** (default): a pure-Rust interpreter of the known artifact
+//!   computations — the tile kernel (`acc + A·B`), the full-GEMM
+//!   artifacts, and the MLP forward chain (GEMM + ReLU per hidden
+//!   layer), mirroring `python/compile/model.py` exactly. It keeps the
+//!   crate dependency-light and the offline build green while producing
+//!   real, verifiable numbers.
+//! * **PJRT** (`--features pjrt`, requires the `xla` bindings crate —
+//!   see `Cargo.toml` and DESIGN.md §Substitutions): compiles the AOT
+//!   HLO **text** once per artifact on `xla::PjRtClient` and executes it
+//!   with concrete buffers. Text, not serialized protos, is the
+//!   interchange format: jax ≥ 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, bail, Result};
 
 use super::artifacts::Manifest;
 
-/// The L3 runtime: a PJRT CPU client plus compiled-executable cache over
-/// the AOT artifact set.
+/// The L3 runtime: an execution backend plus the artifact manifest it
+/// serves, with compile-once caching (PJRT) and perf accounting.
 pub struct Runtime {
-    client: PjRtClient,
+    backend: Backend,
     manifest: Manifest,
-    executables: HashMap<String, PjRtLoadedExecutable>,
-    /// Cumulative compile time (perf accounting).
+    /// Cumulative compile time (zero for the native backend).
     pub compile_time: Duration,
     /// Executions served.
     pub executions: u64,
 }
 
+enum Backend {
+    /// Pure-Rust interpreter of the artifact set.
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtState),
+}
+
 impl Runtime {
-    /// Create a runtime over an artifacts directory.
+    /// Create a runtime over an artifacts directory. Uses the PJRT
+    /// backend when the `pjrt` feature is enabled, the native
+    /// interpreter otherwise.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        #[cfg(feature = "pjrt")]
+        let backend = Backend::Pjrt(pjrt::PjrtState::new()?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend = Backend::Native;
         Ok(Runtime {
-            client,
+            backend,
             manifest,
-            executables: HashMap::new(),
             compile_time: Duration::ZERO,
             executions: 0,
         })
+    }
+
+    /// A runtime over the native interpreter regardless of features —
+    /// useful with [`Manifest::synthetic`] when no artifacts directory
+    /// exists (tests, demos).
+    pub fn native(manifest: Manifest) -> Self {
+        Runtime {
+            backend: Backend::Native,
+            manifest,
+            compile_time: Duration::ZERO,
+            executions: 0,
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Backend platform name (`native-cpu` or the PJRT platform).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(state) => state.platform(),
+        }
     }
 
-    /// Compile (once) and return the executable for an artifact.
-    fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
-            let meta = self
-                .manifest
+    /// Pre-compile an artifact (warm-up outside the serving hot path).
+    /// The native backend only checks the artifact exists.
+    pub fn warm(&mut self, name: &str) -> Result<()> {
+        if self.manifest.get(name).is_none() {
+            bail!("unknown artifact {name:?}");
+        }
+        match &mut self.backend {
+            Backend::Native => Ok(()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(state) => {
+                let dt = state.compile(&self.manifest, name)?;
+                self.compile_time += dt;
+                Ok(())
+            }
+        }
+    }
+
+    /// Error unless `name` exists in the manifest and takes `got` args.
+    fn arity_checked(&self, name: &str, got: usize) -> Result<()> {
+        let want = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .arg_shapes
+            .len();
+        if got != want {
+            bail!("{name}: want {want} args, got {got}");
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on raw XLA literals. All artifacts are
+    /// lowered with `return_tuple=True`; this unwraps the tuple and
+    /// returns its elements. PJRT-only: the native interpreter exposes
+    /// the typed [`Runtime::run_f32`] instead.
+    #[cfg(feature = "pjrt")]
+    pub fn run(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.arity_checked(name, args.len())?;
+        match &mut self.backend {
+            Backend::Native => bail!("raw-literal execution needs the PJRT backend"),
+            Backend::Pjrt(state) => {
+                let (out, dt) = state.run(&self.manifest, name, args)?;
+                self.compile_time += dt;
+                self.executions += 1;
+                Ok(out)
+            }
+        }
+    }
+
+    /// Convenience: run a 1-output artifact on f32 matrices, returning
+    /// the flattened f32 output. Works on both backends.
+    pub fn run_f32(&mut self, name: &str, args: &[(&[f32], [u64; 2])]) -> Result<Vec<f32>> {
+        self.arity_checked(name, args.len())?;
+        match &mut self.backend {
+            Backend::Native => {
+                let out = native_run_f32(name, args)?;
+                self.executions += 1;
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(state) => {
+                let literals: Vec<xla::Literal> = args
+                    .iter()
+                    .map(|(data, shape)| {
+                        xla::Literal::vec1(data)
+                            .reshape(&[shape[0] as i64, shape[1] as i64])
+                            .map_err(|e| anyhow!("reshape to {shape:?}: {e}"))
+                    })
+                    .collect::<Result<_>>()?;
+                let (out, dt) = state.run(&self.manifest, name, &literals)?;
+                self.compile_time += dt;
+                self.executions += 1;
+                let first = out
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("artifact returned empty tuple"))?;
+                first
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("result to f32: {e}"))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .field("executions", &self.executions)
+            .finish()
+    }
+}
+
+/// Row-major f32 GEMM used by the native interpreter.
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Interpret one artifact natively (see the module docs for the
+/// artifact-name → computation contract).
+fn native_run_f32(name: &str, args: &[(&[f32], [u64; 2])]) -> Result<Vec<f32>> {
+    if let Some(t) = name.strip_prefix("gemm_tile_") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| anyhow!("bad tile size in {name:?}"))?;
+        // Guard against a manifest whose arity disagrees with the
+        // interpreter's contract (the caller only checked the manifest).
+        if args.len() != 3 {
+            bail!("{name}: tile kernel takes acc, A, B (got {} args)", args.len());
+        }
+        let (acc, a, b) = (args[0].0, args[1].0, args[2].0);
+        for (i, x) in [acc, a, b].iter().enumerate() {
+            if x.len() != t * t {
+                bail!("{name}: arg {i} len {} != {}", x.len(), t * t);
+            }
+        }
+        let mut c = matmul(a, b, t, t, t);
+        for (ci, &av) in c.iter_mut().zip(acc) {
+            *ci += av;
+        }
+        return Ok(c);
+    }
+    if let Some(dims) = name.strip_prefix("gemm_full_") {
+        let d: Vec<usize> = dims.split('x').filter_map(|v| v.parse().ok()).collect();
+        let &[m, k, n] = d.as_slice() else {
+            bail!("bad shape suffix in {name:?} (want gemm_full_MxKxN)");
+        };
+        if args.len() != 2 {
+            bail!("{name}: full GEMM takes A, B (got {} args)", args.len());
+        }
+        let (a, b) = (args[0].0, args[1].0);
+        if a.len() != m * k || b.len() != k * n {
+            bail!("{name}: operand lengths do not match {m}x{k}x{n}");
+        }
+        return Ok(matmul(a, b, m, k, n));
+    }
+    if name == "mlp" {
+        if args.len() < 2 {
+            bail!("mlp: want input + weight matrices");
+        }
+        let (x, xs) = (args[0].0, args[0].1);
+        let rows = xs[0] as usize;
+        let mut cols = xs[1] as usize;
+        if x.len() != rows * cols {
+            bail!("mlp: input len {} != {rows}x{cols}", x.len());
+        }
+        let mut h = x.to_vec();
+        let layers = args.len() - 1;
+        for (wi, (w, ws)) in args[1..].iter().copied().enumerate() {
+            let (wr, wc) = (ws[0] as usize, ws[1] as usize);
+            if wr != cols || w.len() != wr * wc {
+                bail!("mlp: weight {wi} shape {wr}x{wc} incompatible with {rows}x{cols}");
+            }
+            let mut out = matmul(&h, w, rows, cols, wc);
+            if wi + 1 < layers {
+                // hidden layers are ReLU; the classifier layer is linear
+                for v in &mut out {
+                    *v = v.max(0.0);
+                }
+            }
+            h = out;
+            cols = wc;
+        }
+        return Ok(h);
+    }
+    bail!(
+        "artifact {name:?} is not supported by the native backend \
+         (build with `--features pjrt` and real AOT artifacts)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    //! The real PJRT backend: compile-once executable cache over
+    //! `xla::PjRtClient`.
+
+    use std::collections::HashMap;
+    use std::time::{Duration, Instant};
+
+    use anyhow::{anyhow, Result};
+    use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+    use super::super::artifacts::Manifest;
+
+    pub struct PjrtState {
+        client: PjRtClient,
+        executables: HashMap<String, PjRtLoadedExecutable>,
+    }
+
+    impl PjrtState {
+        pub fn new() -> Result<Self> {
+            let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+            Ok(PjrtState {
+                client,
+                executables: HashMap::new(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile once; returns the time spent compiling in this call
+        /// (zero on a cache hit).
+        pub fn compile(&mut self, manifest: &Manifest, name: &str) -> Result<Duration> {
+            if self.executables.contains_key(name) {
+                return Ok(Duration::ZERO);
+            }
+            let meta = manifest
                 .get(name)
                 .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
             let start = Instant::now();
@@ -62,73 +314,92 @@ impl Runtime {
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-            self.compile_time += start.elapsed();
+            let dt = start.elapsed();
             self.executables.insert(name.to_string(), exe);
+            Ok(dt)
         }
-        Ok(&self.executables[name])
-    }
 
-    /// Pre-compile an artifact (warm-up outside the serving hot path).
-    pub fn warm(&mut self, name: &str) -> Result<()> {
-        self.executable(name).map(|_| ())
-    }
-
-    /// Execute an artifact. All artifacts are lowered with
-    /// `return_tuple=True`; this unwraps the tuple and returns its
-    /// elements.
-    pub fn run(&mut self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
-        if args.len() != meta.arg_shapes.len() {
-            anyhow::bail!(
-                "{name}: want {} args, got {}",
-                meta.arg_shapes.len(),
-                args.len()
-            );
+        /// Execute; returns the untupled outputs and any compile time
+        /// spent on a cold executable.
+        pub fn run(
+            &mut self,
+            manifest: &Manifest,
+            name: &str,
+            args: &[Literal],
+        ) -> Result<(Vec<Literal>, Duration)> {
+            let dt = self.compile(manifest, name)?;
+            let exe = &self.executables[name];
+            let result = exe
+                .execute::<Literal>(args)
+                .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+            let out = result
+                .to_tuple()
+                .map_err(|e| anyhow!("untupling result of {name}: {e}"))?;
+            Ok((out, dt))
         }
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
-        self.executions += 1;
-        result
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling result of {name}: {e}"))
-    }
-
-    /// Convenience: run a 1-output artifact on f32 matrices, returning
-    /// the flattened f32 output.
-    pub fn run_f32(&mut self, name: &str, args: &[(&[f32], [u64; 2])]) -> Result<Vec<f32>> {
-        let literals: Vec<Literal> = args
-            .iter()
-            .map(|(data, shape)| {
-                Literal::vec1(data)
-                    .reshape(&[shape[0] as i64, shape[1] as i64])
-                    .map_err(|e| anyhow!("reshape to {shape:?}: {e}"))
-            })
-            .collect::<Result<_>>()?;
-        let out = self.run(name, &literals)?;
-        let first = out
-            .into_iter()
-            .next()
-            .context("artifact returned empty tuple")?;
-        first
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("result to f32: {e}"))
     }
 }
 
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime")
-            .field("platform", &self.client.platform_name())
-            .field("artifacts", &self.manifest.artifacts.len())
-            .field("compiled", &self.executables.len())
-            .field("executions", &self.executions)
-            .finish()
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_tile_kernel_is_fma() {
+        // 2×2: c = acc + a·b
+        let acc = [1.0f32, 0.0, 0.0, 1.0];
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let c = native_run_f32(
+            "gemm_tile_2",
+            &[(&acc, [2, 2]), (&a, [2, 2]), (&b, [2, 2])],
+        )
+        .unwrap();
+        assert_eq!(c, vec![20.0, 22.0, 43.0, 51.0]);
+    }
+
+    #[test]
+    fn native_full_gemm_parses_shape_suffix() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2×3
+        let b = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]; // 3×2
+        let c = native_run_f32("gemm_full_2x3x2", &[(&a, [2, 3]), (&b, [3, 2])]).unwrap();
+        assert_eq!(c, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn native_mlp_applies_relu_on_hidden_layers_only() {
+        // 1×2 input through two layers; first output is negative so the
+        // hidden ReLU must clamp it, the final (linear) layer must not.
+        let x = [1.0f32, 1.0];
+        let w1 = [-1.0f32, 1.0, -1.0, 1.0]; // 2×2 -> [-2, 2] -> relu [0, 2]
+        let w2 = [1.0f32, -1.0]; // 2×1 -> [-2]
+        let out = native_run_f32("mlp", &[(&x, [1, 2]), (&w1, [2, 2]), (&w2, [2, 1])]).unwrap();
+        assert_eq!(out, vec![-2.0]);
+    }
+
+    #[test]
+    fn native_rejects_unknown_and_malformed() {
+        assert!(native_run_f32("mystery", &[]).is_err());
+        assert!(native_run_f32("gemm_tile_x", &[(&[], [0, 0]); 3]).is_err());
+        let a = [0.0f32; 3];
+        assert!(native_run_f32("gemm_tile_2", &[(&a, [2, 2]); 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_native_counts_executions() {
+        let mut rt = Runtime::native(Manifest::synthetic(&[2]));
+        assert_eq!(rt.platform(), "native-cpu");
+        let z = [0.0f32; 4];
+        rt.run_f32("gemm_tile_2", &[(&z, [2, 2]); 3]).unwrap();
+        rt.run_f32("gemm_tile_2", &[(&z, [2, 2]); 3]).unwrap();
+        assert_eq!(rt.executions, 2);
+        assert_eq!(rt.compile_time, Duration::ZERO);
+        // arity checked against the manifest
+        assert!(rt.run_f32("gemm_tile_2", &[(&z, [2, 2]); 2]).is_err());
+        assert!(rt.run_f32("gemm_tile_4", &[(&z, [2, 2]); 3]).is_err());
+        assert!(rt.warm("gemm_tile_2").is_ok());
+        assert!(rt.warm("nope").is_err());
     }
 }

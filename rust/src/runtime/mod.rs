@@ -1,14 +1,16 @@
-//! PJRT runtime — load and execute the AOT artifacts from the L3 hot
-//! path. Python never runs here: `make artifacts` lowered the L2/L1 JAX +
-//! Pallas graphs to HLO text once; this module compiles them on the PJRT
-//! CPU client and executes them with concrete buffers.
+//! Execution runtime — load and execute the AOT artifacts from the L3
+//! hot path. Python never runs here: `make artifacts` lowered the L2/L1
+//! JAX + Pallas graphs to HLO text once; this module executes them with
+//! concrete buffers, either through the built-in native interpreter
+//! (default) or a real PJRT client (`--features pjrt`).
 //!
-//! * [`artifacts`] — the `artifacts/manifest.txt` index.
-//! * [`client`]    — compile-once executable cache over `xla::PjRtClient`.
-//! * [`executor`]  — the tiled GEMM executor: drives the single-tile FMA
-//!   artifact over a FLASH-selected outer schedule, accumulating C in
-//!   Rust (the functional mirror of the accelerator's tile
-//!   time-multiplexing), plus whole-graph helpers (full GEMM, MLP).
+//! * [`Manifest`] — the `artifacts/manifest.txt` index (plus
+//!   [`Manifest::synthetic`] for artifact-less native runs).
+//! * [`Runtime`] — the execution backend with compile-once caching.
+//! * [`TiledExecutor`] — the tiled GEMM executor: drives the single-tile
+//!   FMA artifact over a FLASH-selected outer schedule, accumulating C
+//!   in Rust (the functional mirror of the accelerator's tile
+//!   time-multiplexing), plus whole-graph helpers ([`MlpRunner`]).
 
 mod artifacts;
 mod client;

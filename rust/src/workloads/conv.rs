@@ -49,7 +49,7 @@ impl Conv2d {
 }
 
 /// A ResNet-50-style layer suite (one representative layer per stage;
-/// batch 1 inference). Dims follow He et al. [22].
+/// batch 1 inference). Dims follow He et al. \[22\].
 pub fn resnet50_layers(batch: u64) -> Vec<Conv2d> {
     let conv = |name: &str, in_ch, out_ch, in_hw, kernel, stride, padding| Conv2d {
         name: name.to_string(),

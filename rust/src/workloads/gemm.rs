@@ -3,7 +3,7 @@
 use std::fmt;
 
 /// A GEMM workload: C(M×N) = A(M×K) · B(K×N).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash, serde::Serialize, serde::Deserialize)]
 pub struct Gemm {
     pub name: String,
     pub m: u64,

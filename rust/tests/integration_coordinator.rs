@@ -1,10 +1,14 @@
 //! Integration: the coordinator — grid orchestration and the GEMM
-//! service over the real PJRT runtime (service tests skip without
-//! artifacts).
+//! service. Mapping-cache tests run on the native runtime backend with a
+//! synthetic manifest (no artifacts needed); the artifact-backed service
+//! tests skip without `make artifacts`.
+
+use std::sync::Arc;
 
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
 use flash_gemm::coordinator::{search_grid, GemmService, ServiceConfig};
-use flash_gemm::runtime::{default_artifacts_dir, Runtime};
+use flash_gemm::flash::MappingCache;
+use flash_gemm::runtime::{default_artifacts_dir, Manifest, Runtime};
 use flash_gemm::workloads::{parse_trace, Gemm};
 
 #[test]
@@ -88,6 +92,67 @@ fn service_skips_oversized_requests() {
     assert!(!rep.outcomes[0].executed); // search-only response
     assert!(rep.outcomes[0].projected_ms > 0.0);
     assert!(rep.outcomes[1].executed);
+}
+
+/// A service over the native interpreter with a synthetic tile set —
+/// runs everywhere, no artifacts directory required.
+fn native_service(cache: Arc<MappingCache>) -> GemmService {
+    GemmService::with_cache(
+        Accelerator::of_style(Style::Maeri, HwConfig::edge()),
+        Runtime::native(Manifest::synthetic(&[16, 32])),
+        ServiceConfig {
+            verify: true,
+            max_exec_dim: 128,
+            tile: 0,
+        },
+        cache,
+    )
+}
+
+#[test]
+fn service_mapping_cache_hits_on_repeat_shapes() {
+    let mut svc = native_service(Arc::new(MappingCache::new()));
+    let reqs = vec![
+        Gemm::new("a", 64, 64, 64),
+        Gemm::new("b", 32, 96, 48),
+        Gemm::new("a2", 64, 64, 64), // same shape as "a", different name
+    ];
+    let rep = svc.serve(&reqs).unwrap();
+    assert_eq!(rep.metrics.requests, 3);
+    assert_eq!(rep.metrics.batches, 3);
+    assert_eq!(rep.metrics.mapping_cache_misses, 2);
+    assert_eq!(rep.metrics.mapping_cache_hits, 1);
+    assert_eq!(svc.mapping_cache().len(), 2);
+    // native execution is real: every result verified against reference
+    for o in &rep.outcomes {
+        assert!(o.executed, "{}", o.workload.name);
+        assert_eq!(o.verified, Some(true), "{}", o.workload.name);
+    }
+}
+
+#[test]
+fn service_instances_share_one_mapping_cache() {
+    let cache = Arc::new(MappingCache::new());
+    let reqs = vec![Gemm::new("warm", 64, 64, 64)];
+
+    let mut first = native_service(Arc::clone(&cache));
+    let r1 = first.serve(&reqs).unwrap();
+    assert_eq!(r1.metrics.mapping_cache_misses, 1);
+    assert_eq!(r1.metrics.mapping_cache_hits, 0);
+
+    // a fresh service sharing the cache skips the search entirely
+    let mut second = native_service(Arc::clone(&cache));
+    let r2 = second.serve(&reqs).unwrap();
+    assert_eq!(r2.metrics.mapping_cache_misses, 0);
+    assert_eq!(r2.metrics.mapping_cache_hits, 1);
+    assert_eq!(
+        r1.outcomes[0].mapping_name, r2.outcomes[0].mapping_name,
+        "cached mapping must be the searched mapping"
+    );
+    assert_eq!(cache.len(), 1);
+    // the cache's own counters agree with the per-service metrics
+    assert_eq!(cache.misses(), 1);
+    assert_eq!(cache.hits(), 1);
 }
 
 #[test]

@@ -1,7 +1,9 @@
-//! Integration: AOT artifacts → PJRT runtime → tiled executor.
+//! Integration: AOT artifacts → runtime backend → tiled executor.
 //!
 //! Requires `make artifacts` to have run (skips otherwise, so plain
-//! `cargo test` works in a fresh checkout).
+//! `cargo test` works in a fresh checkout). Runs against the native
+//! interpreter by default and the real PJRT client with
+//! `--features pjrt`; the raw-literal gradients test is PJRT-only.
 
 use flash_gemm::dataflow::LoopOrder;
 use flash_gemm::runtime::{default_artifacts_dir, MlpRunner, Runtime, TiledExecutor};
@@ -127,6 +129,7 @@ fn mlp_artifact_runs_and_matches_reference_chain() {
     assert_close(&logits, &expect, 1e-2);
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn training_grads_artifact_matches_reference() {
     // dA = dC·Bᵀ, dB = Aᵀ·dC — the training-path GEMMs.

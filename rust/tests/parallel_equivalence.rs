@@ -1,0 +1,110 @@
+//! The parallel FLASH search must be indistinguishable from a sequential
+//! reference scan: identical best-mapping selection key on every style,
+//! deterministic across repeated runs, and order-preserving in
+//! `keep_all` mode.
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::cost::CostModel;
+use flash_gemm::flash::{self, candidates, SearchOpts};
+use flash_gemm::workloads::Gemm;
+
+/// Sequential reference: first-wins scan over the same candidate set the
+/// parallel search evaluates, with the paper's selection key
+/// (runtime cycles, energy in pJ).
+fn sequential_best_key(acc: &Accelerator, wl: &Gemm) -> (u64, u64) {
+    let cs = candidates::enumerate(acc, wl);
+    assert!(!cs.mappings.is_empty());
+    let model = CostModel::new(acc.clone());
+    let mut best: Option<(u64, u64)> = None;
+    for m in &cs.mappings {
+        let c = model.evaluate(m, wl);
+        let key = (c.runtime_cycles(), (c.energy_j * 1e12) as u64);
+        if best.map_or(true, |b| key < b) {
+            best = Some(key);
+        }
+    }
+    best.expect("non-empty candidate set")
+}
+
+#[test]
+fn parallel_matches_sequential_on_all_styles() {
+    let wl = Gemm::by_id("VI").unwrap();
+    for style in Style::ALL {
+        let acc = Accelerator::of_style(style, HwConfig::edge());
+        let seq = sequential_best_key(&acc, &wl);
+        let par = flash::search(&acc, &wl).unwrap();
+        assert_eq!(par.best.selection_key(), seq, "{style}");
+    }
+}
+
+#[test]
+fn parallel_matches_sequential_on_skewed_shapes() {
+    // Non-square shapes stress different candidate-set sizes and
+    // tie-break paths than the Table 5 workload.
+    for (m, n, k) in [(8, 8192, 1024), (2048, 64, 32), (31, 57, 129)] {
+        let wl = Gemm::new("skew", m, n, k);
+        for style in [Style::Maeri, Style::Nvdla, Style::ShiDianNao] {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let seq = sequential_best_key(&acc, &wl);
+            let par = flash::search(&acc, &wl).unwrap();
+            assert_eq!(par.best.selection_key(), seq, "{style} {m}x{n}x{k}");
+        }
+    }
+}
+
+#[test]
+fn parallel_search_is_deterministic_across_runs() {
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::by_id("VI").unwrap();
+    let first = flash::search(&acc, &wl).unwrap();
+    for _ in 0..3 {
+        let again = flash::search(&acc, &wl).unwrap();
+        assert_eq!(again.best.mapping, first.best.mapping);
+        assert_eq!(again.best.selection_key(), first.best.selection_key());
+        assert_eq!(again.candidates, first.candidates);
+    }
+}
+
+#[test]
+fn keep_all_preserves_candidate_order() {
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::by_id("VI").unwrap();
+    let cs = candidates::enumerate(&acc, &wl);
+    let r = flash::search_with(
+        &acc,
+        &wl,
+        &SearchOpts {
+            keep_all: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(r.all.len(), cs.mappings.len());
+    for (e, m) in r.all.iter().zip(&cs.mappings) {
+        assert_eq!(&e.mapping, m, "keep_all must preserve generator order");
+    }
+}
+
+#[test]
+fn order_sweep_matches_per_order_searches() {
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let wl = Gemm::by_id("IV").unwrap();
+    let sweep = flash::search_all_orders(&acc, &wl);
+    assert_eq!(sweep.len(), 6);
+    for (order, r) in &sweep {
+        let solo = flash::search_with(
+            &acc,
+            &wl,
+            &SearchOpts {
+                order: Some(*order),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(r.best.selection_key(), solo.best.selection_key(), "{order}");
+    }
+    // the fan-out must keep the inter_orders() ordering
+    let expected: Vec<_> = acc.style.inter_orders().to_vec();
+    let got: Vec<_> = sweep.iter().map(|(o, _)| *o).collect();
+    assert_eq!(got, expected);
+}
