@@ -1,0 +1,113 @@
+//! Executor engine bench: the pre-PR serial per-tile artifact path vs
+//! the packed-panel parallel engine on one large GEMM, recorded to
+//! `BENCH_executor.json` (override the path with `BENCH_EXECUTOR_OUT`).
+//!
+//! Env knobs: `BENCH_EXEC_DIM` (default 512 → a 512³ workload),
+//! `BENCH_EXEC_TILE` (default 16), `BENCH_EXEC_ITERS` (default 3). Every
+//! path gets the same discipline — one untimed warm pass, then the best
+//! of `BENCH_EXEC_ITERS` timed passes — so the recorded speedup is not
+//! biased by cold caches on the slow side.
+
+use std::time::{Duration, Instant};
+
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
+use flash_gemm::workloads::Gemm;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn main() {
+    let dim = env_u64("BENCH_EXEC_DIM", 512);
+    let tile = env_u64("BENCH_EXEC_TILE", 16) as usize;
+    let iters = env_u64("BENCH_EXEC_ITERS", 3).max(1);
+    let out_path =
+        std::env::var("BENCH_EXECUTOR_OUT").unwrap_or_else(|_| "BENCH_executor.json".to_string());
+
+    let wl = Gemm::new("bench", dim, dim, dim);
+    let a = rand_vec((wl.m * wl.k) as usize, 0xA);
+    let b = rand_vec((wl.k * wl.n) as usize, 0xB);
+    let order = LoopOrder::MNK;
+
+    println!(
+        "bench executor: {dim}x{dim}x{dim}, tile {tile}, {} rayon threads",
+        rayon::current_num_threads()
+    );
+
+    // identical discipline on every path — one untimed warm pass, then
+    // best of `iters` timed passes — so the recorded speedup is not
+    // biased by cold caches on the slow side
+    let time_best = |f: &mut dyn FnMut() -> Vec<f32>| -> (Vec<f32>, Duration) {
+        let mut out = f(); // warm
+        let mut best = Duration::MAX;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            out = f();
+            best = best.min(t0.elapsed());
+        }
+        (out, best)
+    };
+
+    // pre-PR serial executor: per-tile artifact dispatch
+    let mut rt = Runtime::native(Manifest::synthetic(&[tile as u64]));
+    let mut legacy = TiledExecutor::new(&mut rt, tile, order).unwrap();
+    let (c_legacy, serial) = time_best(&mut || legacy.gemm_serial(&wl, &a, &b).unwrap());
+    println!(
+        "bench executor/serial-legacy: {serial:?} (best of {iters}, {} calls/pass)",
+        legacy.tile_calls / (iters + 1)
+    );
+
+    let plan = PackedGemm::new(&wl, tile, order).unwrap();
+
+    // packed engine, single-threaded (layout + zero-alloc win alone)
+    let (c_packed_serial, packed_serial) = time_best(&mut || plan.run_serial(&a, &b).unwrap());
+    println!("bench executor/packed-serial: {packed_serial:?} (best of {iters})");
+
+    // packed engine, parallel
+    let (c_parallel, parallel) = time_best(&mut || plan.run(&a, &b).unwrap());
+    println!("bench executor/packed-parallel: {parallel:?} (best of {iters})");
+
+    let bit_identical = c_parallel == c_legacy && c_packed_serial == c_legacy;
+    assert!(bit_identical, "engine outputs diverged from the serial reference");
+
+    let speedup = serial.as_secs_f64() / parallel.as_secs_f64();
+    let gflops = wl.macs() as f64 / parallel.as_secs_f64() / 1e9;
+    let tiles_per_s = plan.tile_calls() as f64 / parallel.as_secs_f64();
+    println!(
+        "bench executor/speedup: {speedup:.2}x vs serial legacy, {gflops:.2} GFLOP/s, {tiles_per_s:.0} tiles/s"
+    );
+
+    let record = serde_json::json!({
+        "workload": format!("{dim}x{dim}x{dim}"),
+        "tile": tile,
+        "threads": rayon::current_num_threads(),
+        "tile_calls": plan.tile_calls(),
+        "serial_legacy_ms": serial.as_secs_f64() * 1e3,
+        "packed_serial_ms": packed_serial.as_secs_f64() * 1e3,
+        "packed_parallel_ms": parallel.as_secs_f64() * 1e3,
+        "speedup_vs_serial": speedup,
+        "packed_serial_speedup_vs_serial": serial.as_secs_f64() / packed_serial.as_secs_f64(),
+        "gflops_parallel": gflops,
+        "tiles_per_sec_parallel": tiles_per_s,
+        "bit_identical": bit_identical,
+    });
+    std::fs::write(&out_path, serde_json::to_string_pretty(&record).unwrap())
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("bench executor: recorded {out_path}");
+}

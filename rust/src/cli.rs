@@ -1,5 +1,5 @@
 //! Hand-rolled CLI for the `repro` binary (the build image is offline,
-//! so no `clap`; see DESIGN.md §5 Substitutions).
+//! so no `clap`; see DESIGN.md §6 Substitutions).
 //!
 //! `repro <subcommand> [--key value ...]` — one subcommand per paper
 //! table/figure plus `search`, `validate` and `serve`.
@@ -334,16 +334,16 @@ fn serve(args: &Args) -> Result<String> {
     }
     let m = &report.metrics;
     out.push_str(&format!(
-        "\nrequests={} batches={} cache hit/miss={}/{} macs={} \nlatency: {}\nsearch={:?} exec={:?} exec-throughput={:.3} GFLOP/s\n",
+        "\nrequests={} batches={} cache hit/miss={}/{} macs={} tiles={}\nlatency: {}\nsearch={:?} exec: {}\n",
         m.requests,
         m.batches,
         m.mapping_cache_hits,
         m.mapping_cache_misses,
         m.macs_executed,
+        m.tile_calls,
         m.latency.summary(),
         m.search_time,
-        m.exec_time,
-        m.exec_throughput_gflops()
+        m.throughput_summary()
     ));
     Ok(out)
 }

@@ -69,20 +69,44 @@ pub struct ServiceMetrics {
     pub mapping_cache_hits: u64,
     pub mapping_cache_misses: u64,
     pub macs_executed: u64,
+    /// Tile-kernel invocations across all executed requests.
+    pub tile_calls: u64,
     pub latency: LatencyStats,
     pub search_time: Duration,
+    /// Wall-clock time spent in numeric execution. Batched same-shape
+    /// requests execute in parallel, so this is the wall time of each
+    /// batch's execution phase, not the sum of per-request times.
     pub exec_time: Duration,
 }
 
 impl ServiceMetrics {
-    /// Achieved numeric throughput over the execution time (GFLOP/s,
-    /// 1 MAC = 1 FLOP as in the paper).
+    /// Achieved numeric throughput over the execution wall time
+    /// (GFLOP/s, 1 MAC = 1 FLOP as in the paper).
     pub fn exec_throughput_gflops(&self) -> f64 {
         let secs = self.exec_time.as_secs_f64();
         if secs == 0.0 {
             return 0.0;
         }
         self.macs_executed as f64 / secs / 1e9
+    }
+
+    /// Tile-kernel invocations per second of execution wall time.
+    pub fn exec_tiles_per_sec(&self) -> f64 {
+        let secs = self.exec_time.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.tile_calls as f64 / secs
+    }
+
+    /// One-line throughput summary for reports.
+    pub fn throughput_summary(&self) -> String {
+        format!(
+            "{:.3} GFLOP/s, {:.0} tiles/s over {:?} exec",
+            self.exec_throughput_gflops(),
+            self.exec_tiles_per_sec(),
+            self.exec_time
+        )
     }
 }
 
@@ -113,9 +137,18 @@ mod tests {
 
     #[test]
     fn throughput_accounting() {
-        let mut m = ServiceMetrics::default();
-        m.macs_executed = 2_000_000_000;
-        m.exec_time = Duration::from_secs(2);
+        let m = ServiceMetrics {
+            macs_executed: 2_000_000_000,
+            tile_calls: 500,
+            exec_time: Duration::from_secs(2),
+            ..Default::default()
+        };
         assert!((m.exec_throughput_gflops() - 1.0).abs() < 1e-9);
+        assert!((m.exec_tiles_per_sec() - 250.0).abs() < 1e-9);
+        assert!(m.throughput_summary().contains("tiles/s"));
+        // zero exec time must not divide by zero
+        let z = ServiceMetrics::default();
+        assert_eq!(z.exec_throughput_gflops(), 0.0);
+        assert_eq!(z.exec_tiles_per_sec(), 0.0);
     }
 }

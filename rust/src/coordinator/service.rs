@@ -9,19 +9,23 @@
 //!    projected cost is attached to the response. A shape-keyed
 //!    [`MappingCache`] (shareable across service instances via `Arc`)
 //!    lets repeat-shape traffic skip the search entirely.
-//! 3. **Execution** — the tiled executor drives the AOT Pallas tile
-//!    kernel over the mapping's loop order (natively interpreted or via
-//!    PJRT, see `crate::runtime`), producing real numbers; results are
-//!    checked against a Rust reference GEMM when `verify` is set.
+//! 3. **Execution** — on the native backend the whole batch fans over
+//!    rayon: one shared [`PackedGemm`] plan per shape, then operand
+//!    generation, packed-panel parallel execution, and verification each
+//!    run data-parallel across the batch (each GEMM is itself
+//!    tile-parallel; rayon nests both levels under one pool). Under
+//!    `--features pjrt` the per-request serial artifact path runs
+//!    instead, so the real compiled kernel is still what executes.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
+use rayon::prelude::*;
 
 use crate::arch::Accelerator;
-use crate::flash::MappingCache;
-use crate::runtime::{Runtime, TiledExecutor};
+use crate::flash::{EvaluatedMapping, MappingCache};
+use crate::runtime::{PackedGemm, Runtime, TiledExecutor};
 use crate::workloads::Gemm;
 
 use super::metrics::ServiceMetrics;
@@ -134,8 +138,15 @@ impl GemmService {
         c
     }
 
+    fn close(c: &[f32], r: &[f32]) -> bool {
+        c.iter()
+            .zip(r)
+            .all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + y.abs()))
+    }
+
     /// Serve a trace of requests; batches consecutive same-shape
-    /// requests (one cached search per distinct shape).
+    /// requests (one cached search per distinct shape, one parallel
+    /// execution fan-out per batch).
     pub fn serve(&mut self, requests: &[Gemm]) -> Result<ServiceReport> {
         let mut metrics = ServiceMetrics::default();
         let mut outcomes = Vec::with_capacity(requests.len());
@@ -164,50 +175,169 @@ impl GemmService {
                 metrics.mapping_cache_misses += 1;
                 metrics.search_time += t0.elapsed();
             }
-            let mapping_name = best.mapping.name();
-            let projected_ms = best.cost.runtime_ms();
-            let order = best.mapping.inter_order;
 
-            for (b, wl) in requests[i..j].iter().enumerate() {
-                let t0 = Instant::now();
-                let can_exec = wl.m.max(wl.n).max(wl.k) <= self.config.max_exec_dim;
-                let mut verified = None;
-                if can_exec {
-                    let (a, bm) = Self::operands(wl, 0x5EED + i as u64 + b as u64);
-                    let tile = if self.config.tile > 0 {
-                        self.config.tile
-                    } else {
-                        TiledExecutor::auto_tile(&self.runtime, wl)
-                    };
-                    let te0 = Instant::now();
-                    let mut exec = TiledExecutor::new(&mut self.runtime, tile as usize, order)?;
-                    let c = exec.gemm(wl, &a, &bm)?;
-                    metrics.exec_time += te0.elapsed();
-                    metrics.macs_executed += wl.macs();
-                    if self.config.verify {
-                        let r = Self::reference_gemm(wl, &a, &bm);
-                        let ok = c.iter().zip(&r).all(|(x, y)| {
-                            (x - y).abs() <= 1e-3 * (1.0 + y.abs())
-                        });
-                        verified = Some(ok);
-                    }
+            let batch = &requests[i..j];
+            let can_exec = shape.0.max(shape.1).max(shape.2) <= self.config.max_exec_dim;
+            if !can_exec {
+                // search-only responses
+                for wl in batch {
+                    let latency = Duration::ZERO;
+                    metrics.latency.record(latency);
+                    metrics.requests += 1;
+                    outcomes.push(RequestOutcome {
+                        workload: wl.clone(),
+                        mapping_name: best.mapping.name(),
+                        projected_ms: best.cost.runtime_ms(),
+                        executed: false,
+                        verified: None,
+                        latency_us: latency.as_micros() as u64,
+                    });
                 }
-                let latency = t0.elapsed();
-                metrics.latency.record(latency);
-                metrics.requests += 1;
-                outcomes.push(RequestOutcome {
-                    workload: wl.clone(),
-                    mapping_name: mapping_name.clone(),
-                    projected_ms,
-                    executed: can_exec,
-                    verified,
-                    latency_us: latency.as_micros() as u64,
-                });
+                i = j;
+                continue;
+            }
+
+            let tile = if self.config.tile > 0 {
+                self.config.tile
+            } else {
+                TiledExecutor::auto_tile(&self.runtime, &requests[i])
+            };
+            if self.runtime.is_native() {
+                self.run_batch_packed(batch, i, tile, &best, &mut metrics, &mut outcomes)?;
+            } else {
+                self.run_batch_serial(batch, i, tile, &best, &mut metrics, &mut outcomes)?;
             }
             i = j;
         }
 
         Ok(ServiceReport { outcomes, metrics })
+    }
+
+    /// Execute one same-shape batch through the packed parallel engine.
+    /// Operand generation, execution, and verification each fan over
+    /// rayon; `exec_time` accounts the wall clock of the execution
+    /// phases only, so the throughput counters reflect what the engine
+    /// actually sustained. The batch is processed in bounded chunks (a
+    /// few requests per worker thread) so memory stays O(chunk), not
+    /// O(batch) — a 10k-request same-shape trace must not hold 10k
+    /// operand sets alive at once.
+    fn run_batch_packed(
+        &mut self,
+        batch: &[Gemm],
+        batch_start: usize,
+        tile: u64,
+        best: &EvaluatedMapping,
+        metrics: &mut ServiceMetrics,
+        outcomes: &mut Vec<RequestOutcome>,
+    ) -> Result<()> {
+        // tile artifact must exist, exactly as the per-tile path demands
+        self.runtime.warm(&format!("gemm_tile_{tile}"))?;
+        let plan = PackedGemm::new(&batch[0], tile as usize, best.mapping.inter_order)?;
+        let calls = plan.tile_calls();
+        let chunk_len = rayon::current_num_threads().max(1) * 4;
+
+        for (ci, chunk) in batch.chunks(chunk_len).enumerate() {
+            let chunk_start = ci * chunk_len;
+
+            // phase 1: deterministic operands (seeds match the serial path)
+            let inputs: Vec<(Vec<f32>, Vec<f32>, Duration)> = chunk
+                .par_iter()
+                .enumerate()
+                .map(|(b, wl)| {
+                    let t0 = Instant::now();
+                    let seed = 0x5EED + (batch_start + chunk_start + b) as u64;
+                    let (a, bm) = Self::operands(wl, seed);
+                    (a, bm, t0.elapsed())
+                })
+                .collect();
+
+            // phase 2: packed-panel parallel execution
+            let te0 = Instant::now();
+            let execs: Vec<(Vec<f32>, Duration)> = inputs
+                .par_iter()
+                .map(|(a, bm, _)| {
+                    let t0 = Instant::now();
+                    plan.run(a, bm).map(|c| (c, t0.elapsed()))
+                })
+                .collect::<Result<_>>()?;
+            metrics.exec_time += te0.elapsed();
+
+            // phase 3: verification against the reference GEMM
+            let checks: Vec<(Option<bool>, Duration)> = if self.config.verify {
+                inputs
+                    .par_iter()
+                    .zip(&execs)
+                    .enumerate()
+                    .map(|(b, ((a, bm, _), (c, _)))| {
+                        let t0 = Instant::now();
+                        let r = Self::reference_gemm(&chunk[b], a, bm);
+                        (Some(Self::close(c, &r)), t0.elapsed())
+                    })
+                    .collect()
+            } else {
+                vec![(None, Duration::ZERO); chunk.len()]
+            };
+
+            self.runtime.note_executions(calls * chunk.len() as u64);
+            for (b, wl) in chunk.iter().enumerate() {
+                let latency = inputs[b].2 + execs[b].1 + checks[b].1;
+                metrics.latency.record(latency);
+                metrics.requests += 1;
+                metrics.macs_executed += wl.macs();
+                metrics.tile_calls += calls;
+                outcomes.push(RequestOutcome {
+                    workload: wl.clone(),
+                    mapping_name: best.mapping.name(),
+                    projected_ms: best.cost.runtime_ms(),
+                    executed: true,
+                    verified: checks[b].0,
+                    latency_us: latency.as_micros() as u64,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one same-shape batch request-by-request through the
+    /// per-tile artifact path (`--features pjrt`, or any non-native
+    /// backend): the real compiled kernel runs once per grid point.
+    fn run_batch_serial(
+        &mut self,
+        batch: &[Gemm],
+        batch_start: usize,
+        tile: u64,
+        best: &EvaluatedMapping,
+        metrics: &mut ServiceMetrics,
+        outcomes: &mut Vec<RequestOutcome>,
+    ) -> Result<()> {
+        for (b, wl) in batch.iter().enumerate() {
+            let t0 = Instant::now();
+            let (a, bm) = Self::operands(wl, 0x5EED + batch_start as u64 + b as u64);
+            let te0 = Instant::now();
+            let mut exec =
+                TiledExecutor::new(&mut self.runtime, tile as usize, best.mapping.inter_order)?;
+            let c = exec.gemm(wl, &a, &bm)?;
+            metrics.tile_calls += exec.tile_calls;
+            metrics.exec_time += te0.elapsed();
+            metrics.macs_executed += wl.macs();
+            let mut verified = None;
+            if self.config.verify {
+                let r = Self::reference_gemm(wl, &a, &bm);
+                verified = Some(Self::close(&c, &r));
+            }
+            let latency = t0.elapsed();
+            metrics.latency.record(latency);
+            metrics.requests += 1;
+            outcomes.push(RequestOutcome {
+                workload: wl.clone(),
+                mapping_name: best.mapping.name(),
+                projected_ms: best.cost.runtime_ms(),
+                executed: true,
+                verified,
+                latency_us: latency.as_micros() as u64,
+            });
+        }
+        Ok(())
     }
 
     pub fn runtime(&self) -> &Runtime {

@@ -99,7 +99,7 @@ impl MappingCache {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.read().expect("mapping cache lock").is_empty()
     }
 }
 

@@ -48,14 +48,28 @@ pub struct EvaluatedMapping {
     pub cost: Cost,
 }
 
+/// Order-preserving bit key for an `f64`: maps any float to a `u64`
+/// whose unsigned order equals [`f64::total_cmp`] order. The previous
+/// energy tie-break, `(energy_j * 1e12) as u64`, silently saturated
+/// above ~1.8e7 J (every large-energy mapping compared equal) and
+/// truncated sub-picojoule differences — both corrupt the deterministic
+/// tie-break the parallel min-reduction relies on.
+fn f64_order_key(x: f64) -> u64 {
+    let bits = x.to_bits() as i64;
+    // flip all non-sign bits of negative floats so the integer order
+    // matches the numeric order, then rebase to unsigned
+    ((bits ^ (((bits >> 63) as u64) >> 1) as i64) as u64) ^ (1 << 63)
+}
+
 impl EvaluatedMapping {
-    /// Selection key: lowest projected runtime, energy (in pJ) as the
-    /// tie-break (§5.2: "selects the best mapping based on the lowest
-    /// projected runtime").
+    /// Selection key: lowest projected runtime, energy as the tie-break
+    /// (§5.2: "selects the best mapping based on the lowest projected
+    /// runtime"). The energy component is a total-order bit key, not a
+    /// scaled integer cast, so it never saturates or collapses ties.
     pub fn selection_key(&self) -> (u64, u64) {
         (
             self.cost.runtime_cycles(),
-            (self.cost.energy_j * 1e12) as u64,
+            f64_order_key(self.cost.energy_j),
         )
     }
 }
@@ -323,5 +337,36 @@ mod tests {
         let opts = SearchOpts::default();
         assert!(!opts.keep_all);
         assert!(opts.order.is_none());
+    }
+
+    #[test]
+    fn energy_order_key_is_total_and_saturation_free() {
+        // strictly increasing across magnitudes the old pJ cast broke:
+        // 2e7 J and 3e7 J both saturated u64, 1e-13 J truncated to 0 pJ
+        let seq = [
+            0.0,
+            1.0e-13,
+            2.0e-13,
+            1.0e-12,
+            1.0,
+            2.0e7,
+            3.0e7,
+            1.0e30,
+            2.0e30,
+            f64::INFINITY,
+        ];
+        for w in seq.windows(2) {
+            assert!(
+                f64_order_key(w[0]) < f64_order_key(w[1]),
+                "{} !< {}",
+                w[0],
+                w[1]
+            );
+        }
+        // matches total_cmp on negatives too (defensive: energies are
+        // non-negative, but the key must stay a total order)
+        assert!(f64_order_key(-1.0) < f64_order_key(-0.5));
+        assert!(f64_order_key(-0.5) < f64_order_key(0.0));
+        assert!(f64_order_key(f64::NEG_INFINITY) < f64_order_key(f64::MIN));
     }
 }

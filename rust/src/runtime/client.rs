@@ -74,6 +74,25 @@ impl Runtime {
         &self.manifest
     }
 
+    /// True when execution goes through the built-in native interpreter.
+    /// The packed-panel engine (`runtime::PackedGemm`) short-circuits
+    /// per-tile artifact dispatch in that case; PJRT keeps the per-call
+    /// path so the real compiled kernel still runs.
+    pub fn is_native(&self) -> bool {
+        match &self.backend {
+            Backend::Native => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
+    /// Account `n` kernel-equivalent executions performed outside
+    /// [`Runtime::run_f32`]. The packed engine runs tile FMAs in-process
+    /// without per-call dispatch; this keeps the perf counters truthful.
+    pub fn note_executions(&mut self, n: u64) {
+        self.executions += n;
+    }
+
     /// Backend platform name (`native-cpu` or the PJRT platform).
     pub fn platform(&self) -> String {
         match &self.backend {
@@ -177,17 +196,67 @@ impl std::fmt::Debug for Runtime {
     }
 }
 
-/// Row-major f32 GEMM used by the native interpreter.
+/// `c[j] += x · b[j]` — the axpy inner loop of every GEMM path here.
+/// The body is split into exact 8-lanes (`chunks_exact`) so LLVM can
+/// prove the trip count and emit packed FMA SIMD without a tail branch
+/// in the hot body. Element order is unchanged: each `c[j]` receives
+/// exactly one fused `+= x*b[j]`, so results are bit-identical to the
+/// naive loop.
+#[inline(always)]
+pub(crate) fn axpy(c: &mut [f32], x: f32, b: &[f32]) {
+    let n = c.len().min(b.len());
+    let split = n - n % 8;
+    let (c_body, c_tail) = c[..n].split_at_mut(split);
+    let (b_body, b_tail) = b[..n].split_at(split);
+    for (cc, bb) in c_body.chunks_exact_mut(8).zip(b_body.chunks_exact(8)) {
+        for (cv, bv) in cc.iter_mut().zip(bb) {
+            *cv += x * *bv;
+        }
+    }
+    for (cv, bv) in c_tail.iter_mut().zip(b_tail) {
+        *cv += x * *bv;
+    }
+}
+
+/// `c += A · B` for one t×t block pair in the interpreter's row-major
+/// layout (both operands row-major, `c` accumulated in place). Per
+/// element, products are added in ascending-k order — the canonical
+/// accumulation order every other kernel here must match.
+#[inline]
+pub(crate) fn tile_fma_rowmajor(c: &mut [f32], a: &[f32], b: &[f32], t: usize) {
+    for (crow, arow) in c.chunks_exact_mut(t).zip(a.chunks_exact(t)) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(t)) {
+            axpy(crow, av, brow);
+        }
+    }
+}
+
+/// `c += A · B` for one packed t×t block pair: `a` is k-major (the
+/// packed A-panel layout — block column `kk` is contiguous) and `b` is
+/// row-major, so each rank-1 update of the k-outer loop streams both
+/// operands sequentially. Per element, products accumulate in
+/// ascending-k order — bit-identical to [`tile_fma_rowmajor`].
+#[inline]
+pub(crate) fn tile_fma_kmajor(c: &mut [f32], a_kmajor: &[f32], b: &[f32], t: usize) {
+    for (acol, brow) in a_kmajor.chunks_exact(t).zip(b.chunks_exact(t)) {
+        for (crow, &av) in c.chunks_exact_mut(t).zip(acol) {
+            axpy(crow, av, brow);
+        }
+    }
+}
+
+/// Row-major f32 GEMM used by the native interpreter. Same i/k/j loop
+/// nest (and therefore bit-identical results) as before, with the inner
+/// loop routed through the vectorization-friendly [`axpy`].
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     let mut c = vec![0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            let crow = &mut c[i * n..(i + 1) * n];
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
+    debug_assert!(a.len() == m * k && b.len() == k * n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+    for (crow, arow) in c.chunks_exact_mut(n).zip(a.chunks_exact(k)) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+            axpy(crow, av, brow);
         }
     }
     c
@@ -205,13 +274,17 @@ fn native_run_f32(name: &str, args: &[(&[f32], [u64; 2])]) -> Result<Vec<f32>> {
         if args.len() != 3 {
             bail!("{name}: tile kernel takes acc, A, B (got {} args)", args.len());
         }
+        if t == 0 {
+            bail!("{name}: tile size must be positive");
+        }
         let (acc, a, b) = (args[0].0, args[1].0, args[2].0);
         for (i, x) in [acc, a, b].iter().enumerate() {
             if x.len() != t * t {
                 bail!("{name}: arg {i} len {} != {}", x.len(), t * t);
             }
         }
-        let mut c = matmul(a, b, t, t, t);
+        let mut c = vec![0f32; t * t];
+        tile_fma_rowmajor(&mut c, a, b, t);
         for (ci, &av) in c.iter_mut().zip(acc) {
             *ci += av;
         }
@@ -385,6 +458,51 @@ mod tests {
         assert!(native_run_f32("gemm_tile_x", &[(&[], [0, 0]); 3]).is_err());
         let a = [0.0f32; 3];
         assert!(native_run_f32("gemm_tile_2", &[(&a, [2, 2]); 3]).is_err());
+    }
+
+    #[test]
+    fn axpy_covers_body_and_tail() {
+        // length 11 = one exact 8-lane + a 3-wide tail
+        let mut c = vec![1.0f32; 11];
+        let b: Vec<f32> = (0..11).map(|i| i as f32).collect();
+        axpy(&mut c, 2.0, &b);
+        for (j, v) in c.iter().enumerate() {
+            assert_eq!(*v, 1.0 + 2.0 * j as f32);
+        }
+    }
+
+    #[test]
+    fn kmajor_kernel_matches_rowmajor_bit_for_bit() {
+        let t = 5usize;
+        let mut s = 77u64;
+        let mut rand = || {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        };
+        let a: Vec<f32> = (0..t * t).map(|_| rand()).collect();
+        let b: Vec<f32> = (0..t * t).map(|_| rand()).collect();
+        // transpose a into k-major
+        let mut a_km = vec![0f32; t * t];
+        for r in 0..t {
+            for kk in 0..t {
+                a_km[kk * t + r] = a[r * t + kk];
+            }
+        }
+        let mut c_row = vec![0f32; t * t];
+        tile_fma_rowmajor(&mut c_row, &a, &b, t);
+        let mut c_km = vec![0f32; t * t];
+        tile_fma_kmajor(&mut c_km, &a_km, &b, t);
+        assert_eq!(c_row, c_km, "per-element accumulation order must agree");
+    }
+
+    #[test]
+    fn native_backend_is_native_and_notes_executions() {
+        let mut rt = Runtime::native(Manifest::synthetic(&[2]));
+        assert!(rt.is_native());
+        rt.note_executions(5);
+        assert_eq!(rt.executions, 5);
     }
 
     #[test]

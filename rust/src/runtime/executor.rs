@@ -1,20 +1,311 @@
-//! The tiled GEMM executor: L3 drives the L1 kernel artifact over the
-//! FLASH-selected outer schedule.
+//! The tiled GEMM execution engine: L3 drives the L1 tile-kernel
+//! contract over the FLASH-selected outer schedule.
 //!
-//! `gemm_tile_{t}` computes `acc + A_tile · B_tile` for t×t f32 tiles
-//! (the Pallas kernel's FMA unit). The executor pads the operands to
-//! tile multiples, walks the (m, n, k) tile grid in the mapping's
-//! inter-cluster loop order, and accumulates C — the functional mirror
-//! of the accelerator time-multiplexing its PE array over outer tiles.
+//! Two paths implement the same semantics:
+//!
+//! * [`PackedGemm`] — the zero-allocation, data-parallel engine (native
+//!   backend). Operands are packed once per GEMM into panels (A into
+//!   row-panels with k-major t×t blocks, B into column-panels with
+//!   row-major blocks), C lives in one flat arena of t×t tiles laid out
+//!   in the mapping's walk order, and the independent output tiles fan
+//!   over rayon with the k-loop kept innermost per tile. The hot loop
+//!   performs no heap allocation: per-thread tile scratch is reused
+//!   across every kernel call (asserted by `tests/executor_zero_alloc`).
+//! * [`TiledExecutor::gemm_serial`] — the per-tile artifact path: pad,
+//!   extract t×t tiles, and invoke the `gemm_tile_{t}` artifact through
+//!   [`Runtime::run_f32`] for every (i, j, k) grid point. This is the
+//!   bit-identity reference for the packed engine and the only path that
+//!   exercises a real PJRT kernel under `--features pjrt`.
+//!
+//! **Determinism.** Output tiles (i, j) are independent; within one tile
+//! the k-blocks are reduced in ascending order with each block product
+//! formed in scratch before being added to the accumulator — exactly the
+//! `acc + A·B` contract of the tile artifact. Every per-element addition
+//! therefore happens in the same order as the serial walk, so the
+//! parallel engine is bit-identical to [`TiledExecutor::gemm_serial`]
+//! for every loop order, thread count, and schedule
+//! (`tests/executor_engine.rs`).
 
-use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{anyhow, ensure, Result};
+use rayon::prelude::*;
 
 use crate::dataflow::{Dim, LoopOrder};
 use crate::workloads::Gemm;
 
-use super::client::Runtime;
+use super::client::{self, Runtime};
 
-/// Pad a row-major `rows×cols` matrix to `prows×pcols`.
+thread_local! {
+    /// Per-thread reusable tile scratch: one t×t block product lives
+    /// here between the micro-kernel and the accumulator add. Grown (at
+    /// most once per thread per tile size) at plan-creation time, never
+    /// in the hot loop.
+    static TILE_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's tile scratch, grown to `tt` elements.
+fn with_scratch<R>(tt: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    TILE_SCRATCH.with(|s| {
+        let mut v = s.borrow_mut();
+        if v.len() < tt {
+            v.resize(tt, 0.0);
+        }
+        f(&mut v[..tt])
+    })
+}
+
+/// Largest tile-scratch size already broadcast to the rayon pool, so
+/// repeated plan creation skips the pool-wide barrier.
+static WARMED_TT: AtomicUsize = AtomicUsize::new(0);
+
+/// Pre-size the tile scratch on the current thread and (when called from
+/// outside the pool, the first time a size this large is seen) on every
+/// rayon worker, so the parallel walk starts with warm arenas and the
+/// hot loop never allocates. `rayon::broadcast` is a pool-wide
+/// synchronization, so it must not run per GEMM: the high-water mark
+/// memoizes it per process. Threads spawned after a warm-up (or a plan
+/// built from inside the pool) still grow their scratch lazily in
+/// `with_scratch` — one bounded allocation per thread per size, never
+/// per tile call.
+fn warm_scratch(tt: usize) {
+    with_scratch(tt, |_| {});
+    if rayon::current_thread_index().is_none() && WARMED_TT.fetch_max(tt, Ordering::Relaxed) < tt
+    {
+        rayon::broadcast(|_| with_scratch(tt, |_| {}));
+    }
+}
+
+/// Operands packed into panels for one [`PackedGemm`] plan.
+///
+/// * `a_panels`: `gm × gk` t×t blocks; block (i, kk) starts at
+///   `(i·gk + kk)·t²`, stored k-major (block column contiguous), so the
+///   k-loop of output-tile row `i` streams one contiguous row-panel.
+/// * `b_panels`: `gn × gk` t×t blocks; block (kk, j) starts at
+///   `(j·gk + kk)·t²`, stored row-major, so the k-loop of output-tile
+///   column `j` streams one contiguous column-panel.
+///
+/// Padding to tile multiples happens during the pack (zero fill); there
+/// is no separate padded copy of either operand.
+#[derive(Debug, Clone)]
+pub struct PackedOperands {
+    a_panels: Vec<f32>,
+    b_panels: Vec<f32>,
+}
+
+/// An execution plan for one GEMM shape: tile size, grid geometry, and
+/// the mapping-ordered walk of output tiles. Pure data — independent of
+/// any [`Runtime`] — so one plan is shared across a whole same-shape
+/// batch and across threads.
+#[derive(Debug, Clone)]
+pub struct PackedGemm {
+    m: usize,
+    n: usize,
+    k: usize,
+    t: usize,
+    gm: usize,
+    gn: usize,
+    gk: usize,
+    /// Output tiles (i, j) in the mapping's inter-cluster loop order
+    /// with K removed — K is the innermost, per-tile reduction loop.
+    walk: Vec<(u32, u32)>,
+}
+
+impl PackedGemm {
+    /// Build a plan for `wl` with square tile `tile`, walking output
+    /// tiles in the (i, j) sub-order of the mapping's `order`.
+    pub fn new(wl: &Gemm, tile: usize, order: LoopOrder) -> Result<Self> {
+        ensure!(tile > 0, "tile size must be positive");
+        let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
+        ensure!(m > 0 && n > 0 && k > 0, "degenerate workload {wl}");
+        let (gm, gn, gk) = (m.div_ceil(tile), n.div_ceil(tile), k.div_ceil(tile));
+        let m_outer = order
+            .0
+            .iter()
+            .find(|&&d| d != Dim::K)
+            .copied()
+            .expect("loop order has a non-K dim")
+            == Dim::M;
+        let mut walk = Vec::with_capacity(gm * gn);
+        let (outer, inner) = if m_outer { (gm, gn) } else { (gn, gm) };
+        for x in 0..outer {
+            for y in 0..inner {
+                let (i, j) = if m_outer { (x, y) } else { (y, x) };
+                walk.push((i as u32, j as u32));
+            }
+        }
+        warm_scratch(tile * tile);
+        Ok(PackedGemm {
+            m,
+            n,
+            k,
+            t: tile,
+            gm,
+            gn,
+            gk,
+            walk,
+        })
+    }
+
+    /// Square tile size t.
+    pub fn tile(&self) -> usize {
+        self.t
+    }
+
+    /// Tile-grid geometry (gm, gn, gk).
+    pub fn grid(&self) -> (usize, usize, usize) {
+        (self.gm, self.gn, self.gk)
+    }
+
+    /// Tile-kernel invocations one execution performs.
+    pub fn tile_calls(&self) -> u64 {
+        (self.gm * self.gn * self.gk) as u64
+    }
+
+    /// Length of the flat C-tile arena ([`PackedGemm::execute_into`]).
+    pub fn c_tiles_len(&self) -> usize {
+        self.gm * self.gn * self.t * self.t
+    }
+
+    /// Pack operands into panels (the only allocation site of a GEMM
+    /// besides the result buffers).
+    pub fn pack(&self, a: &[f32], b: &[f32]) -> Result<PackedOperands> {
+        ensure!(a.len() == self.m * self.k, "A len {} != {}", a.len(), self.m * self.k);
+        ensure!(b.len() == self.k * self.n, "B len {} != {}", b.len(), self.k * self.n);
+        let (t, tt) = (self.t, self.t * self.t);
+
+        // A row-panels, k-major blocks.
+        let mut a_panels = vec![0f32; self.gm * self.gk * tt];
+        for bi in 0..self.gm {
+            let rows = t.min(self.m - bi * t);
+            for bk in 0..self.gk {
+                let cols = t.min(self.k - bk * t);
+                let base = (bi * self.gk + bk) * tt;
+                for r in 0..rows {
+                    let src = &a[(bi * t + r) * self.k + bk * t..][..cols];
+                    for (kl, &v) in src.iter().enumerate() {
+                        a_panels[base + kl * t + r] = v;
+                    }
+                }
+            }
+        }
+
+        // B column-panels, row-major blocks.
+        let mut b_panels = vec![0f32; self.gn * self.gk * tt];
+        for bj in 0..self.gn {
+            let cols = t.min(self.n - bj * t);
+            for bk in 0..self.gk {
+                let rows = t.min(self.k - bk * t);
+                let base = (bj * self.gk + bk) * tt;
+                for r in 0..rows {
+                    let src = &b[(bk * t + r) * self.n + bj * t..][..cols];
+                    b_panels[base + r * t..base + r * t + cols].copy_from_slice(src);
+                }
+            }
+        }
+
+        Ok(PackedOperands { a_panels, b_panels })
+    }
+
+    /// Accumulate output tile (i, j): reduce its gk k-blocks in
+    /// ascending order. Each block product is formed in `scratch` and
+    /// then added to the tile — the `acc + A·B` artifact contract —
+    /// which is what makes the result bit-identical to the serial
+    /// per-tile path. Zero heap allocation.
+    fn accumulate_tile(
+        &self,
+        ops: &PackedOperands,
+        ctile: &mut [f32],
+        scratch: &mut [f32],
+        i: usize,
+        j: usize,
+    ) {
+        let tt = self.t * self.t;
+        let a_panel = &ops.a_panels[i * self.gk * tt..(i + 1) * self.gk * tt];
+        let b_panel = &ops.b_panels[j * self.gk * tt..(j + 1) * self.gk * tt];
+        for (a_blk, b_blk) in a_panel.chunks_exact(tt).zip(b_panel.chunks_exact(tt)) {
+            scratch.fill(0.0);
+            client::tile_fma_kmajor(scratch, a_blk, b_blk, self.t);
+            for (cv, &sv) in ctile.iter_mut().zip(scratch.iter()) {
+                *cv += sv;
+            }
+        }
+    }
+
+    /// The parallel hot loop: fan the walk-ordered C-tile arena over
+    /// rayon (each chunk of the walk stays in mapping order within its
+    /// thread). `c_tiles` must be `c_tiles_len()` long and holds the
+    /// accumulator (zero it for a plain product). No heap allocation.
+    pub fn execute_into(&self, ops: &PackedOperands, c_tiles: &mut [f32]) {
+        let tt = self.t * self.t;
+        assert_eq!(c_tiles.len(), self.c_tiles_len(), "C-tile arena length");
+        c_tiles
+            .par_chunks_mut(tt)
+            .zip_eq(self.walk.par_iter())
+            .for_each(|(ctile, &(i, j))| {
+                with_scratch(tt, |scratch| {
+                    self.accumulate_tile(ops, ctile, scratch, i as usize, j as usize)
+                })
+            });
+    }
+
+    /// Single-threaded hot loop with identical semantics (and identical
+    /// bits) to [`PackedGemm::execute_into`]. No heap allocation —
+    /// `tests/executor_zero_alloc.rs` counts.
+    pub fn execute_serial_into(&self, ops: &PackedOperands, c_tiles: &mut [f32]) {
+        let tt = self.t * self.t;
+        assert_eq!(c_tiles.len(), self.c_tiles_len(), "C-tile arena length");
+        with_scratch(tt, |scratch| {
+            for (ctile, &(i, j)) in c_tiles.chunks_exact_mut(tt).zip(&self.walk) {
+                self.accumulate_tile(ops, ctile, scratch, i as usize, j as usize);
+            }
+        });
+    }
+
+    /// Scatter the walk-ordered C-tile arena into the unpadded row-major
+    /// `m×n` result.
+    pub fn unpack_into(&self, c_tiles: &[f32], c: &mut [f32]) {
+        let (t, tt) = (self.t, self.t * self.t);
+        assert_eq!(c.len(), self.m * self.n, "C length");
+        for (tile, &(i, j)) in c_tiles.chunks_exact(tt).zip(&self.walk) {
+            let (i, j) = (i as usize, j as usize);
+            let rows = t.min(self.m - i * t);
+            let cols = t.min(self.n - j * t);
+            for (r, trow) in tile.chunks_exact(t).take(rows).enumerate() {
+                c[(i * t + r) * self.n + j * t..][..cols].copy_from_slice(&trow[..cols]);
+            }
+        }
+    }
+
+    /// Parallel execution over pre-packed operands.
+    pub fn execute(&self, ops: &PackedOperands) -> Vec<f32> {
+        let mut c_tiles = vec![0f32; self.c_tiles_len()];
+        self.execute_into(ops, &mut c_tiles);
+        let mut c = vec![0f32; self.m * self.n];
+        self.unpack_into(&c_tiles, &mut c);
+        c
+    }
+
+    /// Pack + parallel execute + unpack: `A · B` for row-major f32.
+    pub fn run(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let ops = self.pack(a, b)?;
+        Ok(self.execute(&ops))
+    }
+
+    /// Pack + serial execute + unpack (bit-identical to [`PackedGemm::run`]).
+    pub fn run_serial(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let ops = self.pack(a, b)?;
+        let mut c_tiles = vec![0f32; self.c_tiles_len()];
+        self.execute_serial_into(&ops, &mut c_tiles);
+        let mut c = vec![0f32; self.m * self.n];
+        self.unpack_into(&c_tiles, &mut c);
+        Ok(c)
+    }
+}
+
+/// Pad a row-major `rows×cols` matrix to `prows×pcols` (serial artifact
+/// path only — the packed engine pads during the pack).
 fn pad(m: &[f32], rows: usize, cols: usize, prows: usize, pcols: usize) -> Vec<f32> {
     let mut out = vec![0f32; prows * pcols];
     for r in 0..rows {
@@ -24,7 +315,7 @@ fn pad(m: &[f32], rows: usize, cols: usize, prows: usize, pcols: usize) -> Vec<f
 }
 
 /// Extract the t×t tile at (tile row `i`, tile col `j`) of a padded
-/// matrix with `pcols` columns.
+/// matrix with `pcols` columns (serial artifact path only).
 fn tile(m: &[f32], pcols: usize, i: usize, j: usize, t: usize, out: &mut Vec<f32>) {
     out.clear();
     for r in 0..t {
@@ -33,26 +324,31 @@ fn tile(m: &[f32], pcols: usize, i: usize, j: usize, t: usize, out: &mut Vec<f32
     }
 }
 
-/// Tiled GEMM over the PJRT tile artifact.
+/// Tiled GEMM over the tile artifact: the packed parallel engine on the
+/// native backend, the per-tile artifact path on PJRT.
 pub struct TiledExecutor<'r> {
     runtime: &'r mut Runtime,
     /// Square tile size t (must have a `gemm_tile_{t}` artifact).
     pub tile: usize,
     /// Tile-grid traversal order (from the FLASH mapping).
     pub order: LoopOrder,
-    /// Kernel invocations performed.
+    /// Kernel invocations performed (packed-engine FMAs included).
     pub tile_calls: u64,
 }
 
 impl<'r> TiledExecutor<'r> {
-    /// Pick the largest available tile not exceeding the workload dims.
+    /// Pick the largest available tile that does not exceed the smallest
+    /// workload dimension (falling back to the smallest artifact when
+    /// even that is too big). A tile larger than `min(M, N, K)` only
+    /// inflates padding and wasted FMAs — it can never reduce the tile
+    /// count below 1 in the short dimension.
     pub fn auto_tile(runtime: &Runtime, wl: &Gemm) -> u64 {
         let dims_min = wl.m.min(wl.n).min(wl.k);
         let sizes = runtime.manifest().tile_sizes();
         sizes
             .iter()
             .rev()
-            .find(|&&t| t <= dims_min.next_power_of_two())
+            .find(|&&t| t <= dims_min)
             .copied()
             .or_else(|| sizes.first().copied())
             .unwrap_or(16)
@@ -75,11 +371,29 @@ impl<'r> TiledExecutor<'r> {
         })
     }
 
-    /// Compute `A · B` (row-major f32) through the tile artifact.
+    /// Compute `A · B` (row-major f32) through the tile-kernel contract:
+    /// the packed parallel engine on the native backend, the per-tile
+    /// artifact dispatch otherwise. Both produce bit-identical results.
     pub fn gemm(&mut self, wl: &Gemm, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        if !self.runtime.is_native() {
+            return self.gemm_serial(wl, a, b);
+        }
+        let plan = PackedGemm::new(wl, self.tile, self.order)?;
+        let c = plan.run(a, b)?;
+        self.tile_calls += plan.tile_calls();
+        self.runtime.note_executions(plan.tile_calls());
+        Ok(c)
+    }
+
+    /// The serial per-tile artifact path: pad the operands, walk the
+    /// (m, n, k) tile grid in the mapping's inter-cluster loop order,
+    /// and invoke the `gemm_tile_{t}` artifact per grid point. This is
+    /// the bit-identity reference for [`TiledExecutor::gemm`] and the
+    /// execution path for a real PJRT kernel.
+    pub fn gemm_serial(&mut self, wl: &Gemm, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
-        anyhow::ensure!(a.len() == m * k, "A len {} != {}", a.len(), m * k);
-        anyhow::ensure!(b.len() == k * n, "B len {} != {}", b.len(), k * n);
+        ensure!(a.len() == m * k, "A len {} != {}", a.len(), m * k);
+        ensure!(b.len() == k * n, "B len {} != {}", b.len(), k * n);
         let t = self.tile;
         let name = format!("gemm_tile_{t}");
         let (pm, pn, pk) = (m.div_ceil(t) * t, n.div_ceil(t) * t, k.div_ceil(t) * t);
@@ -111,10 +425,9 @@ impl<'r> TiledExecutor<'r> {
                     tile(&pa, pk, i, kk, t, &mut ta);
                     tile(&pb, pn, kk, j, t, &mut tb);
                     let acc = &c_tiles[i * gn + j];
-                    let out = self.runtime.run_f32(
-                        &name,
-                        &[(acc, shape), (&ta, shape), (&tb, shape)],
-                    )?;
+                    let out = self
+                        .runtime
+                        .run_f32(&name, &[(acc, shape), (&ta, shape), (&tb, shape)])?;
                     c_tiles[i * gn + j] = out;
                     self.tile_calls += 1;
                 }
@@ -173,6 +486,7 @@ impl MlpRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::Manifest;
 
     #[test]
     fn pad_and_tile_roundtrip() {
@@ -188,5 +502,97 @@ mod tests {
         assert_eq!(t2, vec![1., 2., 4., 5.]);
         tile(&p, 4, 0, 1, 2, &mut t2);
         assert_eq!(t2, vec![3., 0., 6., 0.]);
+    }
+
+    #[test]
+    fn pack_layouts_and_padding() {
+        // A = 2×3 (m=2, k=3), tile 2 → gm=1, gk=2; k-major blocks.
+        let wl = Gemm::new("p", 2, 2, 3);
+        let plan = PackedGemm::new(&wl, 2, LoopOrder::MNK).unwrap();
+        assert_eq!(plan.grid(), (1, 1, 2));
+        let a = [1., 2., 3., 4., 5., 6.]; // rows [1 2 3], [4 5 6]
+        let b = [1., 0., 0., 1., 1., 1.]; // 3×2
+        let ops = plan.pack(&a, &b).unwrap();
+        // block (0,0) k-major: col k0 = [1,4], col k1 = [2,5]
+        assert_eq!(ops.a_panels[0..4], [1., 4., 2., 5.]);
+        // block (0,1): col k2 = [3,6], padded col = zeros
+        assert_eq!(ops.a_panels[4..8], [3., 6., 0., 0.]);
+        // B block (k0,j0) row-major rows [1 0], [0 1]; block (k1,j0) row
+        // [1 1] then zero padding
+        assert_eq!(ops.b_panels[0..4], [1., 0., 0., 1.]);
+        assert_eq!(ops.b_panels[4..8], [1., 1., 0., 0.]);
+    }
+
+    #[test]
+    fn walk_follows_mapping_mn_suborder() {
+        let wl = Gemm::new("w", 4, 6, 2);
+        // MNK → i-outer, j-inner
+        let p = PackedGemm::new(&wl, 2, LoopOrder::MNK).unwrap();
+        assert_eq!(p.walk[..4], [(0, 0), (0, 1), (0, 2), (1, 0)]);
+        // NKM → j-outer, i-inner
+        let p = PackedGemm::new(&wl, 2, LoopOrder::NKM).unwrap();
+        assert_eq!(p.walk[..4], [(0, 0), (1, 0), (0, 1), (1, 1)]);
+        // KMN keeps M before N once K is stripped
+        let p = PackedGemm::new(&wl, 2, LoopOrder::KMN).unwrap();
+        assert_eq!(p.walk[..4], [(0, 0), (0, 1), (0, 2), (1, 0)]);
+    }
+
+    #[test]
+    fn packed_engine_small_known_product() {
+        // 2×2: C = A·B with a ragged k
+        let wl = Gemm::new("s", 2, 2, 3);
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [1., 0., 0., 1., 1., 1.];
+        let want = vec![1. + 3., 2. + 3., 4. + 6., 5. + 6.];
+        for t in [1usize, 2, 4] {
+            let plan = PackedGemm::new(&wl, t, LoopOrder::MNK).unwrap();
+            assert_eq!(plan.run(&a, &b).unwrap(), want, "t={t}");
+            assert_eq!(plan.run_serial(&a, &b).unwrap(), want, "t={t} serial");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_bad_inputs() {
+        let wl = Gemm::new("r", 4, 4, 4);
+        assert!(PackedGemm::new(&wl, 0, LoopOrder::MNK).is_err());
+        let plan = PackedGemm::new(&wl, 2, LoopOrder::MNK).unwrap();
+        assert!(plan.pack(&[0.0; 3], &[0.0; 16]).is_err());
+        assert!(plan.pack(&[0.0; 16], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn auto_tile_never_exceeds_min_dim() {
+        let rt = Runtime::native(Manifest::synthetic(&[4, 8, 16]));
+        // dims_min = 5: the old next_power_of_two logic picked 8
+        assert_eq!(TiledExecutor::auto_tile(&rt, &Gemm::new("a", 5, 7, 6)), 4);
+        assert_eq!(TiledExecutor::auto_tile(&rt, &Gemm::new("b", 100, 100, 100)), 16);
+        assert_eq!(TiledExecutor::auto_tile(&rt, &Gemm::new("c", 8, 9, 10)), 8);
+        // nothing fits → smallest artifact
+        assert_eq!(TiledExecutor::auto_tile(&rt, &Gemm::new("d", 2, 2, 2)), 4);
+    }
+
+    #[test]
+    fn executor_dispatch_counts_tile_calls() {
+        let mut rt = Runtime::native(Manifest::synthetic(&[2]));
+        let wl = Gemm::new("x", 4, 4, 4);
+        let a = [0.5f32; 16];
+        let b = [0.25f32; 16];
+        let mut exec = TiledExecutor::new(&mut rt, 2, LoopOrder::MNK).unwrap();
+        let c = exec.gemm(&wl, &a, &b).unwrap();
+        assert_eq!(exec.tile_calls, 8); // 2×2×2 grid
+        assert_eq!(c, vec![0.5; 16]);
+    }
+
+    #[test]
+    fn executions_accounting_matches_tile_calls() {
+        let mut rt = Runtime::native(Manifest::synthetic(&[2]));
+        let wl = Gemm::new("x", 4, 4, 4);
+        let a = [1.0f32; 16];
+        let b = [1.0f32; 16];
+        {
+            let mut exec = TiledExecutor::new(&mut rt, 2, LoopOrder::MNK).unwrap();
+            exec.gemm(&wl, &a, &b).unwrap();
+        }
+        assert_eq!(rt.executions, 8);
     }
 }

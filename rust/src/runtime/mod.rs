@@ -7,10 +7,14 @@
 //! * [`Manifest`] — the `artifacts/manifest.txt` index (plus
 //!   [`Manifest::synthetic`] for artifact-less native runs).
 //! * [`Runtime`] — the execution backend with compile-once caching.
-//! * [`TiledExecutor`] — the tiled GEMM executor: drives the single-tile
-//!   FMA artifact over a FLASH-selected outer schedule, accumulating C
-//!   in Rust (the functional mirror of the accelerator's tile
-//!   time-multiplexing), plus whole-graph helpers ([`MlpRunner`]).
+//! * [`PackedGemm`] — the zero-allocation, rayon-parallel packed-panel
+//!   execution engine: operands packed once into panels, C in a flat
+//!   tile arena, independent output tiles fanned across threads
+//!   (bit-identical to the serial per-tile walk).
+//! * [`TiledExecutor`] — the tiled GEMM executor front-end: drives the
+//!   tile-kernel contract over a FLASH-selected outer schedule through
+//!   the packed engine (native) or per-tile artifact dispatch (PJRT),
+//!   plus whole-graph helpers ([`MlpRunner`]).
 
 mod artifacts;
 mod client;
@@ -18,7 +22,7 @@ mod executor;
 
 pub use artifacts::{ArtifactMeta, Manifest};
 pub use client::Runtime;
-pub use executor::{MlpRunner, TiledExecutor};
+pub use executor::{MlpRunner, PackedGemm, PackedOperands, TiledExecutor};
 
 use std::path::PathBuf;
 

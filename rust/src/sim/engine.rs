@@ -62,6 +62,10 @@ impl Range {
     fn len(&self) -> u64 {
         self.end.saturating_sub(self.start)
     }
+
+    fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
 }
 
 /// Tile index range of dim `d` at outer step `step_idx`.
@@ -129,7 +133,7 @@ pub fn simulate(acc: &Accelerator, map: &Mapping, wl: &Gemm, a: &[f32], b: &[f32
                 let rm = outer_range(map, wl, pes, Dim::M, step_of(Dim::M));
                 let rn = outer_range(map, wl, pes, Dim::N, step_of(Dim::N));
                 let rk = outer_range(map, wl, pes, Dim::K, step_of(Dim::K));
-                if rm.len() == 0 || rn.len() == 0 || rk.len() == 0 {
+                if rm.is_empty() || rn.is_empty() || rk.is_empty() {
                     continue;
                 }
 
@@ -177,7 +181,7 @@ pub fn simulate(acc: &Accelerator, map: &Mapping, wl: &Gemm, a: &[f32], b: &[f32
                 for cl in 0..clusters {
                     // cluster's slice of the inter-spatial dim
                     let (cm, cn, ck) = slice_for(map, (&rm, &rn, &rk), map.inter_spatial, cl, clusters);
-                    if cm.len() == 0 || cn.len() == 0 || ck.len() == 0 {
+                    if cm.is_empty() || cn.is_empty() || ck.is_empty() {
                         continue;
                     }
                     for pe in 0..lambda {

@@ -112,8 +112,7 @@ impl WorkloadGen {
             2 => (self.dim(4, 64), self.dim(2048, 8192), self.dim(64, 2048)), // short-fat
             _ => (self.dim(256, 2048), self.dim(256, 2048), self.dim(4, 64)), // rank-k update
         };
-        let n_out = Gemm::new(&format!("rand-{class}"), m, n, k);
-        n_out
+        Gemm::new(&format!("rand-{class}"), m, n, k)
     }
 
     pub fn take(&mut self, count: usize) -> Vec<Gemm> {

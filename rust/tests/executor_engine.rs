@@ -1,0 +1,159 @@
+//! The packed-panel parallel execution engine vs the legacy serial
+//! per-tile artifact path: bit-for-bit equivalence on non-divisible
+//! shapes, every inter-cluster loop order, and degenerate tile sizes
+//! (1, 16, oversized). Runs entirely on the native backend with a
+//! synthetic manifest — no artifacts directory needed.
+
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
+use flash_gemm::workloads::Gemm;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn ref_gemm(m: usize, n: usize, k: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                c[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    c
+}
+
+fn assert_close(x: &[f32], y: &[f32], tol: f32, what: &str) {
+    assert_eq!(x.len(), y.len(), "{what}: length");
+    for (i, (a, b)) in x.iter().zip(y).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{what}: elem {i}: {a} vs {b}"
+        );
+    }
+}
+
+/// Non-divisible and degenerate shapes from the issue plus a square
+/// control.
+const SHAPES: &[(u64, u64, u64)] = &[(5, 7, 3), (1, 1, 1), (33, 17, 9), (64, 64, 64), (130, 66, 190)];
+
+const TILES: &[usize] = &[1, 4, 16, 32];
+
+#[test]
+fn parallel_engine_matches_legacy_serial_bit_for_bit() {
+    let mut rt = Runtime::native(Manifest::synthetic(&[1, 4, 16, 32]));
+    for &(m, n, k) in SHAPES {
+        let wl = Gemm::new("eq", m, n, k);
+        let a = rand_vec((m * k) as usize, 11 + m);
+        let b = rand_vec((k * n) as usize, 22 + n);
+        for &t in TILES {
+            let grid = (m as usize).div_ceil(t) * (n as usize).div_ceil(t)
+                * (k as usize).div_ceil(t);
+            if grid > 50_000 {
+                // the per-tile-artifact reference is O(grid) dispatches;
+                // keep the cross-product tractable (the big × tiny-tile
+                // cell is covered by `parallel_matches_serial_engine`)
+                continue;
+            }
+            for order in LoopOrder::ALL {
+                let mut legacy = TiledExecutor::new(&mut rt, t, order).unwrap();
+                let want = legacy.gemm_serial(&wl, &a, &b).unwrap();
+                let plan = PackedGemm::new(&wl, t, order).unwrap();
+                let got_par = plan.run(&a, &b).unwrap();
+                assert_eq!(got_par, want, "parallel {m}x{n}x{k} t={t} {order}");
+                let got_ser = plan.run_serial(&a, &b).unwrap();
+                assert_eq!(got_ser, want, "serial engine {m}x{n}x{k} t={t} {order}");
+            }
+        }
+    }
+}
+
+#[test]
+fn executor_gemm_dispatch_equals_legacy_path() {
+    // TiledExecutor::gemm (packed engine on native) vs gemm_serial
+    let mut rt = Runtime::native(Manifest::synthetic(&[16]));
+    let wl = Gemm::new("d", 130, 66, 190);
+    let a = rand_vec((wl.m * wl.k) as usize, 5);
+    let b = rand_vec((wl.k * wl.n) as usize, 6);
+    let want = TiledExecutor::new(&mut rt, 16, LoopOrder::KNM)
+        .unwrap()
+        .gemm_serial(&wl, &a, &b)
+        .unwrap();
+    let mut exec = TiledExecutor::new(&mut rt, 16, LoopOrder::KNM).unwrap();
+    let got = exec.gemm(&wl, &a, &b).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(exec.tile_calls, 9 * 5 * 12); // ⌈130/16⌉×⌈66/16⌉×⌈190/16⌉
+}
+
+#[test]
+fn parallel_matches_serial_engine_on_huge_grid() {
+    // t=1 on the big ragged shape: 1.6M tile calls — too many for the
+    // per-artifact reference, but the two engine paths must still agree
+    // bit-for-bit, and match the plain reference numerically.
+    let (m, n, k) = (130usize, 66, 190);
+    let wl = Gemm::new("huge", m as u64, n as u64, k as u64);
+    let a = rand_vec(m * k, 7);
+    let b = rand_vec(k * n, 8);
+    let plan = PackedGemm::new(&wl, 1, LoopOrder::MNK).unwrap();
+    let par = plan.run(&a, &b).unwrap();
+    let ser = plan.run_serial(&a, &b).unwrap();
+    assert_eq!(par, ser);
+    assert_close(&par, &ref_gemm(m, n, k, &a, &b), 1e-4, "t=1 vs reference");
+}
+
+#[test]
+fn engine_matches_reference_numerically() {
+    for &(m, n, k) in SHAPES {
+        let wl = Gemm::new("num", m, n, k);
+        let a = rand_vec((m * k) as usize, 31 + k);
+        let b = rand_vec((k * n) as usize, 41 + m);
+        let want = ref_gemm(m as usize, n as usize, k as usize, &a, &b);
+        for &t in TILES {
+            let plan = PackedGemm::new(&wl, t, LoopOrder::MKN).unwrap();
+            let got = plan.run(&a, &b).unwrap();
+            assert_close(&got, &want, 1e-4, &format!("{m}x{n}x{k} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn oversized_tile_degenerates_to_single_block() {
+    // tile 32 on 5×7×3: the whole GEMM is one padded block
+    let wl = Gemm::new("over", 5, 7, 3);
+    let a = rand_vec(15, 1);
+    let b = rand_vec(21, 2);
+    let plan = PackedGemm::new(&wl, 32, LoopOrder::NMK).unwrap();
+    assert_eq!(plan.grid(), (1, 1, 1));
+    assert_eq!(plan.tile_calls(), 1);
+    let got = plan.run(&a, &b).unwrap();
+    assert_close(&got, &ref_gemm(5, 7, 3, &a, &b), 1e-4, "oversized tile");
+}
+
+#[test]
+fn arena_accumulates_into_existing_c() {
+    // execute_into adds onto whatever the arena holds: two executions
+    // without re-zeroing compute 2·(A·B)
+    let wl = Gemm::new("acc", 6, 5, 4);
+    let a = rand_vec(24, 3);
+    let b = rand_vec(20, 4);
+    let plan = PackedGemm::new(&wl, 4, LoopOrder::MNK).unwrap();
+    let ops = plan.pack(&a, &b).unwrap();
+    let mut arena = vec![0f32; plan.c_tiles_len()];
+    plan.execute_into(&ops, &mut arena);
+    plan.execute_into(&ops, &mut arena);
+    let mut c = vec![0f32; 30];
+    plan.unpack_into(&arena, &mut c);
+    let single = plan.run(&a, &b).unwrap();
+    let doubled: Vec<f32> = single.iter().map(|v| v + v).collect();
+    assert_close(&c, &doubled, 1e-5, "accumulating arena");
+}

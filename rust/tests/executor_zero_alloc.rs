@@ -1,0 +1,99 @@
+//! Allocation accounting for the packed execution engine: the hot loop
+//! (`execute_serial_into` / `execute_into`) must not allocate per tile
+//! call — allocations are allowed only at plan/pack/setup time.
+//!
+//! This integration test is its own binary, so it can install a counting
+//! global allocator without affecting the rest of the suite. Everything
+//! lives in one `#[test]` to keep unrelated test threads from touching
+//! the counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::PackedGemm;
+use flash_gemm::workloads::Gemm;
+
+/// System allocator with a global allocation counter.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn hot_loop_performs_no_per_tile_allocation() {
+    // --- serial engine: strictly zero allocations in the hot loop ---
+    let wl = Gemm::new("za", 130, 66, 190);
+    let a = rand_vec((wl.m * wl.k) as usize, 1);
+    let b = rand_vec((wl.k * wl.n) as usize, 2);
+    // plan creation warms the per-thread scratch arenas (setup time)
+    let plan = PackedGemm::new(&wl, 16, LoopOrder::MNK).unwrap();
+    let ops = plan.pack(&a, &b).unwrap();
+    let mut arena = vec![0f32; plan.c_tiles_len()];
+    // one warm pass, then measure a steady-state pass
+    plan.execute_serial_into(&ops, &mut arena);
+    arena.fill(0.0);
+    let before = allocs();
+    plan.execute_serial_into(&ops, &mut arena);
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "serial hot loop allocated {delta} times over {} tile calls",
+        plan.tile_calls()
+    );
+
+    // --- parallel engine: allocations must not scale with tile calls.
+    // rayon's pool plumbing may allocate a bounded amount per fan-out,
+    // but a 4096-tile-call grid must come nowhere near one allocation
+    // per kernel invocation. ---
+    let wl = Gemm::new("zp", 256, 256, 256);
+    let a = rand_vec((wl.m * wl.k) as usize, 3);
+    let b = rand_vec((wl.k * wl.n) as usize, 4);
+    let plan = PackedGemm::new(&wl, 16, LoopOrder::MNK).unwrap();
+    let ops = plan.pack(&a, &b).unwrap();
+    let mut arena = vec![0f32; plan.c_tiles_len()];
+    plan.execute_into(&ops, &mut arena); // warm pool + scratch
+    arena.fill(0.0);
+    let before = allocs();
+    plan.execute_into(&ops, &mut arena);
+    let delta = allocs() - before;
+    let calls = plan.tile_calls();
+    assert!(
+        delta < calls / 4,
+        "parallel hot loop allocated {delta} times over {calls} tile calls"
+    );
+}

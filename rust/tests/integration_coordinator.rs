@@ -156,6 +156,50 @@ fn service_instances_share_one_mapping_cache() {
 }
 
 #[test]
+fn parallel_batch_counts_tiles_and_verifies() {
+    // one big same-shape batch: the packed engine fans it over rayon;
+    // every result must verify and the tile/throughput counters move
+    let mut svc = native_service(Arc::new(MappingCache::new()));
+    let reqs: Vec<Gemm> = (0..8).map(|r| Gemm::new(&format!("b{r}"), 96, 80, 64)).collect();
+    let rep = svc.serve(&reqs).unwrap();
+    assert_eq!(rep.metrics.requests, 8);
+    assert_eq!(rep.metrics.batches, 1);
+    // auto-tile picks 32 on a 96×80×64 workload with {16, 32} artifacts:
+    // ⌈96/32⌉×⌈80/32⌉×⌈64/32⌉ = 3×3×2 = 18 tile calls per request
+    assert_eq!(rep.metrics.tile_calls, 8 * 18);
+    assert!(rep.metrics.macs_executed > 0);
+    assert!(rep.metrics.exec_throughput_gflops() > 0.0);
+    assert!(rep.metrics.exec_tiles_per_sec() > 0.0);
+    for o in &rep.outcomes {
+        assert!(o.executed);
+        assert_eq!(o.verified, Some(true), "{}", o.workload.name);
+    }
+    // the runtime counted every packed-engine tile FMA
+    assert_eq!(svc.runtime().executions, 8 * 18);
+}
+
+#[test]
+fn batched_and_unbatched_traffic_agree() {
+    // the same requests served one-by-one and as one batch must verify
+    // identically and count identical work
+    let reqs: Vec<Gemm> = (0..4).map(|_| Gemm::new("same", 50, 70, 30)).collect();
+    let mut batched = native_service(Arc::new(MappingCache::new()));
+    let rb = batched.serve(&reqs).unwrap();
+    let mut single = native_service(Arc::new(MappingCache::new()));
+    let mut total_tiles = 0;
+    for (r, wl) in reqs.iter().enumerate() {
+        // serve each request alone (fresh batch each time, same shape →
+        // cache hits after the first)
+        let rep = single.serve(std::slice::from_ref(wl)).unwrap();
+        assert_eq!(rep.outcomes[0].verified, Some(true), "request {r}");
+        total_tiles += rep.metrics.tile_calls;
+    }
+    assert_eq!(rb.metrics.tile_calls, total_tiles);
+    assert_eq!(rb.metrics.macs_executed, 4 * reqs[0].macs());
+    assert!(rb.outcomes.iter().all(|o| o.verified == Some(true)));
+}
+
+#[test]
 fn trace_roundtrip_through_service() {
     let Some(mut svc) = service_or_skip(Style::Tpu, false) else { return };
     let text = "l1 128 96 64\nl1 128 96 64\nl2 32 32 32\n";

@@ -8,9 +8,18 @@ use flash_gemm::cost::CostModel;
 use flash_gemm::flash::{self, candidates, SearchOpts};
 use flash_gemm::workloads::Gemm;
 
+/// Independent re-derivation of the energy tie-break bit key: a `u64`
+/// whose unsigned order equals `f64::total_cmp` order (the old
+/// `energy_j * 1e12 as u64` cast saturated and truncated, corrupting
+/// ties — see `flash::search`).
+fn energy_bit_key(x: f64) -> u64 {
+    let bits = x.to_bits() as i64;
+    ((bits ^ (((bits >> 63) as u64) >> 1) as i64) as u64) ^ (1 << 63)
+}
+
 /// Sequential reference: first-wins scan over the same candidate set the
-/// parallel search evaluates, with the paper's selection key
-/// (runtime cycles, energy in pJ).
+/// parallel search evaluates, with the selection key (runtime cycles,
+/// energy bit key).
 fn sequential_best_key(acc: &Accelerator, wl: &Gemm) -> (u64, u64) {
     let cs = candidates::enumerate(acc, wl);
     assert!(!cs.mappings.is_empty());
@@ -18,7 +27,7 @@ fn sequential_best_key(acc: &Accelerator, wl: &Gemm) -> (u64, u64) {
     let mut best: Option<(u64, u64)> = None;
     for m in &cs.mappings {
         let c = model.evaluate(m, wl);
-        let key = (c.runtime_cycles(), (c.energy_j * 1e12) as u64);
+        let key = (c.runtime_cycles(), energy_bit_key(c.energy_j));
         if best.map_or(true, |b| key < b) {
             best = Some(key);
         }
