@@ -1,15 +1,29 @@
-//! Bench — the end-to-end path: PJRT tile-kernel FMA latency, tiled
-//! GEMM execution, MLP inference, and a full service round.
-//! Skips (with a notice) when `make artifacts` has not run.
+//! Bench — the end-to-end path. The engine section runs everywhere
+//! (native backend, no artifacts needed) and records Engine end-to-end
+//! throughput on a shuffled vs sorted mixed-shape trace to
+//! `BENCH_engine.json` (override with `BENCH_ENGINE_OUT`; knobs:
+//! `BENCH_ENGINE_REQS`, `BENCH_ENGINE_ITERS`). The PJRT tile-kernel,
+//! executor, MLP, and service sections additionally need
+//! `make artifacts` and skip (with a notice) without it.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::time::{Duration, Instant};
+
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
 use flash_gemm::coordinator::{GemmService, ServiceConfig};
 use flash_gemm::dataflow::LoopOrder;
-use flash_gemm::runtime::{default_artifacts_dir, MlpRunner, Runtime, TiledExecutor};
+use flash_gemm::engine::{Engine, Query, DEFAULT_SEED};
+use flash_gemm::runtime::{default_artifacts_dir, Manifest, MlpRunner, Runtime, TiledExecutor};
 use flash_gemm::workloads::Gemm;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
 
 fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
     let mut s = seed.max(1);
@@ -23,10 +37,129 @@ fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
         .collect()
 }
 
+/// Deterministic Fisher–Yates, so the "shuffled" trace is reproducible.
+fn shuffle<T>(v: &mut [T], mut s: u64) {
+    s = s.max(1);
+    for i in (1..v.len()).rev() {
+        s ^= s >> 12;
+        s ^= s << 25;
+        s ^= s >> 27;
+        let j = (s.wrapping_mul(0x2545F4914F6CDD1D) % (i as u64 + 1)) as usize;
+        v.swap(i, j);
+    }
+}
+
+/// Serve `queries` on a fresh engine `iters` times (after one untimed
+/// warm pass) and return the best wall time.
+fn time_engine(make: &dyn Fn() -> Engine, queries: &[Query], iters: u64) -> Duration {
+    let mut engine = make();
+    engine.run(queries).expect("warm pass"); // warm: searches + scratch
+    let mut best = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let rep = engine.run(queries).expect("timed pass");
+        best = best.min(t0.elapsed());
+        assert_eq!(rep.metrics.requests as usize, queries.len());
+        assert_eq!(rep.metrics.mapping_cache_misses, 0, "warm pass missed");
+    }
+    best
+}
+
+fn bench_engine(dir: &std::path::Path) {
+    harness::section("engine end-to-end (shuffled vs sorted mixed-shape trace)");
+    let reqs = env_u64("BENCH_ENGINE_REQS", 100) as usize;
+    let iters = env_u64("BENCH_ENGINE_ITERS", 3).max(1);
+    let out_path =
+        std::env::var("BENCH_ENGINE_OUT").unwrap_or_else(|_| "BENCH_engine.json".to_string());
+
+    const SHAPES: [(u64, u64, u64); 5] = [
+        (128, 128, 128),
+        (64, 192, 96),
+        (192, 96, 64),
+        (96, 64, 48),
+        (48, 160, 32),
+    ];
+    let mut shuffled: Vec<Query> = (0..reqs)
+        .map(|i| {
+            let (m, n, k) = SHAPES[i % SHAPES.len()];
+            Query::new(Gemm::new(&format!("q{i}"), m, n, k)).seed(DEFAULT_SEED + i as u64)
+        })
+        .collect();
+    shuffle(&mut shuffled, 0xE2E);
+    let mut sorted = shuffled.clone();
+    sorted.sort_by_key(|q| (q.workload.m, q.workload.n, q.workload.k, q.seed));
+    let total_macs: u64 = shuffled.iter().map(|q| q.workload.macs()).sum();
+
+    let have_artifacts = dir.join("manifest.txt").exists();
+    let make = || {
+        let runtime = if have_artifacts {
+            Runtime::load(dir).expect("artifact runtime")
+        } else {
+            Runtime::native(Manifest::synthetic(&[16, 32, 64]))
+        };
+        Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .runtime(runtime)
+            .max_exec_dim(256)
+            .build()
+            .expect("engine")
+    };
+
+    let t_shuffled = time_engine(&make, &shuffled, iters);
+    let t_sorted = time_engine(&make, &sorted, iters);
+    let rps = |t: Duration| reqs as f64 / t.as_secs_f64();
+    let gflops = |t: Duration| total_macs as f64 / t.as_secs_f64() / 1e9;
+    println!(
+        "bench engine/shuffled: {t_shuffled:?} best of {iters} ({:.0} req/s, {:.2} GFLOP/s)",
+        rps(t_shuffled),
+        gflops(t_shuffled)
+    );
+    println!(
+        "bench engine/sorted:   {t_sorted:?} best of {iters} ({:.0} req/s, {:.2} GFLOP/s)",
+        rps(t_sorted),
+        gflops(t_sorted)
+    );
+
+    // coalescing makes order irrelevant: the shuffled window must plan
+    // exactly one batch/search per distinct shape actually submitted
+    // (fewer than SHAPES.len() when BENCH_ENGINE_REQS is small)
+    let distinct: std::collections::HashSet<(u64, u64, u64)> = shuffled
+        .iter()
+        .map(|q| (q.workload.m, q.workload.n, q.workload.k))
+        .collect();
+    let mut probe = make();
+    let rep = probe.run(&shuffled).expect("probe pass");
+    assert_eq!(rep.metrics.batches as usize, distinct.len());
+    assert_eq!(rep.metrics.mapping_cache_misses as usize, distinct.len());
+
+    let record = serde_json::json!({
+        "requests": reqs,
+        "distinct_shapes": distinct.len(),
+        "threads": rayon::current_num_threads(),
+        "backend": if have_artifacts { "artifacts" } else { "native-synthetic" },
+        "total_macs": total_macs,
+        "shuffled_ms": t_shuffled.as_secs_f64() * 1e3,
+        "sorted_ms": t_sorted.as_secs_f64() * 1e3,
+        "shuffled_reqs_per_sec": rps(t_shuffled),
+        "sorted_reqs_per_sec": rps(t_sorted),
+        "shuffled_gflops": gflops(t_shuffled),
+        "sorted_gflops": gflops(t_sorted),
+        "searches_per_window": distinct.len(),
+        "shuffled_over_sorted": t_shuffled.as_secs_f64() / t_sorted.as_secs_f64(),
+    });
+    std::fs::write(&out_path, serde_json::to_string_pretty(&record).unwrap())
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("bench engine: recorded {out_path}");
+}
+
 fn main() {
     let dir = default_artifacts_dir();
+
+    // runs everywhere — the native backend needs no artifacts
+    bench_engine(&dir);
+
     if !dir.join("manifest.txt").exists() {
-        println!("bench e2e: SKIPPED (no artifacts; run `make artifacts`)");
+        println!("\nbench e2e (artifact sections): SKIPPED (no artifacts; run `make artifacts`)");
         return;
     }
     let budget = harness::default_budget();
@@ -71,7 +204,7 @@ fn main() {
         assert_eq!(out.len(), 1280);
     });
 
-    harness::section("service round (8 requests, verify off)");
+    harness::section("service round (8 requests, verify off, legacy shim)");
     let requests: Vec<Gemm> = (0..8)
         .map(|i| Gemm::new(&format!("r{}", i % 3), 128, 128, 128))
         .collect();
@@ -79,6 +212,7 @@ fn main() {
         let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
         let runtime = Runtime::load(&dir).unwrap();
         let mut svc = GemmService::new(acc, runtime, ServiceConfig::default());
+        #[allow(deprecated)]
         let rep = svc.serve(&requests).unwrap();
         assert_eq!(rep.metrics.requests, 8);
     });

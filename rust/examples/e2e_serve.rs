@@ -1,10 +1,12 @@
 //! End-to-end driver (the required full-system proof): serve a batched
-//! GEMM request trace through the complete three-layer stack.
+//! GEMM request trace through the complete three-layer stack, fronted
+//! by the unified engine.
 //!
-//! request trace → L3 coordinator (batching + mapping cache) →
-//! FLASH + MAESTRO-BLAS (mapping selection) → PJRT runtime executing the
-//! AOT Pallas tile kernel per the selected loop order → verified
-//! numerics + latency/throughput report.
+//! request trace → `Engine::run` (whole-window shape coalescing +
+//! shared mapping cache) → FLASH + MAESTRO-BLAS (cache-first mapping
+//! selection) → PJRT runtime executing the AOT Pallas tile kernel per
+//! the selected loop order → verified numerics + latency/throughput
+//! report.
 //!
 //! Python is nowhere on this path; the artifacts were lowered once at
 //! build time. Run recorded in EXPERIMENTS.md §End-to-end.
@@ -14,7 +16,7 @@
 //! ```
 
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
-use flash_gemm::coordinator::{GemmService, ServiceConfig};
+use flash_gemm::engine::{Engine, Query, DEFAULT_SEED};
 use flash_gemm::runtime::{default_artifacts_dir, Runtime};
 use flash_gemm::workloads::{Gemm, WorkloadGen};
 
@@ -28,6 +30,8 @@ fn main() -> anyhow::Result<()> {
 
     // A realistic serving mix: repeated DNN-layer shapes (cache hits,
     // batching) interleaved with ad-hoc CSE shapes from the generator.
+    // The repeats are *not* consecutive — the engine coalesces them
+    // across the whole window anyway.
     let mut requests: Vec<Gemm> = Vec::new();
     for round in 0..4 {
         requests.push(Gemm::new("fc-a", 128, 256, 128)); // repeated layer
@@ -45,45 +49,51 @@ fn main() -> anyhow::Result<()> {
     let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
     println!("serving {} requests on {acc}\n", requests.len());
 
-    let runtime = Runtime::load(&dir)?;
-    let mut svc = GemmService::new(
-        acc,
-        runtime,
-        ServiceConfig {
-            verify: true,
-            max_exec_dim: 512,
-            tile: 0,
-        },
-    );
+    let mut engine = Engine::builder()
+        .accelerator(acc)
+        .runtime(Runtime::load(&dir)?)
+        .max_exec_dim(512)
+        .build()?;
+    let queries: Vec<Query> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| {
+            Query::new(wl.clone())
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+        })
+        .collect();
     let t0 = std::time::Instant::now();
-    let report = svc.serve(&requests)?;
+    let report = engine.run(&queries)?;
     let wall = t0.elapsed();
 
     println!("{:<10} {:>18} {:<14} {:>10} {:>8} {:>9}", "request", "shape", "mapping", "proj ms", "ok", "lat µs");
-    for o in &report.outcomes {
+    for r in &report.responses {
         println!(
             "{:<10} {:>5}x{:<5}x{:<5} {:<14} {:>10.3} {:>8} {:>9}",
-            o.workload.name,
-            o.workload.m,
-            o.workload.n,
-            o.workload.k,
-            o.mapping_name,
-            o.projected_ms,
-            o.verified.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
-            o.latency_us
+            r.workload.name,
+            r.workload.m,
+            r.workload.n,
+            r.workload.k,
+            r.mapping_name(),
+            r.projected_ms(),
+            r.verified.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            r.latency_us
         );
-        if let Some(v) = o.verified {
-            assert!(v, "numeric verification failed for {}", o.workload.name);
+        if let Some(v) = r.verified {
+            assert!(v, "numeric verification failed for {}", r.workload.name);
         }
     }
 
     let m = &report.metrics;
-    println!("\n--- service report ---");
+    println!("\n--- engine report ---");
     println!("wall time          : {wall:?}");
     println!("requests / batches : {} / {}", m.requests, m.batches);
     println!(
-        "mapping cache      : {} hits, {} misses",
-        m.mapping_cache_hits, m.mapping_cache_misses
+        "mapping cache      : {} hits, {} misses ({} distinct shapes searched)",
+        m.mapping_cache_hits,
+        m.mapping_cache_misses,
+        engine.cache().len()
     );
     println!("latency            : {}", m.latency.summary());
     println!(
@@ -95,8 +105,14 @@ fn main() -> anyhow::Result<()> {
         m.macs_executed,
         m.exec_throughput_gflops()
     );
-    assert!(m.mapping_cache_hits > 0, "batching should hit the cache");
+    // the 8 scattered fc-a requests form ONE batch, fc-b another, each
+    // distinct adhoc shape its own — searches track distinct shapes,
+    // not requests, even though the repeats are not consecutive
+    let distinct: std::collections::HashSet<(u64, u64, u64)> =
+        requests.iter().map(|g| (g.m, g.n, g.k)).collect();
+    assert_eq!(m.batches as usize, distinct.len());
+    assert_eq!(m.mapping_cache_misses as usize, distinct.len());
     assert_eq!(m.requests as usize, requests.len());
-    println!("\nOK — end-to-end service run complete, all results verified.");
+    println!("\nOK — end-to-end engine run complete, all results verified.");
     Ok(())
 }

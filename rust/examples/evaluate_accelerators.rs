@@ -8,7 +8,7 @@
 //! ```
 
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
-use flash_gemm::coordinator::search_grid;
+use flash_gemm::engine::Engine;
 use flash_gemm::workloads::Gemm;
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +22,8 @@ fn main() -> anyhow::Result<()> {
     let edge = HwConfig::edge();
     let accs = Accelerator::all_styles(&edge);
     let wls = Gemm::table3();
-    let grid = search_grid(&accs, &wls, 0);
+    let engine = Engine::builder().pool(accs).build()?;
+    let grid = engine.plan_grid(&wls);
     let cell = |style: Style, id: &str| {
         grid.iter()
             .find(|c| c.accelerator.style == style && c.workload.name == id)

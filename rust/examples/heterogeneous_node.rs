@@ -1,36 +1,31 @@
 //! Heterogeneous accelerator node (the paper's conclusion: "a
 //! heterogeneous HPC node with these accelerators"): attach all five
-//! accelerator styles behind one router, route a mixed GEMM workload
-//! stream by objective, and execute the routed requests numerically
-//! through the PJRT runtime.
+//! accelerator styles behind one engine, plan a mixed GEMM workload
+//! stream by objective, and execute a routed request numerically
+//! through the same engine.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example heterogeneous_node
 //! ```
 
 use flash_gemm::arch::{Accelerator, HwConfig, Offchip};
-use flash_gemm::coordinator::{Objective, Router};
-use flash_gemm::dataflow::LoopOrder;
-use flash_gemm::runtime::{default_artifacts_dir, Runtime, TiledExecutor};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::{Engine, Query};
+use flash_gemm::runtime::{default_artifacts_dir, Runtime};
 use flash_gemm::workloads::{mlp_layers, resnet50_gemms, Gemm};
-
-fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
-    let mut s = seed.max(1);
-    (0..n)
-        .map(|_| {
-            s ^= s >> 12;
-            s ^= s << 25;
-            s ^= s >> 27;
-            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
-        })
-        .collect()
-}
 
 fn main() -> anyhow::Result<()> {
     let cfg = HwConfig::edge();
     let pool = Accelerator::all_styles(&cfg);
     println!("node: {} accelerators on {}\n", pool.len(), cfg);
-    let mut router = Router::new(pool)?;
+
+    let dir = default_artifacts_dir();
+    let mut builder = Engine::builder().pool(pool);
+    let have_artifacts = dir.join("manifest.txt").exists();
+    if have_artifacts {
+        builder = builder.runtime(Runtime::load(&dir)?);
+    }
+    let mut engine = builder.build()?;
 
     // mixed stream: ML layers + CSE-ish shapes
     let mut stream: Vec<Gemm> = Vec::new();
@@ -45,11 +40,11 @@ fn main() -> anyhow::Result<()> {
     );
     let mut disagreements = 0;
     for wl in &stream {
-        let rt = router.route(wl, Objective::Runtime)?;
-        let en = router.route(wl, Objective::Energy)?;
-        let edp = router.route(wl, Objective::Edp)?;
-        let name = |r: &flash_gemm::coordinator::Route| {
-            router.pool()[r.accelerator_idx].style.to_string()
+        let rt = engine.plan(wl, Objective::Runtime)?;
+        let en = engine.plan(wl, Objective::Energy)?;
+        let edp = engine.plan(wl, Objective::Edp)?;
+        let name = |p: &flash_gemm::engine::Plan| {
+            engine.pool()[p.accelerator_idx].style.to_string()
         };
         if rt.accelerator_idx != en.accelerator_idx {
             disagreements += 1;
@@ -74,8 +69,8 @@ fn main() -> anyhow::Result<()> {
     // off-chip roofline annotation for the CSE shapes
     let off = Offchip::for_config(cfg.name);
     for wl in stream.iter().filter(|w| w.name.starts_with("rank")) {
-        let route = router.route(wl, Objective::Runtime)?;
-        let onchip = route.best.cost.runtime_ms() / 1e3;
+        let plan = engine.plan(wl, Objective::Runtime)?;
+        let onchip = plan.best.cost.runtime_ms() / 1e3;
         let total = off.clamp_runtime_secs(wl, cfg.elem_bytes, onchip);
         println!(
             "{}: on-chip {:.3} ms, off-chip-roofline total {:.3} ms ({})",
@@ -86,30 +81,21 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // execute one routed request for real
-    let dir = default_artifacts_dir();
-    if dir.join("manifest.txt").exists() {
+    // execute one routed request for real — same engine, one query
+    if have_artifacts {
         let wl = Gemm::new("exec", 128, 96, 64);
-        let route = router.route(&wl, Objective::Runtime)?;
-        let style = router.pool()[route.accelerator_idx].style;
-        let mut rt = Runtime::load(&dir)?;
-        let order = route.best.mapping.inter_order;
-        let mut exec = TiledExecutor::new(&mut rt, 32, order)?;
-        let a = rand_vec((wl.m * wl.k) as usize, 1);
-        let b = rand_vec((wl.k * wl.n) as usize, 2);
-        let c = exec.gemm(&wl, &a, &b)?;
+        let r = engine.query(Query::new(wl.clone()).verify(true))?;
+        let style = engine.pool()[r.accelerator_idx].style;
+        assert_eq!(r.verified, Some(true), "numeric verification failed");
         println!(
-            "\nexecuted {} on {style}-style via mapping {} ({} tile calls): C[0]={:.4}",
+            "\nexecuted {} on {style}-style via mapping {} (verified, {} µs)",
             wl,
-            route.best.mapping.name(),
-            exec.tile_calls,
-            c[0]
+            r.mapping_name(),
+            r.latency_us
         );
     } else {
         println!("\n(no artifacts; skipping numeric execution)");
     }
-    // default order available for reference
-    let _ = LoopOrder::MNK;
     println!("OK — heterogeneous node demo complete.");
     Ok(())
 }

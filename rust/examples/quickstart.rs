@@ -1,15 +1,17 @@
 //! Quickstart: search a mapping for one GEMM on one accelerator, print
-//! the chosen dataflow directives and projected cost, then (if
-//! `make artifacts` has run) execute the GEMM numerically through the
-//! AOT Pallas tile kernel and check it against a reference.
+//! the chosen dataflow directives and projected cost, then execute the
+//! GEMM numerically through the engine (the AOT Pallas tile kernel when
+//! `make artifacts` has run, the native interpreter otherwise) with
+//! verification against a reference.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
-use flash_gemm::flash;
-use flash_gemm::runtime::{default_artifacts_dir, Runtime, TiledExecutor};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::{Engine, Query};
+use flash_gemm::runtime::{default_artifacts_dir, Runtime};
 use flash_gemm::workloads::Gemm;
 
 fn main() -> anyhow::Result<()> {
@@ -19,9 +21,16 @@ fn main() -> anyhow::Result<()> {
     println!("accelerator: {acc}");
     println!("workload:    {wl}\n");
 
-    // 2. FLASH: explore the pruned mapping space, pick the best by
-    //    projected runtime (MAESTRO-BLAS).
-    let r = flash::search(&acc, &wl)?;
+    // 2. Build the engine and run the full FLASH exploration (pruned
+    //    candidate generation + MAESTRO-BLAS evaluation) with search
+    //    statistics.
+    let dir = default_artifacts_dir();
+    let mut builder = Engine::builder().accelerator(acc);
+    if dir.join("manifest.txt").exists() {
+        builder = builder.runtime(Runtime::load(&dir)?);
+    }
+    let mut engine = builder.build()?;
+    let r = engine.search_detailed(0, &wl, Objective::Runtime)?;
     let c = r.cost();
     println!("best mapping: {}", r.mapping());
     println!("directives:\n{}", r.mapping().level_spec());
@@ -41,44 +50,18 @@ fn main() -> anyhow::Result<()> {
         r.elapsed
     );
 
-    // 3. Execute for real through the AOT Pallas tile kernel (L1),
-    //    driven tile-by-tile by the selected mapping's loop order (L3).
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.txt").exists() {
-        println!("(skipping numeric execution: run `make artifacts` first)");
-        return Ok(());
-    }
-    let mut rt = Runtime::load(&dir)?;
-    let tile = TiledExecutor::auto_tile(&rt, &wl);
-    let mut exec = TiledExecutor::new(&mut rt, tile as usize, r.mapping().inter_order)?;
-
-    let a: Vec<f32> = (0..wl.m * wl.k).map(|i| (i % 13) as f32 * 0.1).collect();
-    let b: Vec<f32> = (0..wl.k * wl.n).map(|i| (i % 7) as f32 * 0.2).collect();
-    let t0 = std::time::Instant::now();
-    let cnum = exec.gemm(&wl, &a, &b)?;
-    let dt = t0.elapsed();
-
-    // reference check
-    let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
-    let mut cref = vec![0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let av = a[i * k + kk];
-            for j in 0..n {
-                cref[i * n + j] += av * b[kk * n + j];
-            }
-        }
-    }
-    let max_err = cnum
-        .iter()
-        .zip(&cref)
-        .map(|(x, y)| (x - y).abs() / (1.0 + y.abs()))
-        .fold(0.0f32, f32::max);
+    // 3. Execute for real — the tile kernel runs tile-by-tile in the
+    //    selected mapping's loop order; the search above already warmed
+    //    the engine's mapping cache, so the query plans for free.
+    let response = engine.query(Query::new(wl).verify(true).return_result(true))?;
+    assert!(response.cache_hit, "search_detailed should have warmed the cache");
+    assert_eq!(response.verified, Some(true), "numeric mismatch");
+    let c0 = response.result.as_ref().map(|c| c[0]).unwrap_or_default();
     println!(
-        "numeric execution: {} tile-kernel calls (t={tile}) in {dt:?}, max rel err {max_err:.2e}",
-        exec.tile_calls
+        "numeric execution on {}: verified in {} µs (C[0] = {c0:.4})",
+        engine.runtime().platform(),
+        response.latency_us
     );
-    assert!(max_err < 1e-4, "numeric mismatch");
     println!("OK — FLASH mapping is numerically faithful.");
     Ok(())
 }

@@ -1,5 +1,5 @@
 //! Hand-rolled CLI for the `repro` binary (the build image is offline,
-//! so no `clap`; see DESIGN.md §6 Substitutions).
+//! so no `clap`; see DESIGN.md §7 Substitutions).
 //!
 //! `repro <subcommand> [--key value ...]` — one subcommand per paper
 //! table/figure plus `search`, `validate` and `serve`.
@@ -151,7 +151,12 @@ pub fn run(args: Args) -> Result<String> {
         "search" => {
             let acc = Accelerator::of_style(args.style()?, args.config()?);
             let wl = args.workload()?;
-            let r = crate::flash::search(&acc, &wl)?;
+            // thin adapter over the engine: full search statistics on a
+            // single-member pool, warming the engine's mapping cache
+            let engine = crate::engine::Engine::builder()
+                .accelerator(acc.clone())
+                .build()?;
+            let r = engine.search_detailed(0, &wl, crate::cost::Objective::Runtime)?;
             let c = r.cost();
             if args.get("format") == Some("json") {
                 let payload = serde_json::json!({
@@ -227,24 +232,25 @@ pub fn run(args: Args) -> Result<String> {
             ))
         }
         "route" => {
-            use crate::coordinator::{Objective, Router};
-            let obj = match args.get("objective").unwrap_or("runtime") {
-                "runtime" => Objective::Runtime,
-                "energy" => Objective::Energy,
-                "edp" => Objective::Edp,
-                other => bail!("unknown --objective {other:?}"),
-            };
-            let pool = Accelerator::all_styles(&args.config()?);
-            let mut router = Router::new(pool)?;
+            use crate::cost::Objective;
+            let obj: Objective = args
+                .get("objective")
+                .unwrap_or("runtime")
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            let engine = crate::engine::Engine::builder()
+                .pool(Accelerator::all_styles(&args.config()?))
+                .objective(obj)
+                .build()?;
             let mut t = crate::report::Table::new(&["workload", "routed to", "mapping", "score"]);
             for wl in Gemm::table3() {
-                let r = router.route(&wl, obj)?;
+                let plan = engine.plan(&wl, obj)?;
                 t.row(&[
                     wl.name.clone(),
-                    router.pool()[r.accelerator_idx].style.to_string(),
-                    r.best.mapping.name(),
-                    r.scores
-                        .get(r.accelerator_idx)
+                    engine.pool()[plan.accelerator_idx].style.to_string(),
+                    plan.best.mapping.name(),
+                    plan.scores
+                        .get(plan.accelerator_idx)
                         .and_then(|s| *s)
                         .map(|s| format!("{s:.4}"))
                         .unwrap_or_else(|| "-".into()),
@@ -282,7 +288,7 @@ pub fn run(args: Args) -> Result<String> {
 }
 
 fn serve(args: &Args) -> Result<String> {
-    use crate::coordinator::{GemmService, ServiceConfig};
+    use crate::engine::{Engine, Query, DEFAULT_SEED};
 
     let requests: Vec<Gemm> = if let Some(path) = args.get("trace") {
         read_trace(std::path::Path::new(path))?
@@ -309,27 +315,39 @@ fn serve(args: &Args) -> Result<String> {
     } else {
         Runtime::native(Manifest::synthetic(&[16, 32, 64]))
     };
-    let cfg = ServiceConfig {
-        verify: args.get("verify").map(|v| v == "true").unwrap_or(false),
-        max_exec_dim: args.get_u64("max-exec-dim", 512)?,
-        tile: args.get_u64("tile", 0)?,
-    };
-    let mut svc = GemmService::new(acc, runtime, cfg);
-    let report = svc.serve(&requests)?;
+    let mut engine = Engine::builder()
+        .accelerator(acc)
+        .runtime(runtime)
+        .max_exec_dim(args.get_u64("max-exec-dim", 512)?)
+        .tile(args.get_u64("tile", 0)?)
+        .build()?;
+    let verify = args.get("verify").map(|v| v == "true").unwrap_or(false);
+    // one submission window: same-shape requests coalesce across the
+    // whole trace, not just consecutive runs
+    let queries: Vec<Query> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| {
+            Query::new(wl.clone())
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(verify)
+        })
+        .collect();
+    let report = engine.run(&queries)?;
 
     let mut out = String::new();
-    for o in &report.outcomes {
+    for r in &report.responses {
         out.push_str(&format!(
             "{:<14} {:>6}x{:<6}x{:<6} {} proj={:.3}ms exec={} verified={:?} latency={}µs\n",
-            o.workload.name,
-            o.workload.m,
-            o.workload.n,
-            o.workload.k,
-            o.mapping_name,
-            o.projected_ms,
-            o.executed,
-            o.verified,
-            o.latency_us
+            r.workload.name,
+            r.workload.m,
+            r.workload.n,
+            r.workload.k,
+            r.mapping_name(),
+            r.projected_ms(),
+            r.executed,
+            r.verified,
+            r.latency_us
         ));
     }
     let m = &report.metrics;

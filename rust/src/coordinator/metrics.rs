@@ -14,6 +14,11 @@ impl LatencyStats {
         self.samples_us.push(d.as_micros() as u64);
     }
 
+    /// Fold another distribution's samples into this one.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }
@@ -80,6 +85,22 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Fold another window's counters and latency samples into this
+    /// ledger — how the engine accumulates per-window metrics into its
+    /// cumulative view, and how the `GemmService` shim sums the windows
+    /// it submits.
+    pub fn merge(&mut self, other: &ServiceMetrics) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.mapping_cache_hits += other.mapping_cache_hits;
+        self.mapping_cache_misses += other.mapping_cache_misses;
+        self.macs_executed += other.macs_executed;
+        self.tile_calls += other.tile_calls;
+        self.latency.merge(&other.latency);
+        self.search_time += other.search_time;
+        self.exec_time += other.exec_time;
+    }
+
     /// Achieved numeric throughput over the execution wall time
     /// (GFLOP/s, 1 MAC = 1 FLOP as in the paper).
     pub fn exec_throughput_gflops(&self) -> f64 {
@@ -133,6 +154,42 @@ mod tests {
         let l = LatencyStats::default();
         assert_eq!(l.percentile_us(95.0), 0);
         assert_eq!(l.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn merge_folds_counters_and_samples() {
+        let mut a = ServiceMetrics {
+            requests: 2,
+            batches: 1,
+            mapping_cache_hits: 1,
+            macs_executed: 100,
+            tile_calls: 4,
+            search_time: Duration::from_millis(5),
+            exec_time: Duration::from_millis(7),
+            ..Default::default()
+        };
+        a.latency.record(Duration::from_micros(10));
+        let mut b = ServiceMetrics {
+            requests: 3,
+            batches: 2,
+            mapping_cache_misses: 2,
+            macs_executed: 50,
+            tile_calls: 6,
+            exec_time: Duration::from_millis(3),
+            ..Default::default()
+        };
+        b.latency.record(Duration::from_micros(30));
+        b.latency.record(Duration::from_micros(20));
+        a.merge(&b);
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.mapping_cache_hits, 1);
+        assert_eq!(a.mapping_cache_misses, 2);
+        assert_eq!(a.macs_executed, 150);
+        assert_eq!(a.tile_calls, 10);
+        assert_eq!(a.latency.count(), 3);
+        assert_eq!(a.latency.max_us(), 30);
+        assert_eq!(a.exec_time, Duration::from_millis(10));
     }
 
     #[test]

@@ -1,18 +1,21 @@
-//! L3 coordination: parallel mapping-search orchestration and the GEMM
-//! service that ties FLASH to the execution runtime.
+//! L3 coordination — legacy adapters over the unified
+//! [`engine`](crate::engine) pipeline, plus the shared metrics ledger.
 //!
-//! * [`search_grid`] — fan a grid of (accelerator × workload) FLASH
-//!   searches over a worker pool (std::thread; the paper's §5.4
-//!   evaluation sweep is embarrassingly parallel). Each search is itself
-//!   rayon-parallel over candidates (see [`crate::flash::search_with`]).
-//! * [`GemmService`] — the request loop of the end-to-end example:
-//!   accept GEMM requests (trace or generator), batch identical shapes,
-//!   search (through the shared [`crate::flash::MappingCache`]), execute
-//!   numerically through the tile artifact, report per-request latency
-//!   and aggregate throughput.
-//! * [`ServiceMetrics`] — latency/throughput accounting.
-//! * [`Router`] — heterogeneous-node front-end routing requests to the
-//!   accelerator that minimizes a chosen objective.
+//! Every entry point here is a thin shim that delegates to
+//! [`Engine`](crate::engine::Engine) while preserving its historical
+//! signature and observable behavior:
+//!
+//! * [`search_grid`] — the §5.4 (accelerator × workload) sweep, now a
+//!   rayon fan-out via `Engine::plan_grid` (the hand-rolled
+//!   `thread::scope` work queue is gone).
+//! * [`GemmService`] — the request loop: batches *consecutive*
+//!   same-shape requests and submits each run as one engine window
+//!   (the engine itself coalesces across whole windows).
+//! * [`Router`] — heterogeneous-node objective routing over
+//!   `Engine::plan`; cache hits serve the stored winning mapping and
+//!   always carry full per-pool scores.
+//! * [`ServiceMetrics`] — latency/throughput accounting, owned by every
+//!   engine and mergeable across windows.
 
 mod metrics;
 mod orchestrator;
@@ -20,6 +23,8 @@ mod router;
 mod service;
 
 pub use metrics::{LatencyStats, ServiceMetrics};
-pub use orchestrator::{search_grid, GridResult};
+#[allow(deprecated)]
+pub use orchestrator::search_grid;
+pub use orchestrator::GridResult;
 pub use router::{Objective, Route, Router};
 pub use service::{GemmService, RequestOutcome, ServiceConfig, ServiceReport};

@@ -1,83 +1,46 @@
-//! Parallel search orchestration: run FLASH over a grid of
-//! (accelerator × workload) pairs on a worker pool.
+//! Grid search orchestration — a thin adapter over
+//! [`crate::engine::Engine::plan_grid`].
 //!
 //! The evaluation sweeps of §5.4 (5 styles × 2 configs × 6 workloads)
-//! are embarrassingly parallel; a shared work queue + `thread::scope`
-//! keeps this dependency-free.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::thread;
+//! are embarrassingly parallel. The original hand-rolled
+//! `thread::scope` work queue is gone: the engine fans the grid over
+//! rayon (order-preserving `par_iter().map().collect()`), nesting under
+//! the same pool as each search's own candidate parallelism.
 
 use crate::arch::Accelerator;
-use crate::flash::{self, SearchResult};
+use crate::engine::Engine;
 use crate::workloads::Gemm;
 
-/// One cell of the evaluation grid.
-#[derive(Debug)]
-pub struct GridResult {
-    pub accelerator: Accelerator,
-    pub workload: Gemm,
-    pub result: anyhow::Result<SearchResult>,
-}
+pub use crate::engine::GridResult;
 
-/// Search every (accelerator, workload) pair using up to `threads`
-/// workers (0 ⇒ `available_parallelism`). Results preserve input order.
+/// Search every (accelerator, workload) pair in parallel. `threads`
+/// bounds the worker count via a scoped rayon pool (0 ⇒ the global
+/// pool). Results preserve input order (accelerator-major).
+#[deprecated(note = "use `engine::Engine::plan_grid`")]
 pub fn search_grid(
     accelerators: &[Accelerator],
     workloads: &[Gemm],
     threads: usize,
 ) -> Vec<GridResult> {
-    let pairs: Vec<(usize, &Accelerator, &Gemm)> = accelerators
-        .iter()
-        .flat_map(|a| workloads.iter().map(move |w| (a, w)))
-        .enumerate()
-        .map(|(i, (a, w))| (i, a, w))
-        .collect();
-
-    let threads = if threads == 0 {
-        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        threads
+    if accelerators.is_empty() || workloads.is_empty() {
+        return Vec::new();
     }
-    .min(pairs.len().max(1));
-
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<GridResult>>> =
-        Mutex::new((0..pairs.len()).map(|_| None).collect());
-
-    thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let pairs = &pairs;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= pairs.len() {
-                    break;
-                }
-                let (idx, acc, wl) = pairs[i];
-                // search outside the lock; store under it
-                let result = flash::search(acc, wl);
-                let cell = GridResult {
-                    accelerator: (*acc).clone(),
-                    workload: (*wl).clone(),
-                    result,
-                };
-                slots.lock().expect("slots lock")[idx] = Some(cell);
-            });
-        }
-    });
-
-    slots
-        .into_inner()
-        .expect("slots lock")
-        .into_iter()
-        .map(|s| s.expect("every grid cell filled"))
-        .collect()
+    let engine = Engine::builder()
+        .pool(accelerators.to_vec())
+        .build()
+        .expect("non-empty accelerator pool");
+    let fan = || engine.plan_grid(workloads);
+    if threads == 0 {
+        return fan();
+    }
+    match rayon::ThreadPoolBuilder::new().num_threads(threads).build() {
+        Ok(pool) => pool.install(fan),
+        Err(_) => fan(),
+    }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arch::{HwConfig, Style};
@@ -108,5 +71,12 @@ mod tests {
         let rb = b[0].result.as_ref().unwrap();
         assert_eq!(ra.cost().runtime_cycles(), rb.cost().runtime_cycles());
         assert_eq!(ra.mapping(), rb.mapping());
+    }
+
+    #[test]
+    fn empty_inputs_give_empty_grid() {
+        assert!(search_grid(&[], &[Gemm::new("w", 8, 8, 8)], 0).is_empty());
+        let accs = vec![Accelerator::of_style(Style::Tpu, HwConfig::edge())];
+        assert!(search_grid(&accs, &[], 2).is_empty());
     }
 }

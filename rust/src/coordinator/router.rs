@@ -1,25 +1,21 @@
 //! Heterogeneous-node request router — the paper's conclusion points at
 //! "a heterogeneous HPC node with these accelerators"; this router is
-//! that node's front-end: given one request and a pool of attached
-//! accelerators (different styles and/or configs), route it to the
-//! accelerator whose best FLASH mapping minimizes the chosen objective.
+//! that node's front-end. It is now a thin adapter over
+//! [`crate::engine::Engine::plan`], which fixed the two defects of the
+//! original: a cache hit re-ran a full FLASH search (the winning
+//! [`EvaluatedMapping`] now comes straight from the shared
+//! [`MappingCache`](crate::flash::MappingCache)), and hits returned an
+//! empty `scores` vec (per-pool scores are now always present — they
+//! are recomputed from the cached costs, never searched).
 
-use std::collections::HashMap;
-
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::arch::Accelerator;
-use crate::flash::{self, EvaluatedMapping};
+use crate::engine::Engine;
+use crate::flash::EvaluatedMapping;
 use crate::workloads::Gemm;
 
-/// Routing objective.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Objective {
-    Runtime,
-    Energy,
-    /// Energy–delay product.
-    Edp,
-}
+pub use crate::cost::Objective;
 
 /// A routing decision for one request.
 #[derive(Debug)]
@@ -28,90 +24,51 @@ pub struct Route {
     pub accelerator_idx: usize,
     pub best: EvaluatedMapping,
     /// Per-accelerator scores (same order as the pool; `None` =
-    /// infeasible).
+    /// infeasible). Always populated, including on cache hits.
     pub scores: Vec<Option<f64>>,
 }
 
-/// The router: an accelerator pool plus a per-(shape, objective)
-/// decision cache.
+/// The router shim: an [`Engine`] whose pool is the node's accelerators.
 pub struct Router {
-    pool: Vec<Accelerator>,
-    cache: HashMap<(u64, u64, u64, u8), usize>,
+    engine: Engine,
     pub cache_hits: u64,
     pub cache_misses: u64,
 }
 
 impl Router {
     pub fn new(pool: Vec<Accelerator>) -> Result<Self> {
-        if pool.is_empty() {
-            bail!("router needs a non-empty accelerator pool");
-        }
         Ok(Router {
-            pool,
-            cache: HashMap::new(),
+            engine: Engine::builder().pool(pool).build()?,
             cache_hits: 0,
             cache_misses: 0,
         })
     }
 
     pub fn pool(&self) -> &[Accelerator] {
-        &self.pool
+        self.engine.pool()
     }
 
-    fn score(e: &EvaluatedMapping, obj: Objective) -> f64 {
-        match obj {
-            Objective::Runtime => e.cost.runtime_ms(),
-            Objective::Energy => e.cost.energy_j,
-            Objective::Edp => e.cost.energy_j * e.cost.runtime_ms(),
-        }
-    }
-
-    /// Route one request: search every pool member, pick the argmin.
+    /// Route one request: plan over the pool, pick the argmin. A repeat
+    /// (shape, objective) is served entirely from the mapping cache —
+    /// no search re-runs — and still carries full per-pool scores.
+    #[deprecated(note = "use `engine::Engine::plan`")]
     pub fn route(&mut self, wl: &Gemm, obj: Objective) -> Result<Route> {
-        let key = (wl.m, wl.n, wl.k, obj as u8);
-        if let Some(&idx) = self.cache.get(&key) {
+        let plan = self.engine.plan(wl, obj)?;
+        if plan.cache_hit {
             self.cache_hits += 1;
-            // re-derive the mapping for the cached winner only
-            let best = flash::search(&self.pool[idx], wl)?.best;
-            return Ok(Route {
-                accelerator_idx: idx,
-                best,
-                scores: Vec::new(),
-            });
+        } else {
+            self.cache_misses += 1;
         }
-        self.cache_misses += 1;
-
-        let mut scores = Vec::with_capacity(self.pool.len());
-        let mut best: Option<(usize, EvaluatedMapping, f64)> = None;
-        for (i, acc) in self.pool.iter().enumerate() {
-            match flash::search(acc, wl) {
-                Ok(r) => {
-                    let s = Self::score(&r.best, obj);
-                    scores.push(Some(s));
-                    let better = match &best {
-                        Some((_, _, bs)) => s < *bs,
-                        None => true,
-                    };
-                    if better {
-                        best = Some((i, r.best, s));
-                    }
-                }
-                Err(_) => scores.push(None),
-            }
-        }
-        let Some((idx, best, _)) = best else {
-            bail!("no accelerator in the pool can run {wl}");
-        };
-        self.cache.insert(key, idx);
         Ok(Route {
-            accelerator_idx: idx,
-            best,
-            scores,
+            accelerator_idx: plan.accelerator_idx,
+            best: plan.best,
+            scores: plan.scores,
         })
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arch::{HwConfig, Style};
@@ -157,6 +114,11 @@ mod tests {
         assert_eq!(a.accelerator_idx, b.accelerator_idx);
         assert_eq!(router.cache_hits, 1);
         assert_eq!(router.cache_misses, 1);
+        // the fixed hit path: identical winning mapping, full scores
+        assert_eq!(a.best.mapping, b.best.mapping);
+        assert_eq!(a.best.selection_key(), b.best.selection_key());
+        assert_eq!(a.scores, b.scores);
+        assert_eq!(b.scores.len(), router.pool().len());
     }
 
     #[test]

@@ -1,31 +1,28 @@
-//! The GEMM service: the end-to-end request loop.
+//! The GEMM service — now a thin adapter over [`crate::engine::Engine`].
 //!
-//! Requests (GEMM workloads with operand data generated per request)
-//! flow through three stages, Python nowhere on the path:
+//! Historically this module owned the whole request loop (batching,
+//! search, execution). That pipeline lives in the unified engine today;
+//! `GemmService` survives as a compatibility shim that preserves the
+//! original observable behavior exactly:
 //!
-//! 1. **Batching** — consecutive requests with identical shape are
-//!    grouped; one FLASH search serves the whole batch.
-//! 2. **Search** — FLASH + MAESTRO-BLAS select the mapping; its
-//!    projected cost is attached to the response. A shape-keyed
-//!    [`MappingCache`] (shareable across service instances via `Arc`)
-//!    lets repeat-shape traffic skip the search entirely.
-//! 3. **Execution** — on the native backend the whole batch fans over
-//!    rayon: one shared [`PackedGemm`] plan per shape, then operand
-//!    generation, packed-panel parallel execution, and verification each
-//!    run data-parallel across the batch (each GEMM is itself
-//!    tile-parallel; rayon nests both levels under one pool). Under
-//!    `--features pjrt` the per-request serial artifact path runs
-//!    instead, so the real compiled kernel is still what executes.
+//! * requests batch as maximal runs of *consecutive* identical shapes
+//!   (each run is one engine submission window), so `batches` and the
+//!   per-batch cache hit/miss accounting match the legacy loop;
+//! * request *i* seeds its operands with `DEFAULT_SEED + i`, the
+//!   constant the old loop used, so numerics are bit-identical.
+//!
+//! New code should build an [`Engine`](crate::engine::Engine) and
+//! submit [`Query`](crate::engine::Query) windows directly — whole-
+//! window coalescing (not just consecutive runs) comes for free there.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use rayon::prelude::*;
 
 use crate::arch::Accelerator;
-use crate::flash::{EvaluatedMapping, MappingCache};
-use crate::runtime::{PackedGemm, Runtime, TiledExecutor};
+use crate::engine::{Engine, Query, DEFAULT_SEED};
+use crate::flash::MappingCache;
+use crate::runtime::Runtime;
 use crate::workloads::Gemm;
 
 use super::metrics::ServiceMetrics;
@@ -70,12 +67,11 @@ pub struct ServiceReport {
     pub metrics: ServiceMetrics,
 }
 
-/// The service itself: owns the runtime and shares a mapping cache.
+/// The service shim: a single-accelerator [`Engine`] plus the legacy
+/// configuration knobs.
 pub struct GemmService {
-    accelerator: Accelerator,
-    runtime: Runtime,
+    engine: Engine,
     config: ServiceConfig,
-    mapping_cache: Arc<MappingCache>,
 }
 
 impl GemmService {
@@ -92,68 +88,41 @@ impl GemmService {
         config: ServiceConfig,
         mapping_cache: Arc<MappingCache>,
     ) -> Self {
-        GemmService {
-            accelerator,
-            runtime,
-            config,
-            mapping_cache,
-        }
+        let engine = Engine::builder()
+            .accelerator(accelerator)
+            .runtime(runtime)
+            .shared_cache(mapping_cache)
+            .max_exec_dim(config.max_exec_dim)
+            .tile(config.tile)
+            .build()
+            .expect("single-accelerator pool is never empty");
+        GemmService { engine, config }
     }
 
     /// The shared mapping cache (e.g. to pre-warm or inspect).
     pub fn mapping_cache(&self) -> &Arc<MappingCache> {
-        &self.mapping_cache
+        self.engine.cache()
     }
 
-    /// Deterministic operand data for a request.
-    fn operands(wl: &Gemm, seed: u64) -> (Vec<f32>, Vec<f32>) {
-        let mut state = seed.max(1);
-        let mut gen = |n: u64| -> Vec<f32> {
-            (0..n)
-                .map(|_| {
-                    state ^= state >> 12;
-                    state ^= state << 25;
-                    state ^= state >> 27;
-                    ((state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
-                        - 0.5
-                })
-                .collect()
-        };
-        (gen(wl.m * wl.k), gen(wl.k * wl.n))
-    }
-
-    fn reference_gemm(wl: &Gemm, a: &[f32], b: &[f32]) -> Vec<f32> {
-        let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
-        let mut c = vec![0f32; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let av = a[i * k + kk];
-                let crow = &mut c[i * n..(i + 1) * n];
-                let brow = &b[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
-            }
-        }
-        c
-    }
-
-    fn close(c: &[f32], r: &[f32]) -> bool {
-        c.iter()
-            .zip(r)
-            .all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + y.abs()))
+    /// The engine this shim fronts.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 
     /// Serve a trace of requests; batches consecutive same-shape
     /// requests (one cached search per distinct shape, one parallel
     /// execution fan-out per batch).
+    #[deprecated(
+        note = "build an `engine::Engine` and submit a `Query` window with `Engine::run`"
+    )]
     pub fn serve(&mut self, requests: &[Gemm]) -> Result<ServiceReport> {
         let mut metrics = ServiceMetrics::default();
         let mut outcomes = Vec::with_capacity(requests.len());
 
         let mut i = 0usize;
         while i < requests.len() {
-            // batch = maximal run of identical shapes
+            // window = maximal run of consecutive identical shapes,
+            // exactly the legacy batching rule
             let shape = (requests[i].m, requests[i].n, requests[i].k);
             let mut j = i;
             while j < requests.len()
@@ -161,186 +130,33 @@ impl GemmService {
             {
                 j += 1;
             }
-            metrics.batches += 1;
 
-            // one search per shape, memoized in the shared cache (the
-            // cache's own hit/miss counters stay in step with ours)
-            let t0 = Instant::now();
-            let (best, hit) = self
-                .mapping_cache
-                .get_or_search(&self.accelerator, &requests[i])?;
-            if hit {
-                metrics.mapping_cache_hits += 1;
-            } else {
-                metrics.mapping_cache_misses += 1;
-                metrics.search_time += t0.elapsed();
-            }
-
-            let batch = &requests[i..j];
-            let can_exec = shape.0.max(shape.1).max(shape.2) <= self.config.max_exec_dim;
-            if !can_exec {
-                // search-only responses
-                for wl in batch {
-                    let latency = Duration::ZERO;
-                    metrics.latency.record(latency);
-                    metrics.requests += 1;
-                    outcomes.push(RequestOutcome {
-                        workload: wl.clone(),
-                        mapping_name: best.mapping.name(),
-                        projected_ms: best.cost.runtime_ms(),
-                        executed: false,
-                        verified: None,
-                        latency_us: latency.as_micros() as u64,
-                    });
-                }
-                i = j;
-                continue;
-            }
-
-            let tile = if self.config.tile > 0 {
-                self.config.tile
-            } else {
-                TiledExecutor::auto_tile(&self.runtime, &requests[i])
-            };
-            if self.runtime.is_native() {
-                self.run_batch_packed(batch, i, tile, &best, &mut metrics, &mut outcomes)?;
-            } else {
-                self.run_batch_serial(batch, i, tile, &best, &mut metrics, &mut outcomes)?;
-            }
+            let queries: Vec<Query> = requests[i..j]
+                .iter()
+                .enumerate()
+                .map(|(b, wl)| {
+                    Query::new(wl.clone())
+                        .seed(DEFAULT_SEED + (i + b) as u64)
+                        .verify(self.config.verify)
+                })
+                .collect();
+            let report = self.engine.run(&queries)?;
+            metrics.merge(&report.metrics);
+            outcomes.extend(report.responses.into_iter().map(|r| RequestOutcome {
+                mapping_name: r.mapping_name(),
+                projected_ms: r.projected_ms(),
+                executed: r.executed,
+                verified: r.verified,
+                latency_us: r.latency_us,
+                workload: r.workload,
+            }));
             i = j;
         }
 
         Ok(ServiceReport { outcomes, metrics })
     }
 
-    /// Execute one same-shape batch through the packed parallel engine.
-    /// Operand generation, execution, and verification each fan over
-    /// rayon; `exec_time` accounts the wall clock of the execution
-    /// phases only, so the throughput counters reflect what the engine
-    /// actually sustained. The batch is processed in bounded chunks (a
-    /// few requests per worker thread) so memory stays O(chunk), not
-    /// O(batch) — a 10k-request same-shape trace must not hold 10k
-    /// operand sets alive at once.
-    fn run_batch_packed(
-        &mut self,
-        batch: &[Gemm],
-        batch_start: usize,
-        tile: u64,
-        best: &EvaluatedMapping,
-        metrics: &mut ServiceMetrics,
-        outcomes: &mut Vec<RequestOutcome>,
-    ) -> Result<()> {
-        // tile artifact must exist, exactly as the per-tile path demands
-        self.runtime.warm(&format!("gemm_tile_{tile}"))?;
-        let plan = PackedGemm::new(&batch[0], tile as usize, best.mapping.inter_order)?;
-        let calls = plan.tile_calls();
-        let chunk_len = rayon::current_num_threads().max(1) * 4;
-
-        for (ci, chunk) in batch.chunks(chunk_len).enumerate() {
-            let chunk_start = ci * chunk_len;
-
-            // phase 1: deterministic operands (seeds match the serial path)
-            let inputs: Vec<(Vec<f32>, Vec<f32>, Duration)> = chunk
-                .par_iter()
-                .enumerate()
-                .map(|(b, wl)| {
-                    let t0 = Instant::now();
-                    let seed = 0x5EED + (batch_start + chunk_start + b) as u64;
-                    let (a, bm) = Self::operands(wl, seed);
-                    (a, bm, t0.elapsed())
-                })
-                .collect();
-
-            // phase 2: packed-panel parallel execution
-            let te0 = Instant::now();
-            let execs: Vec<(Vec<f32>, Duration)> = inputs
-                .par_iter()
-                .map(|(a, bm, _)| {
-                    let t0 = Instant::now();
-                    plan.run(a, bm).map(|c| (c, t0.elapsed()))
-                })
-                .collect::<Result<_>>()?;
-            metrics.exec_time += te0.elapsed();
-
-            // phase 3: verification against the reference GEMM
-            let checks: Vec<(Option<bool>, Duration)> = if self.config.verify {
-                inputs
-                    .par_iter()
-                    .zip(&execs)
-                    .enumerate()
-                    .map(|(b, ((a, bm, _), (c, _)))| {
-                        let t0 = Instant::now();
-                        let r = Self::reference_gemm(&chunk[b], a, bm);
-                        (Some(Self::close(c, &r)), t0.elapsed())
-                    })
-                    .collect()
-            } else {
-                vec![(None, Duration::ZERO); chunk.len()]
-            };
-
-            self.runtime.note_executions(calls * chunk.len() as u64);
-            for (b, wl) in chunk.iter().enumerate() {
-                let latency = inputs[b].2 + execs[b].1 + checks[b].1;
-                metrics.latency.record(latency);
-                metrics.requests += 1;
-                metrics.macs_executed += wl.macs();
-                metrics.tile_calls += calls;
-                outcomes.push(RequestOutcome {
-                    workload: wl.clone(),
-                    mapping_name: best.mapping.name(),
-                    projected_ms: best.cost.runtime_ms(),
-                    executed: true,
-                    verified: checks[b].0,
-                    latency_us: latency.as_micros() as u64,
-                });
-            }
-        }
-        Ok(())
-    }
-
-    /// Execute one same-shape batch request-by-request through the
-    /// per-tile artifact path (`--features pjrt`, or any non-native
-    /// backend): the real compiled kernel runs once per grid point.
-    fn run_batch_serial(
-        &mut self,
-        batch: &[Gemm],
-        batch_start: usize,
-        tile: u64,
-        best: &EvaluatedMapping,
-        metrics: &mut ServiceMetrics,
-        outcomes: &mut Vec<RequestOutcome>,
-    ) -> Result<()> {
-        for (b, wl) in batch.iter().enumerate() {
-            let t0 = Instant::now();
-            let (a, bm) = Self::operands(wl, 0x5EED + batch_start as u64 + b as u64);
-            let te0 = Instant::now();
-            let mut exec =
-                TiledExecutor::new(&mut self.runtime, tile as usize, best.mapping.inter_order)?;
-            let c = exec.gemm(wl, &a, &bm)?;
-            metrics.tile_calls += exec.tile_calls;
-            metrics.exec_time += te0.elapsed();
-            metrics.macs_executed += wl.macs();
-            let mut verified = None;
-            if self.config.verify {
-                let r = Self::reference_gemm(wl, &a, &bm);
-                verified = Some(Self::close(&c, &r));
-            }
-            let latency = t0.elapsed();
-            metrics.latency.record(latency);
-            metrics.requests += 1;
-            outcomes.push(RequestOutcome {
-                workload: wl.clone(),
-                mapping_name: best.mapping.name(),
-                projected_ms: best.cost.runtime_ms(),
-                executed: true,
-                verified,
-                latency_us: latency.as_micros() as u64,
-            });
-        }
-        Ok(())
-    }
-
     pub fn runtime(&self) -> &Runtime {
-        &self.runtime
+        self.engine.runtime()
     }
 }

@@ -13,15 +13,20 @@
 //! * `energy` ([`EnergyModel`]) — per-access energy constants
 //!   (28 nm-calibrated, see [`EnergyModel`] docs) combining buffer, MAC
 //!   and NoC-wire energy.
+//! * `objective` ([`Objective`]) — what "best" means for a mapping:
+//!   runtime (the paper's §5.2 criterion), energy, or energy–delay
+//!   product; scores a [`Cost`], keys objective-aware cache lookups.
 
 mod access;
 mod energy;
 mod model;
+mod objective;
 mod runtime;
 
 pub use access::{AccessCounts, PerMatrix};
 pub use energy::{EnergyBreakdown, EnergyModel};
 pub use model::{Cost, CostModel};
+pub use objective::Objective;
 pub use runtime::RuntimeBreakdown;
 
 use crate::dataflow::Mapping;

@@ -1,0 +1,91 @@
+//! Optimization objectives — what "best" means for a mapping.
+//!
+//! The paper selects mappings by lowest projected runtime (§5.2); the
+//! heterogeneous-node extension and the `engine` pipeline also optimize
+//! for energy or energy–delay product. An [`Objective`] scores a
+//! [`Cost`]; lower is always better. It is `Hash`/`Eq` so it can key
+//! the shape-keyed mapping cache (`flash::MappingCache`) — objective-
+//! aware lookups never collide across objectives.
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::Cost;
+
+/// What to minimize when selecting a mapping (or an accelerator).
+#[derive(
+    Debug,
+    Clone,
+    Copy,
+    Default,
+    PartialEq,
+    Eq,
+    Hash,
+    serde::Serialize,
+    serde::Deserialize,
+)]
+pub enum Objective {
+    /// Lowest projected runtime (the paper's §5.2 criterion).
+    #[default]
+    Runtime,
+    /// Lowest projected energy.
+    Energy,
+    /// Lowest energy–delay product.
+    Edp,
+}
+
+impl Objective {
+    /// Score a cost under this objective; lower is better.
+    pub fn score(&self, cost: &Cost) -> f64 {
+        match self {
+            Objective::Runtime => cost.runtime_ms(),
+            Objective::Energy => cost.energy_j,
+            Objective::Edp => cost.energy_j * cost.runtime_ms(),
+        }
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Objective::Runtime => "runtime",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        })
+    }
+}
+
+impl FromStr for Objective {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "runtime" => Ok(Objective::Runtime),
+            "energy" => Ok(Objective::Energy),
+            "edp" => Ok(Objective::Edp),
+            other => Err(format!(
+                "unknown objective {other:?} (runtime|energy|edp)"
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // `score()` ordering over real Costs is exercised in
+    // `flash::search::tests::objective_search_trades_runtime_for_energy`
+    // — Cost carries private calibration state and is only constructed
+    // by `CostModel::evaluate`.
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for o in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+            assert_eq!(o.to_string().parse::<Objective>().unwrap(), o);
+        }
+        assert_eq!("EDP".parse::<Objective>().unwrap(), Objective::Edp);
+        assert!("latency".parse::<Objective>().is_err());
+        assert_eq!(Objective::default(), Objective::Runtime);
+    }
+}

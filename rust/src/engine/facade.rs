@@ -1,0 +1,775 @@
+//! The `Engine` facade: builder, planning, window scheduling, and
+//! execution fan-out.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+use rayon::prelude::*;
+
+use crate::arch::Accelerator;
+use crate::coordinator::ServiceMetrics;
+use crate::cost::Objective;
+use crate::flash::{self, EvaluatedMapping, MappingCache, SearchOpts, SearchResult};
+use crate::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
+use crate::workloads::Gemm;
+
+use super::query::{Query, Response};
+
+/// Stage-1 output: the objective-aware selection for one shape over the
+/// engine's accelerator pool.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Index of the winning accelerator in the pool.
+    pub accelerator_idx: usize,
+    /// The winning mapping with its projected cost.
+    pub best: EvaluatedMapping,
+    /// Per-accelerator objective scores, pool order (`None` =
+    /// infeasible on that pool member).
+    pub scores: Vec<Option<f64>>,
+    /// `true` when every pool member was served from the shared mapping
+    /// cache — no FLASH search ran for this plan.
+    pub cache_hit: bool,
+}
+
+/// One cell of a (accelerator × workload) planning grid.
+#[derive(Debug)]
+pub struct GridResult {
+    pub accelerator: Accelerator,
+    pub workload: Gemm,
+    pub result: anyhow::Result<SearchResult>,
+}
+
+/// What one [`Engine::run`] window produced: responses in submission
+/// order plus the window's own metrics (also merged into the engine's
+/// cumulative [`Engine::metrics`]).
+#[derive(Debug)]
+pub struct EngineReport {
+    pub responses: Vec<Response>,
+    pub metrics: ServiceMetrics,
+}
+
+/// Builder for [`Engine`] — see the module docs for the pipeline it
+/// configures. (Not `Debug`: it may hold a [`Runtime`], which wraps
+/// backend state without a `Debug` impl.)
+pub struct EngineBuilder {
+    pool: Vec<Accelerator>,
+    runtime: Option<Runtime>,
+    objective: Objective,
+    cache: Option<Arc<MappingCache>>,
+    max_exec_dim: u64,
+    tile: u64,
+}
+
+impl EngineBuilder {
+    /// Attach one accelerator to the pool.
+    pub fn accelerator(mut self, accelerator: Accelerator) -> Self {
+        self.pool.push(accelerator);
+        self
+    }
+
+    /// Replace the whole accelerator pool.
+    pub fn pool(mut self, pool: Vec<Accelerator>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Execution backend (default: the native interpreter over a
+    /// synthetic 16/32/64 tile manifest).
+    pub fn runtime(mut self, runtime: Runtime) -> Self {
+        self.runtime = Some(runtime);
+        self
+    }
+
+    /// Default selection objective for queries that don't set their own.
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Share a mapping cache with other engines / services — warm shapes
+    /// hit regardless of which instance searched them first.
+    pub fn shared_cache(mut self, cache: Arc<MappingCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Cap on M/N/K for numeric execution (larger queries get plan-only
+    /// responses). Default 512.
+    pub fn max_exec_dim(mut self, max_exec_dim: u64) -> Self {
+        self.max_exec_dim = max_exec_dim;
+        self
+    }
+
+    /// Force a specific tile artifact (0 ⇒ auto per shape).
+    pub fn tile(mut self, tile: u64) -> Self {
+        self.tile = tile;
+        self
+    }
+
+    /// Build the engine; fails on an empty accelerator pool.
+    pub fn build(self) -> Result<Engine> {
+        if self.pool.is_empty() {
+            bail!("engine needs a non-empty accelerator pool");
+        }
+        Ok(Engine {
+            pool: self.pool,
+            runtime: self
+                .runtime
+                .unwrap_or_else(|| Runtime::native(Manifest::synthetic(&[16, 32, 64]))),
+            objective: self.objective,
+            cache: self.cache.unwrap_or_default(),
+            max_exec_dim: self.max_exec_dim,
+            tile: self.tile,
+            metrics: ServiceMetrics::default(),
+        })
+    }
+}
+
+/// Everything one execution group needs besides the engine itself: the
+/// group's plan, objective, tile size, and member query indices.
+struct GroupRun<'a> {
+    plan: &'a Plan,
+    objective: Objective,
+    tile: u64,
+    members: &'a [usize],
+}
+
+/// The unified serving facade: one accelerator pool, one execution
+/// runtime, one shared mapping cache, one metrics ledger — and one typed
+/// [`Query`] → [`Plan`] → [`Response`] pipeline over them.
+pub struct Engine {
+    pool: Vec<Accelerator>,
+    runtime: Runtime,
+    objective: Objective,
+    cache: Arc<MappingCache>,
+    max_exec_dim: u64,
+    tile: u64,
+    metrics: ServiceMetrics,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder {
+            pool: Vec::new(),
+            runtime: None,
+            objective: Objective::Runtime,
+            cache: None,
+            max_exec_dim: 512,
+            tile: 0,
+        }
+    }
+
+    /// The accelerator pool, in planning order.
+    pub fn pool(&self) -> &[Accelerator] {
+        &self.pool
+    }
+
+    /// The execution backend.
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// The shared mapping cache (e.g. to pre-warm, share, or inspect).
+    pub fn cache(&self) -> &Arc<MappingCache> {
+        &self.cache
+    }
+
+    /// Cumulative metrics across every window this engine served.
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// The default selection objective.
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// **Stage 1 — plan.** Objective-aware mapping selection over the
+    /// pool, cache-first: each pool member's best mapping comes from the
+    /// shared [`MappingCache`] (one FLASH search per distinct
+    /// (shape, style, config, objective), ever), and the accelerator
+    /// with the lowest objective score wins. Always returns per-pool
+    /// scores.
+    pub fn plan(&self, workload: &Gemm, objective: Objective) -> Result<Plan> {
+        let mut scores = Vec::with_capacity(self.pool.len());
+        let mut searches = 0usize;
+        let mut last_err = None;
+        let mut best: Option<(usize, EvaluatedMapping, f64)> = None;
+        for (i, acc) in self.pool.iter().enumerate() {
+            // a pool member already known infeasible for this key is a
+            // cached answer, not a search — score None and move on
+            if self.cache.is_infeasible(acc, workload, objective) {
+                scores.push(None);
+                continue;
+            }
+            match self.cache.get_or_search_with(acc, workload, objective) {
+                Ok((e, hit)) => {
+                    if !hit {
+                        searches += 1;
+                    }
+                    let s = objective.score(&e.cost);
+                    scores.push(Some(s));
+                    let better = match &best {
+                        Some((_, _, bs)) => s < *bs,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, e, s));
+                    }
+                }
+                Err(e) => {
+                    searches += 1;
+                    last_err = Some(e);
+                    scores.push(None);
+                }
+            }
+        }
+        let Some((accelerator_idx, best, _)) = best else {
+            let msg = format!("no accelerator in the pool can run {workload}");
+            return Err(match last_err {
+                Some(e) => e.context(msg),
+                None => anyhow!(msg),
+            });
+        };
+        Ok(Plan {
+            accelerator_idx,
+            best,
+            scores,
+            cache_hit: searches == 0,
+        })
+    }
+
+    /// Fan a full (pool × workloads) planning grid over rayon — the
+    /// §5.4 evaluation sweep. Results preserve pool-major, workload-
+    /// minor order and carry the complete [`SearchResult`] statistics;
+    /// searches run under the engine's default objective, so every
+    /// winning mapping warms the shared cache for the lookups
+    /// [`Engine::plan`]/[`Engine::run`] will actually make.
+    pub fn plan_grid(&self, workloads: &[Gemm]) -> Vec<GridResult> {
+        let pairs: Vec<(&Accelerator, &Gemm)> = self
+            .pool
+            .iter()
+            .flat_map(|a| workloads.iter().map(move |w| (a, w)))
+            .collect();
+        // capture only the (Sync) cache, not the whole engine — the
+        // runtime never participates in planning
+        let cache = &self.cache;
+        let objective = self.objective;
+        pairs
+            .par_iter()
+            .map(|&(acc, wl)| {
+                let result = flash::search_with(
+                    acc,
+                    wl,
+                    &SearchOpts {
+                        objective,
+                        ..Default::default()
+                    },
+                );
+                if let Ok(r) = &result {
+                    cache.insert_with(acc, wl, objective, r.best.clone());
+                }
+                GridResult {
+                    accelerator: acc.clone(),
+                    workload: wl.clone(),
+                    result,
+                }
+            })
+            .collect()
+    }
+
+    /// Full FLASH search (with candidate/pruning statistics) on one pool
+    /// member, warming the shared cache with the winner. The plan path
+    /// ([`Engine::plan`]) is cache-first and cheaper; this is for
+    /// report-style consumers that need the whole [`SearchResult`].
+    pub fn search_detailed(
+        &self,
+        accelerator_idx: usize,
+        workload: &Gemm,
+        objective: Objective,
+    ) -> Result<SearchResult> {
+        let acc = self.pool.get(accelerator_idx).ok_or_else(|| {
+            anyhow!(
+                "accelerator index {accelerator_idx} out of range (pool of {})",
+                self.pool.len()
+            )
+        })?;
+        let r = flash::search_with(
+            acc,
+            workload,
+            &SearchOpts {
+                objective,
+                ..Default::default()
+            },
+        )?;
+        self.cache.insert_with(acc, workload, objective, r.best.clone());
+        Ok(r)
+    }
+
+    /// Serve one query (a one-element [`Engine::run`] window).
+    pub fn query(&mut self, query: Query) -> Result<Response> {
+        let mut report = self.run(std::slice::from_ref(&query))?;
+        Ok(report.responses.pop().expect("one response per query"))
+    }
+
+    /// Serve a whole submission window through the three-stage pipeline.
+    ///
+    /// * **Plan** — one objective-aware, cache-first selection per
+    ///   distinct (shape, objective) in the window.
+    /// * **Schedule** — queries coalesce across the *entire* window (not
+    ///   just consecutive runs): every query of a shape joins one group
+    ///   regardless of its position, so a shuffled trace plans and
+    ///   executes exactly like the sorted one.
+    /// * **Execute** — each group fans over rayon through the packed-
+    ///   panel engine (native backend) or runs per-request through the
+    ///   tile-artifact path, with per-query seeds, verification, and
+    ///   latency accounting.
+    ///
+    /// Responses come back in submission order; the window's metrics are
+    /// returned and merged into [`Engine::metrics`].
+    pub fn run(&mut self, queries: &[Query]) -> Result<EngineReport> {
+        let mut window = ServiceMetrics::default();
+        let mut responses: Vec<Option<Response>> = queries.iter().map(|_| None).collect();
+
+        // stage 2 — schedule: coalesce by (shape, objective) across the
+        // whole window, groups in first-appearance order
+        let mut group_of: HashMap<(u64, u64, u64, Objective), usize> = HashMap::new();
+        let mut groups: Vec<(Objective, Vec<usize>)> = Vec::new();
+        for (qi, q) in queries.iter().enumerate() {
+            let objective = q.objective.unwrap_or(self.objective);
+            let key = (q.workload.m, q.workload.n, q.workload.k, objective);
+            let gi = *group_of.entry(key).or_insert_with(|| {
+                groups.push((objective, Vec::new()));
+                groups.len() - 1
+            });
+            groups[gi].1.push(qi);
+        }
+
+        for (objective, members) in &groups {
+            window.batches += 1;
+            let shape = &queries[members[0]].workload;
+
+            // stage 1 — plan, cache-first
+            let t0 = Instant::now();
+            let plan = self.plan(shape, *objective)?;
+            if plan.cache_hit {
+                window.mapping_cache_hits += 1;
+            } else {
+                window.mapping_cache_misses += 1;
+                window.search_time += t0.elapsed();
+            }
+
+            let can_exec = shape.m.max(shape.n).max(shape.k) <= self.max_exec_dim;
+            let (exec, skip): (Vec<usize>, Vec<usize>) = members
+                .iter()
+                .copied()
+                .partition(|&qi| can_exec && queries[qi].execute);
+
+            for qi in skip {
+                window.latency.record(Duration::ZERO);
+                window.requests += 1;
+                responses[qi] = Some(Self::plan_only_response(&plan, *objective, &queries[qi]));
+            }
+
+            if !exec.is_empty() {
+                let tile = if self.tile > 0 {
+                    self.tile
+                } else {
+                    TiledExecutor::auto_tile(&self.runtime, shape)
+                };
+                let group = GroupRun {
+                    plan: &plan,
+                    objective: *objective,
+                    tile,
+                    members: &exec,
+                };
+                if self.runtime.is_native() {
+                    self.exec_packed(&group, queries, &mut window, &mut responses)?;
+                } else {
+                    self.exec_serial(&group, queries, &mut window, &mut responses)?;
+                }
+            }
+        }
+
+        let responses = responses
+            .into_iter()
+            .map(|r| r.expect("every query answered"))
+            .collect();
+        self.metrics.merge(&window);
+        Ok(EngineReport {
+            responses,
+            metrics: window,
+        })
+    }
+
+    fn plan_only_response(plan: &Plan, objective: Objective, q: &Query) -> Response {
+        Response {
+            workload: q.workload.clone(),
+            objective,
+            accelerator_idx: plan.accelerator_idx,
+            mapping: plan.best.clone(),
+            scores: plan.scores.clone(),
+            cache_hit: plan.cache_hit,
+            executed: false,
+            verified: None,
+            latency_us: 0,
+            result: None,
+        }
+    }
+
+    /// **Stage 3 — execute** one group through the packed parallel
+    /// engine. Operand generation, execution, and verification each fan
+    /// over rayon; `exec_time` accounts the execution phase's wall clock
+    /// only. The group is processed in bounded chunks (a few queries per
+    /// worker thread) so memory stays O(chunk), not O(group).
+    fn exec_packed(
+        &mut self,
+        group: &GroupRun,
+        queries: &[Query],
+        window: &mut ServiceMetrics,
+        responses: &mut [Option<Response>],
+    ) -> Result<()> {
+        // tile artifact must exist, exactly as the per-tile path demands
+        self.runtime.warm(&format!("gemm_tile_{}", group.tile))?;
+        let shape = &queries[group.members[0]].workload;
+        let pg = PackedGemm::new(shape, group.tile as usize, group.plan.best.mapping.inter_order)?;
+        let calls = pg.tile_calls();
+        let chunk_len = rayon::current_num_threads().max(1) * 4;
+
+        for chunk in group.members.chunks(chunk_len) {
+            // phase 1: deterministic operands from each query's own seed
+            let inputs: Vec<(Vec<f32>, Vec<f32>, Duration)> = chunk
+                .par_iter()
+                .map(|&qi| {
+                    let t0 = Instant::now();
+                    let q = &queries[qi];
+                    let (a, b) = operands(&q.workload, q.seed);
+                    (a, b, t0.elapsed())
+                })
+                .collect();
+
+            // phase 2: packed-panel parallel execution
+            let te0 = Instant::now();
+            let mut execs: Vec<(Vec<f32>, Duration)> = inputs
+                .par_iter()
+                .map(|(a, b, _)| {
+                    let t0 = Instant::now();
+                    pg.run(a, b).map(|c| (c, t0.elapsed()))
+                })
+                .collect::<Result<_>>()?;
+            window.exec_time += te0.elapsed();
+
+            // phase 3: per-query verification against the reference GEMM
+            let checks: Vec<(Option<bool>, Duration)> = inputs
+                .par_iter()
+                .zip(&execs)
+                .enumerate()
+                .map(|(ci, ((a, b, _), (c, _)))| {
+                    let q = &queries[chunk[ci]];
+                    if q.verify {
+                        let t0 = Instant::now();
+                        let r = reference_gemm(&q.workload, a, b);
+                        (Some(close(c, &r)), t0.elapsed())
+                    } else {
+                        (None, Duration::ZERO)
+                    }
+                })
+                .collect();
+
+            self.runtime.note_executions(calls * chunk.len() as u64);
+            for (ci, &qi) in chunk.iter().enumerate() {
+                let q = &queries[qi];
+                let latency = inputs[ci].2 + execs[ci].1 + checks[ci].1;
+                window.latency.record(latency);
+                window.requests += 1;
+                window.macs_executed += q.workload.macs();
+                window.tile_calls += calls;
+                let result = q
+                    .return_result
+                    .then(|| std::mem::take(&mut execs[ci].0));
+                responses[qi] = Some(Response {
+                    workload: q.workload.clone(),
+                    objective: group.objective,
+                    accelerator_idx: group.plan.accelerator_idx,
+                    mapping: group.plan.best.clone(),
+                    scores: group.plan.scores.clone(),
+                    cache_hit: group.plan.cache_hit,
+                    executed: true,
+                    verified: checks[ci].0,
+                    latency_us: latency.as_micros() as u64,
+                    result,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// **Stage 3 — execute** one group query-by-query through the
+    /// per-tile artifact path (`--features pjrt`, or any non-native
+    /// backend): the real compiled kernel runs once per grid point.
+    fn exec_serial(
+        &mut self,
+        group: &GroupRun,
+        queries: &[Query],
+        window: &mut ServiceMetrics,
+        responses: &mut [Option<Response>],
+    ) -> Result<()> {
+        for &qi in group.members {
+            let q = &queries[qi];
+            let t0 = Instant::now();
+            let (a, b) = operands(&q.workload, q.seed);
+            let te0 = Instant::now();
+            let mut exec = TiledExecutor::new(
+                &mut self.runtime,
+                group.tile as usize,
+                group.plan.best.mapping.inter_order,
+            )?;
+            let c = exec.gemm(&q.workload, &a, &b)?;
+            window.tile_calls += exec.tile_calls;
+            window.exec_time += te0.elapsed();
+            window.macs_executed += q.workload.macs();
+            let verified = q
+                .verify
+                .then(|| close(&c, &reference_gemm(&q.workload, &a, &b)));
+            let latency = t0.elapsed();
+            window.latency.record(latency);
+            window.requests += 1;
+            responses[qi] = Some(Response {
+                workload: q.workload.clone(),
+                objective: group.objective,
+                accelerator_idx: group.plan.accelerator_idx,
+                mapping: group.plan.best.clone(),
+                scores: group.plan.scores.clone(),
+                cache_hit: group.plan.cache_hit,
+                executed: true,
+                verified,
+                latency_us: latency.as_micros() as u64,
+                result: q.return_result.then_some(c),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic operand data for a query (xorshift64*; the exact
+/// generator the serving path has always used, so shimmed traffic is
+/// bit-identical).
+pub fn operands(wl: &Gemm, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut state = seed.max(1);
+    let mut gen = |n: u64| -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                ((state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32)
+                    - 0.5
+            })
+            .collect()
+    };
+    (gen(wl.m * wl.k), gen(wl.k * wl.n))
+}
+
+/// Reference row-major GEMM for verification.
+pub fn reference_gemm(wl: &Gemm, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let (m, n, k) = (wl.m as usize, wl.n as usize, wl.k as usize);
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Element-wise closeness check against a reference result.
+pub fn close(c: &[f32], r: &[f32]) -> bool {
+    c.iter()
+        .zip(r)
+        .all(|(x, y)| (x - y).abs() <= 1e-3 * (1.0 + y.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    fn native_engine() -> Engine {
+        Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+            .max_exec_dim(128)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_empty_pool() {
+        assert!(Engine::builder().build().is_err());
+    }
+
+    #[test]
+    fn builder_defaults() {
+        let engine = Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Nvdla, HwConfig::edge()))
+            .build()
+            .unwrap();
+        assert_eq!(engine.objective(), Objective::Runtime);
+        assert_eq!(engine.pool().len(), 1);
+        assert!(engine.runtime().is_native());
+        assert!(engine.cache().is_empty());
+        assert_eq!(engine.metrics().requests, 0);
+    }
+
+    #[test]
+    fn plan_scores_every_pool_member_and_is_cache_first() {
+        let engine = Engine::builder()
+            .pool(Accelerator::all_styles(&HwConfig::edge()))
+            .build()
+            .unwrap();
+        let wl = Gemm::new("sq", 64, 64, 64);
+        let first = engine.plan(&wl, Objective::Runtime).unwrap();
+        assert_eq!(first.scores.len(), engine.pool().len());
+        assert!(!first.cache_hit);
+        let chosen = first.scores[first.accelerator_idx].unwrap();
+        for s in first.scores.iter().flatten() {
+            assert!(chosen <= *s + 1e-12);
+        }
+        // a second plan for the same (shape, objective) runs no search
+        let second = engine.plan(&wl, Objective::Runtime).unwrap();
+        assert!(second.cache_hit);
+        assert_eq!(second.accelerator_idx, first.accelerator_idx);
+        assert_eq!(second.best.mapping, first.best.mapping);
+        assert_eq!(second.scores, first.scores);
+        // a different objective is its own cache entry
+        let energy = engine.plan(&wl, Objective::Energy).unwrap();
+        assert!(!energy.cache_hit);
+    }
+
+    #[test]
+    fn query_executes_verifies_and_returns_result() {
+        let mut engine = native_engine();
+        let wl = Gemm::new("q", 48, 40, 24);
+        let r = engine
+            .query(Query::new(wl.clone()).verify(true).return_result(true))
+            .unwrap();
+        assert!(r.executed);
+        assert_eq!(r.verified, Some(true));
+        let c = r.result.as_ref().expect("result requested");
+        assert_eq!(c.len(), (wl.m * wl.n) as usize);
+        assert!(r.projected_ms() > 0.0);
+        assert!(r.score().is_some());
+        assert_eq!(engine.metrics().requests, 1);
+    }
+
+    #[test]
+    fn window_coalesces_across_gaps() {
+        let mut engine = native_engine();
+        let queries = vec![
+            Query::new(Gemm::new("a1", 64, 64, 64)),
+            Query::new(Gemm::new("b", 32, 96, 48)),
+            Query::new(Gemm::new("a2", 64, 64, 64)), // same shape as a1
+        ];
+        let rep = engine.run(&queries).unwrap();
+        // a1 and a2 coalesce into one group despite b between them
+        assert_eq!(rep.metrics.batches, 2);
+        assert_eq!(rep.metrics.mapping_cache_misses, 2);
+        assert_eq!(rep.metrics.mapping_cache_hits, 0);
+        assert_eq!(rep.metrics.requests, 3);
+        // responses stay in submission order
+        let names: Vec<&str> = rep
+            .responses
+            .iter()
+            .map(|r| r.workload.name.as_str())
+            .collect();
+        assert_eq!(names, ["a1", "b", "a2"]);
+        // a rerun of the same window is all cache hits
+        let rep2 = engine.run(&queries).unwrap();
+        assert_eq!(rep2.metrics.mapping_cache_hits, 2);
+        assert_eq!(rep2.metrics.mapping_cache_misses, 0);
+        // cumulative engine metrics cover both windows
+        assert_eq!(engine.metrics().requests, 6);
+        assert_eq!(engine.metrics().batches, 4);
+    }
+
+    #[test]
+    fn execute_flag_and_exec_cap_give_plan_only_responses() {
+        let mut engine = native_engine();
+        let rep = engine
+            .run(&[
+                Query::new(Gemm::new("plan-only", 64, 64, 64)).execute(false),
+                Query::new(Gemm::new("too-big", 8192, 64, 64)),
+            ])
+            .unwrap();
+        for r in &rep.responses {
+            assert!(!r.executed, "{}", r.workload.name);
+            assert!(r.verified.is_none());
+            assert!(r.result.is_none());
+            assert!(r.projected_ms() > 0.0);
+        }
+    }
+
+    #[test]
+    fn per_query_objectives_split_groups() {
+        let mut engine = native_engine();
+        let wl = Gemm::new("sq", 64, 64, 64);
+        let rep = engine
+            .run(&[
+                Query::new(wl.clone()),
+                Query::new(wl.clone()).objective(Objective::Energy),
+                Query::new(wl.clone()),
+            ])
+            .unwrap();
+        // same shape, two objectives ⇒ two groups, two searches
+        assert_eq!(rep.metrics.batches, 2);
+        assert_eq!(rep.metrics.mapping_cache_misses, 2);
+        assert_eq!(rep.responses[0].objective, Objective::Runtime);
+        assert_eq!(rep.responses[1].objective, Objective::Energy);
+        // the energy plan can never project more energy than the runtime plan
+        assert!(
+            rep.responses[1].mapping.cost.energy_j
+                <= rep.responses[0].mapping.cost.energy_j + 1e-12
+        );
+    }
+
+    #[test]
+    fn plan_grid_covers_pool_major_order() {
+        let engine = Engine::builder()
+            .pool(Accelerator::all_styles(&HwConfig::edge()))
+            .build()
+            .unwrap();
+        let wls = vec![Gemm::new("a", 64, 64, 64), Gemm::new("b", 8, 128, 32)];
+        let grid = engine.plan_grid(&wls);
+        assert_eq!(grid.len(), 10);
+        assert_eq!(grid[0].workload.name, "a");
+        assert_eq!(grid[1].workload.name, "b");
+        assert_eq!(grid[0].accelerator.style, engine.pool()[0].style);
+        for cell in &grid {
+            assert!(cell.result.is_ok(), "{}", cell.accelerator);
+        }
+        // the grid warmed the cache: planning those shapes is now free
+        let plan = engine.plan(&wls[0], Objective::Runtime).unwrap();
+        assert!(plan.cache_hit);
+    }
+
+    #[test]
+    fn search_detailed_reports_and_warms() {
+        let engine = native_engine();
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let r = engine
+            .search_detailed(0, &wl, Objective::Runtime)
+            .unwrap();
+        assert!(r.candidates > 0);
+        assert!(r.cost().runtime_ms() > 0.0);
+        assert!(engine.plan(&wl, Objective::Runtime).unwrap().cache_hit);
+        assert!(engine.search_detailed(9, &wl, Objective::Runtime).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! The unified serving engine: one typed Query → Plan → Response
+//! pipeline behind an [`Engine`] facade.
+//!
+//! The paper's framework is a single pipeline — workload + accelerator →
+//! optimized mapping → cost/execution — and this module is its one
+//! front door. An [`Engine`] owns the accelerator pool, the execution
+//! [`Runtime`](crate::runtime::Runtime), a shared
+//! [`MappingCache`](crate::flash::MappingCache), and cumulative
+//! [`ServiceMetrics`](crate::coordinator::ServiceMetrics); a typed
+//! [`Query`] flows through three stages:
+//!
+//! 1. **Plan** — objective-aware mapping selection over the pool,
+//!    cache-first: one FLASH search per distinct
+//!    (shape, style, config, objective), ever, shared across every
+//!    engine holding the same cache.
+//! 2. **Schedule** — queries coalesce by (shape, objective) across the
+//!    *whole* submission window, not just consecutive runs: a shuffled
+//!    trace plans and executes exactly like the sorted one, and each
+//!    query's operand seed travels with it so results are independent
+//!    of submission order.
+//! 3. **Execute** — each group fans over rayon through the packed-panel
+//!    engine ([`PackedGemm`](crate::runtime::PackedGemm)) on the native
+//!    backend, or per-request through the tile-artifact path under
+//!    `--features pjrt`.
+//!
+//! The legacy entry points — `GemmService::serve`, `Router::route`,
+//! `coordinator::search_grid`, and the CLI `serve`/`search` subcommands
+//! — are thin (deprecated) adapters over this facade.
+//!
+//! ```
+//! use flash_gemm::prelude::*;
+//!
+//! let mut engine = Engine::builder()
+//!     .accelerator(Accelerator::of_style(Style::Nvdla, HwConfig::edge()))
+//!     .build()
+//!     .expect("non-empty pool");
+//! let response = engine
+//!     .query(Query::new(Gemm::new("demo", 64, 48, 32)).verify(true))
+//!     .expect("servable");
+//! assert!(response.executed);
+//! assert_eq!(response.verified, Some(true));
+//! ```
+
+mod facade;
+mod query;
+
+pub use facade::{
+    close, operands, reference_gemm, Engine, EngineBuilder, EngineReport, GridResult, Plan,
+};
+pub use query::{Query, Response, DEFAULT_SEED};

@@ -1,0 +1,159 @@
+//! The engine's typed request/response pair.
+//!
+//! A [`Query`] is one GEMM request: the workload shape plus everything
+//! that parameterizes its trip through the plan → schedule → execute
+//! pipeline (objective, operand seed, execute/verify flags). A
+//! [`Response`] is the full answer: the chosen accelerator and mapping,
+//! per-pool scores, execution/verification status, latency, and (on
+//! request) the computed result matrix.
+
+use crate::cost::Objective;
+use crate::flash::EvaluatedMapping;
+use crate::workloads::Gemm;
+
+/// Default operand seed — kept identical to the historical
+/// `GemmService` constant so shimmed traffic reproduces bit-for-bit.
+pub const DEFAULT_SEED: u64 = 0x5EED;
+
+/// One GEMM request through the engine pipeline.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// The workload shape (the name rides along into the response; only
+    /// M/N/K participate in planning and coalescing).
+    pub workload: Gemm,
+    /// Selection objective; `None` uses the engine's default.
+    pub objective: Option<Objective>,
+    /// Seed for deterministic operand generation. The seed travels with
+    /// the query, so a query's numeric result is independent of where it
+    /// sits in the submission window.
+    pub seed: u64,
+    /// Execute numerically (subject to the engine's `max_exec_dim`
+    /// cap); `false` returns a plan-only response.
+    pub execute: bool,
+    /// Verify the executed result against a reference GEMM.
+    pub verify: bool,
+    /// Return the computed `M×N` result matrix in the response.
+    pub return_result: bool,
+}
+
+impl Query {
+    /// A query with the default pipeline flags: execute, don't verify,
+    /// don't return the result matrix, engine-default objective.
+    pub fn new(workload: Gemm) -> Self {
+        Query {
+            workload,
+            objective: None,
+            seed: DEFAULT_SEED,
+            execute: true,
+            verify: false,
+            return_result: false,
+        }
+    }
+
+    /// Select by this objective instead of the engine default.
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = Some(objective);
+        self
+    }
+
+    /// Seed the deterministic operand generator.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Toggle numeric execution (plan-only when `false`).
+    pub fn execute(mut self, execute: bool) -> Self {
+        self.execute = execute;
+        self
+    }
+
+    /// Toggle verification against the reference GEMM.
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.verify = verify;
+        self
+    }
+
+    /// Toggle returning the computed result matrix.
+    pub fn return_result(mut self, return_result: bool) -> Self {
+        self.return_result = return_result;
+        self
+    }
+}
+
+impl From<Gemm> for Query {
+    fn from(workload: Gemm) -> Self {
+        Query::new(workload)
+    }
+}
+
+/// The engine's answer to one [`Query`].
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// The requesting workload (name preserved).
+    pub workload: Gemm,
+    /// The objective the query was planned under.
+    pub objective: Objective,
+    /// Index of the chosen accelerator in the engine's pool.
+    pub accelerator_idx: usize,
+    /// The winning mapping with its projected cost.
+    pub mapping: EvaluatedMapping,
+    /// Per-accelerator objective scores, pool order (`None` =
+    /// infeasible on that pool member).
+    pub scores: Vec<Option<f64>>,
+    /// Whether the plan was served entirely from the mapping cache.
+    pub cache_hit: bool,
+    /// Whether the GEMM was executed numerically.
+    pub executed: bool,
+    /// Verification outcome (`None` when not requested or not executed).
+    pub verified: Option<bool>,
+    /// Wall-clock latency attributed to this query (operand generation +
+    /// execution + verification; 0 for plan-only responses).
+    pub latency_us: u64,
+    /// The computed row-major `M×N` result, when
+    /// [`Query::return_result`] was set and execution happened.
+    pub result: Option<Vec<f32>>,
+}
+
+impl Response {
+    /// Name of the winning mapping.
+    pub fn mapping_name(&self) -> String {
+        self.mapping.mapping.name()
+    }
+
+    /// Projected runtime of the winning mapping in milliseconds.
+    pub fn projected_ms(&self) -> f64 {
+        self.mapping.cost.runtime_ms()
+    }
+
+    /// The chosen accelerator's objective score.
+    pub fn score(&self) -> Option<f64> {
+        self.scores.get(self.accelerator_idx).copied().flatten()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_builder_chains() {
+        let q = Query::new(Gemm::new("q", 8, 8, 8))
+            .objective(Objective::Energy)
+            .seed(7)
+            .execute(false)
+            .verify(true)
+            .return_result(true);
+        assert_eq!(q.objective, Some(Objective::Energy));
+        assert_eq!(q.seed, 7);
+        assert!(!q.execute && q.verify && q.return_result);
+    }
+
+    #[test]
+    fn query_defaults_match_service_conventions() {
+        let q: Query = Gemm::new("q", 8, 8, 8).into();
+        assert_eq!(q.seed, DEFAULT_SEED);
+        assert!(q.execute && !q.verify && !q.return_result);
+        assert!(q.objective.is_none());
+    }
+}

@@ -10,7 +10,7 @@
 
 use crate::arch::{Accelerator, HwConfig, Style};
 use crate::baselines::summa_compare;
-use crate::coordinator::search_grid;
+use crate::engine::Engine;
 use crate::flash::{self, SearchOpts};
 use crate::report::Table;
 use crate::workloads::{resnet50_gemms, Gemm};
@@ -107,7 +107,11 @@ pub fn summa_table(cfg: &HwConfig) -> Table {
 pub fn resnet_table(cfg: &HwConfig, batch: u64) -> Table {
     let accs = Accelerator::all_styles(cfg);
     let wls = resnet50_gemms(batch);
-    let grid = search_grid(&accs, &wls, 0);
+    let grid = Engine::builder()
+        .pool(accs)
+        .build()
+        .expect("non-empty pool")
+        .plan_grid(&wls);
     let mut t = Table::new(&["layer", "style", "runtime ms", "energy mJ", "util"]);
     for cell in grid {
         if let Ok(r) = cell.result {

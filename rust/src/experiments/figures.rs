@@ -1,7 +1,7 @@
 //! Paper figures 7, 8, 9 and 10 as data + tables.
 
 use crate::arch::{Accelerator, HwConfig, Style};
-use crate::coordinator::search_grid;
+use crate::engine::Engine;
 use crate::flash::{self, SearchOpts};
 use crate::report::Table;
 use crate::workloads::{mlp_layers, Gemm};
@@ -55,7 +55,11 @@ pub fn fig8(cfg: &HwConfig, workload_ids: &[&str]) -> Table {
         .iter()
         .filter_map(|id| Gemm::by_id(id))
         .collect();
-    let grid = search_grid(&accs, &wls, 0);
+    let grid = Engine::builder()
+        .pool(accs)
+        .build()
+        .expect("non-empty pool")
+        .plan_grid(&wls);
     let mut t = Table::new(&[
         "workload",
         "style",
@@ -128,7 +132,11 @@ pub fn fig9() -> Table {
 pub fn fig10(cfg: &HwConfig) -> Table {
     let accs = Accelerator::all_styles(cfg);
     let wls = mlp_layers();
-    let grid = search_grid(&accs, &wls, 0);
+    let grid = Engine::builder()
+        .pool(accs)
+        .build()
+        .expect("non-empty pool")
+        .plan_grid(&wls);
     let mut t = Table::new(&[
         "layer", "style", "mapping", "runtime ms", "energy mJ", "reuse",
     ]);

@@ -1,35 +1,44 @@
 //! Shape-keyed mapping cache — repeat-shape traffic skips the search.
 //!
-//! The serving path (see `coordinator::service`) sees the same GEMM
-//! shapes over and over (DNN layers, recurring CSE kernels); the FLASH
-//! search result for a shape depends only on `(shape, style, hardware
-//! config)`, never on the request instance. [`MappingCache`] memoizes the
-//! best [`EvaluatedMapping`] under exactly that key behind an `RwLock`,
-//! so any number of service threads can share one cache: reads take the
-//! shared lock, only a first-seen shape takes the exclusive lock.
+//! The serving path (see `engine::Engine` and its `coordinator` shims)
+//! sees the same GEMM shapes over and over (DNN layers, recurring CSE
+//! kernels); the FLASH search result for a shape depends only on
+//! `(shape, style, hardware config, objective)`, never on the request
+//! instance. [`MappingCache`] memoizes the best [`EvaluatedMapping`]
+//! under exactly that key behind an `RwLock`, so any number of engine /
+//! service threads can share one cache: reads take the shared lock, only
+//! a first-seen shape takes the exclusive lock.
 //!
 //! The key's `Gemm` component is normalized to an empty name — two
 //! requests with equal `(M, N, K)` but different names are the same
-//! shape and must hit the same entry.
+//! shape and must hit the same entry. The [`Objective`] component keeps
+//! objective-aware lookups separate: the energy-optimal mapping for a
+//! shape is a different cache entry from the runtime-optimal one.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::arch::{Accelerator, HwConfig, Style};
+use crate::cost::Objective;
 use crate::workloads::Gemm;
 
-use super::search::{self, EvaluatedMapping};
+use super::search::{self, EvaluatedMapping, SearchOpts};
 
-/// Cache key: normalized workload shape + accelerator identity.
-type Key = (Gemm, Style, HwConfig);
+/// Cache key: normalized workload shape + accelerator identity +
+/// selection objective.
+type Key = (Gemm, Style, HwConfig, Objective);
 
-/// A concurrent (shape, style, config) → best-mapping cache.
+/// A concurrent (shape, style, config, objective) → best-mapping cache,
+/// with a negative side: keys whose search failed are remembered as
+/// infeasible (a deterministic outcome of the candidate generator), so
+/// repeat requests skip the doomed search too.
 #[derive(Debug, Default)]
 pub struct MappingCache {
     inner: RwLock<HashMap<Key, EvaluatedMapping>>,
+    infeasible: RwLock<HashSet<Key>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -39,48 +48,127 @@ impl MappingCache {
         Self::default()
     }
 
-    fn key(acc: &Accelerator, wl: &Gemm) -> Key {
+    fn key(acc: &Accelerator, wl: &Gemm, objective: Objective) -> Key {
         (
             Gemm::new("", wl.m, wl.n, wl.k),
             acc.style,
             acc.config.clone(),
+            objective,
         )
     }
 
-    /// Cached best mapping for this shape on this accelerator, if any.
-    /// Does not touch the hit/miss counters — [`MappingCache::get_or_search`]
-    /// is the accounted path.
+    /// Cached best mapping for this shape on this accelerator under the
+    /// default runtime objective, if any. Does not touch the hit/miss
+    /// counters — [`MappingCache::get_or_search`] is the accounted path.
     pub fn get(&self, acc: &Accelerator, wl: &Gemm) -> Option<EvaluatedMapping> {
+        self.get_with(acc, wl, Objective::Runtime)
+    }
+
+    /// Cached best mapping for this shape on this accelerator under
+    /// `objective`, if any.
+    pub fn get_with(
+        &self,
+        acc: &Accelerator,
+        wl: &Gemm,
+        objective: Objective,
+    ) -> Option<EvaluatedMapping> {
         self.inner
             .read()
             .expect("mapping cache lock")
-            .get(&Self::key(acc, wl))
+            .get(&Self::key(acc, wl, objective))
             .cloned()
     }
 
-    /// Store the best mapping for this shape on this accelerator.
+    /// Store the best runtime-objective mapping for this shape on this
+    /// accelerator.
     pub fn insert(&self, acc: &Accelerator, wl: &Gemm, best: EvaluatedMapping) {
+        self.insert_with(acc, wl, Objective::Runtime, best);
+    }
+
+    /// Store the best mapping for this shape on this accelerator under
+    /// `objective`.
+    pub fn insert_with(
+        &self,
+        acc: &Accelerator,
+        wl: &Gemm,
+        objective: Objective,
+        best: EvaluatedMapping,
+    ) {
         self.inner
             .write()
             .expect("mapping cache lock")
-            .insert(Self::key(acc, wl), best);
+            .insert(Self::key(acc, wl, objective), best);
     }
 
     /// Serve from the cache, or run a FLASH search and remember the
-    /// result. Returns the best mapping and whether it was a cache hit.
+    /// result — default runtime objective. Returns the best mapping and
+    /// whether it was a cache hit.
     pub fn get_or_search(
         &self,
         acc: &Accelerator,
         wl: &Gemm,
     ) -> Result<(EvaluatedMapping, bool)> {
-        if let Some(best) = self.get(acc, wl) {
+        self.get_or_search_with(acc, wl, Objective::Runtime)
+    }
+
+    /// Whether this (shape, accelerator, objective) previously failed
+    /// its search. Infeasibility is deterministic, so a remembered
+    /// failure never needs re-searching.
+    pub fn is_infeasible(&self, acc: &Accelerator, wl: &Gemm, objective: Objective) -> bool {
+        self.infeasible
+            .read()
+            .expect("infeasibility set lock")
+            .contains(&Self::key(acc, wl, objective))
+    }
+
+    /// Remember that this (shape, accelerator, objective) has no
+    /// feasible mapping.
+    pub fn note_infeasible(&self, acc: &Accelerator, wl: &Gemm, objective: Objective) {
+        self.infeasible
+            .write()
+            .expect("infeasibility set lock")
+            .insert(Self::key(acc, wl, objective));
+    }
+
+    /// Serve from the cache, or run an objective-aware FLASH search and
+    /// remember the result — including a failed search, which is
+    /// negative-cached and fails fast on repeats. Returns the best
+    /// mapping and whether it was a cache hit.
+    pub fn get_or_search_with(
+        &self,
+        acc: &Accelerator,
+        wl: &Gemm,
+        objective: Objective,
+    ) -> Result<(EvaluatedMapping, bool)> {
+        if let Some(best) = self.get_with(acc, wl, objective) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok((best, true));
         }
-        let best = search::search(acc, wl)?.best;
-        self.insert(acc, wl, best.clone());
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        Ok((best, false))
+        if self.is_infeasible(acc, wl, objective) {
+            bail!(
+                "no feasible mapping for {} on {}-style (cached infeasibility)",
+                wl.name,
+                acc.style
+            );
+        }
+        match search::search_with(
+            acc,
+            wl,
+            &SearchOpts {
+                objective,
+                ..Default::default()
+            },
+        ) {
+            Ok(r) => {
+                self.insert_with(acc, wl, objective, r.best.clone());
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok((r.best, false))
+            }
+            Err(e) => {
+                self.note_infeasible(acc, wl, objective);
+                Err(e)
+            }
+        }
     }
 
     /// Cache hits served through [`MappingCache::get_or_search`].
@@ -93,7 +181,8 @@ impl MappingCache {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Distinct (shape, style, config) entries currently cached.
+    /// Distinct (shape, style, config, objective) entries currently
+    /// cached.
     pub fn len(&self) -> usize {
         self.inner.read().expect("mapping cache lock").len()
     }
@@ -147,6 +236,51 @@ mod tests {
         }
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn infeasibility_is_negative_cached() {
+        let cache = MappingCache::new();
+        let acc = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        let wl = Gemm::new("doomed", 64, 64, 64);
+        assert!(!cache.is_infeasible(&acc, &wl, Objective::Runtime));
+        cache.note_infeasible(&acc, &wl, Objective::Runtime);
+        assert!(cache.is_infeasible(&acc, &wl, Objective::Runtime));
+        // the negative entry fails fast without searching or counting
+        assert!(cache
+            .get_or_search_with(&acc, &wl, Objective::Runtime)
+            .is_err());
+        assert_eq!(cache.misses(), 0);
+        assert_eq!(cache.len(), 0);
+        // keyed per objective: other objectives are unaffected
+        assert!(!cache.is_infeasible(&acc, &wl, Objective::Energy));
+        assert!(cache
+            .get_or_search_with(&acc, &wl, Objective::Energy)
+            .is_ok());
+    }
+
+    #[test]
+    fn key_separates_objectives() {
+        let cache = MappingCache::new();
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("sq", 128, 128, 128);
+        let (rt, hit_rt) = cache
+            .get_or_search_with(&acc, &wl, Objective::Runtime)
+            .unwrap();
+        let (en, hit_en) = cache
+            .get_or_search_with(&acc, &wl, Objective::Energy)
+            .unwrap();
+        assert!(!hit_rt && !hit_en, "objectives must not share entries");
+        assert_eq!(cache.len(), 2);
+        assert!(en.cost.energy_j <= rt.cost.energy_j);
+        // repeat lookups hit their own objective's entry
+        let (rt2, hit) = cache
+            .get_or_search_with(&acc, &wl, Objective::Runtime)
+            .unwrap();
+        assert!(hit);
+        assert_eq!(rt.mapping, rt2.mapping);
+        // the default-objective API is the Runtime entry
+        assert_eq!(cache.get(&acc, &wl).unwrap().mapping, rt.mapping);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use anyhow::{bail, Result};
 use rayon::prelude::*;
 
 use crate::arch::Accelerator;
-use crate::cost::{Cost, CostModel};
+use crate::cost::{Cost, CostModel, Objective};
 use crate::dataflow::{LoopOrder, Mapping};
 use crate::workloads::Gemm;
 
@@ -72,17 +72,31 @@ impl EvaluatedMapping {
             f64_order_key(self.cost.energy_j),
         )
     }
+
+    /// Objective-aware selection key: the objective score leads, then
+    /// the legacy `(runtime, energy)` key breaks ties deterministically.
+    /// For [`Objective::Runtime`] this orders identically to
+    /// [`EvaluatedMapping::selection_key`] — `runtime_ms` is a monotone
+    /// function of `runtime_cycles` (one division by the shared clock),
+    /// and any rounding collision falls through to the exact cycle
+    /// count — so default searches are bit-compatible with pre-objective
+    /// behavior.
+    pub fn objective_key(&self, objective: Objective) -> (u64, u64, u64) {
+        let (cycles, energy) = self.selection_key();
+        (f64_order_key(objective.score(&self.cost)), cycles, energy)
+    }
 }
 
-/// Pick the lower (selection key, candidate index) of two evaluated
+/// Pick the lower (objective key, candidate index) of two evaluated
 /// candidates — the associative/commutative reduction operator of the
 /// parallel search. The index tie-break reproduces the sequential
 /// first-wins scan exactly.
 fn min_indexed(
+    objective: Objective,
     a: (usize, EvaluatedMapping),
     b: (usize, EvaluatedMapping),
 ) -> (usize, EvaluatedMapping) {
-    if (b.1.selection_key(), b.0) < (a.1.selection_key(), a.0) {
+    if (b.1.objective_key(objective), b.0) < (a.1.objective_key(objective), a.0) {
         b
     } else {
         a
@@ -96,6 +110,10 @@ pub struct SearchOpts {
     pub keep_all: bool,
     /// Restrict to one inter-cluster loop order (Fig 9 sweeps).
     pub order: Option<LoopOrder>,
+    /// Selection objective (default: lowest projected runtime, exactly
+    /// the paper's §5.2 criterion; `Energy`/`Edp` serve the
+    /// heterogeneous-node and `engine` pipelines).
+    pub objective: Objective,
 }
 
 /// Outcome of a FLASH search.
@@ -160,6 +178,7 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
     let model = CostModel::new(acc.clone());
     let candidates = mappings.len();
 
+    let objective = opts.objective;
     let (best, all) = if opts.keep_all {
         // Indexed map + collect preserves candidate-generation order.
         let all: Vec<EvaluatedMapping> = mappings
@@ -171,7 +190,7 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
             .collect();
         let mut bi = 0usize;
         for (i, e) in all.iter().enumerate().skip(1) {
-            if e.selection_key() < all[bi].selection_key() {
+            if e.objective_key(objective) < all[bi].objective_key(objective) {
                 bi = i;
             }
         }
@@ -196,10 +215,10 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
                             },
                         )
                     })
-                    .reduce(min_indexed)
+                    .reduce(|a, b| min_indexed(objective, a, b))
                     .expect("chunks are non-empty")
             })
-            .reduce_with(min_indexed)
+            .reduce_with(|a, b| min_indexed(objective, a, b))
             .expect("non-empty candidate set");
         (best, Vec::new())
     };
@@ -337,6 +356,62 @@ mod tests {
         let opts = SearchOpts::default();
         assert!(!opts.keep_all);
         assert!(opts.order.is_none());
+        assert_eq!(opts.objective, Objective::Runtime);
+    }
+
+    #[test]
+    fn objective_search_trades_runtime_for_energy() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let by = |objective: Objective| {
+            search_with(
+                &acc,
+                &wl,
+                &SearchOpts {
+                    objective,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+            .best
+        };
+        let rt = by(Objective::Runtime);
+        let en = by(Objective::Energy);
+        let edp = by(Objective::Edp);
+        // the runtime-objective winner must match the default search
+        let default = search(&acc, &wl).unwrap().best;
+        assert_eq!(rt.mapping, default.mapping);
+        assert_eq!(rt.selection_key(), default.selection_key());
+        // each winner is at least as good as the others on its own axis
+        assert!(rt.cost.runtime_cycles() <= en.cost.runtime_cycles());
+        assert!(rt.cost.runtime_cycles() <= edp.cost.runtime_cycles());
+        assert!(en.cost.energy_j <= rt.cost.energy_j);
+        assert!(en.cost.energy_j <= edp.cost.energy_j);
+        let edp_score = |e: &EvaluatedMapping| e.cost.energy_j * e.cost.runtime_ms();
+        assert!(edp_score(&edp) <= edp_score(&rt));
+        assert!(edp_score(&edp) <= edp_score(&en));
+    }
+
+    #[test]
+    fn objective_key_orders_like_selection_key_for_runtime() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let r = search_with(
+            &acc,
+            &wl,
+            &SearchOpts {
+                keep_all: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for pair in r.all.windows(2) {
+            let legacy = pair[0].selection_key().cmp(&pair[1].selection_key());
+            let keyed = pair[0]
+                .objective_key(Objective::Runtime)
+                .cmp(&pair[1].objective_key(Objective::Runtime));
+            assert_eq!(legacy, keyed, "runtime objective must preserve §5.2 order");
+        }
     }
 
     #[test]

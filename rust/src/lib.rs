@@ -12,25 +12,31 @@
 //!   ([`dataflow`]), cost model ([`cost`]), the rayon-parallel FLASH
 //!   search with its shape-keyed mapping cache ([`flash`]), baselines
 //!   ([`baselines`]), a cycle-approximate simulator substrate ([`sim`]),
-//!   the execution runtime ([`runtime`]), and the search/serve
-//!   coordinator ([`coordinator`]).
+//!   the execution runtime ([`runtime`]), the unified Query → Plan →
+//!   Response serving pipeline ([`engine`]), and its legacy
+//!   coordinator adapters ([`coordinator`]).
 //! * L2/L1 (`python/compile`): JAX GEMM/MLP graphs calling the Pallas
 //!   tiled-GEMM kernel, AOT-lowered once to `artifacts/*.hlo.txt`.
 //!
-//! Quick start — search the best mapping for one GEMM on one
-//! accelerator:
+//! Quick start — plan, execute, and verify one GEMM through the engine:
 //!
 //! ```
 //! use flash_gemm::prelude::*;
 //!
-//! let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
-//! let wl = Gemm::new("vi-sized", 512, 256, 256);
-//! let best = flash_gemm::flash::search(&acc, &wl).expect("searchable");
-//! assert!(best.cost().runtime_ms() > 0.0);
+//! let mut engine = Engine::builder()
+//!     .accelerator(Accelerator::of_style(Style::Nvdla, HwConfig::edge()))
+//!     .build()
+//!     .expect("non-empty pool");
+//! let response = engine
+//!     .query(Query::new(Gemm::new("vi-sized", 512, 256, 256)).verify(true))
+//!     .expect("servable");
+//! assert!(response.executed);
+//! assert_eq!(response.verified, Some(true));
 //! println!(
-//!     "best mapping: {} -> {:.3} ms",
-//!     best.mapping().name(),
-//!     best.cost().runtime_ms()
+//!     "best mapping: {} -> {:.3} ms projected, served in {} µs",
+//!     response.mapping_name(),
+//!     response.projected_ms(),
+//!     response.latency_us
 //! );
 //! ```
 
@@ -40,6 +46,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod cost;
 pub mod dataflow;
+pub mod engine;
 pub mod experiments;
 pub mod flash;
 pub mod prop;
@@ -51,6 +58,8 @@ pub mod workloads;
 /// Convenient re-exports of the types almost every consumer needs.
 pub mod prelude {
     pub use crate::arch::{Accelerator, HwConfig, Style};
+    pub use crate::cost::Objective;
     pub use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
+    pub use crate::engine::{Engine, Query, Response};
     pub use crate::workloads::Gemm;
 }

@@ -1,0 +1,282 @@
+//! Integration: the unified engine pipeline — cross-window coalescing,
+//! one-search-per-(shape, objective), order independence, and
+//! bit-identity with per-request `GemmService` serving. Everything runs
+//! on the native runtime backend with a synthetic manifest (no
+//! artifacts needed).
+//!
+//! The `GemmService` comparisons intentionally call the deprecated shim.
+#![allow(deprecated)]
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::coordinator::{GemmService, ServiceConfig};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::{operands, Engine, Query, DEFAULT_SEED};
+use flash_gemm::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
+use flash_gemm::workloads::Gemm;
+
+const SHAPES: [(u64, u64, u64); 4] = [(64, 64, 64), (32, 96, 48), (96, 80, 64), (48, 40, 24)];
+
+fn acc() -> Accelerator {
+    Accelerator::of_style(Style::Maeri, HwConfig::edge())
+}
+
+fn native_runtime() -> Runtime {
+    Runtime::native(Manifest::synthetic(&[16, 32]))
+}
+
+fn engine() -> Engine {
+    Engine::builder()
+        .accelerator(acc())
+        .runtime(native_runtime())
+        .max_exec_dim(128)
+        .build()
+        .unwrap()
+}
+
+/// `n` queries cycling through the shape set, each with a unique name
+/// and seed, verifying and returning results.
+fn trace(n: usize) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let (m, nn, k) = SHAPES[i % SHAPES.len()];
+            Query::new(Gemm::new(&format!("q{i}"), m, nn, k))
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+                .return_result(true)
+        })
+        .collect()
+}
+
+/// Deterministic Fisher–Yates (xorshift64*), so the "shuffled" trace is
+/// reproducible.
+fn shuffle<T>(v: &mut [T], mut s: u64) {
+    s = s.max(1);
+    for i in (1..v.len()).rev() {
+        s ^= s >> 12;
+        s ^= s << 25;
+        s ^= s >> 27;
+        let j = (s.wrapping_mul(0x2545F4914F6CDD1D) % (i as u64 + 1)) as usize;
+        v.swap(i, j);
+    }
+}
+
+fn result_bits(r: &flash_gemm::engine::Response) -> Vec<u32> {
+    r.result
+        .as_ref()
+        .expect("return_result was requested")
+        .iter()
+        .map(|x| x.to_bits())
+        .collect()
+}
+
+#[test]
+fn shuffled_and_sorted_traces_agree_outcome_for_outcome() {
+    let mut shuffled = trace(40);
+    shuffle(&mut shuffled, 99);
+    let mut sorted = shuffled.clone();
+    sorted.sort_by_key(|q| (q.workload.m, q.workload.n, q.workload.k, q.seed));
+
+    let rep_shuffled = engine().run(&shuffled).unwrap();
+    let rep_sorted = engine().run(&sorted).unwrap();
+
+    // responses come back in submission order
+    for (q, r) in shuffled.iter().zip(&rep_shuffled.responses) {
+        assert_eq!(q.workload.name, r.workload.name);
+    }
+
+    // outcome-for-outcome identical: mapping, executed, verified, and
+    // the exact result bits, per query (matched by its unique name)
+    let by_name: std::collections::HashMap<&str, &flash_gemm::engine::Response> = rep_sorted
+        .responses
+        .iter()
+        .map(|r| (r.workload.name.as_str(), r))
+        .collect();
+    for r in &rep_shuffled.responses {
+        let s = by_name[r.workload.name.as_str()];
+        assert_eq!(r.mapping_name(), s.mapping_name(), "{}", r.workload.name);
+        assert_eq!(r.executed, s.executed, "{}", r.workload.name);
+        assert_eq!(r.verified, s.verified, "{}", r.workload.name);
+        assert_eq!(r.verified, Some(true), "{}", r.workload.name);
+        assert_eq!(result_bits(r), result_bits(s), "{}", r.workload.name);
+    }
+
+    // both orders coalesce identically: one batch and one search per
+    // distinct shape, regardless of how the trace was ordered
+    for m in [&rep_shuffled.metrics, &rep_sorted.metrics] {
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.batches, SHAPES.len() as u64);
+        assert_eq!(m.mapping_cache_misses, SHAPES.len() as u64);
+        assert_eq!(m.mapping_cache_hits, 0);
+    }
+}
+
+#[test]
+fn queries_are_position_independent() {
+    // the same (name, seed) query at either end of a window produces
+    // bit-identical results — the seed travels with the query
+    let probe = Query::new(Gemm::new("probe", 48, 40, 24))
+        .seed(1234)
+        .return_result(true);
+    let filler: Vec<Query> = trace(9);
+
+    let mut front = vec![probe.clone()];
+    front.extend(filler.clone());
+    let mut back = filler;
+    back.push(probe);
+
+    let ra = engine().run(&front).unwrap();
+    let rb = engine().run(&back).unwrap();
+    let first = &ra.responses[0];
+    let last = rb.responses.last().unwrap();
+    assert_eq!(first.workload.name, "probe");
+    assert_eq!(last.workload.name, "probe");
+    assert_eq!(result_bits(first), result_bits(last));
+}
+
+#[test]
+fn hundred_request_trace_searches_once_per_shape_objective() {
+    // the acceptance trace: 100 shuffled mixed-shape requests under two
+    // interleaved objectives; all queries use the solo-serve seed so
+    // they are comparable to per-request GemmService serving below
+    let mut queries: Vec<Query> = (0..100)
+        .map(|i| {
+            let (m, nn, k) = SHAPES[i % SHAPES.len()];
+            let q = Query::new(Gemm::new(&format!("q{i}"), m, nn, k))
+                .verify(true)
+                .return_result(true);
+            if i % 2 == 1 {
+                q.objective(Objective::Energy)
+            } else {
+                q
+            }
+        })
+        .collect();
+    shuffle(&mut queries, 7);
+
+    let mut eng = engine();
+    let rep = eng.run(&queries).unwrap();
+
+    // exactly one search per distinct (shape, objective)
+    let distinct = (SHAPES.len() * 2) as u64;
+    assert_eq!(rep.metrics.requests, 100);
+    assert_eq!(rep.metrics.batches, distinct);
+    assert_eq!(rep.metrics.mapping_cache_misses, distinct);
+    assert_eq!(rep.metrics.mapping_cache_hits, 0);
+    assert_eq!(eng.cache().misses(), distinct);
+    assert_eq!(eng.cache().len(), distinct as usize);
+    for r in &rep.responses {
+        assert!(r.executed, "{}", r.workload.name);
+        assert_eq!(r.verified, Some(true), "{}", r.workload.name);
+    }
+
+    // a rerun of the whole trace runs zero new searches
+    let rep2 = eng.run(&queries).unwrap();
+    assert_eq!(eng.cache().misses(), distinct);
+    assert_eq!(rep2.metrics.mapping_cache_hits, distinct);
+    assert_eq!(rep2.metrics.mapping_cache_misses, 0);
+
+    // bit-identity with per-request GemmService serving: serve each
+    // shape solo through the legacy shim (which seeds with
+    // DEFAULT_SEED + 0, exactly what the engine queries above used),
+    // then check mapping agreement and recompute the service's packed
+    // execution path for the exact result bits
+    for (m, nn, k) in SHAPES {
+        let wl = Gemm::new("solo", m, nn, k);
+        let mut svc = GemmService::new(
+            acc(),
+            native_runtime(),
+            ServiceConfig {
+                verify: true,
+                max_exec_dim: 128,
+                tile: 0,
+            },
+        );
+        let solo = svc.serve(std::slice::from_ref(&wl)).unwrap();
+        let outcome = &solo.outcomes[0];
+        assert!(outcome.executed);
+        assert_eq!(outcome.verified, Some(true));
+
+        let shape_responses: Vec<_> = rep
+            .responses
+            .iter()
+            .filter(|r| {
+                r.objective == Objective::Runtime
+                    && (r.workload.m, r.workload.n, r.workload.k) == (m, nn, k)
+            })
+            .collect();
+        assert!(!shape_responses.is_empty());
+        for r in &shape_responses {
+            assert_eq!(r.mapping_name(), outcome.mapping_name, "{}", r.workload.name);
+        }
+
+        // the exact buffers GemmService executes: its cached mapping,
+        // its auto tile, its operand seed
+        let best = svc.mapping_cache().get(&acc(), &wl).unwrap();
+        let rt = native_runtime();
+        let tile = TiledExecutor::auto_tile(&rt, &wl);
+        let pg = PackedGemm::new(&wl, tile as usize, best.mapping.inter_order).unwrap();
+        let (a, b) = operands(&wl, DEFAULT_SEED);
+        let service_bits: Vec<u32> = pg
+            .run(&a, &b)
+            .unwrap()
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        for r in &shape_responses {
+            assert_eq!(
+                result_bits(r),
+                service_bits,
+                "engine vs service numerics diverged on {}",
+                r.workload.name
+            );
+        }
+    }
+}
+
+#[test]
+fn shim_batches_consecutively_while_engine_coalesces_windows() {
+    // the same interleaved trace: the legacy shim batches consecutive
+    // runs (6 batches, 4 cache hits), the engine coalesces the whole
+    // window (2 batches, 0 hits) — with identical per-request outcomes
+    let a = Gemm::new("a", 64, 64, 64);
+    let b = Gemm::new("b", 32, 96, 48);
+    let requests = vec![a.clone(), b.clone(), a.clone(), b.clone(), a.clone(), b];
+
+    let mut svc = GemmService::new(
+        acc(),
+        native_runtime(),
+        ServiceConfig {
+            verify: true,
+            max_exec_dim: 128,
+            tile: 0,
+        },
+    );
+    let svc_rep = svc.serve(&requests).unwrap();
+    assert_eq!(svc_rep.metrics.batches, 6);
+    assert_eq!(svc_rep.metrics.mapping_cache_misses, 2);
+    assert_eq!(svc_rep.metrics.mapping_cache_hits, 4);
+
+    let queries: Vec<Query> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| {
+            Query::new(wl.clone())
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+        })
+        .collect();
+    let mut eng = engine();
+    let eng_rep = eng.run(&queries).unwrap();
+    assert_eq!(eng_rep.metrics.batches, 2);
+    assert_eq!(eng_rep.metrics.mapping_cache_misses, 2);
+    assert_eq!(eng_rep.metrics.mapping_cache_hits, 0);
+
+    // per-request outcomes agree exactly (same seeds, same mappings)
+    assert_eq!(svc_rep.outcomes.len(), eng_rep.responses.len());
+    for (o, r) in svc_rep.outcomes.iter().zip(&eng_rep.responses) {
+        assert_eq!(o.mapping_name, r.mapping_name());
+        assert_eq!(o.executed, r.executed);
+        assert_eq!(o.verified, r.verified);
+        assert_eq!(o.verified, Some(true));
+    }
+}

@@ -2,6 +2,12 @@
 //! service. Mapping-cache tests run on the native runtime backend with a
 //! synthetic manifest (no artifacts needed); the artifact-backed service
 //! tests skip without `make artifacts`.
+//!
+//! These tests deliberately exercise the *deprecated* legacy entry
+//! points (`GemmService::serve`, `search_grid`) — they pin the shims'
+//! observable behavior over the engine (`tests/engine_api.rs` covers
+//! the engine itself).
+#![allow(deprecated)]
 
 use std::sync::Arc;
 
