@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let grid = engine.plan_grid(&wls);
     let cell = |style: Style, id: &str| {
         grid.iter()
-            .find(|c| c.accelerator.style == style && c.workload.name == id)
+            .find(|c| c.accelerator.style() == Some(style) && c.workload.name == id)
             .and_then(|c| c.result.as_ref().ok())
     };
 

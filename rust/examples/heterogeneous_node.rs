@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
         let en = engine.plan(wl, Objective::Energy)?;
         let edp = engine.plan(wl, Objective::Edp)?;
         let name = |p: &flash_gemm::engine::Plan| {
-            engine.pool()[p.accelerator_idx].style.to_string()
+            engine.pool()[p.accelerator_idx].name().to_string()
         };
         if rt.accelerator_idx != en.accelerator_idx {
             disagreements += 1;
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // off-chip roofline annotation for the CSE shapes
-    let off = Offchip::for_config(cfg.name);
+    let off = Offchip::for_config(&cfg.name);
     for wl in stream.iter().filter(|w| w.name.starts_with("rank")) {
         let plan = engine.plan(wl, Objective::Runtime)?;
         let onchip = plan.best.cost.runtime_ms() / 1e3;
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     if have_artifacts {
         let wl = Gemm::new("exec", 128, 96, 64);
         let r = engine.query(Query::new(wl.clone()).verify(true))?;
-        let style = engine.pool()[r.accelerator_idx].style;
+        let style = engine.pool()[r.accelerator_idx].name().to_string();
         assert_eq!(r.verified, Some(true), "numeric verification failed");
         println!(
             "\nexecuted {} on {style}-style via mapping {} (verified, {} µs)",

@@ -1,11 +1,15 @@
-//! An accelerator *instance*: a style plus the shared hardware resources,
-//! with mapping validation against its dataflow + buffer constraints.
+//! An accelerator *instance*: a declarative [`ArchSpec`] plus concrete
+//! hardware resources, with mapping validation against the spec's
+//! dataflow constraints and the buffer budgets.
 
 use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
 
+use anyhow::Result;
 use thiserror::Error;
 
-use crate::arch::{HwConfig, Noc, Style};
+use crate::arch::{ArchSpec, HwConfig, Noc, Style};
 use crate::dataflow::{Dim, Mapping};
 
 /// Why a mapping is illegal on an accelerator.
@@ -13,11 +17,11 @@ use crate::dataflow::{Dim, Mapping};
 pub enum MappingError {
     #[error("mapping is structurally malformed")]
     Malformed,
-    #[error("{0:?} cannot be inter-cluster spatial on this style")]
+    #[error("{0:?} cannot be inter-cluster spatial on this architecture")]
     BadInterSpatial(Dim),
-    #[error("{0:?} cannot be intra-cluster spatial on this style")]
+    #[error("{0:?} cannot be intra-cluster spatial on this architecture")]
     BadIntraSpatial(Dim),
-    #[error("loop order not supported by this style")]
+    #[error("loop order not supported by this architecture")]
     BadLoopOrder,
     #[error("cluster size {0} not supported (legal: {1:?})")]
     BadClusterSize(u64, Vec<u64>),
@@ -29,25 +33,67 @@ pub enum MappingError {
     S1Overflow { need: u64, have: u64 },
 }
 
-/// A concrete accelerator under evaluation: style + hardware + NoC.
+/// A concrete accelerator under evaluation: an architecture description
+/// bound to hardware resources.
+///
+/// The spec is `Arc`-shared (accelerators are cloned throughout the
+/// planning pipeline) and identity-hashed once at construction so cache
+/// keys never re-serialize it.
 #[derive(Debug, Clone)]
 pub struct Accelerator {
-    pub style: Style,
+    /// The architecture description (dataflow constraints + NoC).
+    pub spec: Arc<ArchSpec>,
+    /// The hardware resources this instance is evaluated under (the
+    /// spec's own `[hardware]` when it has one, otherwise the shared
+    /// Table 4 config it was constructed with).
     pub config: HwConfig,
+    /// NoC capability model (copied out of the spec for hot-path access).
     pub noc: Noc,
+    /// The spec's canonical encoding, interned once — the exact
+    /// architecture-identity component of cache keys.
+    ident: Arc<str>,
+    spec_hash: u64,
 }
 
 impl Accelerator {
-    pub fn of_style(style: Style, config: HwConfig) -> Self {
+    /// Bind a spec to hardware. A spec carrying its own `[hardware]`
+    /// table uses that; otherwise `config` (the paper's shared Table 4
+    /// methodology) applies.
+    pub fn from_spec(spec: ArchSpec, config: HwConfig) -> Self {
+        // the fallible front doors (ArchSpec::load, EngineBuilder::arch,
+        // the CLI) validate before reaching here; catch programmatic
+        // construction of inconsistent specs in debug builds
+        debug_assert!(
+            spec.validate().is_ok(),
+            "invalid ArchSpec {:?}: {}",
+            spec.name,
+            spec.validate().unwrap_err()
+        );
+        let config = spec.hardware.clone().unwrap_or(config);
+        let noc = spec.noc.clone();
+        let ident: Arc<str> = spec.canonical_json().into();
+        let spec_hash = spec.content_hash();
         Accelerator {
-            style,
-            noc: style.noc(),
+            spec: Arc::new(spec),
             config,
+            noc,
+            ident,
+            spec_hash,
         }
     }
 
-    /// All five styles over one hardware configuration (the paper's
-    /// evaluation grid rows).
+    /// Load, validate, and bind a spec file (`.toml` / `.json`).
+    pub fn from_spec_file(path: impl AsRef<Path>, config: HwConfig) -> Result<Self> {
+        Ok(Self::from_spec(ArchSpec::load(path)?, config))
+    }
+
+    /// One of the five built-in presets over a hardware configuration.
+    pub fn of_style(style: Style, config: HwConfig) -> Self {
+        Self::from_spec(style.spec(), config)
+    }
+
+    /// All five preset styles over one hardware configuration (the
+    /// paper's evaluation grid rows).
     pub fn all_styles(config: &HwConfig) -> Vec<Accelerator> {
         Style::ALL
             .iter()
@@ -55,26 +101,61 @@ impl Accelerator {
             .collect()
     }
 
-    /// Validate a mapping against the style's dataflow constraints
+    /// The architecture's name (spec identifier).
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// The legacy [`Style`] handle, when this accelerator is one of the
+    /// five built-in presets (`None` for custom specs).
+    pub fn style(&self) -> Option<Style> {
+        let style = self.spec.name.parse::<Style>().ok()?;
+        (*self.spec == style.spec()).then_some(style)
+    }
+
+    /// The spec's canonical encoding ([`ArchSpec::canonical_json`],
+    /// interned at construction): the *exact* architecture-identity
+    /// component of cache keys — equal iff the descriptions are equal,
+    /// with no hash-collision caveat. Cloning is an `Arc` bump.
+    pub fn spec_ident(&self) -> Arc<str> {
+        Arc::clone(&self.ident)
+    }
+
+    /// Stable 64-bit digest of the spec ([`ArchSpec::content_hash`],
+    /// precomputed) for display and quick comparison.
+    pub fn spec_hash(&self) -> u64 {
+        self.spec_hash
+    }
+
+    /// Validate a mapping against the spec's dataflow constraints
     /// (Table 2) and the buffer constraints (Eqs. 1–2, double-buffered).
     pub fn validate(&self, m: &Mapping) -> Result<(), MappingError> {
         if !m.is_well_formed() {
             return Err(MappingError::Malformed);
         }
-        if !self.style.inter_spatial_dims().contains(&m.inter_spatial) {
+        if !self.spec.inter_spatial_dims().contains(&m.inter_spatial) {
             return Err(MappingError::BadInterSpatial(m.inter_spatial));
         }
-        if !self.style.intra_spatial_dims().contains(&m.intra_spatial) {
+        if !self.spec.intra_spatial_dims().contains(&m.intra_spatial) {
             return Err(MappingError::BadIntraSpatial(m.intra_spatial));
         }
-        if !self.style.inter_orders().contains(&m.inter_order)
-            || !self.style.intra_orders().contains(&m.intra_order)
+        if !self.spec.inter_orders().contains(&m.inter_order)
+            || !self.spec.intra_orders().contains(&m.intra_order)
         {
             return Err(MappingError::BadLoopOrder);
         }
-        let legal = self.style.cluster_sizes(self.config.pes);
-        if !legal.contains(&m.cluster_size) {
-            return Err(MappingError::BadClusterSize(m.cluster_size, legal));
+        // closed-form membership test on the hot path; the full legal
+        // set is only materialized for the error report
+        if !self
+            .spec
+            .dataflow
+            .cluster
+            .permits(m.cluster_size, self.config.pes)
+        {
+            return Err(MappingError::BadClusterSize(
+                m.cluster_size,
+                self.spec.cluster_sizes(self.config.pes),
+            ));
         }
         if (m.inter_spatial == Dim::K || m.intra_spatial == Dim::K)
             && !self.noc.spatial_reduction
@@ -105,13 +186,11 @@ impl Accelerator {
 
 impl fmt::Display for Accelerator {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "{}-style ({}) on {}",
-            self.style,
-            self.style.mapping_name(),
-            self.config
-        )
+        write!(f, "{}-style", self.spec.name)?;
+        if !self.spec.mapping.is_empty() {
+            write!(f, " ({})", self.spec.mapping)?;
+        }
+        write!(f, " on {}", self.config)
     }
 }
 
@@ -203,5 +282,31 @@ mod tests {
     fn all_styles_builds_five() {
         let v = Accelerator::all_styles(&HwConfig::edge());
         assert_eq!(v.len(), 5);
+        for acc in &v {
+            assert!(acc.style().is_some(), "{}", acc.name());
+        }
+    }
+
+    #[test]
+    fn style_handle_is_none_for_custom_specs() {
+        let mut spec = Style::Tpu.spec();
+        spec.dataflow.inter_orders.push(LoopOrder::MNK); // no longer the preset
+        let acc = Accelerator::from_spec(spec, HwConfig::edge());
+        assert_eq!(acc.style(), None);
+        assert_eq!(acc.name(), "tpu");
+        // identity hash still distinguishes it from the real preset
+        let preset = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        assert_ne!(acc.spec_hash(), preset.spec_hash());
+    }
+
+    #[test]
+    fn spec_hardware_overrides_shared_config() {
+        let mut spec = Style::Maeri.spec();
+        spec.hardware = Some(HwConfig::tiny());
+        let acc = Accelerator::from_spec(spec.clone(), HwConfig::cloud());
+        assert_eq!(acc.config, HwConfig::tiny());
+        spec.hardware = None;
+        let acc = Accelerator::from_spec(spec, HwConfig::cloud());
+        assert_eq!(acc.config, HwConfig::cloud());
     }
 }

@@ -8,30 +8,57 @@ use std::fmt;
 ///
 /// All fields are integral, so a config can key hash maps (the mapping
 /// cache in [`crate::flash::MappingCache`] keys on it).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// Deserializes from the optional `[hardware]` table of an architecture
+/// spec (see [`crate::arch::ArchSpec`]); everything except `pes` and
+/// `s2_bytes` defaults to the Table 4 edge values, so a spec only states
+/// what differs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, serde::Serialize, serde::Deserialize)]
+#[serde(deny_unknown_fields)]
 pub struct HwConfig {
-    pub name: &'static str,
+    #[serde(default)]
+    pub name: String,
     /// Total number of PEs (P).
     pub pes: u64,
     /// Per-PE local scratchpad (S1 / α) in bytes.
+    #[serde(default = "default_s1_bytes")]
     pub s1_bytes: u64,
     /// Global shared scratchpad (S2 / β) in bytes.
     pub s2_bytes: u64,
     /// NoC bandwidth, bytes per second.
+    #[serde(default = "default_noc_bw")]
     pub noc_bytes_per_sec: u64,
     /// Clock frequency, Hz (paper assumes 1 GHz @ 28 nm).
+    #[serde(default = "default_clock_hz")]
     pub clock_hz: u64,
     /// Element width in bytes. The paper's accelerators are fixed-point
     /// 16-bit datapaths (Eyeriss, NVDLA int16 config); 2 bytes also makes
     /// the Table 5 runtime magnitudes line up (see `cost::runtime`).
+    #[serde(default = "default_elem_bytes")]
     pub elem_bytes: u64,
+}
+
+fn default_s1_bytes() -> u64 {
+    512
+}
+
+fn default_noc_bw() -> u64 {
+    32 * 1_000_000_000
+}
+
+fn default_clock_hz() -> u64 {
+    1_000_000_000
+}
+
+fn default_elem_bytes() -> u64 {
+    2
 }
 
 impl HwConfig {
     /// Table 4 "Edge": 256 PEs, 0.5 KB S1, 100 KB S2, 32 GB/s, DRAM.
     pub fn edge() -> Self {
         HwConfig {
-            name: "edge",
+            name: "edge".into(),
             pes: 256,
             s1_bytes: 512,
             s2_bytes: 100 * 1024,
@@ -44,7 +71,7 @@ impl HwConfig {
     /// Table 4 "Cloud": 2048 PEs, 0.5 KB S1, 800 KB S2, 256 GB/s, HBM.
     pub fn cloud() -> Self {
         HwConfig {
-            name: "cloud",
+            name: "cloud".into(),
             pes: 2048,
             s1_bytes: 512,
             s2_bytes: 800 * 1024,
@@ -58,7 +85,7 @@ impl HwConfig {
     /// (small enough to simulate exhaustively).
     pub fn tiny() -> Self {
         HwConfig {
-            name: "tiny",
+            name: "tiny".into(),
             pes: 16,
             s1_bytes: 128,
             s2_bytes: 4 * 1024,

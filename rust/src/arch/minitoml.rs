@@ -1,0 +1,269 @@
+//! Minimal TOML subset parser (offline build image — no `toml` crate;
+//! see DESIGN.md §Substitutions, same policy as the hand-rolled CLI).
+//!
+//! Parses the subset architecture specs actually use into a
+//! [`serde_json::Value`], which then deserializes into [`ArchSpec`]
+//! through serde — so all field/enum validation lives in one place
+//! regardless of whether a spec arrived as TOML or JSON.
+//!
+//! Supported: `[table]` / `[nested.table]` headers, `key = value` pairs
+//! with basic strings, booleans, integers (with `_` separators), floats,
+//! and single-line arrays of those scalars, plus `#` comments and blank
+//! lines. Not supported (and not needed by specs): multi-line arrays,
+//! inline tables, arrays-of-tables (`[[t]]`), dotted keys, datetimes.
+//!
+//! [`ArchSpec`]: crate::arch::ArchSpec
+
+use anyhow::{anyhow, bail, Result};
+use serde_json::{Map, Value};
+
+/// Parse a TOML document (subset, see module docs) into a JSON object.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root = Map::new();
+    // path of the table new keys land in ([] = root)
+    let mut current: Vec<String> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {lineno}: unterminated table header {line:?}"))?;
+            if header.starts_with('[') {
+                bail!("line {lineno}: arrays of tables ([[...]]) are not supported");
+            }
+            current = header
+                .split('.')
+                .map(|s| {
+                    let s = s.trim();
+                    if s.is_empty() {
+                        bail!("line {lineno}: empty table-name segment in {line:?}");
+                    }
+                    Ok(s.to_string())
+                })
+                .collect::<Result<_>>()?;
+            // materialize the table so empty sections still exist
+            table_at(&mut root, &current, lineno)?;
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {lineno}: expected `key = value`, got {line:?}"))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            bail!("line {lineno}: bad key {key:?} (bare keys only)");
+        }
+        let value = parse_value(value.trim(), lineno)?;
+        let table = table_at(&mut root, &current, lineno)?;
+        if table.insert(key.to_string(), value).is_some() {
+            bail!("line {lineno}: duplicate key {key:?}");
+        }
+    }
+    Ok(Value::Object(root))
+}
+
+/// Strip a trailing `#` comment, respecting `"..."` strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Walk (creating as needed) to the table named by `path`.
+fn table_at<'a>(
+    root: &'a mut Map<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Map<String, Value>> {
+    let mut table = root;
+    for seg in path {
+        let entry = table
+            .entry(seg.clone())
+            .or_insert_with(|| Value::Object(Map::new()));
+        table = entry
+            .as_object_mut()
+            .ok_or_else(|| anyhow!("line {lineno}: {seg:?} is both a value and a table"))?;
+    }
+    Ok(table)
+}
+
+/// Parse one scalar or single-line array.
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        bail!("line {lineno}: missing value");
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("line {lineno}: unterminated array (single-line only)"))?;
+        let mut items = Vec::new();
+        for part in split_array(body, lineno)? {
+            items.push(parse_value(&part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("line {lineno}: unterminated string"))?;
+        if body.contains('"') || body.contains('\\') {
+            bail!("line {lineno}: escapes / embedded quotes are not supported");
+        }
+        return Ok(Value::String(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let digits: String = s.chars().filter(|&c| c != '_').collect();
+    if digits.contains(['.', 'e', 'E']) && !digits.starts_with("0x") {
+        if let Ok(f) = digits.parse::<f64>() {
+            return serde_json::Number::from_f64(f)
+                .map(Value::Number)
+                .ok_or_else(|| anyhow!("line {lineno}: non-finite float {s:?}"));
+        }
+    }
+    if let Ok(u) = digits.parse::<u64>() {
+        return Ok(Value::Number(u.into()));
+    }
+    if let Ok(i) = digits.parse::<i64>() {
+        return Ok(Value::Number(i.into()));
+    }
+    bail!("line {lineno}: cannot parse value {s:?} (string|bool|int|float|array)")
+}
+
+/// Split a single-line array body on top-level commas (strings may
+/// contain commas).
+fn split_array(body: &str, lineno: usize) -> Result<Vec<String>> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut depth = 0u32;
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| anyhow!("line {lineno}: unbalanced brackets"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        bail!("line {lineno}: unterminated string in array");
+    }
+    parts.push(cur);
+    Ok(parts
+        .into_iter()
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect())
+}
+
+/// Render a string as a TOML basic string. The emitter shares the
+/// parser's no-escapes constraint; `ArchSpec::validate` rejects text
+/// containing quotes/backslashes, so for any validated spec this is the
+/// identity framing — the replacement below is defensive only.
+pub fn quote(s: &str) -> String {
+    let clean: String = s
+        .chars()
+        .map(|c| if c == '"' || c == '\\' { '\'' } else { c })
+        .collect();
+    format!("\"{clean}\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use serde_json::json;
+
+    #[test]
+    fn parses_tables_scalars_and_arrays() {
+        let v = parse(
+            r#"
+# top comment
+name = "eyeriss"  # trailing comment
+count = 1_000
+frac = 2.5
+on = true
+
+[dataflow]
+dims = ["M", "K"]
+sizes = [1, 2, 4]
+
+[dataflow.cluster]
+kind = "range"
+min = 1
+max = 12
+"#,
+        )
+        .unwrap();
+        assert_eq!(
+            v,
+            json!({
+                "name": "eyeriss",
+                "count": 1000,
+                "frac": 2.5,
+                "on": true,
+                "dataflow": {
+                    "dims": ["M", "K"],
+                    "sizes": [1, 2, 4],
+                    "cluster": {"kind": "range", "min": 1, "max": 12}
+                }
+            })
+        );
+    }
+
+    #[test]
+    fn comment_chars_inside_strings_survive() {
+        let v = parse("s = \"a # b, c\"").unwrap();
+        assert_eq!(v, json!({"s": "a # b, c"}));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        for (text, needle) in [
+            ("x 1", "key = value"),
+            ("x = ", "missing value"),
+            ("[open", "unterminated table"),
+            ("x = [1, 2", "unterminated array"),
+            ("x = \"oops", "unterminated string"),
+            ("x = what", "cannot parse value"),
+            ("x = 1\nx = 2", "duplicate key"),
+            ("[[t]]", "not supported"),
+        ] {
+            let err = parse(text).unwrap_err().to_string();
+            assert!(err.contains("line"), "{text}: {err}");
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_section_materializes() {
+        let v = parse("[hw]\n").unwrap();
+        assert_eq!(v, json!({"hw": {}}));
+    }
+}

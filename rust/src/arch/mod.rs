@@ -1,15 +1,19 @@
-//! Spatial-accelerator architecture models: the five styles of Table 1,
-//! their dataflow constraints (Table 2), NoC capabilities, and the
+//! Spatial-accelerator architecture models: declarative architecture
+//! descriptions ([`ArchSpec`], with the five Table 1 styles as built-in
+//! presets), dataflow constraints (Table 2), NoC capabilities, and the
 //! edge/cloud hardware configurations (Table 4).
 
 mod accelerator;
 mod config;
+pub mod minitoml;
 mod noc;
 mod offchip;
+mod spec;
 mod style;
 
-pub use accelerator::Accelerator;
+pub use accelerator::{Accelerator, MappingError};
 pub use config::HwConfig;
 pub use noc::{Noc, Topology};
 pub use offchip::{MemTech, Offchip};
+pub use spec::{ArchSpec, ClusterRule, DataflowSpec, SpatialMode, SpecError, MAX_PES};
 pub use style::Style;

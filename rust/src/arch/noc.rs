@@ -8,7 +8,13 @@
 use std::fmt;
 
 /// NoC topology of each accelerator (Table 1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+///
+/// Serializes as `"buses"` / `"bus_tree"` / `"mesh"` / `"fat_tree"` —
+/// the spelling architecture-spec files use.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, serde::Serialize, serde::Deserialize,
+)]
+#[serde(rename_all = "snake_case")]
 pub enum Topology {
     /// Eyeriss: hierarchical buses (X/Y bus).
     Buses,
@@ -21,21 +27,39 @@ pub enum Topology {
 }
 
 /// Capability summary of a NoC.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Deserializes from the `[noc]` table of an architecture spec; the
+/// capability fields default permissively (multicast / reduction /
+/// forwarding on, 2 hops) so a spec only has to spell out what its
+/// network *cannot* do.
+#[derive(Debug, Clone, PartialEq, serde::Serialize, serde::Deserialize)]
+#[serde(deny_unknown_fields)]
 pub struct Noc {
     pub topology: Topology,
     /// Can the same datum be delivered to many PEs in one transfer
     /// (multicast/broadcast)? Enables *spatial reuse* (§2.2).
+    #[serde(default = "default_true")]
     pub multicast: bool,
     /// Can partial sums be reduced across PEs in the network (reduction
     /// tree or store-and-forward chain)? Required to parallelize K.
+    #[serde(default = "default_true")]
     pub spatial_reduction: bool,
     /// Can adjacent PEs forward operands (store-and-forward) enabling
     /// *spatio-temporal reuse*?
+    #[serde(default = "default_true")]
     pub forwarding: bool,
     /// Average hop count factor for an S2→PE transfer, used by the energy
     /// model (wire energy scales with distance travelled).
+    #[serde(default = "default_hops")]
     pub avg_hops: f64,
+}
+
+fn default_true() -> bool {
+    true
+}
+
+fn default_hops() -> f64 {
+    2.0
 }
 
 impl Noc {

@@ -114,7 +114,7 @@ mod tests {
             let acc = Accelerator::of_style(Style::Nvdla, cfg.clone());
             let best = crate::flash::search(&acc, &wl).unwrap();
             let onchip = best.cost().runtime_ms() / 1e3;
-            let off = Offchip::for_config(cfg.name);
+            let off = Offchip::for_config(&cfg.name);
             assert_eq!(
                 off.clamp_runtime_secs(&wl, cfg.elem_bytes, onchip),
                 onchip,

@@ -1,0 +1,1060 @@
+//! Declarative accelerator descriptions — the **`ArchSpec`** API.
+//!
+//! The paper evaluates five fixed accelerator styles; the first
+//! generations of this repo mirrored that as a closed [`Style`] enum
+//! whose dataflow constraints were `match`-arms. An [`ArchSpec`] opens
+//! that up: it is a plain serde-loadable **description** (TOML or JSON)
+//! of a spatial accelerator —
+//!
+//! * the **dataflow constraint set** (paper Table 2): which dims may be
+//!   partitioned across clusters and across the PEs within a cluster,
+//!   which inter-/intra-cluster loop orders the microarchitecture
+//!   supports, and the legal cluster sizes ([`ClusterRule`]);
+//! * how spatial dims bind ([`SpatialMode`]): pinned by the spec, or
+//!   derived per loop order with λ tied to the innermost tile
+//!   (the MAERI construction);
+//! * the **NoC capability model** (paper Table 1): topology, multicast,
+//!   spatial reduction, forwarding, hop cost;
+//! * optionally its **own hardware resources** (`[hardware]`) when the
+//!   accelerator is not evaluated under a shared Table 4 config.
+//!
+//! Everything downstream — candidate generation, mapping validation,
+//! the mapping cache key, the engine, the CLI — consumes the spec; the
+//! five paper styles are just built-in presets ([`ArchSpec::presets`])
+//! whose search results are bit-identical to the legacy enum path
+//! (asserted by `tests/arch_spec.rs`).
+//!
+//! Specs are content-addressed ([`ArchSpec::canonical_json`], digested
+//! for display by [`ArchSpec::content_hash`]) so caches key on *what
+//! the architecture is*, not what it is called: two behaviorally
+//! distinct specs never share entries, renaming one never cools a
+//! cache, and a preset stays hot no matter how many times it is
+//! re-loaded.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use thiserror::Error;
+
+use crate::arch::{minitoml, HwConfig, Noc, Style, Topology};
+use crate::dataflow::{Dim, LoopOrder};
+
+/// How an architecture binds its spatial (parallelized) dims.
+#[derive(
+    Debug, Clone, Copy, Default, PartialEq, Eq, serde::Serialize, serde::Deserialize,
+)]
+#[serde(rename_all = "snake_case")]
+pub enum SpatialMode {
+    /// Spatial dims are pinned by the spec's `inter_spatial` /
+    /// `intra_spatial` lists and cluster size λ is enumerated from the
+    /// [`ClusterRule`] — the fixed-dataflow construction
+    /// (Eyeriss / NVDLA / TPU / ShiDianNao).
+    #[default]
+    Fixed,
+    /// Spatial dims derive from each legal loop order (middle loop =
+    /// inter-cluster, innermost = intra-cluster) and λ equals the outer
+    /// tile of the intra-spatial dim — the MAERI TST construction
+    /// (paper Table 2, Eq. 3).
+    OrderDerived,
+}
+
+/// Which cluster sizes λ an architecture's partitioning supports
+/// (paper Table 2 "Cluster Size").
+#[derive(Debug, Clone, PartialEq, Eq, serde::Serialize, serde::Deserialize)]
+#[serde(tag = "kind", rename_all = "snake_case")]
+pub enum ClusterRule {
+    /// Any integer `1..=P`.
+    Any,
+    /// Any divisor of the PE count (clusters always tile the array).
+    Divisors,
+    /// Any power of two `1..=P` (fat-tree style partitioning).
+    PowersOfTwo,
+    /// An explicit list (each capped at P); `include_sqrt` adds √P,
+    /// the paper's square-array option for TPU / ShiDianNao.
+    Fixed {
+        sizes: Vec<u64>,
+        #[serde(default)]
+        include_sqrt: bool,
+    },
+    /// Any integer in `min..=max` that fits the array; if none fit, the
+    /// whole array forms one cluster (the paper's NVDLA small-array
+    /// fallback).
+    Range { min: u64, max: u64 },
+}
+
+fn isqrt(v: u64) -> u64 {
+    (v as f64).sqrt().round() as u64
+}
+
+/// Largest PE count a spec's `[hardware]` may declare (2²⁰ — three
+/// orders of magnitude beyond the paper's cloud config). Caps the size
+/// of the `Any`/`Divisors` legal-λ sets a hostile or typo'd spec file
+/// could make the search materialize.
+pub const MAX_PES: u64 = 1 << 20;
+
+impl ClusterRule {
+    /// Whether one cluster size is legal for a PE budget — closed form,
+    /// no allocation (the per-candidate validation hot path; agrees
+    /// with [`ClusterRule::legal_sizes`] membership by construction).
+    pub fn permits(&self, lambda: u64, pes: u64) -> bool {
+        if lambda < 1 || lambda > pes {
+            return false;
+        }
+        match self {
+            ClusterRule::Any => true,
+            ClusterRule::Divisors => pes % lambda == 0,
+            ClusterRule::PowersOfTwo => lambda.is_power_of_two(),
+            ClusterRule::Fixed { sizes, include_sqrt } => {
+                sizes.iter().any(|&s| s.min(pes) == lambda)
+                    || (*include_sqrt && isqrt(pes) == lambda)
+            }
+            ClusterRule::Range { min, max } => {
+                if *min <= pes {
+                    lambda >= *min && lambda <= *max
+                } else {
+                    // no range value fits: the whole array is one cluster
+                    lambda == pes
+                }
+            }
+        }
+    }
+
+    /// The legal cluster sizes for a PE budget, ascending and deduped.
+    pub fn legal_sizes(&self, pes: u64) -> Vec<u64> {
+        let mut out: Vec<u64> = match self {
+            ClusterRule::Any => (1..=pes).collect(),
+            ClusterRule::Divisors => (1..=pes).filter(|l| pes % l == 0).collect(),
+            ClusterRule::PowersOfTwo => {
+                let mut v = Vec::new();
+                let mut l = 1u64;
+                while l <= pes {
+                    v.push(l);
+                    let Some(next) = l.checked_mul(2) else { break };
+                    l = next;
+                }
+                v
+            }
+            ClusterRule::Fixed { sizes, include_sqrt } => {
+                let mut v: Vec<u64> = sizes.iter().map(|&s| s.min(pes)).collect();
+                if *include_sqrt {
+                    v.push(isqrt(pes));
+                }
+                v
+            }
+            ClusterRule::Range { min, max } => {
+                let v: Vec<u64> = (*min..=*max).filter(|&l| l <= pes).collect();
+                if v.is_empty() {
+                    vec![pes]
+                } else {
+                    v
+                }
+            }
+        };
+        out.retain(|&l| l >= 1 && l <= pes);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+impl fmt::Display for ClusterRule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterRule::Any => write!(f, "any"),
+            ClusterRule::Divisors => write!(f, "divisors of P"),
+            ClusterRule::PowersOfTwo => write!(f, "powers of two"),
+            ClusterRule::Fixed { sizes, include_sqrt } => {
+                write!(f, "{sizes:?}")?;
+                if *include_sqrt {
+                    write!(f, " ∪ {{√P}}")?;
+                }
+                Ok(())
+            }
+            ClusterRule::Range { min, max } => write!(f, "{min}..={max}"),
+        }
+    }
+}
+
+/// The dataflow constraint set of one architecture (paper Table 2).
+#[derive(Debug, Clone, PartialEq, serde::Serialize, serde::Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct DataflowSpec {
+    /// How spatial dims bind (default: [`SpatialMode::Fixed`]).
+    #[serde(default)]
+    pub mode: SpatialMode,
+    /// Dims that may be partitioned across clusters.
+    pub inter_spatial: Vec<Dim>,
+    /// Dims that may be partitioned across the PEs within a cluster.
+    pub intra_spatial: Vec<Dim>,
+    /// Legal inter-cluster loop orders (Table 2 "Compute Order").
+    pub inter_orders: Vec<LoopOrder>,
+    /// Legal intra-cluster loop orders.
+    pub intra_orders: Vec<LoopOrder>,
+    /// Legal cluster sizes λ.
+    pub cluster: ClusterRule,
+}
+
+/// Why a spec is self-inconsistent (distinct from a mapping being
+/// illegal *on* a valid spec, [`crate::arch::MappingError`]).
+#[derive(Debug, Error, PartialEq)]
+pub enum SpecError {
+    #[error("spec name must be non-empty")]
+    EmptyName,
+    #[error("{level} spatial-dim set must be non-empty")]
+    NoSpatialDims { level: &'static str },
+    #[error("{level} loop-order set must be non-empty")]
+    NoLoopOrders { level: &'static str },
+    #[error("duplicate {what} in the {level} set")]
+    Duplicate {
+        level: &'static str,
+        what: &'static str,
+    },
+    #[error("fixed-mode specs need a distinct (inter, intra) spatial-dim pair")]
+    NoDistinctSpatialPair,
+    #[error("cluster rule invalid: {0}")]
+    BadClusterRule(String),
+    #[error(
+        "K is the only legal {level} spatial dim but the NoC cannot \
+         spatially reduce — no mapping can ever validate"
+    )]
+    ReductionUnsupported { level: &'static str },
+    #[error("hardware.{what} must be positive (zero-size resources cannot execute)")]
+    ZeroHardware { what: &'static str },
+    #[error("noc.avg_hops must be positive and finite")]
+    BadHops,
+    #[error(
+        "{field} must not contain quotes, backslashes, or control characters \
+         (the TOML emitter cannot encode them)"
+    )]
+    UnencodableText { field: &'static str },
+    #[error("hardware.pes = {got} is implausible (max {max}); λ sets are O(P)")]
+    ImplausiblePes { got: u64, max: u64 },
+}
+
+/// A declarative spatial-accelerator description. See the module docs
+/// for the format; [`ArchSpec::presets`] for the five built-in paper
+/// styles; `specs/*.toml` for shipped examples.
+#[derive(Debug, Clone, PartialEq, serde::Serialize, serde::Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct ArchSpec {
+    /// Identifier (used by `--arch`, display, and `repro arch show`).
+    pub name: String,
+    /// Free-text description.
+    #[serde(default)]
+    pub description: String,
+    /// Paper-style mapping label, e.g. `STT_TTS-NKM`.
+    #[serde(default)]
+    pub mapping: String,
+    /// Which GEMM matrix stays stationary (documentation only).
+    #[serde(default)]
+    pub stationary: String,
+    /// The dataflow constraint set.
+    pub dataflow: DataflowSpec,
+    /// NoC capability model.
+    pub noc: Noc,
+    /// The accelerator's own hardware resources. When absent the
+    /// accelerator is evaluated under an externally supplied
+    /// [`HwConfig`] (the paper's shared Table 4 methodology).
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub hardware: Option<HwConfig>,
+}
+
+impl ArchSpec {
+    // ----- constraint accessors (the names the Style enum used) -----
+
+    pub fn mode(&self) -> SpatialMode {
+        self.dataflow.mode
+    }
+
+    /// Which dims may be partitioned across clusters.
+    pub fn inter_spatial_dims(&self) -> &[Dim] {
+        &self.dataflow.inter_spatial
+    }
+
+    /// Which dims may be partitioned across the PEs within a cluster.
+    pub fn intra_spatial_dims(&self) -> &[Dim] {
+        &self.dataflow.intra_spatial
+    }
+
+    /// Legal inter-cluster loop orders.
+    pub fn inter_orders(&self) -> &[LoopOrder] {
+        &self.dataflow.inter_orders
+    }
+
+    /// Legal intra-cluster loop orders.
+    pub fn intra_orders(&self) -> &[LoopOrder] {
+        &self.dataflow.intra_orders
+    }
+
+    /// Legal cluster sizes λ for a PE budget.
+    pub fn cluster_sizes(&self, pes: u64) -> Vec<u64> {
+        self.dataflow.cluster.legal_sizes(pes)
+    }
+
+    /// The first legal `(inter, intra)` spatial-dim pair in spec order —
+    /// what fixed-mode baselines pin themselves to. `None` only for
+    /// specs [`ArchSpec::validate`] rejects (no distinct pair).
+    pub fn first_spatial_pair(&self) -> Option<(Dim, Dim)> {
+        self.dataflow.inter_spatial.iter().find_map(|&i| {
+            self.dataflow
+                .intra_spatial
+                .iter()
+                .find(|&&t| t != i)
+                .map(|&t| (i, t))
+        })
+    }
+
+    // ----- identity -----
+
+    /// The canonical encoding of the spec's *semantic* fields (JSON with
+    /// fixed struct field order over dataflow + noc + hardware): equal
+    /// machine descriptions encode equal across processes and runs, any
+    /// change to any semantic field — a loop order, a buffer size, a hop
+    /// count — changes it, and the cosmetic fields (name, description,
+    /// mapping label, stationary note) are excluded — identity is what
+    /// the architecture *is*, not what it is called. The mapping cache
+    /// keys architecture identity on this exact string (interned per
+    /// [`super::Accelerator`]), so two behaviorally distinct specs never
+    /// share entries — exactly, not probabilistically — while renaming
+    /// or re-describing a spec never cools the cache.
+    pub fn canonical_json(&self) -> String {
+        #[derive(serde::Serialize)]
+        struct Semantics<'a> {
+            dataflow: &'a DataflowSpec,
+            noc: &'a Noc,
+            hardware: &'a Option<HwConfig>,
+        }
+        serde_json::to_string(&Semantics {
+            dataflow: &self.dataflow,
+            noc: &self.noc,
+            hardware: &self.hardware,
+        })
+        .expect("spec serializes")
+    }
+
+    /// Stable 64-bit digest of [`ArchSpec::canonical_json`] (FNV-1a),
+    /// for display and at-a-glance comparison (`repro arch
+    /// list|show|validate`); cache keys use the full canonical encoding.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.canonical_json().into_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    // ----- validation -----
+
+    /// Check the spec for self-consistency. Parse-level errors (unknown
+    /// dims, malformed loop orders, unknown fields) are already rejected
+    /// by serde; this catches the semantic ones.
+    pub fn validate(&self) -> std::result::Result<(), SpecError> {
+        if self.name.trim().is_empty() {
+            return Err(SpecError::EmptyName);
+        }
+        // keep every text field expressible in the (line-based,
+        // escape-free) TOML the emitter writes, so `arch show` /
+        // `to_toml` round-trips can never drift for a validated spec
+        let unencodable =
+            |t: &str| t.chars().any(|c| c == '"' || c == '\\' || c.is_control());
+        for (field, text) in [
+            ("name", &self.name),
+            ("description", &self.description),
+            ("mapping", &self.mapping),
+            ("stationary", &self.stationary),
+        ] {
+            if unencodable(text) {
+                return Err(SpecError::UnencodableText { field });
+            }
+        }
+        if let Some(hw) = &self.hardware {
+            if unencodable(&hw.name) {
+                return Err(SpecError::UnencodableText {
+                    field: "hardware.name",
+                });
+            }
+        }
+        let df = &self.dataflow;
+        for (level, dims) in [
+            ("inter-cluster", &df.inter_spatial),
+            ("intra-cluster", &df.intra_spatial),
+        ] {
+            if dims.is_empty() {
+                return Err(SpecError::NoSpatialDims { level });
+            }
+            if has_dup(dims) {
+                return Err(SpecError::Duplicate {
+                    level,
+                    what: "spatial dim",
+                });
+            }
+            if !self.noc.spatial_reduction && dims.len() == 1 && dims[0] == Dim::K {
+                return Err(SpecError::ReductionUnsupported { level });
+            }
+        }
+        for (level, orders) in [
+            ("inter-cluster", &df.inter_orders),
+            ("intra-cluster", &df.intra_orders),
+        ] {
+            if orders.is_empty() {
+                return Err(SpecError::NoLoopOrders { level });
+            }
+            if has_dup(orders) {
+                return Err(SpecError::Duplicate {
+                    level,
+                    what: "loop order",
+                });
+            }
+        }
+        if df.mode == SpatialMode::Fixed
+            && !df
+                .inter_spatial
+                .iter()
+                .any(|i| df.intra_spatial.iter().any(|t| t != i))
+        {
+            return Err(SpecError::NoDistinctSpatialPair);
+        }
+        match &df.cluster {
+            ClusterRule::Fixed { sizes, .. } => {
+                if sizes.is_empty() {
+                    return Err(SpecError::BadClusterRule(
+                        "fixed rule needs at least one size".into(),
+                    ));
+                }
+                if sizes.contains(&0) {
+                    return Err(SpecError::BadClusterRule("cluster size 0".into()));
+                }
+            }
+            ClusterRule::Range { min, max } => {
+                if *min < 1 || min > max {
+                    return Err(SpecError::BadClusterRule(format!(
+                        "range {min}..={max} needs 1 <= min <= max"
+                    )));
+                }
+            }
+            _ => {}
+        }
+        if !(self.noc.avg_hops.is_finite() && self.noc.avg_hops > 0.0) {
+            return Err(SpecError::BadHops);
+        }
+        if let Some(hw) = &self.hardware {
+            for (what, v) in [
+                ("pes", hw.pes),
+                ("s1_bytes", hw.s1_bytes),
+                ("s2_bytes", hw.s2_bytes),
+                ("noc_bytes_per_sec", hw.noc_bytes_per_sec),
+                ("clock_hz", hw.clock_hz),
+                ("elem_bytes", hw.elem_bytes),
+            ] {
+                if v == 0 {
+                    return Err(SpecError::ZeroHardware { what });
+                }
+            }
+            if hw.pes > MAX_PES {
+                return Err(SpecError::ImplausiblePes {
+                    got: hw.pes,
+                    max: MAX_PES,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    // ----- loading / dumping -----
+
+    /// Parse a spec from TOML text (the [`minitoml`] subset).
+    pub fn from_toml_str(text: &str) -> Result<ArchSpec> {
+        Self::from_value(minitoml::parse(text)?)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn from_json_str(text: &str) -> Result<ArchSpec> {
+        let value: serde_json::Value =
+            serde_json::from_str(text).map_err(|e| anyhow!("invalid arch spec: {e}"))?;
+        Self::from_value(value)
+    }
+
+    fn from_value(value: serde_json::Value) -> Result<ArchSpec> {
+        check_cluster_keys(&value)?;
+        serde_json::from_value(value).map_err(|e| anyhow!("invalid arch spec: {e}"))
+    }
+
+    /// Load *and validate* a spec from a `.toml` or `.json` file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ArchSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading arch spec {}", path.display()))?;
+        let spec = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            Self::from_json_str(&text)
+        } else {
+            Self::from_toml_str(&text)
+        }
+        .with_context(|| format!("parsing arch spec {}", path.display()))?;
+        spec.validate()
+            .with_context(|| format!("validating arch spec {}", path.display()))?;
+        Ok(spec)
+    }
+
+    /// Render the spec as TOML (round-trips through
+    /// [`ArchSpec::from_toml_str`]).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write;
+        let q = minitoml::quote;
+        let dims = |ds: &[Dim]| -> String {
+            let inner: Vec<String> = ds.iter().map(|d| q(&d.to_string())).collect();
+            format!("[{}]", inner.join(", "))
+        };
+        let orders = |os: &[LoopOrder]| -> String {
+            let inner: Vec<String> = os
+                .iter()
+                .map(|o| q(&o.0.iter().map(|d| d.letter()).collect::<String>()))
+                .collect();
+            format!("[{}]", inner.join(", "))
+        };
+        let mut s = String::new();
+        let _ = writeln!(s, "name = {}", q(&self.name));
+        if !self.description.is_empty() {
+            let _ = writeln!(s, "description = {}", q(&self.description));
+        }
+        if !self.mapping.is_empty() {
+            let _ = writeln!(s, "mapping = {}", q(&self.mapping));
+        }
+        if !self.stationary.is_empty() {
+            let _ = writeln!(s, "stationary = {}", q(&self.stationary));
+        }
+        let df = &self.dataflow;
+        let mode = match df.mode {
+            SpatialMode::Fixed => "fixed",
+            SpatialMode::OrderDerived => "order_derived",
+        };
+        let _ = writeln!(s, "\n[dataflow]");
+        let _ = writeln!(s, "mode = {}", q(mode));
+        let _ = writeln!(s, "inter_spatial = {}", dims(&df.inter_spatial));
+        let _ = writeln!(s, "intra_spatial = {}", dims(&df.intra_spatial));
+        let _ = writeln!(s, "inter_orders = {}", orders(&df.inter_orders));
+        let _ = writeln!(s, "intra_orders = {}", orders(&df.intra_orders));
+        let _ = writeln!(s, "\n[dataflow.cluster]");
+        match &df.cluster {
+            ClusterRule::Any => {
+                let _ = writeln!(s, "kind = \"any\"");
+            }
+            ClusterRule::Divisors => {
+                let _ = writeln!(s, "kind = \"divisors\"");
+            }
+            ClusterRule::PowersOfTwo => {
+                let _ = writeln!(s, "kind = \"powers_of_two\"");
+            }
+            ClusterRule::Fixed { sizes, include_sqrt } => {
+                let _ = writeln!(s, "kind = \"fixed\"");
+                let list: Vec<String> = sizes.iter().map(|v| v.to_string()).collect();
+                let _ = writeln!(s, "sizes = [{}]", list.join(", "));
+                let _ = writeln!(s, "include_sqrt = {include_sqrt}");
+            }
+            ClusterRule::Range { min, max } => {
+                let _ = writeln!(s, "kind = \"range\"");
+                let _ = writeln!(s, "min = {min}");
+                let _ = writeln!(s, "max = {max}");
+            }
+        }
+        let topo = match self.noc.topology {
+            Topology::Buses => "buses",
+            Topology::BusTree => "bus_tree",
+            Topology::Mesh => "mesh",
+            Topology::FatTree => "fat_tree",
+        };
+        let _ = writeln!(s, "\n[noc]");
+        let _ = writeln!(s, "topology = {}", q(topo));
+        let _ = writeln!(s, "multicast = {}", self.noc.multicast);
+        let _ = writeln!(s, "spatial_reduction = {}", self.noc.spatial_reduction);
+        let _ = writeln!(s, "forwarding = {}", self.noc.forwarding);
+        let _ = writeln!(s, "avg_hops = {:?}", self.noc.avg_hops);
+        if let Some(hw) = &self.hardware {
+            let _ = writeln!(s, "\n[hardware]");
+            if !hw.name.is_empty() {
+                let _ = writeln!(s, "name = {}", q(&hw.name));
+            }
+            let _ = writeln!(s, "pes = {}", hw.pes);
+            let _ = writeln!(s, "s1_bytes = {}", hw.s1_bytes);
+            let _ = writeln!(s, "s2_bytes = {}", hw.s2_bytes);
+            let _ = writeln!(s, "noc_bytes_per_sec = {}", hw.noc_bytes_per_sec);
+            let _ = writeln!(s, "clock_hz = {}", hw.clock_hz);
+            let _ = writeln!(s, "elem_bytes = {}", hw.elem_bytes);
+        }
+        s
+    }
+
+    // ----- the five paper styles as presets -----
+
+    /// Preset names, in the paper's Table 1 order (also the `--style`
+    /// spellings the CLI accepts).
+    pub const PRESET_NAMES: [&str; 5] = ["eyeriss", "nvdla", "tpu", "shidiannao", "maeri"];
+
+    /// All five paper styles in the declarative format.
+    pub fn presets() -> Vec<ArchSpec> {
+        Style::ALL.iter().map(|&s| ArchSpec::preset(s)).collect()
+    }
+
+    /// Case-insensitive preset lookup (accepts the same aliases as
+    /// `Style::from_str`, e.g. `tpuv2`, `sdn`).
+    pub fn by_name(name: &str) -> Option<ArchSpec> {
+        name.parse::<Style>().ok().map(ArchSpec::preset)
+    }
+
+    /// The declarative description of one legacy [`Style`].
+    pub fn preset(style: Style) -> ArchSpec {
+        match style {
+            Style::Eyeriss => ArchSpec {
+                name: "eyeriss".into(),
+                description: "Eyeriss-style: input(A)-row-stationary, hierarchical \
+                              X/Y buses with inter-PE psum forwarding"
+                    .into(),
+                mapping: "STT_TTS-MNK".into(),
+                stationary: "A (input rows)".into(),
+                dataflow: DataflowSpec {
+                    mode: SpatialMode::Fixed,
+                    inter_spatial: vec![Dim::M],
+                    intra_spatial: vec![Dim::K],
+                    inter_orders: vec![LoopOrder::MNK],
+                    intra_orders: vec![LoopOrder::MNK],
+                    cluster: ClusterRule::Range { min: 1, max: 12 },
+                },
+                noc: Noc {
+                    topology: Topology::Buses,
+                    multicast: true,
+                    spatial_reduction: true,
+                    forwarding: true,
+                    avg_hops: 2.0,
+                },
+                hardware: None,
+            },
+            Style::Nvdla => ArchSpec {
+                name: "nvdla".into(),
+                description: "NVDLA-style: weight(B)-stationary, broadcast bus + \
+                              adder tree"
+                    .into(),
+                mapping: "STT_TTS-NKM".into(),
+                stationary: "B (weights)".into(),
+                dataflow: DataflowSpec {
+                    mode: SpatialMode::Fixed,
+                    inter_spatial: vec![Dim::N],
+                    intra_spatial: vec![Dim::K],
+                    inter_orders: vec![LoopOrder::NKM],
+                    intra_orders: vec![LoopOrder::NMK],
+                    cluster: ClusterRule::Range { min: 16, max: 64 },
+                },
+                noc: Noc {
+                    topology: Topology::BusTree,
+                    multicast: true,
+                    spatial_reduction: true,
+                    forwarding: false,
+                    avg_hops: 1.5,
+                },
+                hardware: None,
+            },
+            Style::Tpu => ArchSpec {
+                name: "tpu".into(),
+                description: "TPUv2-style: weight(B)-stationary systolic mesh \
+                              (store-and-forward in both directions)"
+                    .into(),
+                mapping: "STT_TTS-NMK".into(),
+                stationary: "B (weights)".into(),
+                dataflow: DataflowSpec {
+                    mode: SpatialMode::Fixed,
+                    inter_spatial: vec![Dim::N],
+                    intra_spatial: vec![Dim::K],
+                    inter_orders: vec![LoopOrder::NMK],
+                    intra_orders: vec![LoopOrder::NMK],
+                    cluster: ClusterRule::Fixed {
+                        sizes: vec![256],
+                        include_sqrt: true,
+                    },
+                },
+                noc: Noc {
+                    topology: Topology::Mesh,
+                    multicast: true,
+                    spatial_reduction: true,
+                    forwarding: true,
+                    avg_hops: 8.0,
+                },
+                hardware: None,
+            },
+            Style::ShiDianNao => ArchSpec {
+                name: "shidiannao".into(),
+                description: "ShiDianNao-style: output(C)-stationary mesh with \
+                              neighbour forwarding but no spatial reduction \
+                              (K must stay temporal)"
+                    .into(),
+                mapping: "STT_TST-MNK".into(),
+                stationary: "C (outputs)".into(),
+                dataflow: DataflowSpec {
+                    mode: SpatialMode::Fixed,
+                    inter_spatial: vec![Dim::M],
+                    intra_spatial: vec![Dim::N],
+                    inter_orders: vec![LoopOrder::MNK],
+                    intra_orders: vec![LoopOrder::MNK],
+                    cluster: ClusterRule::Fixed {
+                        sizes: vec![8],
+                        include_sqrt: true,
+                    },
+                },
+                noc: Noc {
+                    topology: Topology::Mesh,
+                    multicast: true,
+                    spatial_reduction: false,
+                    forwarding: true,
+                    avg_hops: 4.0,
+                },
+                hardware: None,
+            },
+            Style::Maeri => ArchSpec {
+                name: "maeri".into(),
+                description: "MAERI-style: fully flexible dataflow over a fat-tree \
+                              distribution + augmented reduction tree; λ tied to \
+                              the innermost tile"
+                    .into(),
+                mapping: "TST_TTS-MNK".into(),
+                stationary: "flexible".into(),
+                dataflow: DataflowSpec {
+                    mode: SpatialMode::OrderDerived,
+                    inter_spatial: vec![Dim::M, Dim::N, Dim::K],
+                    intra_spatial: vec![Dim::M, Dim::N, Dim::K],
+                    inter_orders: LoopOrder::ALL.to_vec(),
+                    intra_orders: LoopOrder::ALL.to_vec(),
+                    cluster: ClusterRule::PowersOfTwo,
+                },
+                noc: Noc {
+                    topology: Topology::FatTree,
+                    multicast: true,
+                    spatial_reduction: true,
+                    forwarding: true,
+                    avg_hops: 2.0,
+                },
+                hardware: None,
+            },
+        }
+    }
+}
+
+impl fmt::Display for ArchSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        if !self.mapping.is_empty() {
+            write!(f, " ({})", self.mapping)?;
+        }
+        Ok(())
+    }
+}
+
+/// `ClusterRule` is internally tagged, which serde cannot combine with
+/// `deny_unknown_fields` — so a typo like `include_sqrtt` would be
+/// silently dropped and the author would search a different space than
+/// they wrote. Enforce the per-kind field lists on the raw value before
+/// deserializing (unknown `kind`s fall through to serde's own error).
+fn check_cluster_keys(value: &serde_json::Value) -> Result<()> {
+    let Some(cluster) = value.pointer("/dataflow/cluster") else {
+        return Ok(());
+    };
+    let Some(obj) = cluster.as_object() else {
+        return Ok(());
+    };
+    let kind = obj.get("kind").and_then(|k| k.as_str()).unwrap_or_default();
+    let allowed: &[&str] = match kind {
+        "any" | "divisors" | "powers_of_two" => &["kind"],
+        "fixed" => &["kind", "sizes", "include_sqrt"],
+        "range" => &["kind", "min", "max"],
+        _ => return Ok(()),
+    };
+    for key in obj.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(anyhow!(
+                "invalid arch spec: unknown field `{key}` in [dataflow.cluster] \
+                 for kind {kind:?} (expected one of {allowed:?})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn has_dup<T: PartialEq>(items: &[T]) -> bool {
+    items
+        .iter()
+        .enumerate()
+        .any(|(i, x)| items[..i].contains(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_hash_distinctly() {
+        let presets = ArchSpec::presets();
+        assert_eq!(presets.len(), 5);
+        let mut hashes: Vec<u64> = presets
+            .iter()
+            .map(|p| {
+                p.validate().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+                p.content_hash()
+            })
+            .collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), 5, "preset hashes must be distinct");
+    }
+
+    #[test]
+    fn content_hash_tracks_semantics_not_labels() {
+        let a = ArchSpec::preset(Style::Maeri);
+        let b = ArchSpec::preset(Style::Maeri);
+        assert_eq!(a.content_hash(), b.content_hash());
+        // cosmetic edits never change identity (or cool caches)
+        let mut renamed = ArchSpec::preset(Style::Maeri);
+        renamed.name = "my-maeri".into();
+        renamed.description = "same machine, new label".into();
+        assert_eq!(a.content_hash(), renamed.content_hash());
+        assert_eq!(a.canonical_json(), renamed.canonical_json());
+        // semantic edits always do
+        let mut c = ArchSpec::preset(Style::Maeri);
+        c.dataflow.inter_orders.pop();
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = ArchSpec::preset(Style::Maeri);
+        d.noc.avg_hops = 3.0;
+        assert_ne!(a.content_hash(), d.content_hash());
+        let mut e = ArchSpec::preset(Style::Maeri);
+        e.hardware = Some(HwConfig::tiny());
+        assert_ne!(a.content_hash(), e.content_hash());
+    }
+
+    #[test]
+    fn cluster_rules_match_legacy_tables() {
+        // the Table 2 sets, via the rule forms the presets use
+        let eyeriss = ClusterRule::Range { min: 1, max: 12 };
+        assert_eq!(eyeriss.legal_sizes(256), (1..=12).collect::<Vec<_>>());
+        assert_eq!(eyeriss.legal_sizes(8), (1..=8).collect::<Vec<_>>());
+        let nvdla = ClusterRule::Range { min: 16, max: 64 };
+        assert_eq!(nvdla.legal_sizes(256), (16..=64).collect::<Vec<_>>());
+        assert_eq!(nvdla.legal_sizes(8), vec![8], "whole-array fallback");
+        let tpu = ClusterRule::Fixed {
+            sizes: vec![256],
+            include_sqrt: true,
+        };
+        assert_eq!(tpu.legal_sizes(256), vec![16, 256]);
+        assert_eq!(tpu.legal_sizes(2048), vec![45, 256]);
+        let sdn = ClusterRule::Fixed {
+            sizes: vec![8],
+            include_sqrt: true,
+        };
+        assert_eq!(sdn.legal_sizes(256), vec![8, 16]);
+        let maeri = ClusterRule::PowersOfTwo;
+        let v = maeri.legal_sizes(256);
+        assert_eq!(v.len(), 9);
+        assert!(v.contains(&1) && v.contains(&256));
+    }
+
+    #[test]
+    fn new_cluster_rules_work() {
+        assert_eq!(ClusterRule::Divisors.legal_sizes(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(ClusterRule::Any.legal_sizes(4), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn permits_agrees_with_legal_sizes_membership() {
+        let rules = [
+            ClusterRule::Any,
+            ClusterRule::Divisors,
+            ClusterRule::PowersOfTwo,
+            ClusterRule::Fixed {
+                sizes: vec![256],
+                include_sqrt: true,
+            },
+            ClusterRule::Fixed {
+                sizes: vec![8, 3],
+                include_sqrt: false,
+            },
+            ClusterRule::Range { min: 1, max: 12 },
+            ClusterRule::Range { min: 16, max: 64 },
+        ];
+        for rule in &rules {
+            for pes in [1u64, 8, 12, 16, 45, 256] {
+                let legal = rule.legal_sizes(pes);
+                for lambda in 0..=pes + 2 {
+                    assert_eq!(
+                        rule.permits(lambda, pes),
+                        legal.contains(&lambda),
+                        "{rule} λ={lambda} P={pes}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_spatial_pair_skips_coinciding_heads() {
+        let mut spec = ArchSpec::preset(Style::Eyeriss);
+        assert_eq!(spec.first_spatial_pair(), Some((Dim::M, Dim::K)));
+        // heads coincide: the first *distinct* pair must be found
+        spec.dataflow.inter_spatial = vec![Dim::M, Dim::N];
+        spec.dataflow.intra_spatial = vec![Dim::M];
+        spec.validate().unwrap();
+        assert_eq!(spec.first_spatial_pair(), Some((Dim::N, Dim::M)));
+    }
+
+    #[test]
+    fn validate_rejects_unencodable_text() {
+        let mut s = ArchSpec::preset(Style::Tpu);
+        s.description = "the \"big\" array".into();
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::UnencodableText {
+                field: "description"
+            })
+        );
+        // the line-based emitter cannot encode control characters either
+        let mut s = ArchSpec::preset(Style::Tpu);
+        s.description = "line1\nline2".into();
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::UnencodableText {
+                field: "description"
+            })
+        );
+    }
+
+    #[test]
+    fn validate_caps_hardware_pes() {
+        let mut s = ArchSpec::preset(Style::Maeri);
+        let mut hw = HwConfig::edge();
+        hw.pes = MAX_PES + 1;
+        s.hardware = Some(hw.clone());
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ImplausiblePes {
+                got: MAX_PES + 1,
+                max: MAX_PES
+            })
+        );
+        hw.pes = MAX_PES;
+        s.hardware = Some(hw);
+        assert_eq!(s.validate(), Ok(()));
+    }
+
+    #[test]
+    fn toml_roundtrip_every_preset() {
+        for spec in ArchSpec::presets() {
+            let text = spec.to_toml();
+            let back = ArchSpec::from_toml_str(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{text}", spec.name));
+            assert_eq!(back, spec, "{}", spec.name);
+            assert_eq!(back.content_hash(), spec.content_hash());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_with_hardware() {
+        let mut spec = ArchSpec::preset(Style::Tpu);
+        spec.hardware = Some(HwConfig::tiny());
+        let json = serde_json::to_string(&spec).unwrap();
+        let back = ArchSpec::from_json_str(&json).unwrap();
+        assert_eq!(back, spec);
+        // and through TOML too
+        let back2 = ArchSpec::from_toml_str(&spec.to_toml()).unwrap();
+        assert_eq!(back2, spec);
+    }
+
+    #[test]
+    fn validate_rejects_inconsistencies() {
+        let base = ArchSpec::preset(Style::Eyeriss);
+
+        let mut s = base.clone();
+        s.name = "  ".into();
+        assert_eq!(s.validate(), Err(SpecError::EmptyName));
+
+        let mut s = base.clone();
+        s.dataflow.inter_orders.clear();
+        assert!(matches!(s.validate(), Err(SpecError::NoLoopOrders { .. })));
+
+        let mut s = base.clone();
+        s.dataflow.intra_spatial.clear();
+        assert!(matches!(s.validate(), Err(SpecError::NoSpatialDims { .. })));
+
+        let mut s = base.clone();
+        s.dataflow.inter_orders.push(LoopOrder::MNK);
+        assert!(matches!(s.validate(), Err(SpecError::Duplicate { .. })));
+
+        let mut s = base.clone();
+        s.dataflow.inter_spatial = vec![Dim::K];
+        s.dataflow.intra_spatial = vec![Dim::K];
+        s.noc.spatial_reduction = false;
+        assert!(matches!(
+            s.validate(),
+            Err(SpecError::ReductionUnsupported { .. })
+        ));
+
+        let mut s = base.clone();
+        s.dataflow.inter_spatial = vec![Dim::M];
+        s.dataflow.intra_spatial = vec![Dim::M];
+        assert_eq!(s.validate(), Err(SpecError::NoDistinctSpatialPair));
+
+        let mut s = base.clone();
+        s.dataflow.cluster = ClusterRule::Range { min: 9, max: 3 };
+        assert!(matches!(s.validate(), Err(SpecError::BadClusterRule(_))));
+
+        let mut s = base.clone();
+        s.dataflow.cluster = ClusterRule::Fixed {
+            sizes: vec![],
+            include_sqrt: false,
+        };
+        assert!(matches!(s.validate(), Err(SpecError::BadClusterRule(_))));
+
+        let mut s = base.clone();
+        s.noc.avg_hops = f64::NAN;
+        assert_eq!(s.validate(), Err(SpecError::BadHops));
+
+        let mut s = base.clone();
+        let mut hw = HwConfig::tiny();
+        hw.s2_bytes = 0;
+        s.hardware = Some(hw);
+        assert_eq!(
+            s.validate(),
+            Err(SpecError::ZeroHardware { what: "s2_bytes" })
+        );
+    }
+
+    #[test]
+    fn parse_rejects_unknown_dim_and_unknown_field() {
+        let mut bad_dim = ArchSpec::preset(Style::Eyeriss).to_toml();
+        bad_dim = bad_dim.replace("inter_spatial = [\"M\"]", "inter_spatial = [\"X\"]");
+        let err = ArchSpec::from_toml_str(&bad_dim).unwrap_err().to_string();
+        assert!(err.contains("unknown dim"), "{err}");
+
+        let mut bad_field = ArchSpec::preset(Style::Eyeriss).to_toml();
+        bad_field.push_str("\nwarp_speed = 9\n");
+        let err = ArchSpec::from_toml_str(&bad_field).unwrap_err().to_string();
+        assert!(err.contains("unknown field"), "{err}");
+
+        // the internally-tagged cluster table is checked by hand
+        let sqrtt = ArchSpec::preset(Style::Tpu)
+            .to_toml()
+            .replace("include_sqrt =", "include_sqrtt =");
+        let err = ArchSpec::from_toml_str(&sqrtt).unwrap_err().to_string();
+        assert!(
+            err.contains("include_sqrtt") && err.contains("dataflow.cluster"),
+            "{err}"
+        );
+        let stray = ArchSpec::preset(Style::Maeri)
+            .to_toml()
+            .replace("kind = \"powers_of_two\"", "kind = \"powers_of_two\"\nmax = 64");
+        let err = ArchSpec::from_toml_str(&stray).unwrap_err().to_string();
+        assert!(err.contains("`max`"), "{err}");
+    }
+
+    #[test]
+    fn by_name_accepts_aliases_case_insensitively() {
+        assert_eq!(ArchSpec::by_name("MAERI").unwrap().name, "maeri");
+        assert_eq!(ArchSpec::by_name("TPUv2").unwrap().name, "tpu");
+        assert_eq!(ArchSpec::by_name("sdn").unwrap().name, "shidiannao");
+        assert!(ArchSpec::by_name("warpcore").is_none());
+    }
+}

@@ -1,18 +1,26 @@
-//! The five accelerator styles and their dataflow constraints
-//! (paper Tables 1 and 2).
+//! The five paper accelerator styles — now a thin **shim** over the
+//! declarative [`ArchSpec`] presets.
 //!
 //! As in the paper (§3.1, footnote 3), these are "*-style" models: each
 //! style pins which dims may be parallelized at each level, which loop
 //! orders the microarchitecture supports, and the legal cluster sizes —
 //! while all styles receive identical hardware resources (Table 4).
+//!
+//! Since the `ArchSpec` redesign the constraint data lives in
+//! [`ArchSpec::preset`]; `Style` remains as a stable, copyable handle
+//! for the five built-ins (CLI `--style`, test grids, display). The
+//! legacy constraint methods are deprecated delegates kept so existing
+//! code compiles unchanged; `tests/arch_spec.rs` asserts the presets
+//! reproduce them field-for-field and search-result-for-search-result.
 
 use std::fmt;
 use std::str::FromStr;
 
-use crate::arch::noc::{Noc, Topology};
+use crate::arch::{ArchSpec, Noc};
 use crate::dataflow::{Dim, LoopOrder};
 
-/// Accelerator style under evaluation.
+/// Accelerator style under evaluation (a handle onto its
+/// [`ArchSpec::preset`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, serde::Serialize, serde::Deserialize)]
 pub enum Style {
     /// Eyeriss: input(A)-row-stationary, STT_TTS-MNK.
@@ -36,97 +44,47 @@ impl Style {
         Style::Maeri,
     ];
 
+    /// The declarative description of this style — the source of truth
+    /// for all of its dataflow constraints.
+    pub fn spec(self) -> ArchSpec {
+        ArchSpec::preset(self)
+    }
+
     /// Which dim may be partitioned across clusters (Table 2 row
     /// "Dataflow: Parallel Dim / Inter-Cluster").
-    pub fn inter_spatial_dims(self) -> &'static [Dim] {
-        match self {
-            Style::Eyeriss | Style::ShiDianNao => &[Dim::M],
-            Style::Nvdla | Style::Tpu => &[Dim::N],
-            Style::Maeri => &[Dim::M, Dim::N, Dim::K],
-        }
+    #[deprecated(note = "use `Style::spec()` / `ArchSpec::inter_spatial_dims`")]
+    pub fn inter_spatial_dims(self) -> Vec<Dim> {
+        self.spec().dataflow.inter_spatial
     }
 
     /// Which dim may be partitioned across the PEs within a cluster.
-    pub fn intra_spatial_dims(self) -> &'static [Dim] {
-        match self {
-            // spatial reduction over the NoC makes K parallelizable
-            Style::Eyeriss | Style::Nvdla | Style::Tpu => &[Dim::K],
-            // no spatial reduction: parallelism comes from N instead
-            Style::ShiDianNao => &[Dim::N],
-            Style::Maeri => &[Dim::M, Dim::N, Dim::K],
-        }
+    #[deprecated(note = "use `Style::spec()` / `ArchSpec::intra_spatial_dims`")]
+    pub fn intra_spatial_dims(self) -> Vec<Dim> {
+        self.spec().dataflow.intra_spatial
     }
 
     /// Legal inter-cluster loop orders (Table 2 "Compute Order").
-    pub fn inter_orders(self) -> &'static [LoopOrder] {
-        match self {
-            Style::Eyeriss | Style::ShiDianNao => &[LoopOrder::MNK],
-            Style::Nvdla => &[LoopOrder::NKM],
-            Style::Tpu => &[LoopOrder::NMK],
-            Style::Maeri => &LoopOrder::ALL,
-        }
+    #[deprecated(note = "use `Style::spec()` / `ArchSpec::inter_orders`")]
+    pub fn inter_orders(self) -> Vec<LoopOrder> {
+        self.spec().dataflow.inter_orders
     }
 
     /// Legal intra-cluster loop orders.
-    pub fn intra_orders(self) -> &'static [LoopOrder] {
-        match self {
-            Style::Eyeriss | Style::ShiDianNao => &[LoopOrder::MNK],
-            Style::Nvdla | Style::Tpu => &[LoopOrder::NMK],
-            Style::Maeri => &LoopOrder::ALL,
-        }
+    #[deprecated(note = "use `Style::spec()` / `ArchSpec::intra_orders`")]
+    pub fn intra_orders(self) -> Vec<LoopOrder> {
+        self.spec().dataflow.intra_orders
     }
 
     /// Legal cluster sizes λ for a PE budget (Table 2 "Cluster Size").
-    ///
-    /// MAERI's λ is tied to the tile size of the last dimension
-    /// (λ = T^out of the intra-spatial dim); the explorer enumerates
-    /// powers of two and lets the tile-size constraints bind it.
+    #[deprecated(note = "use `Style::spec()` / `ArchSpec::cluster_sizes`")]
     pub fn cluster_sizes(self, pes: u64) -> Vec<u64> {
-        let isqrt = |v: u64| (v as f64).sqrt().round() as u64;
-        let mut out: Vec<u64> = match self {
-            // compile-time flexible: 1 ≤ λ ≤ 12
-            Style::Eyeriss => (1..=12.min(pes)).collect(),
-            // design-time flexible: 16 ≤ λ ≤ 64 (any integer in range —
-            // Fig 7 enumerates "every cluster size"). On arrays smaller
-            // than 16 PEs the whole array forms one cluster.
-            Style::Nvdla => {
-                let v: Vec<u64> = (16..=64).filter(|&l| l <= pes).collect();
-                if v.is_empty() {
-                    vec![pes]
-                } else {
-                    v
-                }
-            }
-            // 256 or √P
-            Style::Tpu => vec![256.min(pes), isqrt(pes)],
-            // 8 or √P
-            Style::ShiDianNao => vec![8.min(pes), isqrt(pes)],
-            // flexible fat tree: any power-of-two partition
-            Style::Maeri => {
-                let mut v = Vec::new();
-                let mut l = 1;
-                while l <= pes {
-                    v.push(l);
-                    l *= 2;
-                }
-                v
-            }
-        };
-        out.retain(|&l| l >= 1 && l <= pes);
-        out.sort_unstable();
-        out.dedup();
-        out
+        self.spec().cluster_sizes(pes)
     }
 
     /// NoC capability model (Table 1).
+    #[deprecated(note = "use `Style::spec()` — the spec carries its `noc`")]
     pub fn noc(self) -> Noc {
-        match self {
-            Style::Eyeriss => Noc::of(Topology::Buses),
-            Style::Nvdla => Noc::of(Topology::BusTree),
-            Style::Tpu => Noc::of(Topology::Mesh),
-            Style::ShiDianNao => Noc::shidiannao_mesh(),
-            Style::Maeri => Noc::of(Topology::FatTree),
-        }
+        self.spec().noc
     }
 
     /// Paper mapping name, e.g. `STT_TTS-NKM (NVDLA-style)`.
@@ -168,6 +126,8 @@ impl fmt::Display for Style {
 impl FromStr for Style {
     type Err = String;
 
+    /// Case-insensitive; accepts the aliases `tpuv2` and `sdn`. The
+    /// error lists every accepted value.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
             "eyeriss" => Ok(Style::Eyeriss),
@@ -176,13 +136,15 @@ impl FromStr for Style {
             "shidiannao" | "sdn" => Ok(Style::ShiDianNao),
             "maeri" => Ok(Style::Maeri),
             _ => Err(format!(
-                "unknown style {s:?} (want eyeriss|nvdla|tpu|shidiannao|maeri)"
+                "unknown style {s:?} (valid: eyeriss|nvdla|tpu|tpuv2|shidiannao|sdn|maeri, \
+                 any capitalization)"
             )),
         }
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim methods are exactly what these tests pin down
 mod tests {
     use super::*;
 
@@ -232,8 +194,16 @@ mod tests {
     fn style_parse_roundtrip() {
         for s in Style::ALL {
             assert_eq!(s.to_string().parse::<Style>().unwrap(), s);
+            // case-insensitive in both directions
+            assert_eq!(
+                s.to_string().to_uppercase().parse::<Style>().unwrap(),
+                s
+            );
         }
-        assert!("foo".parse::<Style>().is_err());
+        let err = "foo".parse::<Style>().unwrap_err();
+        for name in ArchSpec::PRESET_NAMES {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
     }
 
     #[test]
@@ -243,5 +213,16 @@ mod tests {
         assert_eq!(Style::Tpu.mapping_name(), "STT_TTS-NMK");
         assert_eq!(Style::ShiDianNao.mapping_name(), "STT_TST-MNK");
         assert_eq!(Style::Maeri.mapping_name(), "TST_TTS-MNK");
+    }
+
+    #[test]
+    fn shim_matches_preset_metadata() {
+        for s in Style::ALL {
+            let spec = s.spec();
+            assert_eq!(spec.mapping, s.mapping_name(), "{s}");
+            assert_eq!(spec.stationary, s.stationary(), "{s}");
+            assert_eq!(spec.name.parse::<Style>().unwrap(), s);
+            assert!(spec.hardware.is_none(), "{s}: presets share Table 4 configs");
+        }
     }
 }

@@ -5,7 +5,7 @@
 //! snapping) does not lose a meaningfully better mapping (§5.2: the
 //! pruned search "still finds a correct mapping").
 
-use crate::arch::{Accelerator, Style};
+use crate::arch::{Accelerator, SpatialMode};
 use crate::cost::CostModel;
 use crate::dataflow::{Dim, Mapping, Tiles};
 use crate::flash::EvaluatedMapping;
@@ -26,57 +26,57 @@ pub fn exhaustive_best(acc: &Accelerator, wl: &Gemm) -> Option<(EvaluatedMapping
     let mut best: Option<EvaluatedMapping> = None;
     let mut evaluated = 0u64;
 
-    for &order in acc.style.inter_orders() {
-        let (inter_sp_choices, intra_orders): (Vec<Dim>, _) = match acc.style {
-            Style::Maeri => (vec![order.0[1]], vec![order]),
-            s => (
-                s.inter_spatial_dims().to_vec(),
-                s.intra_orders().to_vec(),
-            ),
-        };
-        for &inter_sp in &inter_sp_choices {
-            let intra_sp = match acc.style {
-                Style::Maeri => order.0[2],
-                s => s.intra_spatial_dims()[0],
+    let spec = &acc.spec;
+    for &order in spec.inter_orders() {
+        let (inter_sp_choices, intra_sp_choices, intra_orders): (Vec<Dim>, Vec<Dim>, _) =
+            match spec.mode() {
+                SpatialMode::OrderDerived => {
+                    (vec![order.0[1]], vec![order.0[2]], vec![order])
+                }
+                SpatialMode::Fixed => (
+                    spec.inter_spatial_dims().to_vec(),
+                    spec.intra_spatial_dims().to_vec(),
+                    spec.intra_orders().to_vec(),
+                ),
             };
-            if inter_sp == intra_sp {
-                continue;
-            }
-            for &intra_order in &intra_orders {
-                for lambda in acc.style.cluster_sizes(acc.config.pes) {
-                    for tm in 1..=dim_of(Dim::M) {
-                        for tn in 1..=dim_of(Dim::N) {
-                            for tk in 1..=dim_of(Dim::K) {
-                                let outer = Tiles::new(tm, tn, tk);
-                                for im in 1..=tm {
-                                    for inn in 1..=tn {
-                                        for ik in 1..=tk {
-                                            let m = Mapping {
-                                                inter_order: order,
-                                                intra_order,
-                                                inter_spatial: inter_sp,
-                                                intra_spatial: intra_sp,
-                                                cluster_size: lambda,
-                                                outer,
-                                                inner: Tiles::new(im, inn, ik),
-                                            };
-                                            if acc.validate(&m).is_err() {
-                                                continue;
-                                            }
-                                            evaluated += 1;
-                                            let cost = model.evaluate(&m, wl);
-                                            let better = match &best {
-                                                Some(b) => {
-                                                    cost.runtime_cycles()
-                                                        < b.cost.runtime_cycles()
+        for &inter_sp in &inter_sp_choices {
+            for &intra_sp in intra_sp_choices.iter().filter(|&&t| t != inter_sp) {
+                for &intra_order in &intra_orders {
+                    for lambda in spec.cluster_sizes(acc.config.pes) {
+                        for tm in 1..=dim_of(Dim::M) {
+                            for tn in 1..=dim_of(Dim::N) {
+                                for tk in 1..=dim_of(Dim::K) {
+                                    let outer = Tiles::new(tm, tn, tk);
+                                    for im in 1..=tm {
+                                        for inn in 1..=tn {
+                                            for ik in 1..=tk {
+                                                let m = Mapping {
+                                                    inter_order: order,
+                                                    intra_order,
+                                                    inter_spatial: inter_sp,
+                                                    intra_spatial: intra_sp,
+                                                    cluster_size: lambda,
+                                                    outer,
+                                                    inner: Tiles::new(im, inn, ik),
+                                                };
+                                                if acc.validate(&m).is_err() {
+                                                    continue;
                                                 }
-                                                None => true,
-                                            };
-                                            if better {
-                                                best = Some(EvaluatedMapping {
-                                                    mapping: m,
-                                                    cost,
-                                                });
+                                                evaluated += 1;
+                                                let cost = model.evaluate(&m, wl);
+                                                let better = match &best {
+                                                    Some(b) => {
+                                                        cost.runtime_cycles()
+                                                            < b.cost.runtime_cycles()
+                                                    }
+                                                    None => true,
+                                                };
+                                                if better {
+                                                    best = Some(EvaluatedMapping {
+                                                        mapping: m,
+                                                        cost,
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -94,7 +94,7 @@ pub fn exhaustive_best(acc: &Accelerator, wl: &Gemm) -> Option<(EvaluatedMapping
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::HwConfig;
+    use crate::arch::{HwConfig, Style};
 
     /// §5.2's correctness claim: on a space small enough to enumerate,
     /// FLASH's pruned best is within a small factor of the true optimum.

@@ -6,28 +6,31 @@
 //! temporal outer tiles are 1; the spatial dims are sized to fill the
 //! array; inner tiles are all 1.
 
-use crate::arch::{Accelerator, Style};
+use crate::arch::{Accelerator, SpatialMode};
 use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
 use crate::workloads::Gemm;
 
-/// Build the non-tiled mapping for a style + loop order.
+/// Build the non-tiled mapping for an architecture + loop order.
 ///
-/// For MAERI (flexible): inter-spatial is the order's middle loop,
-/// intra-spatial its innermost, λ defaults to a small cluster (4) as in
-/// the paper's Fig 6(a) walk-through. For fixed styles the spatial dims
-/// come from Table 2 and λ is the smallest legal cluster.
+/// For order-derived specs (MAERI-style flexibility): inter-spatial is
+/// the order's middle loop, intra-spatial its innermost, λ defaults to a
+/// small cluster (4) as in the paper's Fig 6(a) walk-through. For
+/// fixed-dataflow specs the spatial dims come from the spec (first legal
+/// choice each) and λ is the smallest legal cluster.
 pub fn non_tiled_mapping(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Option<Mapping> {
-    let (inter_sp, intra_sp, lambda) = match acc.style {
-        Style::Maeri => {
+    let spec = &acc.spec;
+    let (inter_sp, intra_sp, lambda) = match spec.mode() {
+        SpatialMode::OrderDerived => {
             let lambda = 4u64.min(acc.config.pes);
             (order.0[1], order.0[2], lambda)
         }
-        s => {
-            if !s.inter_orders().contains(&order) {
+        SpatialMode::Fixed => {
+            if !spec.inter_orders().contains(&order) {
                 return None;
             }
-            let lambda = *s.cluster_sizes(acc.config.pes).first()?;
-            (s.inter_spatial_dims()[0], s.intra_spatial_dims()[0], lambda)
+            let lambda = *spec.cluster_sizes(acc.config.pes).first()?;
+            let (inter_sp, intra_sp) = spec.first_spatial_pair()?;
+            (inter_sp, intra_sp, lambda)
         }
     };
     if inter_sp == intra_sp {
@@ -64,7 +67,7 @@ pub fn non_tiled_mapping(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Opti
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::HwConfig;
+    use crate::arch::{HwConfig, Style};
     use crate::cost::CostModel;
 
     #[test]
@@ -83,7 +86,7 @@ mod tests {
         let wl = Gemm::new("VI", 512, 256, 256);
         for style in [Style::Eyeriss, Style::Nvdla, Style::Tpu, Style::ShiDianNao] {
             let acc = Accelerator::of_style(style, HwConfig::edge());
-            let order = style.inter_orders()[0];
+            let order = style.spec().inter_orders()[0];
             assert!(non_tiled_mapping(&acc, &wl, order).is_some(), "{style}");
             // unsupported orders yield None
             assert!(non_tiled_mapping(&acc, &wl, LoopOrder::KNM).is_none());

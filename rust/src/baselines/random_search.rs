@@ -7,7 +7,7 @@
 
 use std::time::Instant;
 
-use crate::arch::{Accelerator, Style};
+use crate::arch::{Accelerator, SpatialMode};
 use crate::cost::CostModel;
 use crate::dataflow::{Dim, Mapping, Tiles};
 use crate::flash::EvaluatedMapping;
@@ -65,8 +65,24 @@ pub fn random_search(
     let start = Instant::now();
     let mut rng = Rng::new(seed);
     let model = CostModel::new(acc.clone());
-    let orders = acc.style.inter_orders();
-    let lambdas = acc.style.cluster_sizes(acc.config.pes);
+    let mode = acc.spec.mode();
+    let orders = acc.spec.inter_orders();
+    let lambdas = acc.spec.cluster_sizes(acc.config.pes);
+    // every legal (inter, intra) spatial pair of a fixed-mode spec —
+    // sampled uniformly so multi-choice custom specs are covered across
+    // their whole legal space (single-pair presets draw nothing extra)
+    let pairs: Vec<(Dim, Dim)> = acc
+        .spec
+        .inter_spatial_dims()
+        .iter()
+        .flat_map(|&i| {
+            acc.spec
+                .intra_spatial_dims()
+                .iter()
+                .filter(move |&&t| t != i)
+                .map(move |&t| (i, t))
+        })
+        .collect();
     let dim_of = |d: Dim| match d {
         Dim::M => wl.m,
         Dim::N => wl.n,
@@ -78,9 +94,13 @@ pub fn random_search(
     for _ in 0..samples {
         let order = orders[rng.below(orders.len() as u64) as usize];
         let lambda = lambdas[rng.below(lambdas.len() as u64) as usize];
-        let (inter_sp, intra_sp) = match acc.style {
-            Style::Maeri => (order.0[1], order.0[2]),
-            s => (s.inter_spatial_dims()[0], s.intra_spatial_dims()[0]),
+        let (inter_sp, intra_sp) = match mode {
+            SpatialMode::OrderDerived => (order.0[1], order.0[2]),
+            SpatialMode::Fixed => match pairs.len() {
+                0 => break,
+                1 => pairs[0],
+                n => pairs[rng.below(n as u64) as usize],
+            },
         };
         let mut outer = Tiles::ones();
         let mut inner = Tiles::ones();
@@ -89,8 +109,9 @@ pub fn random_search(
             outer.set(d, o);
             inner.set(d, rng.tile(o));
         }
-        // MAERI ties λ to the outer tile of the intra-spatial dim.
-        let lambda = if acc.style == Style::Maeri {
+        // order-derived specs tie λ to the outer tile of the
+        // intra-spatial dim (the MAERI construction).
+        let lambda = if mode == SpatialMode::OrderDerived {
             let l = outer.get(intra_sp).next_power_of_two().min(acc.config.pes);
             inner.set(intra_sp, 1);
             outer.set(intra_sp, l);
@@ -99,9 +120,23 @@ pub fn random_search(
             inner.set(intra_sp, outer.get(intra_sp));
             lambda
         };
+        // intra order must come from the spec's *intra* set: reusing the
+        // inter order made every sample invalid on specs whose sets
+        // differ (NVDLA: inter NKM vs intra NMK). Prefer the sampled
+        // order when legal (unchanged behavior where sets overlap),
+        // otherwise sample the intra set.
+        let intra_order = if acc.spec.intra_orders().contains(&order) {
+            order
+        } else {
+            let io = acc.spec.intra_orders();
+            match io.len() {
+                1 => io[0],
+                n => io[rng.below(n as u64) as usize],
+            }
+        };
         let m = Mapping {
             inter_order: order,
-            intra_order: order,
+            intra_order,
             inter_spatial: inter_sp,
             intra_spatial: intra_sp,
             cluster_size: lambda,
@@ -132,7 +167,7 @@ pub fn random_search(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::HwConfig;
+    use crate::arch::{HwConfig, Style};
 
     #[test]
     fn flash_matches_or_beats_random_sampling() {
@@ -168,6 +203,18 @@ mod tests {
             a.best.map(|e| e.cost.runtime_cycles()),
             b.best.map(|e| e.cost.runtime_cycles())
         );
+    }
+
+    #[test]
+    fn fixed_styles_with_disjoint_order_sets_still_sample() {
+        // NVDLA's inter (NKM) and intra (NMK) order sets are disjoint;
+        // the sampler must draw a legal intra order, not copy the inter
+        // one (which made every sample invalid).
+        let acc = Accelerator::of_style(crate::arch::Style::Nvdla, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let r = random_search(&acc, &wl, 2000, 42);
+        assert!(r.evaluated > 0, "no NVDLA sample ever validated");
+        assert!(r.best.is_some());
     }
 
     #[test]

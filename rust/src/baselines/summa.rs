@@ -39,7 +39,7 @@ pub fn summa_best(acc: &Accelerator, wl: &Gemm) -> Result<EvaluatedMapping> {
             }
         }
     }
-    best.ok_or_else(|| anyhow::anyhow!("no SUMMA-style mapping feasible on {}", acc.style))
+    best.ok_or_else(|| anyhow::anyhow!("no SUMMA-style mapping feasible on {}", acc.name()))
 }
 
 /// Comparison row: SUMMA best vs FLASH's fully flexible best.

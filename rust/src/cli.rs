@@ -1,42 +1,55 @@
 //! Hand-rolled CLI for the `repro` binary (the build image is offline,
-//! so no `clap`; see DESIGN.md §7 Substitutions).
+//! so no `clap`; see DESIGN.md §Substitutions).
 //!
-//! `repro <subcommand> [--key value ...]` — one subcommand per paper
-//! table/figure plus `search`, `validate` and `serve`.
+//! `repro <subcommand> [positional ...] [--key value ...]` — one
+//! subcommand per paper table/figure plus `search`, `validate`, `serve`
+//! and the `arch` spec tools. Every accelerator-taking command accepts
+//! either `--style <preset>` or `--arch <preset-name | spec.toml |
+//! spec.json>` (declarative [`crate::arch::ArchSpec`] descriptions).
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::arch::{Accelerator, HwConfig, Style};
+use crate::arch::{Accelerator, ArchSpec, HwConfig, Style};
 use crate::experiments;
 use crate::report::histogram;
 use crate::runtime::{default_artifacts_dir, Manifest, Runtime};
 use crate::workloads::{read_trace, Gemm, WorkloadGen};
 
-/// Parsed command line: subcommand + `--key value` flags.
+/// Parsed command line: subcommand + positionals + `--key value` flags.
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
+    pub positional: Vec<String>,
     pub flags: HashMap<String, String>,
 }
 
 impl Args {
-    /// Parse from raw args (without argv[0]).
+    /// Parse from raw args (without argv[0]). Tokens that don't start
+    /// with `--` collect as positionals (`repro arch validate a.toml
+    /// b.toml`); `--key` tokens must be followed by a value.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
         let mut it = raw.into_iter();
         let command = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
+        let mut positional = Vec::new();
         while let Some(arg) = it.next() {
-            let key = arg
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow!("expected --flag, got {arg:?}"))?;
+            let Some(key) = arg.strip_prefix("--") else {
+                positional.push(arg);
+                continue;
+            };
             let value = it
                 .next()
                 .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
             flags.insert(key.to_string(), value);
         }
-        Ok(Args { command, flags })
+        Ok(Args {
+            command,
+            positional,
+            flags,
+        })
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -51,11 +64,11 @@ impl Args {
     }
 
     pub fn config(&self) -> Result<HwConfig> {
-        match self.get("config").unwrap_or("edge") {
+        match self.get("config").unwrap_or("edge").to_ascii_lowercase().as_str() {
             "edge" => Ok(HwConfig::edge()),
             "cloud" => Ok(HwConfig::cloud()),
             "tiny" => Ok(HwConfig::tiny()),
-            other => bail!("unknown --config {other:?} (edge|cloud|tiny)"),
+            other => bail!("unknown --config {other:?} (valid: edge|cloud|tiny)"),
         }
     }
 
@@ -64,6 +77,31 @@ impl Args {
             .unwrap_or("maeri")
             .parse()
             .map_err(|e: String| anyhow!(e))
+    }
+
+    /// The accelerator a command operates on: `--arch` (preset name or
+    /// spec file; see [`resolve_arch`]) wins over `--style`, which wins
+    /// over the MAERI default.
+    pub fn accelerator(&self) -> Result<Accelerator> {
+        let config = self.config()?;
+        match self.get("arch") {
+            Some(arch) => resolve_arch(arch, &config),
+            None => Ok(Accelerator::of_style(self.style()?, config)),
+        }
+    }
+
+    /// The accelerator pool for routing commands: a comma-separated
+    /// `--arch` list, or all five presets when absent.
+    pub fn pool(&self) -> Result<Vec<Accelerator>> {
+        let config = self.config()?;
+        match self.get("arch") {
+            Some(list) => list
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| resolve_arch(s.trim(), &config))
+                .collect(),
+            None => Ok(Accelerator::all_styles(&config)),
+        }
     }
 
     pub fn workload(&self) -> Result<Gemm> {
@@ -79,40 +117,82 @@ impl Args {
     }
 }
 
+/// Resolve an `--arch` value: a built-in preset name (case-insensitive,
+/// aliases included) or a path to a `.toml` / `.json` spec file. The
+/// error lists every valid spelling.
+pub fn resolve_arch(value: &str, config: &HwConfig) -> Result<Accelerator> {
+    resolve_spec(value).map(|spec| Accelerator::from_spec(spec, config.clone()))
+}
+
+/// [`resolve_arch`] without the hardware binding (`repro arch show`).
+pub fn resolve_spec(value: &str) -> Result<ArchSpec> {
+    if let Some(spec) = ArchSpec::by_name(value) {
+        return Ok(spec);
+    }
+    let path = Path::new(value);
+    if path.exists() {
+        return ArchSpec::load(path);
+    }
+    bail!(
+        "unknown --arch {value:?}: not a built-in spec (valid: {}) and no such \
+         file (want a .toml/.json ArchSpec — see `repro arch show maeri` for \
+         the format)",
+        ArchSpec::PRESET_NAMES.join("|")
+    )
+}
+
 const HELP: &str = "\
 repro — FLASH + MAESTRO-BLAS reproduction (CS.DC 2021)
 
-usage: repro <command> [--key value ...]
+usage: repro <command> [positional ...] [--key value ...]
+
+Accelerator-taking commands accept --style <preset> or
+--arch <preset-name | spec.toml | spec.json> (declarative ArchSpec).
 
 paper artifacts:
-  table2               mapping constraints per accelerator style
+  table2               mapping constraints per accelerator architecture
   table3               the GEMM workload suite
   table4               hardware configurations
   table5               tiled vs non-tiled MAERI mappings (workload VI, edge)
   table6               candidate tile-size bounds  [--workload VI] [--config edge]
-  pruning              §5.2 pruning statistics     [--m 256 --n 256 --k 256] [--style maeri]
+  pruning              §5.2 pruning statistics     [--m 256 --n 256 --k 256] [--style|--arch]
   fig7                 candidate-runtime histogram [--config edge] [--bins 100]
   fig8                 5 styles × workloads        [--config edge] [--workloads I,II,III,IV]
   fig9                 MAERI loop-order sweep (workloads IV and V)
   fig10                5 styles × MLP FC layers    [--config edge]
 
+architecture specs:
+  arch list            built-in presets and their constraint sets
+  arch show <name|file>      dump a spec as TOML (template for customs)
+  arch validate <file ...>   parse + validate spec files (CI gate)
+
 extensions:
-  pareto               runtime/energy Pareto frontier  [--style --config --workload|-m-n-k] [--weight 0.5]
-  route                heterogeneous-node routing of Table 3 [--config edge] [--objective runtime|energy|edp]
+  pareto               runtime/energy Pareto frontier  [--style|--arch --config --workload|-m-n-k] [--weight 0.5]
+  route                heterogeneous-node routing of Table 3 [--config edge] [--objective runtime|energy|edp] [--arch a.toml,b.toml]
   summa                SUMMA/LAP-only vs flexible MAERI (Table 3)  [--config edge]
   resnet               conv-as-GEMM ResNet-50 layers × 5 styles    [--config edge] [--batch 1]
-  sweep-cluster        cluster-size ablation  [--style maeri] [--config edge] [--workload VI]
-  export-mapping       best mapping in MAESTRO directive syntax [--style --config --workload|-m-n-k]
+  sweep-cluster        cluster-size ablation  [--style|--arch] [--config edge] [--workload VI]
+  export-mapping       best mapping in MAESTRO directive syntax [--style|--arch --config --workload|-m-n-k]
 
 tools:
-  search               one FLASH search  [--style maeri] [--config edge] [--m --n --k | --workload ID] [--format json]
+  search               one FLASH search  [--style|--arch] [--config edge] [--m --n --k | --workload ID] [--format json]
   validate             analytical model vs cycle simulator
-  serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style --config]
+  serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style|--arch --config]
   help                 this text
 ";
 
 /// Run the CLI; returns the text to print.
 pub fn run(args: Args) -> Result<String> {
+    // only `arch` takes positionals; anywhere else a stray token is a
+    // mistake (e.g. `-style` instead of `--style`) that must fail fast,
+    // not silently fall back to defaults
+    if args.command != "arch" && !args.positional.is_empty() {
+        bail!(
+            "unexpected positional arguments {:?} for {:?} (flags are `--key value`)",
+            args.positional,
+            args.command
+        );
+    }
     match args.command.as_str() {
         "table2" => Ok(experiments::table2().render()),
         "table3" => Ok(experiments::table3().render()),
@@ -125,7 +205,7 @@ pub fn run(args: Args) -> Result<String> {
             } else {
                 Gemm::new("sq256", 256, 256, 256) // the §5.2 instance
             };
-            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let acc = args.accelerator()?;
             Ok(experiments::pruning_report(&acc, &wl).to_table().render())
         }
         "fig7" => {
@@ -149,7 +229,7 @@ pub fn run(args: Args) -> Result<String> {
         "fig9" => Ok(experiments::fig9().render()),
         "fig10" => Ok(experiments::fig10(&args.config()?).render()),
         "search" => {
-            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let acc = args.accelerator()?;
             let wl = args.workload()?;
             // thin adapter over the engine: full search statistics on a
             // single-member pool, warming the engine's mapping cache
@@ -161,7 +241,9 @@ pub fn run(args: Args) -> Result<String> {
             if args.get("format") == Some("json") {
                 let payload = serde_json::json!({
                     "workload": &wl,
-                    "style": acc.style,
+                    "arch": acc.name(),
+                    "arch_hash": format!("{:016x}", acc.spec_hash()),
+                    "style": acc.style(),
                     "config": acc.config.name,
                     "mapping": r.mapping().name(),
                     "directives": r.mapping().level_spec().to_string(),
@@ -206,7 +288,7 @@ pub fn run(args: Args) -> Result<String> {
             ))
         }
         "pareto" => {
-            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let acc = args.accelerator()?;
             let wl = args.workload()?;
             let frontier = crate::flash::pareto_frontier(&acc, &wl)?;
             let mut t = crate::report::Table::new(&["runtime ms", "energy mJ", "mapping"]);
@@ -239,7 +321,7 @@ pub fn run(args: Args) -> Result<String> {
                 .parse()
                 .map_err(|e: String| anyhow!(e))?;
             let engine = crate::engine::Engine::builder()
-                .pool(Accelerator::all_styles(&args.config()?))
+                .pool(args.pool()?)
                 .objective(obj)
                 .build()?;
             let mut t = crate::report::Table::new(&["workload", "routed to", "mapping", "score"]);
@@ -247,7 +329,7 @@ pub fn run(args: Args) -> Result<String> {
                 let plan = engine.plan(&wl, obj)?;
                 t.row(&[
                     wl.name.clone(),
-                    engine.pool()[plan.accelerator_idx].style.to_string(),
+                    engine.pool()[plan.accelerator_idx].name().to_string(),
                     plan.best.mapping.name(),
                     plan.scores
                         .get(plan.accelerator_idx)
@@ -265,10 +347,10 @@ pub fn run(args: Args) -> Result<String> {
         }
         "sweep-cluster" => {
             let wl = args.workload().unwrap_or_else(|_| Gemm::by_id("VI").unwrap());
-            Ok(experiments::cluster_sweep(args.style()?, &args.config()?, &wl).render())
+            Ok(experiments::cluster_sweep(&args.accelerator()?, &wl).render())
         }
         "export-mapping" => {
-            let acc = Accelerator::of_style(args.style()?, args.config()?);
+            let acc = args.accelerator()?;
             let wl = args.workload()?;
             let r = crate::flash::search(&acc, &wl)?;
             Ok(crate::dataflow::maestro_fmt::to_maestro(&r.mapping().level_spec()))
@@ -281,9 +363,94 @@ pub fn run(args: Args) -> Result<String> {
                 worst
             ))
         }
+        "arch" => arch_cmd(&args),
         "serve" => serve(&args),
         "help" | "" => Ok(HELP.to_string()),
         other => bail!("unknown command {other:?}\n\n{HELP}"),
+    }
+}
+
+/// `repro arch list|show|validate` — the spec tooling.
+fn arch_cmd(args: &Args) -> Result<String> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("list");
+    match action {
+        "list" => {
+            let mut t = crate::report::Table::new(&[
+                "name", "mapping", "mode", "inter-par", "intra-par", "orders", "cluster λ",
+                "noc", "hash",
+            ]);
+            for spec in ArchSpec::presets() {
+                let mode = match spec.mode() {
+                    crate::arch::SpatialMode::Fixed => "fixed",
+                    crate::arch::SpatialMode::OrderDerived => "order-derived",
+                };
+                t.row(&[
+                    spec.name.clone(),
+                    spec.mapping.clone(),
+                    mode.to_string(),
+                    format!("{:?}", spec.inter_spatial_dims()),
+                    format!("{:?}", spec.intra_spatial_dims()),
+                    spec.inter_orders().len().to_string(),
+                    spec.dataflow.cluster.to_string(),
+                    format!("{}", spec.noc.topology),
+                    format!("{:016x}", spec.content_hash()),
+                ]);
+            }
+            Ok(format!(
+                "{}\nCustom architectures: write a TOML/JSON spec (template: \
+                 `repro arch show maeri`) and pass it anywhere via --arch.\n",
+                t.render()
+            ))
+        }
+        "show" => {
+            let name = args
+                .positional
+                .get(1)
+                .map(String::as_str)
+                .or_else(|| args.get("arch"))
+                .ok_or_else(|| anyhow!("usage: repro arch show <preset|spec-file>"))?;
+            let spec = resolve_spec(name)?;
+            Ok(format!(
+                "# {} — content hash {:016x}\n{}",
+                spec.name,
+                spec.content_hash(),
+                spec.to_toml()
+            ))
+        }
+        "validate" => {
+            let files = &args.positional[1..];
+            if files.is_empty() {
+                bail!("usage: repro arch validate <spec-file ...>");
+            }
+            let mut out = String::new();
+            let mut failures = 0usize;
+            for f in files {
+                match ArchSpec::load(f) {
+                    Ok(spec) => {
+                        out.push_str(&format!(
+                            "OK    {f}: {} (hash {:016x}, {} inter-orders, λ {})\n",
+                            spec,
+                            spec.content_hash(),
+                            spec.inter_orders().len(),
+                            spec.dataflow.cluster,
+                        ));
+                    }
+                    Err(e) => {
+                        failures += 1;
+                        out.push_str(&format!("FAIL  {f}: {e:#}\n"));
+                    }
+                }
+            }
+            if failures > 0 {
+                bail!("{out}{failures}/{} spec files failed validation", files.len());
+            }
+            Ok(out)
+        }
+        other => bail!("unknown arch action {other:?} (valid: list|show|validate)"),
     }
 }
 
@@ -306,7 +473,7 @@ fn serve(args: &Args) -> Result<String> {
             })
             .collect()
     };
-    let acc = Accelerator::of_style(args.style()?, args.config()?);
+    let acc = args.accelerator()?;
     // Prefer the AOT artifacts when built; otherwise serve through the
     // native interpreter over a synthetic tile set.
     let dir = default_artifacts_dir();
@@ -380,11 +547,121 @@ mod tests {
     }
 
     #[test]
-    fn parse_rejects_bad_flags() {
-        assert!(Args::parse(["x", "oops"].map(String::from)).is_err());
+    fn parse_collects_positionals_and_rejects_bad_flags() {
+        let a = Args::parse(["arch", "validate", "a.toml", "--config", "edge", "b.toml"]
+            .map(String::from))
+        .unwrap();
+        assert_eq!(a.positional, vec!["validate", "a.toml", "b.toml"]);
+        assert_eq!(a.get("config"), Some("edge"));
         assert!(Args::parse(["x", "--dangling"].map(String::from)).is_err());
         let a = Args::parse(["x", "--m", "NaN"].map(String::from)).unwrap();
         assert!(a.get_u64("m", 0).is_err());
+        // a mistyped flag must fail fast, not silently run on defaults
+        let err = run(Args::parse(["search", "-style", "tpu"].map(String::from)).unwrap());
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("-style") && err.contains("positional"), "{err}");
+    }
+
+    #[test]
+    fn style_and_objective_errors_list_valid_values() {
+        let a = Args::parse(["search", "--style", "warpcore"].map(String::from)).unwrap();
+        let err = a.style().unwrap_err().to_string();
+        for name in ["eyeriss", "nvdla", "tpu", "shidiannao", "maeri"] {
+            assert!(err.contains(name), "{err}");
+        }
+        let err = "latency".parse::<crate::cost::Objective>().unwrap_err();
+        for name in ["runtime", "energy", "edp"] {
+            assert!(err.contains(name), "{err}");
+        }
+        // and both parse case-insensitively
+        assert_eq!(
+            Args::parse(["x", "--style", "ShiDianNao"].map(String::from))
+                .unwrap()
+                .style()
+                .unwrap(),
+            Style::ShiDianNao
+        );
+        assert_eq!(
+            "EDP".parse::<crate::cost::Objective>().unwrap(),
+            crate::cost::Objective::Edp
+        );
+    }
+
+    #[test]
+    fn arch_flag_accepts_presets_and_rejects_unknown_with_catalog() {
+        let a = Args::parse(["search", "--arch", "NVDLA"].map(String::from)).unwrap();
+        assert_eq!(a.accelerator().unwrap().name(), "nvdla");
+        let a = Args::parse(["search", "--arch", "no-such-spec"].map(String::from)).unwrap();
+        let err = format!("{:#}", a.accelerator().unwrap_err());
+        for name in ArchSpec::PRESET_NAMES {
+            assert!(err.contains(name), "{err}");
+        }
+        assert!(err.contains(".toml"), "{err}");
+    }
+
+    #[test]
+    fn arch_list_show_validate_commands() {
+        let out = run(Args::parse(["arch".to_string()]).unwrap()).unwrap();
+        assert!(out.contains("maeri") && out.contains("TST_TTS-MNK"), "{out}");
+
+        let out = run(Args::parse(["arch", "show", "eyeriss"].map(String::from)).unwrap())
+            .unwrap();
+        let spec = ArchSpec::from_toml_str(out.lines().skip(1).collect::<Vec<_>>().join("\n").as_str())
+            .expect("shown TOML re-parses");
+        assert_eq!(spec, ArchSpec::by_name("eyeriss").unwrap());
+
+        // validate: a good file and a broken file through a temp dir
+        let dir = std::env::temp_dir();
+        let good = dir.join("cli_arch_good.toml");
+        let bad = dir.join("cli_arch_bad.toml");
+        std::fs::write(&good, ArchSpec::by_name("tpu").unwrap().to_toml()).unwrap();
+        std::fs::write(&bad, "name = \"broken\"\n").unwrap();
+        let ok = run(Args::parse(
+            ["arch".into(), "validate".into(), good.display().to_string()],
+        )
+        .unwrap())
+        .unwrap();
+        assert!(ok.contains("OK"), "{ok}");
+        let err = run(Args::parse(
+            [
+                "arch".into(),
+                "validate".into(),
+                good.display().to_string(),
+                bad.display().to_string(),
+            ],
+        )
+        .unwrap());
+        std::fs::remove_file(&good).ok();
+        std::fs::remove_file(&bad).ok();
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("FAIL") && err.contains("1/2"), "{err}");
+    }
+
+    #[test]
+    fn search_accepts_custom_spec_file() {
+        let mut spec = ArchSpec::by_name("maeri").unwrap();
+        spec.name = "my-maeri".into();
+        let path = std::env::temp_dir().join("cli_custom_arch.toml");
+        std::fs::write(&path, spec.to_toml()).unwrap();
+        let a = Args::parse(
+            [
+                "search".into(),
+                "--arch".into(),
+                path.display().to_string(),
+                "--workload".into(),
+                "VI".into(),
+                "--format".into(),
+                "json".into(),
+            ],
+        )
+        .unwrap();
+        let out = run(a).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v: serde_json::Value = serde_json::from_str(&out).expect("valid json");
+        assert_eq!(v["arch"], "my-maeri");
+        assert_eq!(v["style"], serde_json::Value::Null);
+        assert!(v["runtime_ms"].as_f64().unwrap() > 0.0);
+        assert_eq!(v["arch_hash"].as_str().unwrap().len(), 16);
     }
 
     #[test]

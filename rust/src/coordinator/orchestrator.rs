@@ -54,8 +54,8 @@ mod tests {
         // order: acc-major, workload-minor
         assert_eq!(grid[0].workload.name, "a");
         assert_eq!(grid[1].workload.name, "b");
-        assert_eq!(grid[0].accelerator.style, Style::Eyeriss);
-        assert_eq!(grid[9].accelerator.style, Style::Maeri);
+        assert_eq!(grid[0].accelerator.style(), Some(Style::Eyeriss));
+        assert_eq!(grid[9].accelerator.style(), Some(Style::Maeri));
         for cell in &grid {
             assert!(cell.result.is_ok(), "{}", cell.accelerator);
         }

@@ -17,6 +17,11 @@ pub enum Dim {
 impl Dim {
     pub const ALL: [Dim; 3] = [Dim::M, Dim::N, Dim::K];
 
+    /// Upper-case letter, the serialized spelling in architecture specs.
+    pub fn upper(self) -> char {
+        self.letter().to_ascii_uppercase()
+    }
+
     /// Which matrices a dimension indexes: loops over a dim force
     /// re-touching exactly these operands.
     pub fn touches(self) -> [Matrix; 2] {
@@ -33,6 +38,41 @@ impl Dim {
             Dim::N => 'n',
             Dim::K => 'k',
         }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.upper())
+    }
+}
+
+impl FromStr for Dim {
+    type Err = String;
+
+    /// Parse `"M"` / `"m"` (and likewise N, K); case-insensitive.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "m" => Ok(Dim::M),
+            "n" => Ok(Dim::N),
+            "k" => Ok(Dim::K),
+            _ => Err(format!("unknown dim {s:?} (want M|N|K)")),
+        }
+    }
+}
+
+/// Dims serialize as their letter (`"M"`), the spelling architecture
+/// specs use.
+impl serde::Serialize for Dim {
+    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
+        s.serialize_str(&self.to_string())
+    }
+}
+
+impl<'de> serde::Deserialize<'de> for Dim {
+    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
+        let s = <String as serde::Deserialize>::deserialize(d)?;
+        s.parse().map_err(serde::de::Error::custom)
     }
 }
 
@@ -160,6 +200,23 @@ impl FromStr for LoopOrder {
     }
 }
 
+/// Loop orders serialize as their three letters (`"mnk"`), the spelling
+/// architecture specs use; deserialization accepts anything
+/// [`LoopOrder::from_str`] does (`"mnk"`, `"MNK"`, `"<m,n,k>"`).
+impl serde::Serialize for LoopOrder {
+    fn serialize<S: serde::Serializer>(&self, s: S) -> Result<S::Ok, S::Error> {
+        let text: String = self.0.iter().map(|d| d.letter()).collect();
+        s.serialize_str(&text)
+    }
+}
+
+impl<'de> serde::Deserialize<'de> for LoopOrder {
+    fn deserialize<D: serde::Deserializer<'de>>(d: D) -> Result<Self, D::Error> {
+        let s = <String as serde::Deserialize>::deserialize(d)?;
+        s.parse().map_err(serde::de::Error::custom)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +260,27 @@ mod tests {
             }
             assert!(!m.free_dim().touches().contains(&m));
         }
+    }
+
+    #[test]
+    fn serde_spellings_roundtrip() {
+        for d in Dim::ALL {
+            let json = serde_json::to_string(&d).unwrap();
+            assert_eq!(json, format!("\"{d}\""));
+            assert_eq!(serde_json::from_str::<Dim>(&json).unwrap(), d);
+        }
+        assert_eq!(serde_json::from_str::<Dim>("\"k\"").unwrap(), Dim::K);
+        let err = serde_json::from_str::<Dim>("\"X\"").unwrap_err().to_string();
+        assert!(err.contains("unknown dim") && err.contains("M|N|K"), "{err}");
+        for o in LoopOrder::ALL {
+            let json = serde_json::to_string(&o).unwrap();
+            assert_eq!(serde_json::from_str::<LoopOrder>(&json).unwrap(), o);
+        }
+        assert_eq!(
+            serde_json::from_str::<LoopOrder>("\"NKM\"").unwrap(),
+            LoopOrder::NKM
+        );
+        assert!(serde_json::from_str::<LoopOrder>("\"mmk\"").is_err());
     }
 
     #[test]

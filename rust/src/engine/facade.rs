@@ -8,7 +8,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 use rayon::prelude::*;
 
-use crate::arch::Accelerator;
+use crate::arch::{Accelerator, ArchSpec, HwConfig};
 use crate::coordinator::ServiceMetrics;
 use crate::cost::Objective;
 use crate::flash::{self, EvaluatedMapping, MappingCache, SearchOpts, SearchResult};
@@ -73,6 +73,33 @@ impl EngineBuilder {
     pub fn pool(mut self, pool: Vec<Accelerator>) -> Self {
         self.pool = pool;
         self
+    }
+
+    /// Attach an accelerator described by an [`ArchSpec`] (validated
+    /// first). A spec without its own `[hardware]` table runs under the
+    /// Table 4 edge config; bind a different one with
+    /// [`Accelerator::from_spec`] + [`EngineBuilder::accelerator`].
+    pub fn arch(mut self, spec: ArchSpec) -> Result<Self> {
+        spec.validate()?;
+        self.pool
+            .push(Accelerator::from_spec(spec, HwConfig::edge()));
+        Ok(self)
+    }
+
+    /// Attach an accelerator loaded from a `.toml` / `.json` spec file —
+    /// the "bring your own accelerator" entry point:
+    ///
+    /// ```no_run
+    /// # fn main() -> anyhow::Result<()> {
+    /// use flash_gemm::engine::Engine;
+    /// let engine = Engine::builder()
+    ///     .arch_file("specs/os_mesh.toml")?
+    ///     .build()?;
+    /// # Ok(())
+    /// # }
+    /// ```
+    pub fn arch_file(self, path: impl AsRef<std::path::Path>) -> Result<Self> {
+        self.arch(ArchSpec::load(path)?)
     }
 
     /// Execution backend (default: the native interpreter over a
@@ -751,13 +778,50 @@ mod tests {
         assert_eq!(grid.len(), 10);
         assert_eq!(grid[0].workload.name, "a");
         assert_eq!(grid[1].workload.name, "b");
-        assert_eq!(grid[0].accelerator.style, engine.pool()[0].style);
+        assert_eq!(grid[0].accelerator.name(), engine.pool()[0].name());
         for cell in &grid {
             assert!(cell.result.is_ok(), "{}", cell.accelerator);
         }
         // the grid warmed the cache: planning those shapes is now free
         let plan = engine.plan(&wls[0], Objective::Runtime).unwrap();
         assert!(plan.cache_hit);
+    }
+
+    #[test]
+    fn builder_accepts_specs_and_spec_files() {
+        use crate::arch::Style;
+        let mut spec = Style::ShiDianNao.spec();
+        spec.name = "custom-sdn".into();
+        spec.hardware = Some(HwConfig::tiny());
+        // invalid specs are rejected at build time, not search time
+        let mut broken = spec.clone();
+        broken.dataflow.inter_orders.clear();
+        assert!(Engine::builder().arch(broken).is_err());
+
+        let path = std::env::temp_dir().join("flash_gemm_builder_spec.toml");
+        std::fs::write(&path, spec.to_toml()).unwrap();
+        let mut engine = Engine::builder()
+            .arch(spec.clone())
+            .unwrap()
+            .arch_file(&path)
+            .unwrap()
+            .build()
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(engine.pool().len(), 2);
+        assert_eq!(engine.pool()[0].name(), "custom-sdn");
+        // both pool members are the same description: same identity hash
+        assert_eq!(
+            engine.pool()[0].spec_hash(),
+            engine.pool()[1].spec_hash()
+        );
+        // the spec's own [hardware] table binds the config
+        assert_eq!(engine.pool()[0].config, HwConfig::tiny());
+        let r = engine
+            .query(Query::new(Gemm::new("q", 24, 16, 12)).verify(true))
+            .unwrap();
+        assert!(r.executed);
+        assert_eq!(r.verified, Some(true));
     }
 
     #[test]

@@ -15,14 +15,13 @@ use crate::flash::{self, SearchOpts};
 use crate::report::Table;
 use crate::workloads::{resnet50_gemms, Gemm};
 
-/// Cluster-size sweep: best mapping per λ for one style/workload.
-pub fn cluster_sweep(style: Style, cfg: &HwConfig, wl: &Gemm) -> Table {
-    let acc = Accelerator::of_style(style, cfg.clone());
+/// Cluster-size sweep: best mapping per λ for one architecture/workload.
+pub fn cluster_sweep(acc: &Accelerator, wl: &Gemm) -> Table {
     let mut t = Table::new(&["λ", "runtime ms", "energy mJ", "util", "mapping"]);
-    for lambda in style.cluster_sizes(cfg.pes) {
+    for lambda in acc.spec.cluster_sizes(acc.config.pes) {
         // restrict the search to one λ by filtering candidates
         let Ok(r) = flash::search_with(
-            &acc,
+            acc,
             wl,
             &SearchOpts {
                 keep_all: true,
@@ -50,10 +49,9 @@ pub fn cluster_sweep(style: Style, cfg: &HwConfig, wl: &Gemm) -> Table {
 }
 
 /// Utilization / runtime spread across cluster sizes (the ≤42% claim).
-pub fn cluster_sweep_spread(style: Style, cfg: &HwConfig, wl: &Gemm) -> Option<f64> {
-    let acc = Accelerator::of_style(style, cfg.clone());
+pub fn cluster_sweep_spread(acc: &Accelerator, wl: &Gemm) -> Option<f64> {
     let r = flash::search_with(
-        &acc,
+        acc,
         wl,
         &SearchOpts {
             keep_all: true,
@@ -62,7 +60,7 @@ pub fn cluster_sweep_spread(style: Style, cfg: &HwConfig, wl: &Gemm) -> Option<f
     )
     .ok()?;
     let mut per_lambda: Vec<u64> = Vec::new();
-    for lambda in style.cluster_sizes(cfg.pes) {
+    for lambda in acc.spec.cluster_sizes(acc.config.pes) {
         if let Some(e) = r
             .all
             .iter()
@@ -117,7 +115,7 @@ pub fn resnet_table(cfg: &HwConfig, batch: u64) -> Table {
         if let Ok(r) = cell.result {
             t.row(&[
                 cell.workload.name.clone(),
-                cell.accelerator.style.to_string(),
+                cell.accelerator.name().to_string(),
                 format!("{:.4}", r.cost().runtime_ms()),
                 format!("{:.3}", r.cost().energy_mj()),
                 format!("{:.2}", r.cost().utilization()),
@@ -134,13 +132,14 @@ mod tests {
     #[test]
     fn cluster_sweep_has_rows_and_spread() {
         let wl = Gemm::by_id("VI").unwrap();
-        let t = cluster_sweep(Style::Maeri, &HwConfig::edge(), &wl);
+        let maeri = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let t = cluster_sweep(&maeri, &wl);
         assert!(t.render().lines().count() > 4);
         // §5.4: cluster size affects runtime measurably for some
         // style/workload pair.
         let mut max_spread: f64 = 0.0;
-        for style in Style::ALL {
-            if let Some(s) = cluster_sweep_spread(style, &HwConfig::edge(), &wl) {
+        for acc in Accelerator::all_styles(&HwConfig::edge()) {
+            if let Some(s) = cluster_sweep_spread(&acc, &wl) {
                 max_spread = max_spread.max(s);
             }
         }

@@ -76,7 +76,7 @@ pub fn fig8(cfg: &HwConfig, workload_ids: &[&str]) -> Table {
                 let c = r.cost();
                 t.row(&[
                     cell.workload.name.clone(),
-                    cell.accelerator.style.to_string(),
+                    cell.accelerator.name().to_string(),
                     r.mapping().name(),
                     format!("{:.3}", c.runtime_ms()),
                     format!("{:.2}", c.energy_mj()),
@@ -88,7 +88,7 @@ pub fn fig8(cfg: &HwConfig, workload_ids: &[&str]) -> Table {
             Err(e) => {
                 t.row(&[
                     cell.workload.name.clone(),
-                    cell.accelerator.style.to_string(),
+                    cell.accelerator.name().to_string(),
                     format!("infeasible: {e}"),
                     "-".into(),
                     "-".into(),
@@ -145,7 +145,7 @@ pub fn fig10(cfg: &HwConfig) -> Table {
             let c = r.cost();
             t.row(&[
                 cell.workload.name.clone(),
-                cell.accelerator.style.to_string(),
+                cell.accelerator.name().to_string(),
                 r.mapping().name(),
                 format!("{:.4}", c.runtime_ms()),
                 format!("{:.3}", c.energy_mj()),

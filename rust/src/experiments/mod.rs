@@ -1,5 +1,5 @@
 //! Regeneration of every table and figure in the paper's evaluation
-//! (the experiment index of DESIGN.md §3). Each function returns
+//! (the experiment index of DESIGN.md §4). Each function returns
 //! renderable data; the `repro` CLI prints it and the benches time it.
 
 mod ablations;
@@ -11,5 +11,5 @@ mod validation;
 pub use ablations::{cluster_sweep, cluster_sweep_spread, resnet_table, summa_table};
 pub use figures::{fig10, fig7, fig8, fig9, Fig7Data};
 pub use pruning::{pruning_report, PruningReport};
-pub use tables::{table2, table3, table4, table5, table6};
+pub use tables::{table2, table2_for, table3, table4, table5, table6};
 pub use validation::validate_all;

@@ -72,7 +72,7 @@ pub fn pruning_report(acc: &Accelerator, wl: &Gemm) -> PruningReport {
 
     PruningReport {
         workload: wl.name.clone(),
-        style: acc.style.to_string(),
+        style: acc.name().to_string(),
         unpruned: cs.unpruned,
         pruned: cs.mappings.len(),
         reduction_factor: cs.reduction_factor(),

@@ -1,6 +1,6 @@
 //! Paper tables 2, 3, 4, 5 and 6.
 
-use crate::arch::{Accelerator, HwConfig, Style};
+use crate::arch::{Accelerator, ArchSpec, HwConfig, Style};
 use crate::baselines::non_tiled_mapping;
 use crate::cost::CostModel;
 use crate::dataflow::LoopOrder;
@@ -8,21 +8,24 @@ use crate::flash::{self, inner_bound, outer_bound_fixed, outer_bound_maeri, Sear
 use crate::report::Table;
 use crate::workloads::Gemm;
 
-/// Table 2: GEMM mapping constraints per accelerator style.
-pub fn table2() -> Table {
+/// Table 2: GEMM mapping constraints per accelerator architecture —
+/// rendered from the declarative specs, so custom architectures can be
+/// listed alongside the presets.
+pub fn table2_for(specs: &[ArchSpec], cfg: &HwConfig) -> Table {
+    let lam_header = format!("cluster sizes ({})", cfg.name);
     let mut t = Table::new(&[
-        "style",
+        "arch",
         "mapping",
         "inter-parallel",
         "intra-parallel",
         "inter-order",
-        "cluster sizes (edge)",
+        lam_header.as_str(),
         "stationary",
     ]);
-    let edge = HwConfig::edge();
-    for s in Style::ALL {
-        let orders: Vec<String> = s.inter_orders().iter().map(|o| o.to_string()).collect();
-        let lambdas = s.cluster_sizes(edge.pes);
+    for spec in specs {
+        let orders: Vec<String> = spec.inter_orders().iter().map(|o| o.to_string()).collect();
+        let pes = spec.hardware.as_ref().map(|h| h.pes).unwrap_or(cfg.pes);
+        let lambdas = spec.cluster_sizes(pes);
         let lam = if lambdas.len() > 4 {
             format!(
                 "{}..{} ({} choices)",
@@ -34,16 +37,21 @@ pub fn table2() -> Table {
             format!("{lambdas:?}")
         };
         t.row(&[
-            s.to_string(),
-            s.mapping_name().to_string(),
-            format!("{:?}", s.inter_spatial_dims()),
-            format!("{:?}", s.intra_spatial_dims()),
+            spec.name.clone(),
+            spec.mapping.clone(),
+            format!("{:?}", spec.inter_spatial_dims()),
+            format!("{:?}", spec.intra_spatial_dims()),
             orders.join(" "),
             lam,
-            s.stationary().to_string(),
+            spec.stationary.clone(),
         ]);
     }
     t
+}
+
+/// Table 2 over the five built-in presets (the paper's rows).
+pub fn table2() -> Table {
+    table2_for(&ArchSpec::presets(), &HwConfig::edge())
 }
 
 /// Table 3: the GEMM workload suite.
@@ -144,7 +152,7 @@ pub fn table6(wl: &Gemm, cfg: &HwConfig) -> Table {
         "style", "λ", "T_M^out", "T_N^out", "T_K^out", "T^in (free)", "T^in (fixed)",
     ]);
     for s in Style::ALL {
-        let lambda = *s.cluster_sizes(cfg.pes).last().unwrap_or(&1);
+        let lambda = *s.spec().cluster_sizes(cfg.pes).last().unwrap_or(&1);
         let clusters = (cfg.pes / lambda).max(1);
         match s {
             Style::Maeri => {

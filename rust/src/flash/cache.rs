@@ -3,8 +3,8 @@
 //! The serving path (see `engine::Engine` and its `coordinator` shims)
 //! sees the same GEMM shapes over and over (DNN layers, recurring CSE
 //! kernels); the FLASH search result for a shape depends only on
-//! `(shape, style, hardware config, objective)`, never on the request
-//! instance. [`MappingCache`] memoizes the best [`EvaluatedMapping`]
+//! `(shape, architecture, hardware config, objective)`, never on the
+//! request instance. [`MappingCache`] memoizes the best [`EvaluatedMapping`]
 //! under exactly that key behind an `RwLock`, so any number of engine /
 //! service threads can share one cache: reads take the shared lock, only
 //! a first-seen shape takes the exclusive lock.
@@ -14,22 +14,35 @@
 //! shape and must hit the same entry. The [`Objective`] component keeps
 //! objective-aware lookups separate: the energy-optimal mapping for a
 //! shape is a different cache entry from the runtime-optimal one.
+//!
+//! The accelerator-identity component is the spec's **canonical
+//! encoding** ([`crate::arch::ArchSpec::canonical_json`], interned per
+//! [`Accelerator`] so key clones are `Arc` bumps), not a closed style
+//! enum: any two architectures whose descriptions differ in *any*
+//! semantic field — a legal loop order, a buffer size, a hop count —
+//! occupy separate entries *exactly* (string equality, no
+//! hash-collision caveat), while the built-in presets stay hot no
+//! matter how they were constructed (enum shim, `ArchSpec::preset`, or
+//! a re-loaded `specs/*.toml`). The effective [`HwConfig`] stays in the
+//! key because hardware-less specs are evaluated under externally
+//! supplied configs.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
-use crate::arch::{Accelerator, HwConfig, Style};
+use crate::arch::{Accelerator, HwConfig};
 use crate::cost::Objective;
 use crate::workloads::Gemm;
 
 use super::search::{self, EvaluatedMapping, SearchOpts};
 
-/// Cache key: normalized workload shape + accelerator identity +
-/// selection objective.
-type Key = (Gemm, Style, HwConfig, Objective);
+/// Cache key: normalized workload shape + architecture identity (the
+/// spec's interned canonical encoding) + effective hardware + selection
+/// objective.
+type Key = (Gemm, Arc<str>, HwConfig, Objective);
 
 /// A concurrent (shape, style, config, objective) → best-mapping cache,
 /// with a negative side: keys whose search failed are remembered as
@@ -51,7 +64,7 @@ impl MappingCache {
     fn key(acc: &Accelerator, wl: &Gemm, objective: Objective) -> Key {
         (
             Gemm::new("", wl.m, wl.n, wl.k),
-            acc.style,
+            acc.spec_ident(),
             acc.config.clone(),
             objective,
         )
@@ -148,7 +161,7 @@ impl MappingCache {
             bail!(
                 "no feasible mapping for {} on {}-style (cached infeasibility)",
                 wl.name,
-                acc.style
+                acc.name()
             );
         }
         match search::search_with(
@@ -195,7 +208,8 @@ impl MappingCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::{HwConfig, Style};
+    use crate::arch::{ArchSpec, HwConfig, Style};
+    use crate::dataflow::LoopOrder;
 
     #[test]
     fn miss_then_hit_returns_identical_mapping() {
@@ -236,6 +250,44 @@ mod tests {
         }
         assert_eq!(cache.len(), 3);
         assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn key_separates_custom_specs_differing_only_in_constraints() {
+        // the pre-ArchSpec cache keyed on (HwConfig, Style) and could
+        // not tell two custom architectures apart; the content-hash key
+        // must — here the two specs differ *only* in legal loop orders
+        let cache = MappingCache::new();
+        let wl = Gemm::new("sq", 128, 128, 128);
+        let mut narrow = ArchSpec::preset(Style::Maeri);
+        narrow.name = "custom".into();
+        narrow.dataflow.inter_orders = vec![LoopOrder::MNK, LoopOrder::NMK];
+        let mut wide = narrow.clone();
+        wide.dataflow.inter_orders = LoopOrder::ALL.to_vec();
+        let a = Accelerator::from_spec(narrow, HwConfig::edge());
+        let b = Accelerator::from_spec(wide, HwConfig::edge());
+        let (_, hit_a) = cache.get_or_search(&a, &wl).unwrap();
+        let (_, hit_b) = cache.get_or_search(&b, &wl).unwrap();
+        assert!(!hit_a && !hit_b, "distinct specs must not share entries");
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+        // while re-loading an identical description stays hot
+        let a2 = Accelerator::from_spec((*a.spec).clone(), HwConfig::edge());
+        let (_, hit) = cache.get_or_search(&a2, &wl).unwrap();
+        assert!(hit, "equal content must share the entry");
+    }
+
+    #[test]
+    fn preset_stays_hot_across_construction_paths() {
+        let cache = MappingCache::new();
+        let wl = Gemm::new("sq", 64, 64, 64);
+        let via_style = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+        let via_spec =
+            Accelerator::from_spec(ArchSpec::preset(Style::Nvdla), HwConfig::edge());
+        cache.get_or_search(&via_style, &wl).unwrap();
+        let (_, hit) = cache.get_or_search(&via_spec, &wl).unwrap();
+        assert!(hit, "the preset must stay hot regardless of constructor");
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -1,17 +1,29 @@
-//! Mapping-candidate generation — the paper's Algorithm 2.
+//! Mapping-candidate generation — the paper's Algorithm 2, generalized
+//! over declarative architecture descriptions.
 //!
-//! For each feasible (loop order, cluster size) pair of the target style,
-//! compute the candidate tile sizes from the Table 6 closed forms
-//! ([`super::tiles`]), combine them, and keep only combinations that pass
-//! the exact dataflow + buffer validation ([`Accelerator::validate`]).
+//! For each feasible (spatial-dim pair, loop order, cluster size)
+//! combination the accelerator's [`ArchSpec`] declares legal, compute
+//! the candidate tile sizes from the Table 6 closed forms
+//! ([`super::tiles`]), combine them, and keep only combinations that
+//! pass the exact dataflow + buffer validation
+//! ([`Accelerator::validate`]). The spec's [`SpatialMode`] selects the
+//! construction: `Fixed` pins the spatial dims per the spec
+//! (Eyeriss / NVDLA / TPU / ShiDianNao presets — and any custom fixed
+//! dataflow), `OrderDerived` derives them from each loop order with λ
+//! tied to the innermost tile (the MAERI construction, Eq. 3). For the
+//! five presets the enumeration is bit-identical to the historical
+//! closed `Style` enum implementation (`tests/arch_spec.rs`).
 //!
 //! The *unpruned* baseline space (§5.2) — every tile size `1..=dim` for
 //! each free dimension, every inner ≤ outer — is counted analytically by
 //! [`unpruned_space`]; enumerating it is exactly what FLASH avoids
 //! (7.25 × 10⁹ combinations for a 256³ MAERI-style search in the paper;
 //! our formula yields the same order: ~6.5 × 10⁹).
+//!
+//! [`ArchSpec`]: crate::arch::ArchSpec
+//! [`SpatialMode`]: crate::arch::SpatialMode
 
-use crate::arch::{Accelerator, Style};
+use crate::arch::{Accelerator, SpatialMode};
 use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
 use crate::workloads::Gemm;
 
@@ -67,22 +79,24 @@ fn ws_of_spans(sm: u64, sn: u64, sk: u64) -> u64 {
     sm * sk + sk * sn + sm * sn
 }
 
-/// Candidates for one loop order + cluster size on a fixed-dataflow style
-/// (Eyeriss / NVDLA / TPU / ShiDianNao).
+/// Candidates for one (spatial-dim pair, loop order, cluster size)
+/// combination under the fixed-dataflow construction
+/// ([`SpatialMode::Fixed`]: Eyeriss / NVDLA / TPU / ShiDianNao presets
+/// and custom fixed-dataflow specs).
+#[allow(clippy::too_many_arguments)] // one plain scalar per Table 6 degree of freedom
 fn fixed_style_candidates(
     acc: &Accelerator,
     wl: &Gemm,
+    inter_sp: Dim,
+    intra_sp: Dim,
     inter_order: LoopOrder,
     intra_order: LoopOrder,
     lambda: u64,
     out: &mut Vec<Mapping>,
 ) {
-    let style = acc.style;
     let p = acc.config.pes;
     let beta = acc.config.beta();
     let alpha = acc.config.alpha();
-    let inter_sp = style.inter_spatial_dims()[0];
-    let intra_sp = style.intra_spatial_dims()[0];
 
     let d_sp = dim_of(wl, inter_sp);
     let clusters = (p / lambda).max(1);
@@ -201,10 +215,12 @@ fn fixed_style_candidates(
     }
 }
 
-/// Candidates for one loop order on MAERI (TST_TTS): the inter-spatial
-/// dim is the order's *middle* loop, the intra-spatial dim its innermost
-/// loop, and λ equals the outer tile of the intra-spatial dim (Table 2).
-fn maeri_candidates(
+/// Candidates for one loop order under the order-derived construction
+/// ([`SpatialMode::OrderDerived`], the MAERI TST preset and custom
+/// flexible specs): the inter-spatial dim is the order's *middle* loop,
+/// the intra-spatial dim its innermost loop, and λ equals the outer tile
+/// of the intra-spatial dim (Table 2).
+fn order_derived_candidates(
     acc: &Accelerator,
     wl: &Gemm,
     order: LoopOrder,
@@ -219,12 +235,13 @@ fn maeri_candidates(
 
     let s_dim = dim_of(wl, s);
     // λ range: bounded by the most permissive spatial span (span → 1).
-    let lambda_bound = outer_bound_maeri(1, beta);
+    let lambda_bound = outer_bound_maeri(1, beta).min(dim_of(wl, t));
 
-    // λ = T_t^out: powers of two ≤ min(P, bound, dim_t) — MAERI's fat
-    // tree partitions in powers of two (Table 2).
-    for lambda in pow2_candidates(lambda_bound.min(p), dim_of(wl, t)) {
-        if !lambda.is_power_of_two() {
+    // λ = T_t^out: the spec's legal cluster sizes capped by the Eq. 3
+    // bound and the dim itself (for the MAERI preset — powers of two —
+    // this is exactly the historical pow2 enumeration, ascending).
+    for lambda in acc.spec.cluster_sizes(p) {
+        if lambda > lambda_bound {
             continue;
         }
         let clusters = (p / lambda).max(1);
@@ -293,20 +310,60 @@ fn maeri_candidates(
     }
 }
 
-/// Algorithm 2: generate the pruned mapping-candidate set.
-pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
-    let mut mappings = Vec::new();
-    match acc.style {
-        Style::Maeri => {
-            for &order in acc.style.inter_orders() {
-                maeri_candidates(acc, wl, order, &mut mappings);
+/// The fixed-mode nest shared by [`enumerate`] and
+/// [`enumerate_for_order`]: every legal (inter-spatial, intra-spatial,
+/// intra-order, λ) combination for one inter-cluster loop order. The
+/// presets declare exactly one choice at every level except λ, so their
+/// enumeration order is unchanged from the closed-enum implementation.
+fn fixed_mode_for_order(
+    acc: &Accelerator,
+    wl: &Gemm,
+    inter_order: LoopOrder,
+    out: &mut Vec<Mapping>,
+) {
+    let spec = &acc.spec;
+    let lambdas = spec.cluster_sizes(acc.config.pes);
+    for &inter_sp in spec.inter_spatial_dims() {
+        for &intra_sp in spec.intra_spatial_dims() {
+            if inter_sp == intra_sp {
+                continue;
+            }
+            // without NoC spatial reduction every K-spatial mapping fails
+            // validation — skip the whole doomed tile enumeration
+            if !acc.noc.spatial_reduction && (inter_sp == Dim::K || intra_sp == Dim::K) {
+                continue;
+            }
+            for &intra_order in spec.intra_orders() {
+                for &lambda in &lambdas {
+                    fixed_style_candidates(
+                        acc,
+                        wl,
+                        inter_sp,
+                        intra_sp,
+                        inter_order,
+                        intra_order,
+                        lambda,
+                        out,
+                    );
+                }
             }
         }
-        _ => {
-            let inter = acc.style.inter_orders()[0];
-            let intra = acc.style.intra_orders()[0];
-            for lambda in acc.style.cluster_sizes(acc.config.pes) {
-                fixed_style_candidates(acc, wl, inter, intra, lambda, &mut mappings);
+    }
+}
+
+/// Algorithm 2: generate the pruned mapping-candidate set from the
+/// accelerator's declarative constraint set.
+pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
+    let mut mappings = Vec::new();
+    match acc.spec.mode() {
+        SpatialMode::OrderDerived => {
+            for &order in acc.spec.inter_orders() {
+                order_derived_candidates(acc, wl, order, &mut mappings);
+            }
+        }
+        SpatialMode::Fixed => {
+            for &order in acc.spec.inter_orders() {
+                fixed_mode_for_order(acc, wl, order, &mut mappings);
             }
         }
     }
@@ -319,16 +376,12 @@ pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
 /// Candidates restricted to one inter-cluster loop order (Fig 9 sweeps).
 pub fn enumerate_for_order(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Vec<Mapping> {
     let mut mappings = Vec::new();
-    match acc.style {
-        Style::Maeri => maeri_candidates(acc, wl, order, &mut mappings),
-        _ => {
-            if acc.style.inter_orders().contains(&order) {
-                let intra = acc.style.intra_orders()[0];
-                for lambda in acc.style.cluster_sizes(acc.config.pes) {
-                    fixed_style_candidates(acc, wl, order, intra, lambda, &mut mappings);
-                }
-            }
-        }
+    if !acc.spec.inter_orders().contains(&order) {
+        return mappings;
+    }
+    match acc.spec.mode() {
+        SpatialMode::OrderDerived => order_derived_candidates(acc, wl, order, &mut mappings),
+        SpatialMode::Fixed => fixed_mode_for_order(acc, wl, order, &mut mappings),
     }
     mappings
 }
@@ -339,12 +392,13 @@ pub fn enumerate_for_order(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Ve
 /// and cluster sizes. (Σ_{x=1..D} x = D(D+1)/2 per outer/inner pair.)
 pub fn unpruned_space(acc: &Accelerator, wl: &Gemm) -> u128 {
     let pair = |d: u64| -> u128 { (d as u128) * (d as u128 + 1) / 2 };
-    match acc.style {
-        Style::Maeri => {
+    let spec = &acc.spec;
+    match spec.mode() {
+        SpatialMode::OrderDerived => {
             // per order: Tu_out × Tu_in pairs × Tt_out (λ) choices ×
             // Ts_in ≤ Ts_out(λ) choices; Ts_out and Tk_in are derived.
             let mut total: u128 = 0;
-            for order in LoopOrder::ALL {
+            for &order in spec.inter_orders() {
                 let u = dim_of(wl, order.0[0]);
                 let t = dim_of(wl, order.0[2]);
                 let s = dim_of(wl, order.0[1]);
@@ -360,15 +414,24 @@ pub fn unpruned_space(acc: &Accelerator, wl: &Gemm) -> u128 {
             }
             total
         }
-        _ => {
-            let inter_sp = acc.style.inter_spatial_dims()[0];
-            let free: Vec<Dim> = Dim::ALL
-                .iter()
-                .copied()
-                .filter(|&d| d != inter_sp)
-                .collect();
-            let per_lambda: u128 = free.iter().map(|&d| pair(dim_of(wl, d))).product();
-            per_lambda * acc.style.cluster_sizes(acc.config.pes).len() as u128
+        SpatialMode::Fixed => {
+            // per legal inter-spatial dim: (outer, inner) pairs for both
+            // free dims × λ choices × (inter, intra) loop-order combos.
+            // Presets have exactly one spatial pair and order combo, so
+            // this reduces to the historical per-λ count.
+            let lambdas = spec.cluster_sizes(acc.config.pes).len() as u128;
+            let order_combos =
+                (spec.inter_orders().len() * spec.intra_orders().len()) as u128;
+            let mut total: u128 = 0;
+            for &inter_sp in spec.inter_spatial_dims() {
+                let per_lambda: u128 = Dim::ALL
+                    .iter()
+                    .filter(|&&d| d != inter_sp)
+                    .map(|&d| pair(dim_of(wl, d)))
+                    .product();
+                total += per_lambda * lambdas * order_combos;
+            }
+            total
         }
     }
 }
@@ -376,7 +439,7 @@ pub fn unpruned_space(acc: &Accelerator, wl: &Gemm) -> u128 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::HwConfig;
+    use crate::arch::{ArchSpec, ClusterRule, HwConfig, Style};
 
     #[test]
     fn sec52_unpruned_count_matches_paper_magnitude() {
@@ -455,6 +518,49 @@ mod tests {
             let wl = Gemm::new("tiny", 8, 8, 8);
             let cs = enumerate(&acc, &wl);
             assert!(!cs.mappings.is_empty(), "{style}");
+        }
+    }
+
+    #[test]
+    fn custom_fixed_spec_widens_the_space() {
+        // an NVDLA-like spec that additionally allows M inter-spatial and
+        // a second inter order must enumerate a strict superset
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let base = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+        let mut spec = ArchSpec::preset(Style::Nvdla);
+        spec.name = "nvdla-flex".into();
+        spec.dataflow.inter_spatial.push(Dim::M);
+        spec.dataflow.inter_orders.push(LoopOrder::MNK);
+        spec.validate().unwrap();
+        let acc = Accelerator::from_spec(spec, HwConfig::edge());
+        let cs = enumerate(&acc, &wl);
+        assert!(cs.mappings.len() > enumerate(&base, &wl).mappings.len());
+        for m in &cs.mappings {
+            assert_eq!(acc.validate(m), Ok(()), "invalid {m}");
+        }
+        assert!(cs.mappings.iter().any(|m| m.inter_spatial == Dim::M));
+        assert!(cs.mappings.iter().any(|m| m.inter_order == LoopOrder::MNK));
+        assert!(unpruned_space(&acc, &wl) > unpruned_space(&base, &wl));
+    }
+
+    #[test]
+    fn custom_order_derived_spec_respects_cluster_rule() {
+        // MAERI construction but λ restricted to a fixed set: every
+        // candidate's cluster size comes from that set
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let mut spec = ArchSpec::preset(Style::Maeri);
+        spec.name = "maeri-fixed-lambda".into();
+        spec.dataflow.cluster = ClusterRule::Fixed {
+            sizes: vec![4, 16],
+            include_sqrt: false,
+        };
+        spec.validate().unwrap();
+        let acc = Accelerator::from_spec(spec, HwConfig::edge());
+        let cs = enumerate(&acc, &wl);
+        assert!(!cs.mappings.is_empty());
+        for m in &cs.mappings {
+            assert!([4, 16].contains(&m.cluster_size), "{m}");
+            assert_eq!(acc.validate(m), Ok(()));
         }
     }
 }

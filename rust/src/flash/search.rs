@@ -170,7 +170,7 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
         bail!(
             "no feasible mapping for {} on {}-style (order restriction: {:?})",
             wl.name,
-            acc.style,
+            acc.name(),
             opts.order
         );
     }
@@ -238,9 +238,10 @@ pub fn search(acc: &Accelerator, wl: &Gemm) -> Result<SearchResult> {
 }
 
 /// One search per feasible inter-cluster loop order (the Fig 9 sweep),
-/// fanned across threads; results keep the `inter_orders()` ordering.
+/// fanned across threads; results keep the spec's `inter_orders`
+/// ordering.
 pub fn search_all_orders(acc: &Accelerator, wl: &Gemm) -> Vec<(LoopOrder, SearchResult)> {
-    acc.style
+    acc.spec
         .inter_orders()
         .par_iter()
         .filter_map(|&o| {

@@ -8,7 +8,9 @@
 //!
 //! Layer map (see `DESIGN.md` for the full architecture, `README.md` for
 //! the quickstart):
-//! * L3 (this crate): accelerator models ([`arch`]), dataflow directives
+//! * L3 (this crate): declarative accelerator descriptions
+//!   ([`arch::ArchSpec`] — serde-loadable TOML/JSON specs with the five
+//!   paper styles as built-in presets, plus `specs/*.toml`), dataflow directives
 //!   ([`dataflow`]), cost model ([`cost`]), the rayon-parallel FLASH
 //!   search with its shape-keyed mapping cache ([`flash`]), baselines
 //!   ([`baselines`]), a cycle-approximate simulator substrate ([`sim`]),
@@ -57,7 +59,7 @@ pub mod workloads;
 
 /// Convenient re-exports of the types almost every consumer needs.
 pub mod prelude {
-    pub use crate::arch::{Accelerator, HwConfig, Style};
+    pub use crate::arch::{Accelerator, ArchSpec, HwConfig, Style};
     pub use crate::cost::Objective;
     pub use crate::dataflow::{Dim, LoopOrder, Mapping, Tiles};
     pub use crate::engine::{Engine, Query, Response};

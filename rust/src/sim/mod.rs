@@ -3,7 +3,7 @@
 //!
 //! The paper validated MAESTRO against the Eyeriss chip and MAERI RTL
 //! (§3.3); we have neither, so this module provides the independent,
-//! finer-grained ground truth instead (DESIGN.md §7): it *executes* a
+//! finer-grained ground truth instead (DESIGN.md §8): it *executes* a
 //! mapping's schedule over a small GEMM — really multiplying the
 //! matrices — while counting per-step compute/NoC cycles and S1/S2
 //! accesses with *emergent* reuse (a resident-tile table, not the

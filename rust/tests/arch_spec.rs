@@ -1,0 +1,321 @@
+//! The `ArchSpec` redesign's acceptance gates:
+//!
+//! 1. every shipped `specs/*.toml` parses, validates, and round-trips;
+//! 2. the five preset files are *equal* to the built-in presets, and
+//!    spec-backed search is bit-identical to the legacy `Style` path
+//!    winner-for-winner across the fig-8 shape grid;
+//! 3. malformed specs fail with actionable errors;
+//! 4. custom architectures defined purely in TOML run end-to-end
+//!    (load → plan → execute → verify) through the engine with
+//!    distinct, non-colliding cache entries.
+
+use flash_gemm::arch::{Accelerator, ArchSpec, HwConfig, Style};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::{Engine, Query};
+use flash_gemm::flash::{self, MappingCache};
+use flash_gemm::workloads::Gemm;
+
+fn specs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../specs")
+}
+
+fn shipped_specs() -> Vec<(String, ArchSpec)> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(specs_dir()).expect("specs/ ships with the repo") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            let spec = ArchSpec::load(&path)
+                .unwrap_or_else(|e| panic!("{name} must load: {e:#}"));
+            out.push((name, spec));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[test]
+fn every_shipped_spec_loads_validates_and_roundtrips() {
+    let specs = shipped_specs();
+    assert!(
+        specs.len() >= 7,
+        "expected 5 presets + >=2 custom specs, found {}",
+        specs.len()
+    );
+    for (file, spec) in &specs {
+        spec.validate().unwrap_or_else(|e| panic!("{file}: {e}"));
+        // TOML -> struct -> TOML -> struct is the identity
+        let back = ArchSpec::from_toml_str(&spec.to_toml())
+            .unwrap_or_else(|e| panic!("{file}: re-parse failed: {e:#}"));
+        assert_eq!(&back, spec, "{file}: TOML round-trip changed the spec");
+        assert_eq!(back.content_hash(), spec.content_hash(), "{file}");
+        // JSON route agrees with the TOML route
+        let via_json =
+            ArchSpec::from_json_str(&serde_json::to_string(spec).unwrap()).unwrap();
+        assert_eq!(&via_json, spec, "{file}: JSON round-trip changed the spec");
+    }
+    // all shipped architectures have distinct identities
+    let mut hashes: Vec<u64> = specs.iter().map(|(_, s)| s.content_hash()).collect();
+    hashes.sort_unstable();
+    hashes.dedup();
+    assert_eq!(hashes.len(), specs.len(), "shipped specs must not collide");
+}
+
+#[test]
+fn preset_files_equal_builtin_presets() {
+    for style in Style::ALL {
+        let spec = style.spec();
+        let file = specs_dir().join(format!("{}.toml", spec.name));
+        let loaded = ArchSpec::load(&file)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", file.display()));
+        assert_eq!(
+            loaded, spec,
+            "{}: shipped file drifted from the built-in preset",
+            spec.name
+        );
+        assert_eq!(loaded.content_hash(), spec.content_hash());
+    }
+}
+
+/// The headline acceptance gate: across the fig-8 grid (all five
+/// architectures × the Table 3 workload suite, edge and cloud), a search
+/// through a TOML-loaded spec returns the *bit-identical* winner — same
+/// mapping, same `(runtime, energy)` selection key, same candidate
+/// count — as the legacy `Style`-enum construction path.
+#[test]
+fn spec_backed_search_is_bit_identical_to_legacy_path_on_fig8_grid() {
+    for config in [HwConfig::edge(), HwConfig::cloud()] {
+        // full fig-8 workload suite on edge; the quick subset bounds the
+        // cloud pass (same code paths, 8× larger shapes)
+        let ids: &[&str] = if config.name == "edge" {
+            &["I", "II", "III", "IV", "V", "VI"]
+        } else {
+            &["III", "IV", "VI"]
+        };
+        let workloads: Vec<Gemm> = ids.iter().map(|id| Gemm::by_id(id).unwrap()).collect();
+        for style in Style::ALL {
+            let legacy = Accelerator::of_style(style, config.clone());
+            let via_file = Accelerator::from_spec_file(
+                specs_dir().join(format!("{}.toml", style.spec().name)),
+                config.clone(),
+            )
+            .unwrap();
+            assert_eq!(legacy.spec_hash(), via_file.spec_hash(), "{style}");
+            for wl in &workloads {
+                let a = flash::search(&legacy, wl);
+                let b = flash::search(&via_file, wl);
+                match (a, b) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(
+                            a.best.mapping, b.best.mapping,
+                            "{style} {} ({}): winner mapping drifted",
+                            wl.name, config.name
+                        );
+                        assert_eq!(
+                            a.best.selection_key(),
+                            b.best.selection_key(),
+                            "{style} {} ({})",
+                            wl.name,
+                            config.name
+                        );
+                        assert_eq!(a.candidates, b.candidates);
+                        assert_eq!(a.unpruned, b.unpruned);
+                    }
+                    (Err(_), Err(_)) => {} // infeasible on both paths alike
+                    (a, b) => panic!(
+                        "{style} {} ({}): feasibility diverged ({} vs {})",
+                        wl.name,
+                        config.name,
+                        a.is_ok(),
+                        b.is_ok()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn malformed_specs_fail_with_actionable_errors() {
+    let cases: &[(&str, &str, &str)] = &[
+        (
+            "unknown dim",
+            r#"
+name = "bad"
+[dataflow]
+inter_spatial = ["X"]
+intra_spatial = ["K"]
+inter_orders = ["mnk"]
+intra_orders = ["mnk"]
+[dataflow.cluster]
+kind = "any"
+[noc]
+topology = "mesh"
+"#,
+            "unknown dim",
+        ),
+        (
+            "malformed loop order",
+            r#"
+name = "bad"
+[dataflow]
+inter_spatial = ["M"]
+intra_spatial = ["K"]
+inter_orders = ["mmk"]
+intra_orders = ["mnk"]
+[dataflow.cluster]
+kind = "any"
+[noc]
+topology = "mesh"
+"#,
+            "duplicate dim",
+        ),
+        (
+            "unknown topology",
+            r#"
+name = "bad"
+[dataflow]
+inter_spatial = ["M"]
+intra_spatial = ["K"]
+inter_orders = ["mnk"]
+intra_orders = ["mnk"]
+[dataflow.cluster]
+kind = "any"
+[noc]
+topology = "wormhole"
+"#,
+            "unknown variant",
+        ),
+    ];
+    for (what, text, needle) in cases {
+        let err = ArchSpec::from_toml_str(text)
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(needle), "{what}: {err}");
+    }
+
+    // semantic failures surface from validate() — and from load()
+    let empty_orders = r#"
+name = "bad"
+[dataflow]
+inter_spatial = ["M"]
+intra_spatial = ["K"]
+inter_orders = []
+intra_orders = ["mnk"]
+[dataflow.cluster]
+kind = "any"
+[noc]
+topology = "mesh"
+"#;
+    let spec = ArchSpec::from_toml_str(empty_orders).unwrap();
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("loop-order set must be non-empty"), "{err}");
+
+    let zero_buffer = r#"
+name = "bad"
+[dataflow]
+inter_spatial = ["M"]
+intra_spatial = ["K"]
+inter_orders = ["mnk"]
+intra_orders = ["mnk"]
+[dataflow.cluster]
+kind = "any"
+[noc]
+topology = "mesh"
+[hardware]
+pes = 16
+s2_bytes = 0
+"#;
+    let spec = ArchSpec::from_toml_str(zero_buffer).unwrap();
+    let err = spec.validate().unwrap_err().to_string();
+    assert!(err.contains("s2_bytes") && err.contains("positive"), "{err}");
+
+    // load() refuses a semantically broken file outright
+    let path = std::env::temp_dir().join("arch_spec_zero_buffer.toml");
+    std::fs::write(&path, zero_buffer).unwrap();
+    let res = ArchSpec::load(&path);
+    std::fs::remove_file(&path).ok();
+    assert!(res.is_err(), "load() must validate");
+}
+
+#[test]
+fn custom_specs_run_end_to_end_with_distinct_cache_entries() {
+    let os_mesh = specs_dir().join("os_mesh.toml");
+    let picoedge = specs_dir().join("picoedge.toml");
+    let mut engine = Engine::builder()
+        .arch_file(&os_mesh)
+        .unwrap()
+        .arch_file(&picoedge)
+        .unwrap()
+        .accelerator(Accelerator::of_style(Style::ShiDianNao, HwConfig::edge()))
+        .build()
+        .unwrap();
+    assert_eq!(engine.pool().len(), 3);
+    assert_eq!(engine.pool()[0].name(), "os-mesh");
+    assert_eq!(engine.pool()[1].name(), "picoedge");
+    // picoedge's own [hardware] table binds its resources
+    assert_eq!(engine.pool()[1].config.pes, 64);
+    assert_eq!(engine.pool()[1].config.clock_hz, 800_000_000);
+    // neither custom is a preset; their identities are distinct
+    assert_eq!(engine.pool()[0].style(), None);
+    assert_eq!(engine.pool()[1].style(), None);
+    assert_ne!(engine.pool()[0].spec_hash(), engine.pool()[1].spec_hash());
+    assert_ne!(engine.pool()[0].spec_hash(), engine.pool()[2].spec_hash());
+
+    // load → plan → execute → verify, in one engine window
+    let wl = Gemm::new("e2e", 48, 40, 24);
+    let plan = engine.plan(&wl, Objective::Runtime).unwrap();
+    assert_eq!(plan.scores.len(), 3);
+    let feasible = plan.scores.iter().flatten().count();
+    assert!(feasible >= 2, "both customs should handle a small GEMM");
+    let r = engine
+        .query(Query::new(wl.clone()).verify(true).return_result(true))
+        .unwrap();
+    assert!(r.executed);
+    assert_eq!(r.verified, Some(true));
+    assert_eq!(
+        r.result.as_ref().map(Vec::len),
+        Some((wl.m * wl.n) as usize)
+    );
+    // every feasible (shape, arch) pair owns exactly one cache entry
+    assert_eq!(engine.cache().len(), feasible);
+
+    // and each custom also executes standalone (winner pinned)
+    for path in [&os_mesh, &picoedge] {
+        let mut solo = Engine::builder().arch_file(path).unwrap().build().unwrap();
+        let r = solo
+            .query(Query::new(Gemm::new("solo", 32, 24, 16)).verify(true))
+            .unwrap();
+        assert!(r.executed, "{}", path.display());
+        assert_eq!(r.verified, Some(true), "{}", path.display());
+    }
+}
+
+#[test]
+fn specs_differing_only_in_loop_orders_never_share_cache_entries() {
+    // the regression the content-hash key exists for: identical name,
+    // hardware, NoC — only the legal inter-order set differs
+    let base = ArchSpec::load(specs_dir().join("os_mesh.toml")).unwrap();
+    let mut restricted = base.clone();
+    restricted.dataflow.inter_orders.truncate(1);
+    restricted.validate().unwrap();
+    assert_ne!(base.content_hash(), restricted.content_hash());
+
+    let cache = MappingCache::new();
+    let wl = Gemm::new("sq", 96, 96, 96);
+    let a = Accelerator::from_spec(base, HwConfig::edge());
+    let b = Accelerator::from_spec(restricted, HwConfig::edge());
+    let (wide, hit_a) = cache.get_or_search(&a, &wl).unwrap();
+    let (narrow, hit_b) = cache.get_or_search(&b, &wl).unwrap();
+    assert!(!hit_a && !hit_b, "distinct specs must both miss");
+    assert_eq!(cache.len(), 2);
+    // the restricted spec can never beat the wide one (subset space)
+    assert!(wide.cost.runtime_cycles() <= narrow.cost.runtime_cycles());
+    // repeats hit their own entries
+    let (_, hit) = cache.get_or_search(&a, &wl).unwrap();
+    assert!(hit);
+    let (_, hit) = cache.get_or_search(&b, &wl).unwrap();
+    assert!(hit);
+    assert_eq!(cache.hits(), 2);
+}

@@ -112,8 +112,8 @@ fn order_sweep_matches_per_order_searches() {
         .unwrap();
         assert_eq!(r.best.selection_key(), solo.best.selection_key(), "{order}");
     }
-    // the fan-out must keep the inter_orders() ordering
-    let expected: Vec<_> = acc.style.inter_orders().to_vec();
+    // the fan-out must keep the spec's inter-order ordering
+    let expected: Vec<_> = acc.spec.inter_orders().to_vec();
     let got: Vec<_> = sweep.iter().map(|(o, _)| *o).collect();
     assert_eq!(got, expected);
 }
