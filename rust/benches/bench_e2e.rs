@@ -132,10 +132,9 @@ fn bench_engine(dir: &std::path::Path) {
     assert_eq!(rep.metrics.batches as usize, distinct.len());
     assert_eq!(rep.metrics.mapping_cache_misses as usize, distinct.len());
 
-    let record = serde_json::json!({
+    let metrics = serde_json::json!({
         "requests": reqs,
         "distinct_shapes": distinct.len(),
-        "threads": rayon::current_num_threads(),
         "backend": if have_artifacts { "artifacts" } else { "native-synthetic" },
         "total_macs": total_macs,
         "shuffled_ms": t_shuffled.as_secs_f64() * 1e3,
@@ -147,9 +146,7 @@ fn bench_engine(dir: &std::path::Path) {
         "searches_per_window": distinct.len(),
         "shuffled_over_sorted": t_shuffled.as_secs_f64() / t_sorted.as_secs_f64(),
     });
-    std::fs::write(&out_path, serde_json::to_string_pretty(&record).unwrap())
-        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
-    println!("bench engine: recorded {out_path}");
+    harness::write_record("engine", &out_path, metrics);
 }
 
 fn main() {

@@ -8,6 +8,9 @@
 //! of `BENCH_EXEC_ITERS` timed passes — so the recorded speedup is not
 //! biased by cold caches on the slow side.
 
+#[path = "harness.rs"]
+mod harness;
+
 use std::time::{Duration, Instant};
 
 use flash_gemm::dataflow::LoopOrder;
@@ -49,6 +52,9 @@ fn main() {
         "bench executor: {dim}x{dim}x{dim}, tile {tile}, {} rayon threads",
         rayon::current_num_threads()
     );
+
+    let kernel = flash_gemm::runtime::selected_kernel(tile);
+    println!("bench executor/kernel: {} (features {:?})", kernel.name(), harness::features());
 
     // identical discipline on every path — one untimed warm pass, then
     // best of `iters` timed passes — so the recorded speedup is not
@@ -93,10 +99,10 @@ fn main() {
         "bench executor/speedup: {speedup:.2}x vs serial legacy, {gflops:.2} GFLOP/s, {tiles_per_s:.0} tiles/s"
     );
 
-    let record = serde_json::json!({
+    let metrics = serde_json::json!({
         "workload": format!("{dim}x{dim}x{dim}"),
         "tile": tile,
-        "threads": rayon::current_num_threads(),
+        "kernel": kernel.name(),
         "tile_calls": plan.tile_calls(),
         "serial_legacy_ms": serial.as_secs_f64() * 1e3,
         "packed_serial_ms": packed_serial.as_secs_f64() * 1e3,
@@ -107,7 +113,5 @@ fn main() {
         "tiles_per_sec_parallel": tiles_per_s,
         "bit_identical": bit_identical,
     });
-    std::fs::write(&out_path, serde_json::to_string_pretty(&record).unwrap())
-        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
-    println!("bench executor: recorded {out_path}");
+    harness::write_record("executor", &out_path, metrics);
 }

@@ -1,16 +1,47 @@
 //! Microbench — end-to-end FLASH search latency per (style, workload),
-//! plus the random-sampling baseline for the §5.2 comparison.
+//! the random-sampling baseline for the §5.2 comparison, and the
+//! pruned-vs-exhaustive evaluation-count comparison across every
+//! shipped architecture (5 presets + the custom `specs/*.toml`),
+//! recorded to `BENCH_search.json` (override with `BENCH_SEARCH_OUT`).
+//!
+//! The prune section asserts two invariants the CI gate relies on:
+//! the pruned winner is bit-identical to exhaustive enumeration on
+//! every architecture, and at least one preset sees a ≥2× reduction in
+//! evaluated candidates.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::time::Instant;
+
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
 use flash_gemm::baselines::random_search;
-use flash_gemm::flash;
+use flash_gemm::flash::{self, SearchOpts};
 use flash_gemm::workloads::Gemm;
+
+/// The five style presets plus every custom spec shipped in `specs/`
+/// that is not just a preset re-export.
+fn shipped_architectures() -> Vec<Accelerator> {
+    let mut accs: Vec<Accelerator> = Style::ALL
+        .iter()
+        .map(|&s| Accelerator::of_style(s, HwConfig::edge()))
+        .collect();
+    let specs = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../specs");
+    for name in ["os_mesh", "picoedge"] {
+        let path = specs.join(format!("{name}.toml"));
+        match Accelerator::from_spec_file(&path, HwConfig::edge()) {
+            Ok(acc) => accs.push(acc),
+            Err(e) => println!("bench search: skipping {name} ({e:#})"),
+        }
+    }
+    accs
+}
 
 fn main() {
     let budget = harness::default_budget();
+    let out_path =
+        std::env::var("BENCH_SEARCH_OUT").unwrap_or_else(|_| "BENCH_search.json".to_string());
+
     harness::section("FLASH search latency");
     for style in Style::ALL {
         for id in ["I", "IV", "VI"] {
@@ -30,4 +61,79 @@ fn main() {
         let r = random_search(&acc, &wl, 2000, 42);
         assert!(r.best.is_some());
     });
+
+    harness::section("pruned vs exhaustive (evaluated candidates, winner identity)");
+    let wl = Gemm::by_id("VI").unwrap();
+    let mut per_arch = Vec::new();
+    let mut max_reduction = 0.0f64;
+    for acc in shipped_architectures() {
+        let pruned = flash::search(&acc, &wl).unwrap();
+        let full = flash::search_with(
+            &acc,
+            &wl,
+            &SearchOpts {
+                prune: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            pruned.best.mapping, full.best.mapping,
+            "{}: pruned winner diverged from exhaustive",
+            acc.name()
+        );
+        assert_eq!(pruned.best.selection_key(), full.best.selection_key());
+        let stats = pruned.prune.expect("default search reports prune stats");
+        let reduction = full.candidates as f64 / pruned.candidates.max(1) as f64;
+        max_reduction = max_reduction.max(reduction);
+        println!(
+            "bench search/prune/{}: {} -> {} evaluations ({reduction:.1}x, {}/{} regions pruned)",
+            acc.name(),
+            full.candidates,
+            pruned.candidates,
+            stats.regions_pruned,
+            stats.regions
+        );
+        per_arch.push(serde_json::json!({
+            "arch": acc.name(),
+            "workload": wl.name,
+            "exhaustive_evaluations": full.candidates,
+            "pruned_evaluations": pruned.candidates,
+            "reduction": reduction,
+            "regions": stats.regions,
+            "regions_pruned": stats.regions_pruned,
+            "generated": stats.generated,
+        }));
+    }
+    assert!(
+        max_reduction >= 2.0,
+        "pruning must cut evaluations >=2x on at least one preset (best {max_reduction:.2}x)"
+    );
+
+    // throughput metric for the CI gate: pruned searches per second on
+    // the largest Table 3 workload, best of 3 timed batches
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+    let batch = 20u32;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            let r = flash::search(&acc, &wl).unwrap();
+            assert!(r.candidates > 0);
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    let searches_per_sec = batch as f64 / best;
+    println!("bench search/throughput: {searches_per_sec:.1} pruned searches/s (maeri/VI)");
+
+    harness::write_record(
+        "search",
+        &out_path,
+        serde_json::json!({
+            "workload": wl.name,
+            "searches_per_sec": searches_per_sec,
+            "max_reduction": max_reduction,
+            "architectures": per_arch,
+        }),
+    );
 }

@@ -4,11 +4,22 @@
 //! Each bench binary prints one line per case:
 //! `bench <name>: mean <t> (min <t>, <n> iters)` — `cargo bench` collects
 //! them; `bench_output.txt` records the run.
+//!
+//! Benches that record machine-readable results go through
+//! [`write_record`], which wraps the metrics in a provenance envelope
+//! (git SHA, rayon thread count, cargo features) and appends a
+//! versioned copy to `bench/history/` so the perf trajectory of the
+//! repo is queryable across commits (see README §Performance
+//! trajectory). Each bench binary includes this file via
+//! `#[path = "harness.rs"]`, so not every helper is used by every
+//! binary — hence the `#[allow(dead_code)]`s.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Run `f` repeatedly (after one warm-up) until ~`budget` elapses or
 /// `max_iters` is hit; print mean/min.
+#[allow(dead_code)]
 pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: u32, mut f: F) {
     f(); // warm-up
     let mut times = Vec::new();
@@ -26,6 +37,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, max_iters: u32, mut f: F)
 }
 
 /// Default budget for a bench case.
+#[allow(dead_code)]
 pub fn default_budget() -> Duration {
     Duration::from_millis(
         std::env::var("BENCH_BUDGET_MS")
@@ -36,6 +48,91 @@ pub fn default_budget() -> Duration {
 }
 
 /// Print a section header.
+#[allow(dead_code)]
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Git commit SHA of the working tree, or `"unknown"` outside a repo
+/// (e.g. a source tarball). Never fails the bench over provenance.
+#[allow(dead_code)]
+pub fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Cargo features this binary was compiled with (the ones that change
+/// measured behaviour).
+#[allow(dead_code)]
+pub fn features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    if cfg!(feature = "simd") {
+        f.push("simd");
+    }
+    if cfg!(feature = "pjrt") {
+        f.push("pjrt");
+    }
+    f
+}
+
+/// Where versioned bench records accumulate: `$BENCH_HISTORY_DIR`, or
+/// `<repo root>/bench/history` by default.
+#[allow(dead_code)]
+pub fn history_dir() -> PathBuf {
+    std::env::var_os("BENCH_HISTORY_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            manifest
+                .parent()
+                .map(|p| p.to_path_buf())
+                .unwrap_or(manifest)
+                .join("bench")
+                .join("history")
+        })
+}
+
+/// Wrap `metrics` in the versioned record envelope every `BENCH_*.json`
+/// shares: bench name, schema version, git SHA, rayon thread count, and
+/// compiled cargo features. `bench_gate` and the trajectory tooling key
+/// on this envelope, not on the per-bench metric names.
+#[allow(dead_code)]
+pub fn envelope(bench: &str, metrics: serde_json::Value) -> serde_json::Value {
+    serde_json::json!({
+        "bench": bench,
+        "schema": 1,
+        "git_sha": git_sha(),
+        "threads": rayon::current_num_threads(),
+        "features": features(),
+        "metrics": metrics,
+    })
+}
+
+/// Record `metrics` for `bench`: write the enveloped record to
+/// `out_path` (the `BENCH_*.json` the CI gate reads) and append a
+/// versioned copy `{bench}-{short sha}.json` to [`history_dir`]. The
+/// history copy is best-effort — a read-only checkout still benches.
+#[allow(dead_code)]
+pub fn write_record(bench: &str, out_path: &str, metrics: serde_json::Value) {
+    let record = envelope(bench, metrics);
+    let body = serde_json::to_string_pretty(&record).expect("bench record serializes");
+    std::fs::write(out_path, &body).unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("bench {bench}: recorded {out_path}");
+
+    let sha = record["git_sha"].as_str().unwrap_or("unknown");
+    let short = &sha[..sha.len().min(12)];
+    let dir = history_dir();
+    let versioned = dir.join(format!("{bench}-{short}.json"));
+    match std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&versioned, &body)) {
+        Ok(()) => println!("bench {bench}: history {}", versioned.display()),
+        Err(e) => println!("bench {bench}: history write skipped ({e})"),
+    }
 }

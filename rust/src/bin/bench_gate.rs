@@ -1,0 +1,324 @@
+//! CI performance gate over the bench records (`BENCH_*.json`).
+//!
+//! Compares the gated throughput metric of each bench record against
+//! the committed baseline in `bench/history/{bench}-baseline.json`:
+//!
+//! * ratio = current / baseline (higher is better, both throughputs);
+//! * ratio < 0.75 → **fail** (exit 1) — a >25% regression;
+//! * ratio < 0.90 → **warn** — flagged but not blocking;
+//! * baseline missing or marked `"provisional": true` → **pass** with a
+//!   note; the record still lands in `bench/history/`, seeding the
+//!   trajectory for the next commit to gate against.
+//!
+//! Prints a markdown table (and appends it to `$GITHUB_STEP_SUMMARY`
+//! when set, so the verdicts show on the workflow run page).
+//!
+//! Usage: `bench_gate [--history <dir>] [record.json ...]` — with no
+//! record arguments it reads the three standard records
+//! (`BENCH_executor.json`, `BENCH_search.json`, `BENCH_engine.json`)
+//! from the current directory.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use serde_json::Value;
+
+/// Hard floor: current/baseline below this fails the gate.
+const FAIL_RATIO: f64 = 0.75;
+/// Soft floor: below this warns but does not block.
+const WARN_RATIO: f64 = 0.90;
+
+/// The throughput metric each bench is gated on (higher is better).
+const GATED_METRICS: [(&str, &str); 3] = [
+    ("executor", "gflops_parallel"),
+    ("search", "searches_per_sec"),
+    ("engine", "shuffled_reqs_per_sec"),
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Pass,
+    Warn,
+    Fail,
+}
+
+impl Status {
+    fn emoji(self) -> &'static str {
+        match self {
+            Status::Pass => "✅ pass",
+            Status::Warn => "⚠️ warn",
+            Status::Fail => "❌ fail",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Row {
+    bench: String,
+    metric: &'static str,
+    baseline: Option<f64>,
+    current: Option<f64>,
+    status: Status,
+    note: String,
+}
+
+/// The gated metric of a record, read through the versioned envelope.
+fn gated_metric(record: &Value) -> Option<(&'static str, Option<f64>)> {
+    let bench = record.get("bench")?.as_str()?;
+    let key = GATED_METRICS.iter().find(|(b, _)| *b == bench)?.1;
+    Some((key, record.get("metrics")?.get(key).and_then(Value::as_f64)))
+}
+
+/// Gate one bench record against its baseline record (if any).
+fn gate(record: &Value, baseline: Option<&Value>) -> Row {
+    let bench = record
+        .get("bench")
+        .and_then(Value::as_str)
+        .unwrap_or("?")
+        .to_string();
+    let Some((metric, current)) = gated_metric(record) else {
+        return Row {
+            bench,
+            metric: "?",
+            baseline: None,
+            current: None,
+            status: Status::Fail,
+            note: "record has no gated metric (bad envelope?)".into(),
+        };
+    };
+    let Some(cur) = current else {
+        return Row {
+            bench,
+            metric,
+            baseline: None,
+            current: None,
+            status: Status::Fail,
+            note: format!("record is missing metrics.{metric}"),
+        };
+    };
+
+    let Some(base_rec) = baseline else {
+        return Row {
+            bench,
+            metric,
+            baseline: None,
+            current: Some(cur),
+            status: Status::Pass,
+            note: "no baseline — recorded, not gated".into(),
+        };
+    };
+    let provisional = base_rec
+        .get("provisional")
+        .and_then(Value::as_bool)
+        .unwrap_or(false);
+    let base = base_rec
+        .get("metrics")
+        .and_then(|m| m.get(metric))
+        .and_then(Value::as_f64);
+    let (Some(base), false) = (base, provisional) else {
+        return Row {
+            bench,
+            metric,
+            baseline: base,
+            current: Some(cur),
+            status: Status::Pass,
+            note: "baseline provisional — recorded, not gated".into(),
+        };
+    };
+    if base <= 0.0 {
+        return Row {
+            bench,
+            metric,
+            baseline: Some(base),
+            current: Some(cur),
+            status: Status::Pass,
+            note: "baseline non-positive — recorded, not gated".into(),
+        };
+    }
+
+    let ratio = cur / base;
+    let (status, note) = if ratio < FAIL_RATIO {
+        (Status::Fail, format!("{ratio:.2}x baseline (<{FAIL_RATIO})"))
+    } else if ratio < WARN_RATIO {
+        (Status::Warn, format!("{ratio:.2}x baseline (<{WARN_RATIO})"))
+    } else {
+        (Status::Pass, format!("{ratio:.2}x baseline"))
+    };
+    Row {
+        bench,
+        metric,
+        baseline: Some(base),
+        current: Some(cur),
+        status,
+        note,
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into())
+}
+
+fn markdown_table(rows: &[Row]) -> String {
+    let mut out = String::from("| bench | metric | baseline | current | status | note |\n");
+    out.push_str("|---|---|---|---|---|---|\n");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} |",
+            r.bench,
+            r.metric,
+            fmt_opt(r.baseline),
+            fmt_opt(r.current),
+            r.status.emoji(),
+            r.note
+        );
+    }
+    out
+}
+
+fn default_history_dir() -> PathBuf {
+    std::env::var_os("BENCH_HISTORY_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("..")
+                .join("bench")
+                .join("history")
+        })
+}
+
+fn load_json(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    serde_json::from_str(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn main() -> Result<()> {
+    let mut history = default_history_dir();
+    let mut records: Vec<PathBuf> = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        if arg == "--history" {
+            history = PathBuf::from(argv.next().context("--history needs a directory")?);
+        } else {
+            records.push(PathBuf::from(arg));
+        }
+    }
+    if records.is_empty() {
+        records = ["BENCH_executor.json", "BENCH_search.json", "BENCH_engine.json"]
+            .into_iter()
+            .map(PathBuf::from)
+            .collect();
+    }
+
+    let mut rows = Vec::new();
+    for path in &records {
+        if !path.exists() {
+            println!("bench_gate: {} not found — skipped", path.display());
+            continue;
+        }
+        let record = load_json(path)?;
+        let bench = record.get("bench").and_then(Value::as_str).unwrap_or("?");
+        let base_path = history.join(format!("{bench}-baseline.json"));
+        let baseline = if base_path.exists() {
+            Some(load_json(&base_path)?)
+        } else {
+            None
+        };
+        rows.push(gate(&record, baseline.as_ref()));
+    }
+
+    let table = markdown_table(&rows);
+    println!("\n## Bench gate (baselines: {})\n\n{table}", history.display());
+    if let Some(summary) = std::env::var_os("GITHUB_STEP_SUMMARY") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&summary)
+            .with_context(|| format!("opening {}", PathBuf::from(&summary).display()))?;
+        writeln!(f, "## Bench gate\n\n{table}")?;
+    }
+
+    if rows.iter().any(|r| r.status == Status::Fail) {
+        anyhow::bail!("bench gate failed: throughput regressed >25% vs baseline");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use serde_json::json;
+
+    fn record(bench: &str, key: &str, value: f64) -> Value {
+        json!({"bench": bench, "schema": 1, "metrics": {key: value}})
+    }
+
+    #[test]
+    fn pass_warn_fail_thresholds() {
+        let base = record("executor", "gflops_parallel", 100.0);
+        let cases = [
+            (100.0, Status::Pass),
+            (95.0, Status::Pass),
+            (90.0, Status::Pass), // boundary: exactly 0.90 passes
+            (89.0, Status::Warn),
+            (76.0, Status::Warn),
+            (74.0, Status::Fail),
+            (10.0, Status::Fail),
+        ];
+        for (cur, want) in cases {
+            let r = gate(&record("executor", "gflops_parallel", cur), Some(&base));
+            assert_eq!(r.status, want, "current {cur}");
+        }
+    }
+
+    #[test]
+    fn provisional_and_missing_baselines_pass() {
+        let cur = record("search", "searches_per_sec", 50.0);
+        assert_eq!(gate(&cur, None).status, Status::Pass);
+        let provisional = json!({
+            "bench": "search", "provisional": true,
+            "metrics": {"searches_per_sec": null}
+        });
+        let r = gate(&cur, Some(&provisional));
+        assert_eq!(r.status, Status::Pass);
+        assert!(r.note.contains("provisional"));
+        // provisional flag wins even when a number is present
+        let provisional_with_num = json!({
+            "bench": "search", "provisional": true,
+            "metrics": {"searches_per_sec": 1e9}
+        });
+        assert_eq!(gate(&cur, Some(&provisional_with_num)).status, Status::Pass);
+    }
+
+    #[test]
+    fn malformed_current_record_fails() {
+        let base = record("engine", "shuffled_reqs_per_sec", 10.0);
+        let missing_metric = json!({"bench": "engine", "metrics": {}});
+        assert_eq!(gate(&missing_metric, Some(&base)).status, Status::Fail);
+        let unknown_bench = json!({"bench": "mystery", "metrics": {"x": 1.0}});
+        assert_eq!(gate(&unknown_bench, Some(&base)).status, Status::Fail);
+    }
+
+    #[test]
+    fn improvements_pass_and_note_ratio() {
+        let base = record("engine", "shuffled_reqs_per_sec", 10.0);
+        let r = gate(&record("engine", "shuffled_reqs_per_sec", 20.0), Some(&base));
+        assert_eq!(r.status, Status::Pass);
+        assert!(r.note.starts_with("2.00x"), "{}", r.note);
+    }
+
+    #[test]
+    fn table_renders_every_row() {
+        let base = record("executor", "gflops_parallel", 100.0);
+        let rows = vec![
+            gate(&record("executor", "gflops_parallel", 99.0), Some(&base)),
+            gate(&record("search", "searches_per_sec", 5.0), None),
+        ];
+        let t = markdown_table(&rows);
+        assert!(t.contains("| executor |"));
+        assert!(t.contains("| search |"));
+        assert!(t.contains("pass"));
+    }
+}

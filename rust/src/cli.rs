@@ -255,6 +255,8 @@ pub fn run(args: Args) -> Result<String> {
                     "candidates": r.candidates,
                     "unpruned": r.unpruned as f64,
                     "reduction_factor": r.reduction_factor(),
+                    // region-pruning counters (null for exhaustive runs)
+                    "prune": r.prune,
                     "elapsed_us": r.elapsed.as_micros() as u64,
                 });
                 let text =
@@ -262,8 +264,15 @@ pub fn run(args: Args) -> Result<String> {
                 return Ok(format!("{text}\n"));
             }
             let eb = &c.energy_breakdown;
+            let prune_line = match &r.prune {
+                Some(p) => format!(
+                    "region pruning: {}/{} regions skipped, {} generated -> {} evaluated\n",
+                    p.regions_pruned, p.regions, p.generated, p.evaluated
+                ),
+                None => String::new(),
+            };
             Ok(format!(
-                "workload {} on {}\nbest mapping: {}\ndirectives:\n{}\nprojected: {:.4} ms, {:.3} mJ, {:.1} GFLOPS, reuse {:.1}, util {:.2}\narithmetic intensity: {:.1} MACs/S2-access; NoC BW requirement {:.1} GB/s (provisioned {})\nenergy breakdown: S1 {:.1}% S2 {:.1}% MAC {:.1}% NoC {:.1}%\ncandidates: {} (unpruned space {:.3e}, reduction {:.0}x) in {:?}\n",
+                "workload {} on {}\nbest mapping: {}\ndirectives:\n{}\nprojected: {:.4} ms, {:.3} mJ, {:.1} GFLOPS, reuse {:.1}, util {:.2}\narithmetic intensity: {:.1} MACs/S2-access; NoC BW requirement {:.1} GB/s (provisioned {})\nenergy breakdown: S1 {:.1}% S2 {:.1}% MAC {:.1}% NoC {:.1}%\ncandidates: {} (unpruned space {:.3e}, reduction {:.0}x) in {:?}\n{prune_line}",
                 wl,
                 acc,
                 r.mapping(),

@@ -44,12 +44,122 @@ impl CandidateSet {
     }
 }
 
-fn dim_of(wl: &Gemm, d: Dim) -> u64 {
+pub(crate) fn dim_of(wl: &Gemm, d: Dim) -> u64 {
     match d {
         Dim::M => wl.m,
         Dim::N => wl.n,
         Dim::K => wl.k,
     }
+}
+
+/// One (spatial-dims, loop-order, λ) slice of the candidate space — the
+/// unit the bounds pass ([`super::prune`]) accepts or rejects wholesale.
+/// [`regions`] yields them in exactly the order [`enumerate`] historically
+/// walked the space, so concatenating [`region_candidates`] over all
+/// regions reproduces the full enumeration bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub inter_order: LoopOrder,
+    pub intra_order: LoopOrder,
+    pub inter_spatial: Dim,
+    pub intra_spatial: Dim,
+    /// Cluster size λ (PEs per cluster).
+    pub lambda: u64,
+}
+
+/// Decompose the candidate space into regions, in enumeration order.
+/// Fixed mode: the (inter-order, inter-spatial, intra-spatial,
+/// intra-order, λ) nest the spec declares legal (doomed K-spatial
+/// combinations skipped exactly as before). Order-derived mode: one
+/// region per (order, λ) with λ capped by the Eq. 3 bound.
+pub fn regions(acc: &Accelerator, wl: &Gemm) -> Vec<Region> {
+    let spec = &acc.spec;
+    let p = acc.config.pes;
+    let mut out = Vec::new();
+    match spec.mode() {
+        SpatialMode::OrderDerived => {
+            let beta = acc.config.beta();
+            for &order in spec.inter_orders() {
+                let t = order.0[2];
+                // λ range: bounded by the most permissive spatial span.
+                let lambda_bound = outer_bound_maeri(1, beta).min(dim_of(wl, t));
+                for lambda in spec.cluster_sizes(p) {
+                    if lambda > lambda_bound {
+                        continue;
+                    }
+                    out.push(Region {
+                        inter_order: order,
+                        intra_order: order,
+                        inter_spatial: order.0[1],
+                        intra_spatial: t,
+                        lambda,
+                    });
+                }
+            }
+        }
+        SpatialMode::Fixed => {
+            let lambdas = spec.cluster_sizes(p);
+            for &inter_order in spec.inter_orders() {
+                for &inter_sp in spec.inter_spatial_dims() {
+                    for &intra_sp in spec.intra_spatial_dims() {
+                        if inter_sp == intra_sp {
+                            continue;
+                        }
+                        // without NoC spatial reduction every K-spatial
+                        // mapping fails validation — skip the whole
+                        // doomed tile enumeration
+                        if !acc.noc.spatial_reduction
+                            && (inter_sp == Dim::K || intra_sp == Dim::K)
+                        {
+                            continue;
+                        }
+                        for &intra_order in spec.intra_orders() {
+                            for &lambda in &lambdas {
+                                out.push(Region {
+                                    inter_order,
+                                    intra_order,
+                                    inter_spatial: inter_sp,
+                                    intra_spatial: intra_sp,
+                                    lambda,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Minimal working set of a region with the inter-spatial span at
+/// `span_sp`: λ PEs × minimal chunk 1 on the intra-spatial dim, 1 on the
+/// free dim (§4's Eq. 1 feasibility probe, shared by both modes).
+fn region_min_ws(r: &Region, span_sp: u64) -> u64 {
+    let span_of = |d: Dim| {
+        if d == r.inter_spatial {
+            span_sp
+        } else if d == r.intra_spatial {
+            r.lambda
+        } else {
+            1
+        }
+    };
+    ws_of_spans(span_of(Dim::M), span_of(Dim::N), span_of(Dim::K))
+}
+
+/// T^out of the region's inter-spatial dim: Table 6's `λD/P` ideal
+/// (each cluster's share of the fully-spanned dim), decreased per §4's
+/// overflow rule until a minimal candidate fits Eq. 1. Shared between
+/// candidate generation and the [`super::prune`] lower bounds so both
+/// see the identical spatial tile.
+pub(crate) fn region_spatial_tile(acc: &Accelerator, wl: &Gemm, r: &Region) -> u64 {
+    let d_sp = dim_of(wl, r.inter_spatial);
+    let clusters = (acc.config.pes / r.lambda).max(1);
+    let ideal = d_sp.div_ceil(clusters).max(1);
+    feasible_spatial_tile(ideal, d_sp, clusters, acc.config.beta(), |span| {
+        region_min_ws(r, span)
+    })
 }
 
 /// §4's overflow rule: the spatial dim's outer tile is pinned to its
@@ -79,44 +189,30 @@ fn ws_of_spans(sm: u64, sn: u64, sk: u64) -> u64 {
     sm * sk + sk * sn + sm * sn
 }
 
-/// Candidates for one (spatial-dim pair, loop order, cluster size)
-/// combination under the fixed-dataflow construction
-/// ([`SpatialMode::Fixed`]: Eyeriss / NVDLA / TPU / ShiDianNao presets
-/// and custom fixed-dataflow specs).
-#[allow(clippy::too_many_arguments)] // one plain scalar per Table 6 degree of freedom
-fn fixed_style_candidates(
+/// Candidates for one fixed-dataflow region ([`SpatialMode::Fixed`]:
+/// Eyeriss / NVDLA / TPU / ShiDianNao presets and custom fixed-dataflow
+/// specs). Pushes every valid mapping onto `out` in the historical
+/// enumeration order; `leaders` receives the index (into `out`) of the
+/// first valid mapping of each (T₀, T₁) outer-tile group. All mappings
+/// within a group share identical cost-model inputs — only the inner
+/// tiles of non-intra-spatial dims vary, which the cost model never
+/// reads — so evaluating the leader evaluates the whole group
+/// (`tests/prune_equivalence.rs`).
+fn fixed_region_candidates(
     acc: &Accelerator,
     wl: &Gemm,
-    inter_sp: Dim,
-    intra_sp: Dim,
-    inter_order: LoopOrder,
-    intra_order: LoopOrder,
-    lambda: u64,
+    r: &Region,
     out: &mut Vec<Mapping>,
+    leaders: &mut Vec<usize>,
 ) {
-    let p = acc.config.pes;
     let beta = acc.config.beta();
     let alpha = acc.config.alpha();
+    let (inter_sp, intra_sp, lambda) = (r.inter_spatial, r.intra_spatial, r.lambda);
+    let (inter_order, intra_order) = (r.inter_order, r.intra_order);
 
     let d_sp = dim_of(wl, inter_sp);
-    let clusters = (p / lambda).max(1);
-    // T^out of the inter-spatial dim: Table 6's `λD/P` (each cluster's
-    // share of the fully-spanned dim), decreased per §4's overflow rule
-    // until a minimal candidate fits Eq. 1.
-    let t_sp_ideal = d_sp.div_ceil(clusters).max(1);
-    let min_ws = |span_sp: u64| {
-        let span_of = |d: Dim| {
-            if d == inter_sp {
-                span_sp
-            } else if d == intra_sp {
-                lambda // λ PEs × minimal chunk 1
-            } else {
-                1
-            }
-        };
-        ws_of_spans(span_of(Dim::M), span_of(Dim::N), span_of(Dim::K))
-    };
-    let t_sp_out = feasible_spatial_tile(t_sp_ideal, d_sp, clusters, beta, min_ws);
+    let clusters = (acc.config.pes / lambda).max(1);
+    let t_sp_out = region_spatial_tile(acc, wl, r);
     let span_sp = (t_sp_out * clusters).min(d_sp);
 
     // The two non-inter-spatial dims are bounded by the Table 6
@@ -190,6 +286,7 @@ fn fixed_style_candidates(
                     ib.min(outer.get(inner_free[1])),
                     dim_of(wl, inner_free[1]),
                 );
+                let group_start = out.len();
                 for &i0 in &ic0 {
                     for &i1 in &ic1 {
                         let mut inner = Tiles::ones();
@@ -206,6 +303,9 @@ fn fixed_style_candidates(
                             inner,
                         };
                         if acc.validate(&m).is_ok() {
+                            if out.len() == group_start {
+                                leaders.push(group_start);
+                            }
                             out.push(m);
                         }
                     }
@@ -215,94 +315,78 @@ fn fixed_style_candidates(
     }
 }
 
-/// Candidates for one loop order under the order-derived construction
+/// Candidates for one order-derived region
 /// ([`SpatialMode::OrderDerived`], the MAERI TST preset and custom
 /// flexible specs): the inter-spatial dim is the order's *middle* loop,
 /// the intra-spatial dim its innermost loop, and λ equals the outer tile
-/// of the intra-spatial dim (Table 2).
-fn order_derived_candidates(
+/// of the intra-spatial dim (Table 2). `leaders` receives the index of
+/// the first valid mapping per T_u outer-tile group (same cost-
+/// equivalence invariant as [`fixed_region_candidates`]).
+fn order_derived_region_candidates(
     acc: &Accelerator,
     wl: &Gemm,
-    order: LoopOrder,
+    r: &Region,
     out: &mut Vec<Mapping>,
+    leaders: &mut Vec<usize>,
 ) {
-    let p = acc.config.pes;
     let beta = acc.config.beta();
     let alpha = acc.config.alpha();
+    let order = r.inter_order;
     let u = order.0[0]; // outermost, temporal
     let s = order.0[1]; // inter-spatial
     let t = order.0[2]; // intra-spatial; λ = T_t^out
+    let lambda = r.lambda;
 
     let s_dim = dim_of(wl, s);
-    // λ range: bounded by the most permissive spatial span (span → 1).
-    let lambda_bound = outer_bound_maeri(1, beta).min(dim_of(wl, t));
+    let clusters = (acc.config.pes / lambda).max(1);
+    // Eq. 3's T_s^out = S·λ/P (full spatial span), decreased per §4's
+    // overflow rule until a minimal candidate fits Eq. 1.
+    let t_s_out = region_spatial_tile(acc, wl, r);
+    let span_s = (t_s_out * clusters).min(s_dim);
+    // equal-tiles bound plus the solo bound of the free dim (the
+    // working set is linear in T_u with λ fixed; §4 corner cases).
+    let eq_bound = outer_bound_maeri(span_s, beta);
+    let c0 = region_min_ws(r, span_s).saturating_sub(lambda + span_s); // terms without T_u
+    let c1 = lambda + span_s; // A + C coefficients of T_u
+    let solo = if beta / 2 > c0 { ((beta / 2 - c0) / c1).max(1) } else { 1 };
+    let bound = eq_bound.max(solo);
 
-    // λ = T_t^out: the spec's legal cluster sizes capped by the Eq. 3
-    // bound and the dim itself (for the MAERI preset — powers of two —
-    // this is exactly the historical pow2 enumeration, ascending).
-    for lambda in acc.spec.cluster_sizes(p) {
-        if lambda > lambda_bound {
-            continue;
-        }
-        let clusters = (p / lambda).max(1);
-        // Eq. 3's T_s^out = S·λ/P (full spatial span), decreased per
-        // §4's overflow rule until a minimal candidate fits Eq. 1.
-        let t_s_ideal = s_dim.div_ceil(clusters).max(1);
-        let min_ws = |span_s: u64| {
-            let span_of = |d: Dim| {
-                if d == s {
-                    span_s
-                } else if d == t {
-                    lambda
-                } else {
-                    1
-                }
-            };
-            ws_of_spans(span_of(Dim::M), span_of(Dim::N), span_of(Dim::K))
-        };
-        let t_s_out = feasible_spatial_tile(t_s_ideal, s_dim, clusters, beta, min_ws);
-        let span_s = (t_s_out * clusters).min(s_dim);
-        // equal-tiles bound plus the solo bound of the free dim (the
-        // working set is linear in T_u with λ fixed; §4 corner cases).
-        let eq_bound = outer_bound_maeri(span_s, beta);
-        let c0 = min_ws(span_s).saturating_sub(lambda + span_s); // terms without T_u
-        let c1 = lambda + span_s; // A + C coefficients of T_u
-        let solo = if beta / 2 > c0 { ((beta / 2 - c0) / c1).max(1) } else { 1 };
-        let bound = eq_bound.max(solo);
+    let ib = inner_bound(1, alpha);
+    {
+        let mut outer_base = Tiles::ones();
+        outer_base.set(s, t_s_out);
+        outer_base.set(t, lambda);
 
-        let ib = inner_bound(1, alpha);
-        {
-            let mut outer_base = Tiles::ones();
-            outer_base.set(s, t_s_out);
-            outer_base.set(t, lambda);
+        // §Perf: reused buffers instead of per-candidate Vecs.
+        let inner_free = [u, s];
+        let (mut ic0, mut ic1) = (Vec::new(), Vec::new());
+        for &t_u in &pow2_candidates(bound, dim_of(wl, u)) {
+            let mut outer = outer_base;
+            outer.set(u, t_u);
 
-            // §Perf: reused buffers instead of per-candidate Vecs.
-            let inner_free = [u, s];
-            let (mut ic0, mut ic1) = (Vec::new(), Vec::new());
-            for &t_u in &pow2_candidates(bound, dim_of(wl, u)) {
-                let mut outer = outer_base;
-                outer.set(u, t_u);
-
-                pow2_into(&mut ic0, ib.min(outer.get(u)), dim_of(wl, u));
-                pow2_into(&mut ic1, ib.min(outer.get(s)), dim_of(wl, s));
-                for &i0 in &ic0 {
-                    for &i1 in &ic1 {
-                        let mut inner = Tiles::ones();
-                        inner.set(t, 1);
-                        inner.set(inner_free[0], i0);
-                        inner.set(inner_free[1], i1);
-                        let m = Mapping {
-                            inter_order: order,
-                            intra_order: order,
-                            inter_spatial: s,
-                            intra_spatial: t,
-                            cluster_size: lambda,
-                            outer,
-                            inner,
-                        };
-                        if acc.validate(&m).is_ok() {
-                            out.push(m);
+            pow2_into(&mut ic0, ib.min(outer.get(u)), dim_of(wl, u));
+            pow2_into(&mut ic1, ib.min(outer.get(s)), dim_of(wl, s));
+            let group_start = out.len();
+            for &i0 in &ic0 {
+                for &i1 in &ic1 {
+                    let mut inner = Tiles::ones();
+                    inner.set(t, 1);
+                    inner.set(inner_free[0], i0);
+                    inner.set(inner_free[1], i1);
+                    let m = Mapping {
+                        inter_order: order,
+                        intra_order: order,
+                        inter_spatial: s,
+                        intra_spatial: t,
+                        cluster_size: lambda,
+                        outer,
+                        inner,
+                    };
+                    if acc.validate(&m).is_ok() {
+                        if out.len() == group_start {
+                            leaders.push(group_start);
                         }
+                        out.push(m);
                     }
                 }
             }
@@ -310,62 +394,30 @@ fn order_derived_candidates(
     }
 }
 
-/// The fixed-mode nest shared by [`enumerate`] and
-/// [`enumerate_for_order`]: every legal (inter-spatial, intra-spatial,
-/// intra-order, λ) combination for one inter-cluster loop order. The
-/// presets declare exactly one choice at every level except λ, so their
-/// enumeration order is unchanged from the closed-enum implementation.
-fn fixed_mode_for_order(
+/// Generate one region's candidates, appending valid mappings to `out`
+/// in enumeration order and the index of each cost-equivalence group's
+/// first valid mapping to `leaders` (see [`fixed_region_candidates`]).
+pub(crate) fn region_candidates(
     acc: &Accelerator,
     wl: &Gemm,
-    inter_order: LoopOrder,
+    r: &Region,
     out: &mut Vec<Mapping>,
+    leaders: &mut Vec<usize>,
 ) {
-    let spec = &acc.spec;
-    let lambdas = spec.cluster_sizes(acc.config.pes);
-    for &inter_sp in spec.inter_spatial_dims() {
-        for &intra_sp in spec.intra_spatial_dims() {
-            if inter_sp == intra_sp {
-                continue;
-            }
-            // without NoC spatial reduction every K-spatial mapping fails
-            // validation — skip the whole doomed tile enumeration
-            if !acc.noc.spatial_reduction && (inter_sp == Dim::K || intra_sp == Dim::K) {
-                continue;
-            }
-            for &intra_order in spec.intra_orders() {
-                for &lambda in &lambdas {
-                    fixed_style_candidates(
-                        acc,
-                        wl,
-                        inter_sp,
-                        intra_sp,
-                        inter_order,
-                        intra_order,
-                        lambda,
-                        out,
-                    );
-                }
-            }
-        }
+    match acc.spec.mode() {
+        SpatialMode::OrderDerived => order_derived_region_candidates(acc, wl, r, out, leaders),
+        SpatialMode::Fixed => fixed_region_candidates(acc, wl, r, out, leaders),
     }
 }
 
 /// Algorithm 2: generate the pruned mapping-candidate set from the
-/// accelerator's declarative constraint set.
+/// accelerator's declarative constraint set — the concatenation of
+/// [`region_candidates`] over [`regions`], in region order.
 pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
     let mut mappings = Vec::new();
-    match acc.spec.mode() {
-        SpatialMode::OrderDerived => {
-            for &order in acc.spec.inter_orders() {
-                order_derived_candidates(acc, wl, order, &mut mappings);
-            }
-        }
-        SpatialMode::Fixed => {
-            for &order in acc.spec.inter_orders() {
-                fixed_mode_for_order(acc, wl, order, &mut mappings);
-            }
-        }
+    let mut leaders = Vec::new();
+    for r in regions(acc, wl) {
+        region_candidates(acc, wl, &r, &mut mappings, &mut leaders);
     }
     CandidateSet {
         unpruned: unpruned_space(acc, wl),
@@ -376,12 +428,14 @@ pub fn enumerate(acc: &Accelerator, wl: &Gemm) -> CandidateSet {
 /// Candidates restricted to one inter-cluster loop order (Fig 9 sweeps).
 pub fn enumerate_for_order(acc: &Accelerator, wl: &Gemm, order: LoopOrder) -> Vec<Mapping> {
     let mut mappings = Vec::new();
+    let mut leaders = Vec::new();
     if !acc.spec.inter_orders().contains(&order) {
         return mappings;
     }
-    match acc.spec.mode() {
-        SpatialMode::OrderDerived => order_derived_candidates(acc, wl, order, &mut mappings),
-        SpatialMode::Fixed => fixed_mode_for_order(acc, wl, order, &mut mappings),
+    for r in regions(acc, wl) {
+        if r.inter_order == order {
+            region_candidates(acc, wl, &r, &mut mappings, &mut leaders);
+        }
     }
     mappings
 }
@@ -518,6 +572,54 @@ mod tests {
             let wl = Gemm::new("tiny", 8, 8, 8);
             let cs = enumerate(&acc, &wl);
             assert!(!cs.mappings.is_empty(), "{style}");
+        }
+    }
+
+    #[test]
+    fn region_concatenation_reproduces_enumerate() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let want = enumerate(&acc, &wl).mappings;
+            let mut got = Vec::new();
+            let mut leaders = Vec::new();
+            for r in regions(&acc, &wl) {
+                region_candidates(&acc, &wl, &r, &mut got, &mut leaders);
+            }
+            assert_eq!(got, want, "{style}: region walk diverged");
+            // leaders index into the candidate vector, strictly ascending,
+            // starting at the very first valid candidate
+            assert!(leaders.windows(2).all(|w| w[0] < w[1]), "{style}");
+            assert_eq!(leaders.first().copied(), Some(0), "{style}");
+            assert!(leaders.iter().all(|&i| i < got.len()), "{style}");
+        }
+    }
+
+    #[test]
+    fn group_members_share_cost_with_their_leader() {
+        // The prune pass evaluates only group leaders; every follower
+        // must have bit-identical cost-model output. Followers differ
+        // from their leader only in inner tiles of non-intra-spatial
+        // dims, which the cost model never reads.
+        use crate::cost::CostModel;
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in [Style::Maeri, Style::Eyeriss, Style::Shidiannao] {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let model = CostModel::new(acc.clone());
+            for r in regions(&acc, &wl) {
+                let mut ms = Vec::new();
+                let mut leaders = Vec::new();
+                region_candidates(&acc, &wl, &r, &mut ms, &mut leaders);
+                for (li, &start) in leaders.iter().enumerate() {
+                    let end = leaders.get(li + 1).copied().unwrap_or(ms.len());
+                    let lead = model.evaluate(&ms[start], &wl);
+                    for m in &ms[start + 1..end] {
+                        let c = model.evaluate(m, &wl);
+                        assert_eq!(c.runtime.total_cycles, lead.runtime.total_cycles);
+                        assert_eq!(c.energy_j.to_bits(), lead.energy_j.to_bits());
+                    }
+                }
+            }
         }
     }
 

@@ -5,18 +5,22 @@
 //! ([`tiles`], Table 6 closed forms), generate the pruned candidate set
 //! ([`candidates`], Algorithm 2), select the best mapping by projected
 //! runtime using MAESTRO-BLAS with a rayon-parallel evaluation pipeline
-//! ([`search`]), and memoize per-shape results for serving traffic
+//! ([`search`]), skip dominated candidate regions via closed-form lower
+//! bounds ([`prune`], GOMA-style — winners stay bit-identical to full
+//! enumeration), and memoize per-shape results for serving traffic
 //! ([`cache`]).
 
 pub mod cache;
 pub mod candidates;
 pub mod pareto;
+pub mod prune;
 pub mod search;
 pub mod tiles;
 
 pub use cache::MappingCache;
-pub use candidates::{enumerate, unpruned_space, CandidateSet};
+pub use candidates::{enumerate, regions, unpruned_space, CandidateSet, Region};
 pub use pareto::{pareto_frontier, select_weighted, ParetoPoint};
+pub use prune::{region_bound, PruneStats, RegionBound};
 pub use search::{
     search, search_all_orders, search_with, EvaluatedMapping, SearchOpts, SearchResult,
 };

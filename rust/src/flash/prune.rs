@@ -1,0 +1,393 @@
+//! GOMA-style region pruning for the FLASH search: closed-form lower
+//! bounds on runtime/energy per candidate [`Region`], used to skip whole
+//! (spatial-dims, order, λ) regions whose bound already exceeds the
+//! incumbent's score.
+//!
+//! ## Bound derivation
+//!
+//! Every quantity MAESTRO-BLAS computes factors per dimension, so each
+//! region admits a product-form lower bound over the tiles it can still
+//! choose (the outer tiles of the free dims and, in fixed mode, the
+//! inner tile of the intra-spatial dim):
+//!
+//! * **Compute.** `compute = total_steps · per_step` with
+//!   `total_steps = Π_d ceil(D_d / span_d)` and `per_step = Π_d w_d`,
+//!   so `compute = Π_d ceil(D_d / span_d) · w_d`. Per dim:
+//!   - inter-spatial: span `T_sp·clusters` and work `T_sp` are pinned by
+//!     the region (the spatial tile is the shared
+//!     [`candidates::region_spatial_tile`] closed form) — the
+//!     contribution `ceil(D / (T_sp·clusters)) · T_sp` is *exact*;
+//!   - intra-spatial: span `λ·T^in`, work `T^in`, and
+//!     `ceil(D/(λ·i))·i ≥ ceil(D/λ)` for every integer `i ≥ 1` (any
+//!     integer ≥ `D/λ` is ≥ `ceil(D/λ)`), so `ceil(D/λ)` bounds every
+//!     inner-tile choice (and is exact in order-derived mode, where
+//!     `T^in = 1`);
+//!   - temporal free dims: span = work = `T`, and `ceil(D/T)·T ≥ D`.
+//! * **NoC.** Traffic is `Σ_X size_X·rv_X·fanout_X + Σ_X size_X` with
+//!   every revisit factor ≥ 1 and C's `(2·rv−1) ≥ 1`; the fanout is
+//!   pinned by the region's inter-spatial dim and the NoC's multicast
+//!   flag. The bound divides by the same elems-per-cycle and applies the
+//!   identical `ceil` expression as `cost::runtime`, so it is a bound
+//!   *bit-wise*, not just mathematically.
+//! * **Fill/drain.** `2·per_step ≥ 2·T_sp` (all other works ≥ 1).
+//! * **Energy.** A lower-bound [`AccessCounts`] (exact MACs, revisit
+//!   factors clamped to 1) goes through the *same*
+//!   [`EnergyModel::breakdown`] code path; every term is a monotone
+//!   composition (u64 → f64 conversion, multiplication by non-negative
+//!   constants, addition of non-negatives — all monotone under IEEE
+//!   round-to-nearest), so `energy_lb ≤ energy` holds for the computed
+//!   floats, not only the real numbers they approximate.
+//!
+//! The final score bound applies [`Objective`]'s own arithmetic
+//! (`cycles / clock · 1e3`, products for EDP) to the bounded components,
+//! again a monotone composition. A region is skipped only when its bound
+//! is **strictly greater** than the incumbent score, so a candidate that
+//! merely ties the incumbent is never lost — together with the
+//! cost-equivalence group leaders of [`candidates::region_candidates`],
+//! this makes the pruned search winner-for-winner *bit-identical* to
+//! exhaustive enumeration (`tests/prune_equivalence.rs`): any skipped
+//! candidate's score ≥ its region bound > incumbent-at-skip ≥ final best
+//! score, i.e. strictly worse than the winner.
+//!
+//! [`EnergyModel::breakdown`]: crate::cost::EnergyModel::breakdown
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use rayon::prelude::*;
+
+use crate::arch::Accelerator;
+use crate::cost::{AccessCounts, CostModel, Objective, PerMatrix};
+use crate::dataflow::Dim;
+use crate::workloads::Gemm;
+
+use super::candidates::{self, Region};
+use super::search::{min_indexed, EvaluatedMapping, SearchOpts, SearchResult, EVAL_CHUNK};
+
+/// Pruning counters, surfaced through [`SearchResult`] and the CLI /
+/// engine reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, serde::Serialize)]
+pub struct PruneStats {
+    /// Candidate regions considered (after any order restriction).
+    pub regions: usize,
+    /// Regions skipped because their lower bound exceeded the incumbent.
+    pub regions_pruned: usize,
+    /// Valid candidates enumerated in the surviving regions.
+    pub generated: usize,
+    /// Cost-model evaluations performed (one per cost-equivalence group
+    /// leader in each surviving region).
+    pub evaluated: usize,
+}
+
+/// Closed-form lower bounds for one region (see the module docs for the
+/// derivation). `score_lb` is the [`Objective`]-scored combination used
+/// for pruning decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionBound {
+    /// Lower bound on total runtime cycles of any candidate in the region.
+    pub cycles_lb: u64,
+    /// Lower bound on total energy (J) of any candidate in the region.
+    pub energy_lb_j: f64,
+    /// Lower bound on the objective score of any candidate in the region.
+    pub score_lb: f64,
+}
+
+/// Compute the region's lower bounds under `objective`.
+pub fn region_bound(model: &CostModel, wl: &Gemm, r: &Region, objective: Objective) -> RegionBound {
+    let acc = &model.accelerator;
+    let clusters = (acc.config.pes / r.lambda).max(1);
+    let t_sp = candidates::region_spatial_tile(acc, wl, r);
+
+    // compute = Π_d steps_d · work_d (exact factorization — see docs)
+    let mut compute_lb: u64 = 1;
+    for &d in Dim::ALL.iter() {
+        let dim = candidates::dim_of(wl, d);
+        let contrib = if d == r.inter_spatial {
+            dim.div_ceil((t_sp * clusters).max(1)).saturating_mul(t_sp)
+        } else if d == r.intra_spatial {
+            dim.div_ceil(r.lambda.max(1))
+        } else {
+            dim
+        };
+        compute_lb = compute_lb.saturating_mul(contrib.max(1));
+    }
+
+    // NoC traffic with all revisit factors clamped to their minimum.
+    let (size_a, size_b, size_c) = (wl.m * wl.k, wl.k * wl.n, wl.m * wl.n);
+    let fanout = |stationary_dim_is_spatial: bool| -> u64 {
+        if acc.noc.multicast || !stationary_dim_is_spatial {
+            1
+        } else {
+            clusters
+        }
+    };
+    let s2_reads_lb = PerMatrix {
+        a: size_a * fanout(r.inter_spatial == Dim::N), // rv_a ≥ 1
+        b: size_b * fanout(r.inter_spatial == Dim::M), // rv_b ≥ 1
+        c: size_c,                                     // 2·rv_c − 1 ≥ 1
+    };
+    let traffic_lb = s2_reads_lb.total() + size_a + size_b + size_c;
+    // identical float expression to `cost::runtime::evaluate`
+    let noc_lb = (traffic_lb as f64 / acc.config.noc_elems_per_cycle()).ceil() as u64;
+
+    let fill_drain_lb = 2 * t_sp; // per_step ≥ T_sp
+    let cycles_lb = compute_lb.max(noc_lb) + fill_drain_lb;
+
+    // Energy through the real breakdown code path on lower-bound counts.
+    let macs = wl.macs();
+    let counts_lb = AccessCounts {
+        s1: PerMatrix {
+            a: macs + s2_reads_lb.a,
+            b: macs + s2_reads_lb.b,
+            c: 2 * macs,
+        },
+        s2: PerMatrix {
+            a: s2_reads_lb.a + size_a,
+            b: s2_reads_lb.b + size_b,
+            c: s2_reads_lb.c + size_c,
+        },
+        s2_reads: s2_reads_lb,
+        steps: [1, 1, 1],
+        macs,
+    };
+    let energy_lb_j = model.energy.breakdown(acc, &counts_lb).total_j();
+
+    // identical float expression to `Cost::runtime_ms`
+    let runtime_ms_lb = cycles_lb as f64 / acc.config.clock_hz as f64 * 1e3;
+    let score_lb = match objective {
+        Objective::Runtime => runtime_ms_lb,
+        Objective::Energy => energy_lb_j,
+        Objective::Edp => energy_lb_j * runtime_ms_lb,
+    };
+    RegionBound {
+        cycles_lb,
+        energy_lb_j,
+        score_lb,
+    }
+}
+
+/// The pruned search driver (the default [`super::search_with`] path):
+/// bound every region, visit regions cheapest-bound-first so a strong
+/// incumbent forms early, skip regions whose bound exceeds the
+/// incumbent, and evaluate only cost-equivalence group leaders in the
+/// regions that survive. Winner (mapping *and* cost bits) is identical
+/// to exhaustive enumeration; only the visit order and the evaluation
+/// count differ.
+pub(super) fn search_pruned(
+    acc: &Accelerator,
+    wl: &Gemm,
+    opts: &SearchOpts,
+    start: Instant,
+) -> Result<SearchResult> {
+    debug_assert!(!opts.keep_all, "keep_all searches are exhaustive");
+    let model = CostModel::new(acc.clone());
+    let objective = opts.objective;
+    let regions: Vec<Region> = candidates::regions(acc, wl)
+        .into_iter()
+        .filter(|r| opts.order.map_or(true, |o| r.inter_order == o))
+        .collect();
+
+    // Sort region indices by (bound, original index): best-first visit,
+    // deterministic on ties. Candidate identity for the min-reduction
+    // stays (original region index, within-region index) — exactly the
+    // lexicographic order of the exhaustive enumeration.
+    let bounds: Vec<f64> = regions
+        .iter()
+        .map(|r| region_bound(&model, wl, r, objective).score_lb)
+        .collect();
+    let mut visit: Vec<usize> = (0..regions.len()).collect();
+    visit.sort_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(a.cmp(&b)));
+
+    let mut stats = PruneStats {
+        regions: regions.len(),
+        ..Default::default()
+    };
+    // incumbent: (objective key, region idx, within idx), mapping, score
+    let mut best: Option<((u64, u64, u64), (usize, usize), EvaluatedMapping, f64)> = None;
+    let (mut ms, mut leaders) = (Vec::new(), Vec::new());
+    for &ri in &visit {
+        if let Some((_, _, _, inc_score)) = &best {
+            if bounds[ri] > *inc_score {
+                stats.regions_pruned += 1;
+                continue;
+            }
+        }
+        ms.clear();
+        leaders.clear();
+        candidates::region_candidates(acc, wl, &regions[ri], &mut ms, &mut leaders);
+        stats.generated += ms.len();
+        stats.evaluated += leaders.len();
+        let regional = leaders
+            .par_chunks(EVAL_CHUNK)
+            .map(|chunk| {
+                chunk
+                    .iter()
+                    .map(|&wi| {
+                        let mapping = ms[wi].clone();
+                        let cost = model.evaluate(&mapping, wl);
+                        (wi, EvaluatedMapping { mapping, cost })
+                    })
+                    .reduce(|a, b| min_indexed(objective, a, b))
+                    .expect("chunks are non-empty")
+            })
+            .reduce_with(|a, b| min_indexed(objective, a, b));
+        let Some((wi, em)) = regional else {
+            continue; // region enumerated nothing valid
+        };
+        let key = (em.objective_key(objective), (ri, wi));
+        let replace = match &best {
+            None => true,
+            Some((bkey, bid, _, _)) => (key.0, key.1) < (*bkey, *bid),
+        };
+        if replace {
+            let score = objective.score(&em.cost);
+            best = Some((key.0, key.1, em, score));
+        }
+    }
+
+    let Some((_, _, best, _)) = best else {
+        bail!(
+            "no feasible mapping for {} on {}-style (order restriction: {:?})",
+            wl.name,
+            acc.name(),
+            opts.order
+        );
+    };
+    Ok(SearchResult {
+        best,
+        candidates: stats.evaluated,
+        unpruned: candidates::unpruned_space(acc, wl),
+        elapsed: start.elapsed(),
+        all: Vec::new(),
+        prune: Some(stats),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::flash::search::search_with;
+
+    fn exhaustive_best(acc: &Accelerator, wl: &Gemm, objective: Objective) -> EvaluatedMapping {
+        search_with(
+            acc,
+            wl,
+            &SearchOpts {
+                prune: false,
+                objective,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .best
+    }
+
+    #[test]
+    fn region_bounds_never_exceed_any_candidate_score() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            let model = CostModel::new(acc.clone());
+            for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+                for r in candidates::regions(&acc, &wl) {
+                    let b = region_bound(&model, &wl, &r, objective);
+                    let (mut ms, mut leaders) = (Vec::new(), Vec::new());
+                    candidates::region_candidates(&acc, &wl, &r, &mut ms, &mut leaders);
+                    for m in &ms {
+                        let cost = model.evaluate(m, &wl);
+                        assert!(
+                            b.score_lb <= objective.score(&cost),
+                            "{style} {objective}: bound {} > score {}",
+                            b.score_lb,
+                            objective.score(&cost)
+                        );
+                        assert!(b.cycles_lb <= cost.runtime_cycles());
+                        assert!(b.energy_lb_j <= cost.energy_j);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_search_matches_exhaustive_on_all_styles() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+                let pruned = search_with(
+                    &acc,
+                    &wl,
+                    &SearchOpts {
+                        objective,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let exh = exhaustive_best(&acc, &wl, objective);
+                assert_eq!(pruned.best.mapping, exh.mapping, "{style} {objective}");
+                assert_eq!(
+                    pruned.best.selection_key(),
+                    exh.selection_key(),
+                    "{style} {objective}"
+                );
+                let stats = pruned.prune.expect("default search records prune stats");
+                assert!(stats.regions > 0, "{style}");
+                assert!(stats.evaluated <= stats.generated, "{style}");
+                assert_eq!(pruned.candidates, stats.evaluated, "{style}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_collapse_reduces_evaluations() {
+        // Even with zero region pruning, evaluating only group leaders
+        // must shrink the evaluation count well below the candidate
+        // count (the ≥2× acceptance criterion rides on this + region
+        // skips; bench_search records the measured factor).
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let pruned = search_with(&acc, &wl, &SearchOpts::default()).unwrap();
+        let full = search_with(
+            &acc,
+            &wl,
+            &SearchOpts {
+                prune: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            (full.candidates as f64) >= 2.0 * pruned.candidates as f64,
+            "evaluated {} vs exhaustive {}",
+            pruned.candidates,
+            full.candidates
+        );
+        assert!(full.prune.is_none());
+    }
+
+    #[test]
+    fn order_restricted_pruned_search_matches_exhaustive() {
+        use crate::dataflow::LoopOrder;
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for order in LoopOrder::ALL {
+            let mk = |prune: bool| {
+                search_with(
+                    &acc,
+                    &wl,
+                    &SearchOpts {
+                        order: Some(order),
+                        prune,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            };
+            let (p, e) = (mk(true), mk(false));
+            assert_eq!(p.best.mapping, e.best.mapping, "{order}");
+            assert_eq!(p.best.selection_key(), e.best.selection_key(), "{order}");
+        }
+    }
+}

@@ -1,6 +1,15 @@
 //! Mapping selection: evaluate the pruned candidates with MAESTRO-BLAS
 //! and pick the best by projected runtime (paper §4, last step).
 //!
+//! The default path adds a GOMA-style bounds pass ([`super::prune`]):
+//! candidate regions are visited cheapest-lower-bound-first, regions
+//! whose bound exceeds the incumbent are skipped wholesale, and only one
+//! representative per cost-equivalence group is evaluated — the winner
+//! stays bit-identical to exhaustive enumeration while the evaluation
+//! count drops by well over 2×. `keep_all` (Fig 7) and
+//! `SearchOpts { prune: false, .. }` force the exhaustive pipeline
+//! below.
+//!
 //! ## Parallel evaluation pipeline
 //!
 //! Candidate evaluation is embarrassingly parallel — each mapping's cost
@@ -35,11 +44,12 @@ use crate::dataflow::{LoopOrder, Mapping};
 use crate::workloads::Gemm;
 
 use super::candidates;
+use super::prune::{self, PruneStats};
 
 /// Candidates evaluated per parallel work unit. Large enough to amortize
 /// rayon's scheduling overhead over the ~µs-scale cost evaluations, small
 /// enough to load-balance the few-thousand-candidate searches.
-const EVAL_CHUNK: usize = 128;
+pub(super) const EVAL_CHUNK: usize = 128;
 
 /// A candidate mapping with its evaluated cost.
 #[derive(Debug, Clone)]
@@ -91,7 +101,7 @@ impl EvaluatedMapping {
 /// candidates — the associative/commutative reduction operator of the
 /// parallel search. The index tie-break reproduces the sequential
 /// first-wins scan exactly.
-fn min_indexed(
+pub(super) fn min_indexed(
     objective: Objective,
     a: (usize, EvaluatedMapping),
     b: (usize, EvaluatedMapping),
@@ -104,9 +114,10 @@ fn min_indexed(
 }
 
 /// Search options.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct SearchOpts {
     /// Keep every evaluated candidate (needed for the Fig 7 histogram).
+    /// Forces an exhaustive search regardless of `prune`.
     pub keep_all: bool,
     /// Restrict to one inter-cluster loop order (Fig 9 sweeps).
     pub order: Option<LoopOrder>,
@@ -114,13 +125,32 @@ pub struct SearchOpts {
     /// the paper's §5.2 criterion; `Energy`/`Edp` serve the
     /// heterogeneous-node and `engine` pipelines).
     pub objective: Objective,
+    /// Skip candidate regions whose closed-form lower bound already
+    /// exceeds the incumbent ([`super::prune`], on by default). The
+    /// winner is bit-identical either way; only the number of cost
+    /// evaluations changes.
+    pub prune: bool,
+}
+
+impl Default for SearchOpts {
+    fn default() -> Self {
+        SearchOpts {
+            keep_all: false,
+            order: None,
+            objective: Objective::default(),
+            prune: true,
+        }
+    }
 }
 
 /// Outcome of a FLASH search.
 #[derive(Debug, Clone)]
 pub struct SearchResult {
     pub best: EvaluatedMapping,
-    /// Number of pruned candidates evaluated.
+    /// Cost-model evaluations performed. With region pruning (the
+    /// default) this is the group-leader evaluations in surviving
+    /// regions; with `prune: false` or `keep_all` it equals the full
+    /// Algorithm 2 candidate count.
     pub candidates: usize,
     /// Analytic size of the unpruned baseline space (§5.2).
     pub unpruned: u128,
@@ -129,6 +159,8 @@ pub struct SearchResult {
     /// All evaluated candidates, if `keep_all` was set, in candidate-
     /// generation order.
     pub all: Vec<EvaluatedMapping>,
+    /// Region-pruning counters (`None` for exhaustive searches).
+    pub prune: Option<PruneStats>,
 }
 
 impl SearchResult {
@@ -156,6 +188,9 @@ impl SearchResult {
 /// Run FLASH with options (see the module docs for the parallel design).
 pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<SearchResult> {
     let start = Instant::now();
+    if opts.prune && !opts.keep_all {
+        return prune::search_pruned(acc, wl, opts, start);
+    }
     let (mappings, unpruned) = match opts.order {
         Some(order) => (
             candidates::enumerate_for_order(acc, wl, order),
@@ -229,6 +264,7 @@ pub fn search_with(acc: &Accelerator, wl: &Gemm, opts: &SearchOpts) -> Result<Se
         unpruned,
         elapsed: start.elapsed(),
         all,
+        prune: None,
     })
 }
 
@@ -358,6 +394,9 @@ mod tests {
         assert!(!opts.keep_all);
         assert!(opts.order.is_none());
         assert_eq!(opts.objective, Objective::Runtime);
+        // region pruning is on by default — winners are bit-identical
+        // either way (tests/prune_equivalence.rs)
+        assert!(opts.prune);
     }
 
     #[test]

@@ -245,6 +245,123 @@ pub(crate) fn tile_fma_kmajor(c: &mut [f32], a_kmajor: &[f32], b: &[f32], t: usi
     }
 }
 
+/// `c += A · B` for one packed t×t block pair, register-blocked: 4 rows
+/// × `W` columns per micro-tile, so each reload of a B vector is reused
+/// across four A scalars held in registers. Requires `t % 4 == 0` and
+/// `t % W == 0` (checked by [`KernelKind::supports`]); every element
+/// still receives exactly one `+= a·b` per k step, k ascending — the
+/// same per-element operation sequence as [`tile_fma_kmajor`], so the
+/// results are bit-identical (asserted by `tests/kernel_equivalence`).
+#[inline(always)]
+fn tile_fma_kmajor_blocked<const W: usize>(c: &mut [f32], a_kmajor: &[f32], b: &[f32], t: usize) {
+    debug_assert!(t % 4 == 0 && t % W == 0);
+    for (acol, brow) in a_kmajor.chunks_exact(t).zip(b.chunks_exact(t)) {
+        for (cquad, aquad) in c.chunks_exact_mut(4 * t).zip(acol.chunks_exact(4)) {
+            let (c0, rest) = cquad.split_at_mut(t);
+            let (c1, rest) = rest.split_at_mut(t);
+            let (c2, c3) = rest.split_at_mut(t);
+            for (jw, bb) in brow.chunks_exact(W).enumerate() {
+                let j = jw * W;
+                for l in 0..W {
+                    c0[j + l] += aquad[0] * bb[l];
+                }
+                for l in 0..W {
+                    c1[j + l] += aquad[1] * bb[l];
+                }
+                for l in 0..W {
+                    c2[j + l] += aquad[2] * bb[l];
+                }
+                for l in 0..W {
+                    c3[j + l] += aquad[3] * bb[l];
+                }
+            }
+        }
+    }
+}
+
+/// Which micro-kernel computes a packed t×t block FMA. All variants
+/// share the `acc + A·B` contract of [`tile_fma_kmajor`] — per C
+/// element, one mul-then-add per k step in ascending-k order — so they
+/// are interchangeable bit-for-bit; they differ only in how the loop
+/// body is staged in registers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The generic kernel: rank-1 updates through [`axpy`], any tile
+    /// size (tail handled per row).
+    Scalar,
+    /// 4-row × 4-column register micro-tiles; needs `t % 4 == 0`.
+    Blocked4x4,
+    /// 4-row × 8-column register micro-tiles (one full SIMD lane-group
+    /// per column step on AVX2-class hardware); needs `t % 8 == 0`.
+    Blocked4x8,
+}
+
+impl KernelKind {
+    /// Short stable name for bench records and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked4x4 => "blocked4x4",
+            KernelKind::Blocked4x8 => "blocked4x8",
+        }
+    }
+
+    /// True when this kernel's alignment requirements hold for tile
+    /// size `t` (the blocked kernels have no tail paths by design).
+    pub fn supports(self, t: usize) -> bool {
+        match self {
+            KernelKind::Scalar => t > 0,
+            KernelKind::Blocked4x4 => t > 0 && t % 4 == 0,
+            KernelKind::Blocked4x8 => t > 0 && t % 8 == 0,
+        }
+    }
+
+    /// `c += A · B` for one packed t×t block pair (`a` k-major, `b`
+    /// row-major — the [`super::PackedGemm`] panel layout). Panics in
+    /// debug builds if `t` violates [`KernelKind::supports`].
+    #[inline]
+    pub fn apply(self, c: &mut [f32], a_kmajor: &[f32], b: &[f32], t: usize) {
+        debug_assert!(self.supports(t), "{} kernel with t={t}", self.name());
+        match self {
+            KernelKind::Scalar => tile_fma_kmajor(c, a_kmajor, b, t),
+            KernelKind::Blocked4x4 => tile_fma_kmajor_blocked::<4>(c, a_kmajor, b, t),
+            KernelKind::Blocked4x8 => tile_fma_kmajor_blocked::<8>(c, a_kmajor, b, t),
+        }
+    }
+}
+
+/// The kernel-selection table, keyed on tile size and alignment: the
+/// widest register-blocked kernel whose alignment divides `t`. This is
+/// the full table regardless of build features — use
+/// [`selected_kernel`] for what a build actually dispatches.
+pub fn kernel_table(t: usize) -> KernelKind {
+    if t >= 8 && t % 8 == 0 {
+        KernelKind::Blocked4x8
+    } else if t >= 4 && t % 4 == 0 {
+        KernelKind::Blocked4x4
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+/// The kernel [`super::PackedGemm`] dispatches for tile size `t` under
+/// the current build features. The wide kernels are selected only with
+/// `--features simd`; the default build keeps the historical scalar
+/// path, byte-for-byte, so the two builds stay trivially comparable
+/// (they are bit-identical either way — the feature gates risk, not
+/// results).
+pub fn selected_kernel(t: usize) -> KernelKind {
+    #[cfg(feature = "simd")]
+    {
+        kernel_table(t)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        let _ = t;
+        KernelKind::Scalar
+    }
+}
+
 /// Row-major f32 GEMM used by the native interpreter. Same i/k/j loop
 /// nest (and therefore bit-identical results) as before, with the inner
 /// loop routed through the vectorization-friendly [`axpy`].
@@ -495,6 +612,52 @@ mod tests {
         let mut c_km = vec![0f32; t * t];
         tile_fma_kmajor(&mut c_km, &a_km, &b, t);
         assert_eq!(c_row, c_km, "per-element accumulation order must agree");
+    }
+
+    #[test]
+    fn kernel_table_keys_on_alignment() {
+        assert_eq!(kernel_table(1), KernelKind::Scalar);
+        assert_eq!(kernel_table(3), KernelKind::Scalar);
+        assert_eq!(kernel_table(4), KernelKind::Blocked4x4);
+        assert_eq!(kernel_table(12), KernelKind::Blocked4x4);
+        assert_eq!(kernel_table(8), KernelKind::Blocked4x8);
+        assert_eq!(kernel_table(16), KernelKind::Blocked4x8);
+        assert_eq!(kernel_table(24), KernelKind::Blocked4x8);
+        // every table entry satisfies its own alignment contract
+        for t in 1..=64 {
+            assert!(kernel_table(t).supports(t), "t={t}");
+        }
+        // the default build dispatches scalar; simd dispatches the table
+        if cfg!(feature = "simd") {
+            assert_eq!(selected_kernel(16), kernel_table(16));
+        } else {
+            assert_eq!(selected_kernel(16), KernelKind::Scalar);
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_match_scalar_bit_for_bit() {
+        let mut s = 42u64;
+        let mut rand = || {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        };
+        for t in [4usize, 8, 12, 16, 24, 32] {
+            let a: Vec<f32> = (0..t * t).map(|_| rand()).collect();
+            let b: Vec<f32> = (0..t * t).map(|_| rand()).collect();
+            let mut want = vec![0f32; t * t];
+            tile_fma_kmajor(&mut want, &a, &b, t);
+            for kind in [KernelKind::Blocked4x4, KernelKind::Blocked4x8] {
+                if !kind.supports(t) {
+                    continue;
+                }
+                let mut got = vec![0f32; t * t];
+                kind.apply(&mut got, &a, &b, t);
+                assert_eq!(got, want, "{} t={t}", kind.name());
+            }
+        }
     }
 
     #[test]

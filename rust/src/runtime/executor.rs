@@ -35,7 +35,7 @@ use rayon::prelude::*;
 use crate::dataflow::{Dim, LoopOrder};
 use crate::workloads::Gemm;
 
-use super::client::{self, Runtime};
+use super::client::{self, KernelKind, Runtime};
 
 thread_local! {
     /// Per-thread reusable tile scratch: one t×t block product lives
@@ -110,6 +110,10 @@ pub struct PackedGemm {
     /// Output tiles (i, j) in the mapping's inter-cluster loop order
     /// with K removed — K is the innermost, per-tile reduction loop.
     walk: Vec<(u32, u32)>,
+    /// Micro-kernel for the per-block FMA, selected at plan time from
+    /// the tile-size/alignment table ([`client::selected_kernel`]). All
+    /// kernels are bit-identical; selection only affects speed.
+    kernel: KernelKind,
 }
 
 impl PackedGemm {
@@ -145,12 +149,32 @@ impl PackedGemm {
             gn,
             gk,
             walk,
+            kernel: client::selected_kernel(tile),
         })
     }
 
     /// Square tile size t.
     pub fn tile(&self) -> usize {
         self.t
+    }
+
+    /// The micro-kernel this plan dispatches per k-block.
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
+    }
+
+    /// Override the micro-kernel (equivalence tests and benches compare
+    /// kernels through the full engine). Errors if `kernel` does not
+    /// support this plan's tile size.
+    pub fn with_kernel(mut self, kernel: KernelKind) -> Result<Self> {
+        ensure!(
+            kernel.supports(self.t),
+            "{} kernel does not support tile size {}",
+            kernel.name(),
+            self.t
+        );
+        self.kernel = kernel;
+        Ok(self)
     }
 
     /// Tile-grid geometry (gm, gn, gk).
@@ -226,7 +250,7 @@ impl PackedGemm {
         let b_panel = &ops.b_panels[j * self.gk * tt..(j + 1) * self.gk * tt];
         for (a_blk, b_blk) in a_panel.chunks_exact(tt).zip(b_panel.chunks_exact(tt)) {
             scratch.fill(0.0);
-            client::tile_fma_kmajor(scratch, a_blk, b_blk, self.t);
+            self.kernel.apply(scratch, a_blk, b_blk, self.t);
             for (cv, &sv) in ctile.iter_mut().zip(scratch.iter()) {
                 *cv += sv;
             }
@@ -549,6 +573,28 @@ mod tests {
             assert_eq!(plan.run(&a, &b).unwrap(), want, "t={t}");
             assert_eq!(plan.run_serial(&a, &b).unwrap(), want, "t={t} serial");
         }
+    }
+
+    #[test]
+    fn plan_kernel_override_is_bit_identical_and_checked() {
+        let wl = Gemm::new("k", 20, 20, 20);
+        let a: Vec<f32> = (0..400).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..400).map(|i| (i as f32).cos()).collect();
+        let base = PackedGemm::new(&wl, 8, LoopOrder::MNK).unwrap();
+        let want = base
+            .clone()
+            .with_kernel(KernelKind::Scalar)
+            .unwrap()
+            .run(&a, &b)
+            .unwrap();
+        for kind in [KernelKind::Blocked4x4, KernelKind::Blocked4x8] {
+            let plan = base.clone().with_kernel(kind).unwrap();
+            assert_eq!(plan.kernel(), kind);
+            assert_eq!(plan.run(&a, &b).unwrap(), want, "{}", kind.name());
+        }
+        // tile 6 is not 4-aligned: blocked kernels must be rejected
+        let odd = PackedGemm::new(&wl, 6, LoopOrder::MNK).unwrap();
+        assert!(odd.with_kernel(KernelKind::Blocked4x4).is_err());
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //! * [`PackedGemm`] — the zero-allocation, rayon-parallel packed-panel
 //!   execution engine: operands packed once into panels, C in a flat
 //!   tile arena, independent output tiles fanned across threads
-//!   (bit-identical to the serial per-tile walk).
+//!   (bit-identical to the serial per-tile walk). The per-block FMA goes
+//!   through a [`KernelKind`] micro-kernel selected from a tile-size/
+//!   alignment table ([`kernel_table`]); wide register-blocked kernels
+//!   dispatch under `--features simd`, and every kernel is bit-identical
+//!   to the scalar path.
 //! * [`TiledExecutor`] — the tiled GEMM executor front-end: drives the
 //!   tile-kernel contract over a FLASH-selected outer schedule through
 //!   the packed engine (native) or per-tile artifact dispatch (PJRT),
@@ -21,7 +25,7 @@ mod client;
 mod executor;
 
 pub use artifacts::{ArtifactMeta, Manifest};
-pub use client::Runtime;
+pub use client::{kernel_table, selected_kernel, KernelKind, Runtime};
 pub use executor::{MlpRunner, PackedGemm, PackedOperands, TiledExecutor};
 
 use std::path::PathBuf;

@@ -1,0 +1,122 @@
+//! Micro-kernel equivalence gates: every [`KernelKind`] must produce
+//! bit-for-bit the same C as the scalar reference, through the full
+//! packed execution engine, across odd/aligned/oversized tile sizes and
+//! every loop order — and the selection table must only ever hand a
+//! tile to a kernel that supports it. The `simd` cargo feature may only
+//! change *which* kernel the table selects, never the numbers.
+
+use flash_gemm::dataflow::LoopOrder;
+use flash_gemm::runtime::{kernel_table, selected_kernel, KernelKind, PackedGemm};
+use flash_gemm::workloads::Gemm;
+
+const KERNELS: [KernelKind; 3] = [
+    KernelKind::Scalar,
+    KernelKind::Blocked4x4,
+    KernelKind::Blocked4x8,
+];
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect()
+}
+
+/// C from the packed engine with an explicit kernel override, both the
+/// parallel and serial drivers (they must agree bit-for-bit already —
+/// asserted so a kernel bug cannot hide behind scheduling).
+fn run_with(wl: &Gemm, tile: usize, order: LoopOrder, kernel: KernelKind) -> Vec<f32> {
+    let a = rand_vec((wl.m * wl.k) as usize, 0xA11CE);
+    let b = rand_vec((wl.k * wl.n) as usize, 0xB0B);
+    let plan = PackedGemm::new(wl, tile, order)
+        .unwrap()
+        .with_kernel(kernel)
+        .unwrap();
+    assert_eq!(plan.kernel(), kernel);
+    let par = plan.run(&a, &b).unwrap();
+    let ser = plan.run_serial(&a, &b).unwrap();
+    assert_eq!(par, ser, "parallel vs serial diverged ({kernel:?}, t={tile})");
+    par
+}
+
+#[test]
+fn every_kernel_matches_scalar_bitwise_across_tile_shapes() {
+    // odd, 4-aligned, 8-aligned, and oversized (t > every dim) tiles,
+    // on deliberately ragged (non-multiple) workload shapes
+    let wl = Gemm::new("ragged", 37, 29, 23);
+    for tile in [1usize, 3, 4, 6, 8, 12, 16, 24, 64] {
+        let reference = run_with(&wl, tile, LoopOrder::MNK, KernelKind::Scalar);
+        for kernel in KERNELS {
+            if !kernel.supports(tile) {
+                continue;
+            }
+            let got = run_with(&wl, tile, LoopOrder::MNK, kernel);
+            assert_eq!(
+                got, reference,
+                "{} diverged from scalar at tile {tile}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kernels_agree_under_every_loop_order() {
+    let wl = Gemm::new("ordered", 40, 24, 32);
+    let tile = 8; // all three kernels support it
+    for order in LoopOrder::ALL {
+        let reference = run_with(&wl, tile, order, KernelKind::Scalar);
+        for kernel in KERNELS {
+            let got = run_with(&wl, tile, order, kernel);
+            assert_eq!(got, reference, "{} diverged on {order}", kernel.name());
+        }
+    }
+}
+
+#[test]
+fn selection_table_only_hands_out_supporting_kernels() {
+    for t in 1..=96usize {
+        let k = kernel_table(t);
+        assert!(k.supports(t), "{} selected for unsupported t={t}", k.name());
+        // alignment contract of the table itself
+        match k {
+            KernelKind::Blocked4x8 => assert!(t % 8 == 0 && t >= 8),
+            KernelKind::Blocked4x4 => assert!(t % 4 == 0 && t >= 4),
+            KernelKind::Scalar => {}
+        }
+        // the engine defaults to the feature-resolved selection
+        let plan = PackedGemm::new(&Gemm::new("sel", 16, 16, 16), t, LoopOrder::MNK).unwrap();
+        assert_eq!(plan.kernel(), selected_kernel(t));
+    }
+}
+
+#[test]
+fn selected_kernel_respects_the_simd_feature() {
+    for t in [1usize, 4, 6, 8, 12, 16, 64] {
+        if cfg!(feature = "simd") {
+            assert_eq!(selected_kernel(t), kernel_table(t));
+        } else {
+            assert_eq!(selected_kernel(t), KernelKind::Scalar);
+        }
+    }
+}
+
+#[test]
+fn with_kernel_rejects_misaligned_tiles() {
+    let wl = Gemm::new("mis", 16, 16, 16);
+    for (tile, kernel) in [
+        (6usize, KernelKind::Blocked4x4),
+        (6, KernelKind::Blocked4x8),
+        (4, KernelKind::Blocked4x8),
+    ] {
+        let err = PackedGemm::new(&wl, tile, LoopOrder::MNK)
+            .unwrap()
+            .with_kernel(kernel);
+        assert!(err.is_err(), "{} must reject t={tile}", kernel.name());
+    }
+}

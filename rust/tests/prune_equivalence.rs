@@ -1,0 +1,150 @@
+//! Pruned-search acceptance gates, across the fig-8 grid (every shipped
+//! architecture × the Table 3 workload suite):
+//!
+//! 1. the default (pruned) search returns the *bit-identical* winner —
+//!    same mapping, same `(runtime, energy)` selection key — as an
+//!    exhaustive `prune: false` search;
+//! 2. with pruning off, the evaluation count equals the full
+//!    Algorithm 2 candidate set, so the counters the CLI/engine report
+//!    keep meaning what they always meant;
+//! 3. pruning + group collapse cut cost-model evaluations by ≥2× on at
+//!    least one preset (the ISSUE's acceptance floor — bench_search
+//!    records the per-architecture factors).
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::cost::Objective;
+use flash_gemm::flash::{self, SearchOpts};
+use flash_gemm::workloads::Gemm;
+
+fn specs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../specs")
+}
+
+/// The five style presets plus the two custom TOML-only architectures.
+fn shipped_architectures() -> Vec<Accelerator> {
+    let mut accs: Vec<Accelerator> = Style::ALL
+        .iter()
+        .map(|&s| Accelerator::of_style(s, HwConfig::edge()))
+        .collect();
+    for name in ["os_mesh", "picoedge"] {
+        let path = specs_dir().join(format!("{name}.toml"));
+        accs.push(
+            Accelerator::from_spec_file(&path, HwConfig::edge())
+                .unwrap_or_else(|e| panic!("{name}.toml ships with the repo: {e:#}")),
+        );
+    }
+    accs
+}
+
+fn exhaustive(acc: &Accelerator, wl: &Gemm) -> anyhow::Result<flash::SearchResult> {
+    flash::search_with(
+        acc,
+        wl,
+        &SearchOpts {
+            prune: false,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn pruned_winner_is_bit_identical_across_fig8_grid() {
+    let workloads: Vec<Gemm> = ["I", "II", "III", "IV", "V", "VI"]
+        .iter()
+        .map(|id| Gemm::by_id(id).unwrap())
+        .collect();
+    let mut max_reduction = 0.0f64;
+    for acc in shipped_architectures() {
+        for wl in &workloads {
+            let pruned = flash::search(&acc, wl);
+            let full = exhaustive(&acc, wl);
+            match (pruned, full) {
+                (Ok(p), Ok(f)) => {
+                    assert_eq!(
+                        p.best.mapping,
+                        f.best.mapping,
+                        "{} {}: pruned winner mapping drifted",
+                        acc.name(),
+                        wl.name
+                    );
+                    assert_eq!(
+                        p.best.selection_key(),
+                        f.best.selection_key(),
+                        "{} {}",
+                        acc.name(),
+                        wl.name
+                    );
+                    assert_eq!(p.unpruned, f.unpruned);
+                    // exhaustive counter == the full Algorithm 2 set
+                    assert_eq!(
+                        f.candidates,
+                        flash::enumerate(&acc, wl).mappings.len(),
+                        "{} {}",
+                        acc.name(),
+                        wl.name
+                    );
+                    assert!(f.prune.is_none());
+                    let stats = p.prune.unwrap_or_else(|| {
+                        panic!("{} {}: pruned search must report stats", acc.name(), wl.name)
+                    });
+                    assert_eq!(p.candidates, stats.evaluated);
+                    assert!(stats.evaluated <= stats.generated);
+                    assert!(stats.generated <= f.candidates);
+                    assert!(stats.regions_pruned <= stats.regions);
+                    max_reduction =
+                        max_reduction.max(f.candidates as f64 / p.candidates.max(1) as f64);
+                }
+                (Err(_), Err(_)) => {} // infeasible either way — consistent
+                (p, f) => panic!(
+                    "{} {}: feasibility diverged (pruned ok: {}, exhaustive ok: {})",
+                    acc.name(),
+                    wl.name,
+                    p.is_ok(),
+                    f.is_ok()
+                ),
+            }
+        }
+    }
+    assert!(
+        max_reduction >= 2.0,
+        "pruning must cut evaluations >=2x somewhere on the grid (best {max_reduction:.2}x)"
+    );
+}
+
+#[test]
+fn pruned_winner_matches_exhaustive_under_every_objective() {
+    let wl = Gemm::by_id("IV").unwrap();
+    for acc in shipped_architectures() {
+        for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+            let by = |prune: bool| {
+                flash::search_with(
+                    &acc,
+                    &wl,
+                    &SearchOpts {
+                        objective,
+                        prune,
+                        ..Default::default()
+                    },
+                )
+            };
+            match (by(true), by(false)) {
+                (Ok(p), Ok(f)) => {
+                    assert_eq!(
+                        p.best.mapping,
+                        f.best.mapping,
+                        "{} {objective}",
+                        acc.name()
+                    );
+                    assert_eq!(p.best.selection_key(), f.best.selection_key());
+                }
+                (Err(_), Err(_)) => {}
+                (p, f) => panic!(
+                    "{} {objective}: feasibility diverged ({} vs {})",
+                    acc.name(),
+                    p.is_ok(),
+                    f.is_ok()
+                ),
+            }
+        }
+    }
+}
