@@ -1,21 +1,33 @@
-//! Microbench — the cycle-approximate simulator, plus the model-vs-sim
+//! Microbench — the discrete-event simulator, plus the model-vs-sim
 //! validation sweep (the reproduction's analogue of the paper's RTL
-//! validation).
+//! validation). Records `BENCH_sim.json` (override with
+//! `BENCH_SIM_OUT`) with the gated `sim_macs_per_sec` throughput.
 
 #[path = "harness.rs"]
 mod harness;
 
+use std::time::Instant;
+
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
-use flash_gemm::experiments::validate_all;
+use flash_gemm::experiments::{validate_all, validate_model};
 use flash_gemm::flash;
 use flash_gemm::sim::simulate;
 use flash_gemm::workloads::Gemm;
 
 fn main() {
+    let out_path = std::env::var("BENCH_SIM_OUT").unwrap_or_else(|_| "BENCH_sim.json".to_string());
+
     harness::section("model vs simulator validation sweep");
     let (table, worst) = validate_all();
     print!("{}", table.render());
     println!("worst model/sim deviation: {worst:.2}x");
+
+    harness::section("fig-8-grid validation (quick)");
+    let t0 = Instant::now();
+    let v = validate_model(true);
+    let sweep_secs = t0.elapsed().as_secs_f64();
+    print!("{}", v.summary_table().render());
+    assert!(v.within_budget(), "validation sweep exceeds error budget");
 
     harness::section("simulator throughput");
     let budget = harness::default_budget();
@@ -30,4 +42,36 @@ fn main() {
             assert_eq!(r.macs, wl.macs());
         });
     }
+
+    // throughput metric for the CI gate: simulated MACs per second on
+    // the 32^3 workload, best of 3 timed batches
+    let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+    let wl = Gemm::new("sim", 32, 32, 32);
+    let best = flash::search(&acc, &wl).unwrap();
+    let a: Vec<f32> = (0..wl.m * wl.k).map(|i| i as f32 * 0.01).collect();
+    let b: Vec<f32> = (0..wl.k * wl.n).map(|i| i as f32 * 0.02).collect();
+    let batch = 10u32;
+    let mut best_secs = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            let r = simulate(&acc, best.mapping(), &wl, &a, &b);
+            assert_eq!(r.macs, wl.macs());
+        }
+        best_secs = best_secs.min(t0.elapsed().as_secs_f64());
+    }
+    let sim_macs_per_sec = (batch as u64 * wl.macs()) as f64 / best_secs;
+    println!("bench sim/throughput: {sim_macs_per_sec:.3e} simulated MACs/s (maeri/32^3)");
+
+    harness::write_record(
+        "sim",
+        &out_path,
+        serde_json::json!({
+            "sim_macs_per_sec": sim_macs_per_sec,
+            "worst_legacy_deviation": worst,
+            "validate_model_points": v.rows.len(),
+            "validate_model_within_budget": v.within_budget(),
+            "validate_model_quick_secs": sweep_secs,
+        }),
+    );
 }

@@ -1,5 +1,5 @@
 //! Minimal bench harness shared by all `harness = false` bench binaries
-//! (the build image is offline, so no criterion; see DESIGN.md §7).
+//! (the build image is offline, so no criterion; see DESIGN.md §9).
 //!
 //! Each bench binary prints one line per case:
 //! `bench <name>: mean <t> (min <t>, <n> iters)` — `cargo bench` collects

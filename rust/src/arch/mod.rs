@@ -13,7 +13,7 @@ mod style;
 
 pub use accelerator::{Accelerator, MappingError};
 pub use config::HwConfig;
-pub use noc::{Noc, Topology};
+pub use noc::{Delivery, Noc, Topology};
 pub use offchip::{MemTech, Offchip};
 pub use spec::{ArchSpec, ClusterRule, DataflowSpec, SpatialMode, SpecError, MAX_PES};
 pub use style::Style;

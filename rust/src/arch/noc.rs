@@ -117,6 +117,60 @@ impl Noc {
     }
 }
 
+/// How a shared operand reaches multiple clusters, derived from the
+/// capability flags. The simulator's link model keys its injection-port
+/// occupancy and per-destination arrival skew on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delivery {
+    /// One injection serves every destination simultaneously.
+    Multicast,
+    /// One injection; the packet ripples destination to destination
+    /// (systolic forwarding), so arrival skews by one serialization
+    /// delay per hop down the chain.
+    StoreAndForward,
+    /// No multicast, no forwarding: one full injection per destination.
+    Unicast,
+}
+
+impl Noc {
+    /// Delivery mode for an operand shared across clusters.
+    pub fn delivery(&self) -> Delivery {
+        if self.multicast {
+            Delivery::Multicast
+        } else if self.forwarding {
+            Delivery::StoreAndForward
+        } else {
+            Delivery::Unicast
+        }
+    }
+
+    /// Tree-shaped distribution/reduction network?
+    pub fn is_tree(&self) -> bool {
+        matches!(self.topology, Topology::BusTree | Topology::FatTree)
+    }
+
+    /// Fixed latency (cycles) from S2 injection to PE arrival,
+    /// independent of contention: one cycle per average hop.
+    pub fn hop_latency_cycles(&self) -> u64 {
+        (self.avg_hops.ceil() as u64).max(1)
+    }
+
+    /// Cycles to combine `lanes` partial sums in the network: log-depth
+    /// on tree topologies, a linear store-and-forward chain otherwise.
+    /// Zero when the network cannot spatially reduce (the validator
+    /// rejects K-spatial mappings there, so it never applies).
+    pub fn reduction_latency(&self, lanes: u64) -> u64 {
+        if !self.spatial_reduction || lanes <= 1 {
+            return 0;
+        }
+        if self.is_tree() {
+            (64 - (lanes - 1).leading_zeros()) as u64 // ceil(log2(lanes))
+        } else {
+            lanes - 1
+        }
+    }
+}
+
 impl fmt::Display for Topology {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let s = match self {
@@ -142,6 +196,34 @@ mod tests {
         assert!(Noc::of(Topology::Mesh).spatial_reduction);
         assert!(Noc::of(Topology::FatTree).spatial_reduction);
         assert!(!Noc::shidiannao_mesh().spatial_reduction);
+    }
+
+    #[test]
+    fn delivery_mode_derivation() {
+        let mut n = Noc::of(Topology::Mesh);
+        assert_eq!(n.delivery(), Delivery::Multicast);
+        n.multicast = false;
+        assert_eq!(n.delivery(), Delivery::StoreAndForward);
+        n.forwarding = false;
+        assert_eq!(n.delivery(), Delivery::Unicast);
+    }
+
+    #[test]
+    fn reduction_latency_shapes() {
+        let tree = Noc::of(Topology::FatTree);
+        assert_eq!(tree.reduction_latency(1), 0);
+        assert_eq!(tree.reduction_latency(2), 1);
+        assert_eq!(tree.reduction_latency(8), 3);
+        assert_eq!(tree.reduction_latency(9), 4);
+        let chain = Noc::of(Topology::Buses);
+        assert_eq!(chain.reduction_latency(8), 7);
+        assert_eq!(Noc::shidiannao_mesh().reduction_latency(8), 0);
+    }
+
+    #[test]
+    fn hop_latency_at_least_one_cycle() {
+        assert_eq!(Noc::of(Topology::BusTree).hop_latency_cycles(), 2); // 1.5 → 2
+        assert_eq!(Noc::of(Topology::Mesh).hop_latency_cycles(), 8);
     }
 
     #[test]

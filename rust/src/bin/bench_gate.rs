@@ -13,10 +13,15 @@
 //! Prints a markdown table (and appends it to `$GITHUB_STEP_SUMMARY`
 //! when set, so the verdicts show on the workflow run page).
 //!
-//! Usage: `bench_gate [--history <dir>] [record.json ...]` — with no
-//! record arguments it reads the three standard records
-//! (`BENCH_executor.json`, `BENCH_search.json`, `BENCH_engine.json`)
-//! from the current directory.
+//! Usage: `bench_gate [--history <dir>] [--promote] [record.json ...]`
+//! — with no record arguments it reads the four standard records
+//! (`BENCH_executor.json`, `BENCH_search.json`, `BENCH_engine.json`,
+//! `BENCH_sim.json`) from the current directory.
+//!
+//! `--promote` writes each current record over its baseline, but **only**
+//! when that baseline is missing or `"provisional": true` — measured CI
+//! numbers replace the null-metric seeds exactly once, after which the
+//! baselines only move by explicit commit (see `bench/history/README.md`).
 
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -30,10 +35,11 @@ const FAIL_RATIO: f64 = 0.75;
 const WARN_RATIO: f64 = 0.90;
 
 /// The throughput metric each bench is gated on (higher is better).
-const GATED_METRICS: [(&str, &str); 3] = [
+const GATED_METRICS: [(&str, &str); 4] = [
     ("executor", "gflops_parallel"),
     ("search", "searches_per_sec"),
     ("engine", "shuffled_reqs_per_sec"),
+    ("sim", "sim_macs_per_sec"),
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -155,6 +161,18 @@ fn gate(record: &Value, baseline: Option<&Value>) -> Row {
     }
 }
 
+/// A baseline may be overwritten by `--promote` only while it carries no
+/// real measurement: missing file, or explicitly `"provisional": true`.
+fn should_promote(baseline: Option<&Value>) -> bool {
+    match baseline {
+        None => true,
+        Some(b) => b
+            .get("provisional")
+            .and_then(Value::as_bool)
+            .unwrap_or(false),
+    }
+}
+
 fn fmt_opt(v: Option<f64>) -> String {
     v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "—".into())
 }
@@ -195,20 +213,28 @@ fn load_json(path: &std::path::Path) -> Result<Value> {
 
 fn main() -> Result<()> {
     let mut history = default_history_dir();
+    let mut promote = false;
     let mut records: Vec<PathBuf> = Vec::new();
     let mut argv = std::env::args().skip(1);
     while let Some(arg) = argv.next() {
         if arg == "--history" {
             history = PathBuf::from(argv.next().context("--history needs a directory")?);
+        } else if arg == "--promote" {
+            promote = true;
         } else {
             records.push(PathBuf::from(arg));
         }
     }
     if records.is_empty() {
-        records = ["BENCH_executor.json", "BENCH_search.json", "BENCH_engine.json"]
-            .into_iter()
-            .map(PathBuf::from)
-            .collect();
+        records = [
+            "BENCH_executor.json",
+            "BENCH_search.json",
+            "BENCH_engine.json",
+            "BENCH_sim.json",
+        ]
+        .into_iter()
+        .map(PathBuf::from)
+        .collect();
     }
 
     let mut rows = Vec::new();
@@ -225,6 +251,18 @@ fn main() -> Result<()> {
         } else {
             None
         };
+        if promote && should_promote(baseline.as_ref()) {
+            let body = serde_json::to_string_pretty(&record)?;
+            std::fs::create_dir_all(&history)
+                .and_then(|()| std::fs::write(&base_path, &body))
+                .with_context(|| format!("promoting baseline {}", base_path.display()))?;
+            println!(
+                "bench_gate: promoted {} over {} baseline {}",
+                path.display(),
+                if baseline.is_some() { "provisional" } else { "missing" },
+                base_path.display()
+            );
+        }
         rows.push(gate(&record, baseline.as_ref()));
     }
 
@@ -307,6 +345,32 @@ mod tests {
         let r = gate(&record("engine", "shuffled_reqs_per_sec", 20.0), Some(&base));
         assert_eq!(r.status, Status::Pass);
         assert!(r.note.starts_with("2.00x"), "{}", r.note);
+    }
+
+    #[test]
+    fn sim_bench_is_gated() {
+        let base = record("sim", "sim_macs_per_sec", 1e6);
+        let r = gate(&record("sim", "sim_macs_per_sec", 5e5), Some(&base));
+        assert_eq!(r.status, Status::Fail);
+        let r = gate(&record("sim", "sim_macs_per_sec", 2e6), Some(&base));
+        assert_eq!(r.status, Status::Pass);
+    }
+
+    #[test]
+    fn promote_only_replaces_missing_or_provisional_baselines() {
+        assert!(should_promote(None));
+        let provisional = json!({
+            "bench": "sim", "provisional": true,
+            "metrics": {"sim_macs_per_sec": null}
+        });
+        assert!(should_promote(Some(&provisional)));
+        let measured = record("sim", "sim_macs_per_sec", 1e6);
+        assert!(!should_promote(Some(&measured)));
+        let explicit_false = json!({
+            "bench": "sim", "provisional": false,
+            "metrics": {"sim_macs_per_sec": 1e6}
+        });
+        assert!(!should_promote(Some(&explicit_false)));
     }
 
     #[test]

@@ -29,9 +29,11 @@ pub struct Args {
 impl Args {
     /// Parse from raw args (without argv[0]). Tokens that don't start
     /// with `--` collect as positionals (`repro arch validate a.toml
-    /// b.toml`); `--key` tokens must be followed by a value.
+    /// b.toml`); a `--key` token takes the next token as its value
+    /// unless that token is itself a flag (or input ends), in which
+    /// case it is a bare boolean and stores `"true"` (`--quick`).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
-        let mut it = raw.into_iter();
+        let mut it = raw.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
@@ -40,9 +42,10 @@ impl Args {
                 positional.push(arg);
                 continue;
             };
-            let value = it
-                .next()
-                .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().expect("peeked"),
+                _ => "true".to_string(),
+            };
             flags.insert(key.to_string(), value);
         }
         Ok(Args {
@@ -54,6 +57,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
+    }
+
+    /// Boolean flag: present counts as true unless explicitly `false`
+    /// (`--quick`, `--quick true`, `--quick false`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some_and(|v| v != "false" && v != "0")
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
@@ -176,7 +185,9 @@ extensions:
 
 tools:
   search               one FLASH search  [--style|--arch] [--config edge] [--m --n --k | --workload ID] [--format json]
-  validate             analytical model vs cycle simulator
+  validate             analytical model vs cycle simulator (legacy small sweep)
+  validate-model       fig-8-grid model-vs-simulator sweep, 7 architectures
+                       [--quick] [--out report.json] [--format json]
   serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style|--arch --config]
   help                 this text
 ";
@@ -372,6 +383,33 @@ pub fn run(args: Args) -> Result<String> {
                 worst
             ))
         }
+        "validate-model" => {
+            let v = experiments::validate_model(args.flag("quick"));
+            // write the machine-readable report *before* gating, so a
+            // budget failure in CI still uploads the evidence
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, v.to_json())
+                    .with_context(|| format!("writing validation report to {path:?}"))?;
+            }
+            let out = if args.get("format") == Some("json") {
+                v.to_json()
+            } else {
+                format!(
+                    "{}\n{}\nerror budget: cycle mean ≤ {}, max ≤ {}; \
+                     energy mean ≤ {}, max ≤ {}\n",
+                    v.summary_table().render(),
+                    v.detail_table().render(),
+                    crate::sim::CYCLE_MEAN_BUDGET,
+                    crate::sim::CYCLE_MAX_BUDGET,
+                    crate::sim::ENERGY_MEAN_BUDGET,
+                    crate::sim::ENERGY_MAX_BUDGET,
+                )
+            };
+            if !v.within_budget() {
+                bail!("{out}\nmodel error exceeds the documented budget");
+            }
+            Ok(out)
+        }
         "arch" => arch_cmd(&args),
         "serve" => serve(&args),
         "help" | "" => Ok(HELP.to_string()),
@@ -562,7 +600,16 @@ mod tests {
         .unwrap();
         assert_eq!(a.positional, vec!["validate", "a.toml", "b.toml"]);
         assert_eq!(a.get("config"), Some("edge"));
-        assert!(Args::parse(["x", "--dangling"].map(String::from)).is_err());
+        // bare flags (no value) parse as boolean `true`
+        let a = Args::parse(["x", "--quick"].map(String::from)).unwrap();
+        assert_eq!(a.get("quick"), Some("true"));
+        assert!(a.flag("quick"));
+        let a = Args::parse(["x", "--quick", "--out", "r.json"].map(String::from)).unwrap();
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("out"), Some("r.json"));
+        let a = Args::parse(["x", "--quick", "false"].map(String::from)).unwrap();
+        assert!(!a.flag("quick"));
+        assert!(!a.flag("absent"));
         let a = Args::parse(["x", "--m", "NaN"].map(String::from)).unwrap();
         assert!(a.get_u64("m", 0).is_err());
         // a mistyped flag must fail fast, not silently run on defaults
@@ -671,6 +718,30 @@ mod tests {
         assert_eq!(v["style"], serde_json::Value::Null);
         assert!(v["runtime_ms"].as_f64().unwrap() > 0.0);
         assert_eq!(v["arch_hash"].as_str().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn validate_model_quick_writes_report_and_passes_budget() {
+        let path = std::env::temp_dir().join("cli_validate_model.json");
+        let out = run(Args::parse(
+            [
+                "validate-model".into(),
+                "--quick".into(),
+                "--out".into(),
+                path.display().to_string(),
+                "--format".into(),
+                "json".into(),
+            ],
+        )
+        .unwrap())
+        .unwrap();
+        let v: serde_json::Value = serde_json::from_str(&out).expect("valid json");
+        assert_eq!(v["quick"], true);
+        assert_eq!(v["within_budget"], true);
+        assert_eq!(v["summaries"].as_array().unwrap().len(), 7);
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(on_disk, out);
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub struct RuntimeBreakdown {
     pub compute_cycles: u64,
     /// NoC transfer cycles for all S2-level traffic.
     pub noc_cycles: u64,
+    /// S2-level traffic in elements (S2→S1 reads + DRAM fills + drain) —
+    /// the numerator of `noc_cycles`, exposed for per-component
+    /// validation against the simulator (`sim::validate`).
+    pub traffic_elems: u64,
     /// Pipeline fill/drain cycles (one step each side).
     pub fill_drain_cycles: u64,
     /// Total = max(compute, noc) + fill/drain.
@@ -85,6 +89,7 @@ pub fn evaluate(
     RuntimeBreakdown {
         compute_cycles,
         noc_cycles,
+        traffic_elems,
         fill_drain_cycles,
         total_cycles,
         utilization,

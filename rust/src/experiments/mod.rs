@@ -12,4 +12,7 @@ pub use ablations::{cluster_sweep, cluster_sweep_spread, resnet_table, summa_tab
 pub use figures::{fig10, fig7, fig8, fig9, Fig7Data};
 pub use pruning::{pruning_report, PruningReport};
 pub use tables::{table2, table2_for, table3, table4, table5, table6};
-pub use validation::validate_all;
+pub use validation::{
+    validate_all, validate_model, validation_architectures, validation_grid, ArchErrorSummary,
+    ModelValidation,
+};

@@ -1,5 +1,5 @@
 //! Minimal property-testing framework (in-repo `proptest` substitute —
-//! the build environment is offline; see DESIGN.md §8 Substitutions).
+//! the build environment is offline; see DESIGN.md §9 Substitutions).
 //!
 //! Deterministic xorshift PRNG + generator combinators + a runner that
 //! reports the failing case and a simple shrink (retry with halved

@@ -1,0 +1,199 @@
+//! Occupancy-tracked resident-tile stores for the S1/S2 buffer levels.
+//!
+//! A [`TileStore`] holds slices of A/B/C keyed by their step coordinates,
+//! counts occupancy in elements against a fixed capacity, and evicts in
+//! LRU order when an insert would overflow — so buffer pressure produces
+//! *emergent* refetch traffic (a tile evicted under pressure misses on
+//! its next use) instead of the closed form's revisit factors.
+
+use crate::dataflow::Matrix;
+use std::collections::HashMap;
+
+/// Identity of one resident slice: which matrix, and the step coordinates
+/// of its two indexing dims (e.g. `(m_step, k_step)` for A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    pub matrix: Matrix,
+    pub row: u64,
+    pub col: u64,
+}
+
+impl TileKey {
+    pub fn new(matrix: Matrix, row: u64, col: u64) -> Self {
+        Self { matrix, row, col }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Resident {
+    elems: u64,
+    last_use: u64,
+}
+
+/// An LRU resident-tile store with element-granular occupancy tracking.
+#[derive(Debug)]
+pub struct TileStore {
+    capacity_elems: u64,
+    used_elems: u64,
+    entries: HashMap<TileKey, Resident>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl TileStore {
+    /// A store holding at most `capacity_elems` elements (min 1).
+    pub fn new(capacity_elems: u64) -> Self {
+        Self {
+            capacity_elems: capacity_elems.max(1),
+            used_elems: 0,
+            entries: HashMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Is `key` resident? A hit refreshes its LRU position.
+    pub fn lookup(&mut self, key: TileKey) -> bool {
+        self.clock += 1;
+        if let Some(r) = self.entries.get_mut(&key) {
+            r.last_use = self.clock;
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Insert `key` (`elems` elements), evicting least-recently-used
+    /// residents until it fits. Returns the number of evictions caused.
+    pub fn insert(&mut self, key: TileKey, elems: u64) -> u64 {
+        self.clock += 1;
+        if let Some(r) = self.entries.get_mut(&key) {
+            // already resident: refresh, adjust occupancy if resized
+            self.used_elems = self.used_elems - r.elems + elems;
+            r.elems = elems;
+            r.last_use = self.clock;
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.used_elems + elems > self.capacity_elems && !self.entries.is_empty() {
+            let victim = *self
+                .entries
+                .iter()
+                .min_by_key(|(k, r)| (r.last_use, k.matrix as u8, k.row, k.col))
+                .map(|(k, _)| k)
+                .expect("non-empty");
+            let r = self.entries.remove(&victim).expect("victim resident");
+            self.used_elems -= r.elems;
+            self.evictions += 1;
+            evicted += 1;
+        }
+        self.used_elems += elems;
+        self.entries.insert(
+            key,
+            Resident {
+                elems,
+                last_use: self.clock,
+            },
+        );
+        evicted
+    }
+
+    /// Drop `key` if resident (a spill moves a C partial out of S1).
+    pub fn remove(&mut self, key: TileKey) -> bool {
+        if let Some(r) = self.entries.remove(&key) {
+            self.used_elems -= r.elems;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn used_elems(&self) -> u64 {
+        self.used_elems
+    }
+
+    pub fn capacity_elems(&self) -> u64 {
+        self.capacity_elems
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: Matrix, r: u64, c: u64) -> TileKey {
+        TileKey::new(m, r, c)
+    }
+
+    #[test]
+    fn hit_after_insert_miss_before() {
+        let mut s = TileStore::new(100);
+        assert!(!s.lookup(key(Matrix::A, 0, 0)));
+        s.insert(key(Matrix::A, 0, 0), 10);
+        assert!(s.lookup(key(Matrix::A, 0, 0)));
+        assert_eq!(s.used_elems(), 10);
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.misses(), 1);
+    }
+
+    #[test]
+    fn evicts_lru_on_overflow() {
+        let mut s = TileStore::new(30);
+        s.insert(key(Matrix::A, 0, 0), 10);
+        s.insert(key(Matrix::B, 0, 0), 10);
+        s.insert(key(Matrix::C, 0, 0), 10);
+        // touch A and C so B is least recently used
+        assert!(s.lookup(key(Matrix::A, 0, 0)));
+        assert!(s.lookup(key(Matrix::C, 0, 0)));
+        let ev = s.insert(key(Matrix::A, 1, 0), 10);
+        assert_eq!(ev, 1);
+        assert_eq!(s.evictions(), 1);
+        assert!(!s.lookup(key(Matrix::B, 0, 0)), "LRU victim gone");
+        assert!(s.lookup(key(Matrix::A, 0, 0)));
+        assert_eq!(s.used_elems(), 30);
+    }
+
+    #[test]
+    fn reinsert_resizes_without_eviction() {
+        let mut s = TileStore::new(20);
+        s.insert(key(Matrix::A, 0, 0), 10);
+        assert_eq!(s.insert(key(Matrix::A, 0, 0), 16), 0);
+        assert_eq!(s.used_elems(), 16);
+    }
+
+    #[test]
+    fn remove_frees_occupancy() {
+        let mut s = TileStore::new(20);
+        s.insert(key(Matrix::C, 2, 3), 12);
+        assert!(s.remove(key(Matrix::C, 2, 3)));
+        assert!(!s.remove(key(Matrix::C, 2, 3)));
+        assert_eq!(s.used_elems(), 0);
+    }
+
+    #[test]
+    fn oversized_tile_still_inserts_after_full_eviction() {
+        let mut s = TileStore::new(8);
+        s.insert(key(Matrix::A, 0, 0), 8);
+        let ev = s.insert(key(Matrix::B, 0, 0), 100);
+        assert_eq!(ev, 1);
+        assert!(s.lookup(key(Matrix::B, 0, 0)));
+    }
+}

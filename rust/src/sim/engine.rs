@@ -1,47 +1,97 @@
-//! The simulator core: step-by-step execution of a mapping's schedule.
+//! The discrete-event simulator core.
 //!
-//! One **outer step** is one iteration of the inter-cluster loop nest.
-//! Within a step:
+//! Simulation is split into two passes over the same flattened step plan
+//! (see [`super::pe`]):
 //!
-//! 1. *Transfer phase*: for each matrix, the S2-level tile needed this
-//!    step is compared against the resident-tile table; only changed
-//!    tiles are (re)fetched — S2 reads and NoC transfer cycles accrue,
-//!    multicast delivering shared operands once.
-//! 2. *Compute phase*: each cluster takes its slice of the inter-spatial
-//!    dim, each PE its chunk of the intra-spatial dim, and executes its
-//!    MACs serially (1 MAC/cycle), really accumulating into C. The
-//!    step's compute time is the max over PEs.
-//! 3. With double-buffered S2 the step costs `max(compute, transfer)`.
+//! 1. **Functional pass** — executes every MAC in the schedule's
+//!    canonical order (steps in `inter_order`, clusters ascending, PEs
+//!    ascending, K innermost), really accumulating into C and asserting
+//!    each MAC runs exactly once. Per-element accumulation is a globally
+//!    ascending-K fold with an optional `exec_tile` K-block granularity
+//!    that mirrors `runtime::PackedGemm`'s per-block scratch — so the
+//!    simulated C is **bit-identical** to the packed executor for the
+//!    same tile size (asserted by `tests/sim_validation.rs`). Hardware
+//!    reduction networks combine partials in *position* order, not
+//!    arrival order, so the numerics are deliberately independent of
+//!    event timing.
 //!
-//! C partial sums: if K is spatial at either level the per-PE partials
-//! reduce over the NoC (spatial reduction); the surviving partial is
-//! written back to S2 when the outer step leaves the (m, n) tile, and
-//! read back when it returns — emergent output revisit counting.
+//! 2. **Timing pass** — a discrete-event simulation over an
+//!    [`super::event::EventQueue`]: steps issue double-buffered (step
+//!    *s+2* issues when *s* completes on every cluster), operand slices
+//!    are looked up in per-cluster S1 [`super::buffers::TileStore`]s and
+//!    the global S2 store (misses become NoC messages / DRAM fills,
+//!    capacity pressure becomes evictions and emergent refetch), messages
+//!    serialize through the shared S2 injection [`super::noc::Link`]
+//!    under the architecture's delivery mode, and each cluster computes
+//!    a step once all its operands arrive (critical path = slowest PE,
+//!    plus in-network reduction latency when K is spatial).
+//!
+//! C partial sums: leaving an (m, n) tile mid-reduction spills the
+//! partial to S2 (the reduction network merges per-cluster partials
+//! before writeback, so one tile-sized message); returning with k > 0
+//! reads it back. The final output drains to S2 at the end.
 
-use crate::arch::Accelerator;
-use crate::dataflow::{Dim, Mapping};
-use crate::cost::PerMatrix;
+use crate::arch::{Accelerator, Delivery};
+use crate::cost::{AccessCounts, EnergyModel, PerMatrix};
+use crate::dataflow::{Dim, Mapping, Matrix};
 use crate::workloads::Gemm;
+
+use super::buffers::{TileKey, TileStore};
+use super::event::EventQueue;
+use super::noc::{arrival_times, Link, NocModel};
+use super::pe::{build_plan, slice_for, StepPlan};
+
+/// Knobs for [`simulate_with`].
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// K-block granularity of per-element accumulation: partials fold
+    /// into the output every `exec_tile` K-steps, matching
+    /// `PackedGemm::new(wl, exec_tile, order)` bit-for-bit. `None`
+    /// (default) folds continuously (one flush at K).
+    pub exec_tile: Option<usize>,
+    /// One-time pipeline fill before the first MAC retires (cycles).
+    pub pipeline_fill: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self {
+            exec_tile: None,
+            pipeline_fill: 4,
+        }
+    }
+}
 
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimResult {
-    /// Total cycles (Σ per-step max(compute, transfer) + fill/drain).
+    /// Simulated makespan in cycles (issue → final C drain).
     pub cycles: u64,
-    /// Compute-only cycles (Σ per-step PE critical path).
+    /// Compute critical path: Σ per-step max cluster duration.
     pub compute_cycles: u64,
-    /// Transfer-only cycles.
+    /// Cycles the S2 injection link spent occupied.
     pub noc_cycles: u64,
     /// S1 accesses per matrix (reads + writes + fills), summed over PEs.
     pub s1: PerMatrix,
-    /// S2 accesses per matrix (reads + writes).
+    /// S2 accesses per matrix (reads + writes, incl. DRAM fills/drain).
     pub s2: PerMatrix,
+    /// S2→S1 NoC-crossing read traffic per matrix.
+    pub s2_reads: PerMatrix,
     /// MACs actually executed.
     pub macs: u64,
     /// The computed output, row-major M×N.
     pub c: Vec<f32>,
-    /// Number of outer steps executed.
+    /// Number of (non-empty) outer steps executed.
     pub steps: u64,
+    /// NoC messages transmitted.
+    pub transfers: u64,
+    /// Tiles evicted from per-cluster S1 stores under capacity pressure.
+    pub s1_evictions: u64,
+    /// Tiles evicted from the S2 store under capacity pressure.
+    pub s2_evictions: u64,
+    /// Energy of the simulated access counts (same per-access model as
+    /// the analytical prediction — the counts are what differ).
+    pub energy_j: f64,
 }
 
 impl SimResult {
@@ -50,222 +100,464 @@ impl SimResult {
     }
 }
 
-#[derive(Clone, Copy, PartialEq, Eq)]
-struct TileCoord(u64, u64);
-
-struct Range {
-    start: u64,
-    end: u64,
-}
-
-impl Range {
-    fn len(&self) -> u64 {
-        self.end.saturating_sub(self.start)
-    }
-
-    fn is_empty(&self) -> bool {
-        self.end <= self.start
+fn pm_add(pm: &mut PerMatrix, m: Matrix, v: u64) {
+    match m {
+        Matrix::A => pm.a += v,
+        Matrix::B => pm.b += v,
+        Matrix::C => pm.c += v,
     }
 }
 
-/// Tile index range of dim `d` at outer step `step_idx`.
-fn outer_range(map: &Mapping, wl: &Gemm, pes: u64, d: Dim, step_idx: u64) -> Range {
-    let span = map.step_span(d, pes).max(1);
-    let dim = dim_of(wl, d);
-    let start = (step_idx * span).min(dim);
-    Range {
-        start,
-        end: (start + span).min(dim),
-    }
-}
-
-fn dim_of(wl: &Gemm, d: Dim) -> u64 {
-    match d {
-        Dim::M => wl.m,
-        Dim::N => wl.n,
-        Dim::K => wl.k,
-    }
-}
-
-/// Simulate `map` running `wl` on `acc`. Panics if any MAC would be
-/// executed twice (mapping must partition the iteration space).
+/// Simulate `map` running `wl` on `acc` with default options. Panics if
+/// any MAC would be executed twice (mapping must partition the
+/// iteration space).
 ///
 /// Complexity is Θ(M·N·K) — use small workloads (≤ ~64³).
 pub fn simulate(acc: &Accelerator, map: &Mapping, wl: &Gemm, a: &[f32], b: &[f32]) -> SimResult {
+    simulate_with(acc, map, wl, a, b, &SimOptions::default())
+}
+
+/// [`simulate`] with explicit [`SimOptions`].
+pub fn simulate_with(
+    acc: &Accelerator,
+    map: &Mapping,
+    wl: &Gemm,
+    a: &[f32],
+    b: &[f32],
+    opts: &SimOptions,
+) -> SimResult {
     assert_eq!(a.len() as u64, wl.m * wl.k, "A shape");
     assert_eq!(b.len() as u64, wl.k * wl.n, "B shape");
     let pes = acc.config.pes;
-    let clusters = map.clusters(pes);
+    let clusters = map.clusters(pes) as usize;
     let lambda = map.cluster_size;
-    let epc = acc.config.noc_elems_per_cycle();
 
-    let steps = crate::cost::steps_for(map, wl, pes);
-    let order = map.inter_order;
-
-    let mut c = vec![0f32; (wl.m * wl.n) as usize];
-    let mut hit = vec![false; (wl.m * wl.n * wl.k) as usize];
-
+    let (plan, max_slice) = build_plan(acc, map, wl);
     let mut s1 = PerMatrix::default();
-    let mut s2 = PerMatrix::default();
+
+    // ---------------- functional pass ----------------
+    let mut c = vec![0f32; (wl.m * wl.n) as usize];
+    let mut kacc = vec![0f32; (wl.m * wl.n) as usize];
+    let mut hit = vec![false; (wl.m * wl.n * wl.k) as usize];
     let mut macs = 0u64;
-    let mut compute_cycles = 0u64;
-    let mut noc_cycles = 0u64;
-    let mut total_steps = 0u64;
-
-    // Resident S2-level tiles (coords in step indices per matrix dims).
-    let mut resident_a: Option<TileCoord> = None;
-    let mut resident_b: Option<TileCoord> = None;
-    let mut resident_c: Option<TileCoord> = None;
-
-    // outer loop nest in inter_order
-    let idx_of = |d: Dim| order.position(d);
-    let counts = [
-        steps[order.0[0] as usize],
-        steps[order.0[1] as usize],
-        steps[order.0[2] as usize],
-    ];
-
-    for i0 in 0..counts[0] {
-        for i1 in 0..counts[1] {
-            for i2 in 0..counts[2] {
-                total_steps += 1;
-                let step_of = |d: Dim| [i0, i1, i2][idx_of(d)];
-                let rm = outer_range(map, wl, pes, Dim::M, step_of(Dim::M));
-                let rn = outer_range(map, wl, pes, Dim::N, step_of(Dim::N));
-                let rk = outer_range(map, wl, pes, Dim::K, step_of(Dim::K));
-                if rm.is_empty() || rn.is_empty() || rk.is_empty() {
+    let t = opts.exec_tile.unwrap_or(usize::MAX).max(1) as u64;
+    for step in &plan {
+        for cl in 0..clusters {
+            let (cm, cn, ck) = slice_for(
+                (&step.rm, &step.rn, &step.rk),
+                map.inter_spatial,
+                cl as u64,
+                clusters as u64,
+            );
+            if cm.is_empty() || cn.is_empty() || ck.is_empty() {
+                continue;
+            }
+            for pe in 0..lambda {
+                let (pm, pn, pk) = slice_for((&cm, &cn, &ck), map.intra_spatial, pe, lambda);
+                let work = pm.len() * pn.len() * pk.len();
+                if work == 0 {
                     continue;
                 }
-
-                // ---- transfer phase ----
-                let mut transfer_elems = 0u64;
-                let ta = TileCoord(step_of(Dim::M), step_of(Dim::K));
-                if resident_a != Some(ta) {
-                    let elems = rm.len() * rk.len();
-                    s2.a += elems; // S2 read
-                    s1.a += elems; // S1 fill
-                    transfer_elems += elems;
-                    resident_a = Some(ta);
-                }
-                let tb = TileCoord(step_of(Dim::K), step_of(Dim::N));
-                if resident_b != Some(tb) {
-                    let elems = rk.len() * rn.len();
-                    s2.b += elems;
-                    s1.b += elems;
-                    transfer_elems += elems;
-                    resident_b = Some(tb);
-                }
-                // C: on leaving an (m,n) tile with unfinished K, the
-                // partial is spilled to S2 and read back on return.
-                let tc = TileCoord(step_of(Dim::M), step_of(Dim::N));
-                if resident_c != Some(tc) {
-                    let elems = rm.len() * rn.len();
-                    if let Some(_prev) = resident_c {
-                        // spill previous partial tile: S2 write
-                        // (approximate previous tile size by current).
-                        s2.c += elems;
-                        transfer_elems += elems;
+                for m in pm.start..pm.end {
+                    for n in pn.start..pn.end {
+                        let idx = (m * wl.n + n) as usize;
+                        for k in pk.start..pk.end {
+                            let h = ((m * wl.n + n) * wl.k + k) as usize;
+                            assert!(!hit[h], "MAC ({m},{n},{k}) executed twice");
+                            hit[h] = true;
+                            kacc[idx] += a[(m * wl.k + k) as usize] * b[(k * wl.n + n) as usize];
+                            if (k + 1) % t == 0 || k + 1 == wl.k {
+                                c[idx] += kacc[idx];
+                                kacc[idx] = 0.0;
+                            }
+                            macs += 1;
+                        }
                     }
-                    if step_of(Dim::K) > 0 {
-                        // returning mid-reduction: read partial back
-                        s2.c += elems;
-                        transfer_elems += elems;
-                    }
-                    resident_c = Some(tc);
                 }
+                // S1 traffic: operand read per MAC, C update r+w
+                s1.a += work;
+                s1.b += work;
+                s1.c += 2 * work;
+            }
+        }
+    }
+    debug_assert_eq!(macs, wl.macs());
 
-                // ---- compute phase ----
-                // Partition inter-spatial dim across clusters, intra-
-                // spatial across PEs; each PE runs its sub-range serially.
-                let mut pe_max = 0u64;
-                for cl in 0..clusters {
-                    // cluster's slice of the inter-spatial dim
-                    let (cm, cn, ck) = slice_for(map, (&rm, &rn, &rk), map.inter_spatial, cl, clusters);
-                    if cm.is_empty() || cn.is_empty() || ck.is_empty() {
+    // ---------------- timing pass ----------------
+    let noc = NocModel::of(acc);
+    let des = DesOutcome::run(acc, map, wl, &plan, max_slice, &noc, clusters, opts);
+
+    s1.a += des.s1_fills.a;
+    s1.b += des.s1_fills.b;
+    s1.c += des.s1_fills.c;
+
+    let compute_cycles: u64 = plan
+        .iter()
+        .map(|s| s.duration.iter().copied().max().unwrap_or(0))
+        .sum();
+
+    let energy_counts = AccessCounts {
+        s1,
+        s2: des.s2,
+        s2_reads: des.s2_reads,
+        steps: crate::cost::steps_for(map, wl, pes),
+        macs,
+    };
+    let energy_j = EnergyModel::default().total_j(acc, &energy_counts);
+
+    SimResult {
+        cycles: des.makespan,
+        compute_cycles,
+        noc_cycles: des.noc_busy,
+        s1,
+        s2: des.s2,
+        s2_reads: des.s2_reads,
+        macs,
+        c,
+        steps: plan.len() as u64,
+        transfers: des.transfers,
+        s1_evictions: des.s1_evictions,
+        s2_evictions: des.s2_evictions,
+        energy_j,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    /// One operand message (or the issue sentinel) reached `cl` for `step`.
+    Delivered { step: usize, cl: usize },
+    /// Cluster `cl` finished computing `step`.
+    Done { step: usize, cl: usize },
+}
+
+struct DesOutcome {
+    makespan: u64,
+    noc_busy: u64,
+    transfers: u64,
+    s2: PerMatrix,
+    s2_reads: PerMatrix,
+    s1_fills: PerMatrix,
+    s1_evictions: u64,
+    s2_evictions: u64,
+}
+
+/// All mutable state of the timing pass.
+struct Des<'a> {
+    plan: &'a [StepPlan],
+    map: &'a Mapping,
+    noc: &'a NocModel,
+    clusters: usize,
+    q: EventQueue<Ev>,
+    link: Link,
+    s1_stores: Vec<TileStore>,
+    s2_store: TileStore,
+    /// Resident C tile: (m_step, n_step, elems).
+    resident_c: Option<(u64, u64, u64)>,
+    /// Outstanding deliveries per (step, cluster) before compute can start.
+    outstanding: Vec<Vec<u32>>,
+    /// Time each (step, cluster) became ready (all deliveries in).
+    ready: Vec<Vec<Option<u64>>>,
+    /// Active step indices per cluster, and each cluster's progress.
+    cluster_steps: Vec<Vec<usize>>,
+    next_step: Vec<usize>,
+    free_at: Vec<u64>,
+    /// In-order delivery clamp per cluster.
+    last_arrival: Vec<u64>,
+    /// Clusters still computing per step.
+    remaining: Vec<u32>,
+    can_issue: Vec<bool>,
+    next_issue: usize,
+    transfers: u64,
+    s2: PerMatrix,
+    s2_reads: PerMatrix,
+    s1_fills: PerMatrix,
+    s1_evictions: u64,
+    last_time: u64,
+}
+
+impl DesOutcome {
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        acc: &Accelerator,
+        map: &Mapping,
+        wl: &Gemm,
+        plan: &[StepPlan],
+        max_slice: u64,
+        noc: &NocModel,
+        clusters: usize,
+        opts: &SimOptions,
+    ) -> DesOutcome {
+        // S1 provisioning: a cluster must hold its current slices plus
+        // one stationary operand across steps (α per PE, λ PEs); the
+        // floor of twice the largest slice keeps analytically-resident
+        // tiles resident, so capacity evictions model *pressure beyond*
+        // the closed form's residency assumption, not below it.
+        let s1_cap = (map.cluster_size * acc.config.alpha()).max(2 * max_slice);
+        let max_step_ws = plan
+            .iter()
+            .map(|s| s.rm.len() * s.rk.len() + s.rk.len() * s.rn.len() + s.rm.len() * s.rn.len())
+            .max()
+            .unwrap_or(1);
+        let s2_cap = acc.config.beta().max(2 * max_step_ws);
+
+        let n = plan.len();
+        let mut des = Des {
+            plan,
+            map,
+            noc,
+            clusters,
+            q: EventQueue::new(),
+            link: Link::new(),
+            s1_stores: (0..clusters).map(|_| TileStore::new(s1_cap)).collect(),
+            s2_store: TileStore::new(s2_cap),
+            resident_c: None,
+            outstanding: plan.iter().map(|s| vec![0; s.duration.len()]).collect(),
+            ready: plan.iter().map(|s| vec![None; s.duration.len()]).collect(),
+            cluster_steps: {
+                let mut cs = vec![Vec::new(); clusters];
+                for (i, s) in plan.iter().enumerate() {
+                    for cl in s.active_clusters() {
+                        cs[cl].push(i);
+                    }
+                }
+                cs
+            },
+            next_step: vec![0; clusters],
+            free_at: vec![opts.pipeline_fill; clusters],
+            last_arrival: vec![0; clusters],
+            remaining: plan
+                .iter()
+                .map(|s| s.active_clusters().count() as u32)
+                .collect(),
+            can_issue: vec![false; n],
+            next_issue: 0,
+            transfers: 0,
+            s2: PerMatrix::default(),
+            s2_reads: PerMatrix::default(),
+            s1_fills: PerMatrix::default(),
+            s1_evictions: 0,
+            last_time: 0,
+        };
+
+        // double-buffered issue: steps 0 and 1 at t=0, s+2 on s done
+        for s in 0..n.min(2) {
+            des.can_issue[s] = true;
+        }
+        des.drive_issues(0);
+
+        while let Some((now, ev)) = des.q.pop() {
+            des.last_time = des.last_time.max(now);
+            match ev {
+                Ev::Delivered { step, cl } => des.delivered(step, cl, now),
+                Ev::Done { step, cl } => des.done(step, cl, now),
+            }
+        }
+
+        // final C drain: the full output crosses back to S2/DRAM
+        let size_c = wl.m * wl.n;
+        des.s2.c += size_c;
+        let drain = noc.occupancy(des.resident_c.map_or(size_c, |(_, _, e)| e)) + noc.hop_latency;
+        let end = des.last_time.max(des.link.free_at());
+
+        DesOutcome {
+            makespan: end + drain,
+            noc_busy: des.link.busy_cycles(),
+            transfers: des.transfers,
+            s2: des.s2,
+            s2_reads: des.s2_reads,
+            s1_fills: des.s1_fills,
+            s1_evictions: des.s1_evictions,
+            s2_evictions: des.s2_store.evictions(),
+        }
+    }
+}
+
+impl Des<'_> {
+    /// Issue every step whose predecessor-by-two has completed, strictly
+    /// in program order (a later step finishing early must not overtake
+    /// an earlier issue — residency is evaluated at issue time).
+    fn drive_issues(&mut self, now: u64) {
+        while self.next_issue < self.plan.len() && self.can_issue[self.next_issue] {
+            let s = self.next_issue;
+            self.next_issue += 1;
+            self.issue(s, now);
+        }
+    }
+
+    fn issue(&mut self, s: usize, now: u64) {
+        let step = &self.plan[s];
+        let [m_step, n_step, k_step] = step.coord;
+        let (ra, rb, rc) = (
+            step.rm.len() * step.rk.len(),
+            step.rk.len() * step.rn.len(),
+            step.rm.len() * step.rn.len(),
+        );
+
+        // issue sentinel: compute waits at least for the issue itself
+        for cl in step.active_clusters() {
+            self.outstanding[s][cl] += 1;
+        }
+
+        // S2 residency: outer A/B tiles fill from DRAM on miss
+        for (mx, key, elems) in [
+            (Matrix::A, TileKey::new(Matrix::A, m_step, k_step), ra),
+            (Matrix::B, TileKey::new(Matrix::B, k_step, n_step), rb),
+        ] {
+            if !self.s2_store.lookup(key) {
+                pm_add(&mut self.s2, mx, elems);
+                self.s2_store.insert(key, elems);
+            }
+        }
+
+        // C residency: spill the previous partial on leaving an (m, n)
+        // tile, read it back when returning mid-reduction (k_step > 0)
+        if self.resident_c.map(|(m, n, _)| (m, n)) != Some((m_step, n_step)) {
+            if let Some((_, _, prev_elems)) = self.resident_c {
+                self.s2.c += prev_elems;
+                self.s2_reads.c += prev_elems;
+                self.send(now, s, Matrix::C, prev_elems, &[], Delivery::Multicast);
+            }
+            if k_step > 0 {
+                self.s2.c += rc;
+                self.s2_reads.c += rc;
+                let dests: Vec<usize> = step.active_clusters().collect();
+                self.send(now, s, Matrix::C, rc, &dests, Delivery::Multicast);
+            }
+            self.resident_c = Some((m_step, n_step, rc));
+        }
+
+        // A/B slices: shared across clusters when the inter-spatial dim
+        // does not index the matrix, distinct per-cluster slices otherwise
+        for (mx, key, shared) in [
+            (
+                Matrix::A,
+                TileKey::new(Matrix::A, m_step, k_step),
+                self.map.inter_spatial == Dim::N,
+            ),
+            (
+                Matrix::B,
+                TileKey::new(Matrix::B, k_step, n_step),
+                self.map.inter_spatial == Dim::M,
+            ),
+        ] {
+            if shared {
+                let elems = if mx == Matrix::A { ra } else { rb };
+                let missing: Vec<usize> = step
+                    .active_clusters()
+                    .filter(|&cl| !self.s1_stores[cl].lookup(key))
+                    .collect();
+                if !missing.is_empty() {
+                    for &cl in &missing {
+                        self.s1_evictions += self.s1_stores[cl].insert(key, elems);
+                    }
+                    let counted = match self.noc.delivery {
+                        Delivery::Multicast => elems,
+                        _ => elems * missing.len() as u64,
+                    };
+                    pm_add(&mut self.s2_reads, mx, counted);
+                    pm_add(&mut self.s1_fills, mx, counted);
+                    self.send(now, s, mx, elems, &missing, self.noc.delivery);
+                }
+            } else {
+                for cl in step.active_clusters() {
+                    let (cm, cn, ck) = slice_for(
+                        (&step.rm, &step.rn, &step.rk),
+                        self.map.inter_spatial,
+                        cl as u64,
+                        self.clusters as u64,
+                    );
+                    let elems = match mx {
+                        Matrix::A => cm.len() * ck.len(),
+                        _ => ck.len() * cn.len(),
+                    };
+                    if elems == 0 || self.s1_stores[cl].lookup(key) {
                         continue;
                     }
-                    for pe in 0..lambda {
-                        let (pm, pn, pk) =
-                            slice_for(map, (&cm, &cn, &ck), map.intra_spatial, pe, lambda);
-                        let work = pm.len() * pn.len() * pk.len();
-                        if work == 0 {
-                            continue;
-                        }
-                        pe_max = pe_max.max(work);
-                        for m in pm.start..pm.end {
-                            for n in pn.start..pn.end {
-                                for k in pk.start..pk.end {
-                                    let h = ((m * wl.n + n) * wl.k + k) as usize;
-                                    assert!(!hit[h], "MAC ({m},{n},{k}) executed twice");
-                                    hit[h] = true;
-                                    c[(m * wl.n + n) as usize] +=
-                                        a[(m * wl.k + k) as usize] * b[(k * wl.n + n) as usize];
-                                    macs += 1;
-                                }
-                            }
-                        }
-                        // S1 traffic: operand read per MAC, C update r+w
-                        s1.a += work;
-                        s1.b += work;
-                        s1.c += 2 * work;
-                    }
+                    self.s1_evictions += self.s1_stores[cl].insert(key, elems);
+                    pm_add(&mut self.s2_reads, mx, elems);
+                    pm_add(&mut self.s1_fills, mx, elems);
+                    self.send(now, s, mx, elems, &[cl], Delivery::Multicast);
                 }
-                compute_cycles += pe_max;
-                let t = (transfer_elems as f64 / epc).ceil() as u64;
-                noc_cycles += t;
+            }
+        }
+
+        // release the issue sentinels
+        for cl in step.active_clusters() {
+            self.q.push(now, Ev::Delivered { step: s, cl });
+        }
+    }
+
+    /// Transmit one message through the shared injection link and
+    /// schedule its arrivals. Counting happens at the call site; this
+    /// handles timing only. Empty `dests` = a write (spill/drain).
+    fn send(
+        &mut self,
+        now: u64,
+        step: usize,
+        _matrix: Matrix,
+        elems: u64,
+        dests: &[usize],
+        mode: Delivery,
+    ) {
+        let occ = self.noc.occupancy(elems);
+        if occ == 0 {
+            return;
+        }
+        let copies = match mode {
+            Delivery::Unicast => dests.len().max(1),
+            _ => 1,
+        };
+        for copy in 0..copies {
+            let (_, finish) = self.link.transmit(now, occ);
+            self.transfers += 1;
+            let targets: &[usize] = match mode {
+                Delivery::Unicast => &dests[copy..(copy + 1).min(dests.len())],
+                _ => dests,
+            };
+            let skew_mode = NocModel {
+                delivery: mode,
+                ..*self.noc
+            };
+            for (i, arrival) in arrival_times(&skew_mode, finish, occ, targets.len()).enumerate() {
+                let cl = targets[i];
+                let t = arrival.max(self.last_arrival[cl]);
+                self.last_arrival[cl] = t;
+                self.outstanding[step][cl] += 1;
+                self.q.push(t, Ev::Delivered { step, cl });
+            }
+            if dests.is_empty() {
+                break;
             }
         }
     }
 
-    // final C drain to S2/DRAM
-    s2.c += wl.m * wl.n;
-    // compulsory fills of A and B into S2 from DRAM
-    s2.a += wl.m * wl.k;
-    s2.b += wl.k * wl.n;
-
-    // every MAC must have been executed exactly once
-    debug_assert_eq!(macs, wl.macs());
-
-    let cycles = compute_cycles.max(noc_cycles)
-        + 2 * compute_cycles / total_steps.max(1); // fill/drain ≈ one step
-    SimResult {
-        cycles,
-        compute_cycles,
-        noc_cycles,
-        s1,
-        s2,
-        macs,
-        c,
-        steps: total_steps,
-    }
-}
-
-/// Slice ranges for worker `idx` of `count` along the partition dim `d`:
-/// the partition dim is chunked, other dims pass through.
-fn slice_for(
-    _map: &Mapping,
-    (rm, rn, rk): (&Range, &Range, &Range),
-    d: Dim,
-    idx: u64,
-    count: u64,
-) -> (Range, Range, Range) {
-    let chunk = |r: &Range| -> Range {
-        let len = r.len();
-        let per = len.div_ceil(count).max(1);
-        let start = (r.start + idx * per).min(r.end);
-        Range {
-            start,
-            end: (start + per).min(r.end),
+    fn delivered(&mut self, step: usize, cl: usize, now: u64) {
+        self.outstanding[step][cl] -= 1;
+        if self.outstanding[step][cl] > 0 {
+            return;
         }
-    };
-    let pass = |r: &Range| Range {
-        start: r.start,
-        end: r.end,
-    };
-    match d {
-        Dim::M => (chunk(rm), pass(rn), pass(rk)),
-        Dim::N => (pass(rm), chunk(rn), pass(rk)),
-        Dim::K => (pass(rm), pass(rn), chunk(rk)),
+        self.ready[step][cl] = Some(now);
+        // start this cluster's steps strictly in schedule order
+        while let Some(&s_next) = self.cluster_steps[cl].get(self.next_step[cl]) {
+            let Some(ready_at) = self.ready[s_next][cl] else {
+                break;
+            };
+            let start = ready_at.max(self.free_at[cl]);
+            let done = start + self.plan[s_next].duration[cl];
+            self.free_at[cl] = done;
+            self.next_step[cl] += 1;
+            self.q.push(done, Ev::Done { step: s_next, cl });
+        }
+    }
+
+    fn done(&mut self, step: usize, _cl: usize, now: u64) {
+        self.remaining[step] -= 1;
+        if self.remaining[step] == 0 {
+            if step + 2 < self.plan.len() {
+                self.can_issue[step + 2] = true;
+            }
+            self.drive_issues(now);
+        }
     }
 }
 
@@ -334,6 +626,8 @@ mod tests {
         assert_close(&r.c, &ref_gemm(&wl, &a, &b));
         assert_eq!(r.macs, 64);
         assert!(r.cycles > 0);
+        assert!(r.transfers > 0);
+        assert!(r.energy_j > 0.0);
     }
 
     #[test]
@@ -365,6 +659,41 @@ mod tests {
         let r_t = simulate(&acc, tiled.mapping(), &wl, &a, &b);
         assert!(r_t.s2.total() <= r_nt.s2.total());
         assert!(r_t.reuse_factor() >= r_nt.reuse_factor());
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let acc = tiny_acc(Style::Eyeriss);
+        let wl = Gemm::new("t", 9, 11, 7);
+        let a = rand_mat(9 * 7, 7);
+        let b = rand_mat(7 * 11, 8);
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        let r1 = simulate(&acc, best.mapping(), &wl, &a, &b);
+        let r2 = simulate(&acc, best.mapping(), &wl, &a, &b);
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(r1.c, r2.c);
+        assert_eq!(r1.s2_reads, r2.s2_reads);
+        assert_eq!(r1.transfers, r2.transfers);
+    }
+
+    #[test]
+    fn exec_tile_matches_packed_executor_bits() {
+        let wl = Gemm::new("t", 12, 10, 9);
+        let a = rand_mat(12 * 9, 9);
+        let b = rand_mat(9 * 10, 10);
+        let acc = tiny_acc(Style::Nvdla);
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        for tile in [1usize, 4, 8] {
+            let opts = SimOptions {
+                exec_tile: Some(tile),
+                ..SimOptions::default()
+            };
+            let r = simulate_with(&acc, best.mapping(), &wl, &a, &b, &opts);
+            let packed =
+                crate::runtime::PackedGemm::new(&wl, tile, best.mapping().inter_order).unwrap();
+            let expect = packed.run(&a, &b).unwrap();
+            assert_eq!(r.c, expect, "tile {tile}");
+        }
     }
 
     #[test]

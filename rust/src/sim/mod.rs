@@ -1,22 +1,42 @@
-//! Cycle-approximate spatial-accelerator simulator — the validation
+//! Discrete-event spatial-accelerator simulator — the validation
 //! substrate for MAESTRO-BLAS.
 //!
 //! The paper validated MAESTRO against the Eyeriss chip and MAERI RTL
 //! (§3.3); we have neither, so this module provides the independent,
 //! finer-grained ground truth instead (DESIGN.md §8): it *executes* a
 //! mapping's schedule over a small GEMM — really multiplying the
-//! matrices — while counting per-step compute/NoC cycles and S1/S2
-//! accesses with *emergent* reuse (a resident-tile table, not the
-//! analytical model's closed-form revisit factors).
+//! matrices — while a tick-based discrete-event core times PE-cluster
+//! compute, occupancy-tracked S1/S2 resident-tile stores (with
+//! capacity-induced evictions), and a contended NoC injection link that
+//! distinguishes multicast from store-and-forward from unicast delivery.
+//!
+//! Module map:
+//! * [`event`] — deterministic `(time, seq)` min-heap event queue;
+//! * [`buffers`] — LRU resident-tile stores with occupancy tracking;
+//! * [`noc`] — link serialization, delivery modes, arrival skew;
+//! * [`pe`] — cluster/PE slicing and the flattened step plan;
+//! * [`engine`] — the two-pass simulator (functional + timing);
+//! * [`validate`] — analytical-vs-simulated comparison reports and the
+//!   documented error budget.
 //!
 //! Two guarantees fall out:
-//! * **functional**: the produced C equals A·B ⇔ the mapping covers the
-//!   MAC iteration space exactly once (`engine` checks this per MAC);
-//! * **performance**: cycle and access counts that `validate` compares
-//!   against the analytical model on small problems.
+//! * **functional**: the produced C is **bit-identical** to the packed
+//!   executor (`runtime::PackedGemm`) for the same K-block size ⇔ the
+//!   mapping covers the MAC iteration space exactly once (`engine`
+//!   checks this per MAC);
+//! * **performance**: simulated cycle/energy/access counts that
+//!   `validate` compares against the analytical model within a
+//!   documented error budget (`repro validate-model`).
 
+pub mod buffers;
+pub mod event;
 mod engine;
+pub mod noc;
+pub mod pe;
 mod validate;
 
-pub use engine::{simulate, SimResult};
-pub use validate::{validate_mapping, ValidationReport};
+pub use engine::{simulate, simulate_with, SimOptions, SimResult};
+pub use validate::{
+    validate_mapping, ComponentError, ValidationReport, CYCLE_MAX_BUDGET, CYCLE_MEAN_BUDGET,
+    ENERGY_MAX_BUDGET, ENERGY_MEAN_BUDGET,
+};

@@ -1,0 +1,148 @@
+//! NoC transfer model for the discrete-event simulator.
+//!
+//! All S2→S1 traffic injects through one shared S2 read port (the
+//! bandwidth the paper's Table 4 budgets as "NoC bandwidth"), modeled as
+//! a single link that serializes messages **in program order** with
+//! head-of-line blocking: a message occupies the link for
+//! `ceil(elems / elems_per_cycle)` cycles, then pays a fixed hop latency
+//! to reach its destination cluster(s).
+//!
+//! Delivery of *shared* operands (one tile, many clusters) depends on
+//! the architecture's [`Delivery`] mode:
+//!
+//! * **Multicast** — one injection, all destinations receive at the same
+//!   time; S2 is read once (spatial reuse, §2.2).
+//! * **Store-and-forward** — one injection, but the packet ripples down
+//!   the chain: destination *i* arrives one serialization delay later
+//!   than destination *i−1*; every copy crosses links, so S2-read
+//!   traffic counts per destination.
+//! * **Unicast** — no multicast, no forwarding: a separate injection per
+//!   destination, each occupying the link in turn.
+//!
+//! Every timing term is `max`/`+`/`ceil` of quantities that are
+//! non-increasing in the link bandwidth, so simulated cycles are
+//! monotone non-increasing in `noc_bytes_per_sec` — asserted by
+//! `tests/sim_validation.rs`.
+
+use crate::arch::{Accelerator, Delivery};
+
+/// Static NoC parameters extracted from an accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct NocModel {
+    /// Elements the injection link moves per cycle.
+    pub elems_per_cycle: f64,
+    /// Fixed injection→arrival latency (cycles).
+    pub hop_latency: u64,
+    /// Shared-operand delivery mode.
+    pub delivery: Delivery,
+}
+
+impl NocModel {
+    pub fn of(acc: &Accelerator) -> Self {
+        Self {
+            elems_per_cycle: acc.config.noc_elems_per_cycle().max(f64::MIN_POSITIVE),
+            hop_latency: acc.noc.hop_latency_cycles(),
+            delivery: acc.noc.delivery(),
+        }
+    }
+
+    /// Link cycles one message of `elems` elements occupies.
+    pub fn occupancy(&self, elems: u64) -> u64 {
+        if elems == 0 {
+            return 0;
+        }
+        ((elems as f64 / self.elems_per_cycle).ceil() as u64).max(1)
+    }
+}
+
+/// The shared S2 injection link: serializes messages in submission order.
+#[derive(Debug, Default)]
+pub struct Link {
+    free_at: u64,
+    busy_cycles: u64,
+}
+
+impl Link {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Transmit a message that became ready at `ready` and occupies the
+    /// link for `occupancy` cycles. Returns `(start, finish)`.
+    pub fn transmit(&mut self, ready: u64, occupancy: u64) -> (u64, u64) {
+        let start = ready.max(self.free_at);
+        let finish = start + occupancy;
+        self.free_at = finish;
+        self.busy_cycles += occupancy;
+        (start, finish)
+    }
+
+    /// Total cycles the link spent occupied.
+    pub fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
+    }
+
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+}
+
+/// Arrival times at each destination for one shared message, given the
+/// link `finish` time. `occupancy` is the message's own serialization
+/// delay (reused as the per-hop ripple delay under store-and-forward).
+pub fn arrival_times(
+    model: &NocModel,
+    finish: u64,
+    occupancy: u64,
+    n_dests: usize,
+) -> impl Iterator<Item = u64> + '_ {
+    let base = finish + model.hop_latency;
+    let skew = match model.delivery {
+        Delivery::Multicast | Delivery::Unicast => 0,
+        Delivery::StoreAndForward => occupancy,
+    };
+    (0..n_dests as u64).map(move |i| base + i * skew)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+
+    #[test]
+    fn occupancy_rounds_up_and_scales_with_bandwidth() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let m = NocModel::of(&acc); // tiny: 4 elems/cycle
+        assert_eq!(m.occupancy(0), 0);
+        assert_eq!(m.occupancy(1), 1);
+        assert_eq!(m.occupancy(4), 1);
+        assert_eq!(m.occupancy(5), 2);
+    }
+
+    #[test]
+    fn link_serializes_in_order() {
+        let mut l = Link::new();
+        let (s1, f1) = l.transmit(0, 10);
+        assert_eq!((s1, f1), (0, 10));
+        // ready earlier than the link frees: head-of-line blocking
+        let (s2, f2) = l.transmit(3, 5);
+        assert_eq!((s2, f2), (10, 15));
+        // ready after the link frees: starts when ready
+        let (s3, _) = l.transmit(40, 2);
+        assert_eq!(s3, 40);
+        assert_eq!(l.busy_cycles(), 17);
+    }
+
+    #[test]
+    fn store_and_forward_skews_arrivals() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let mut m = NocModel::of(&acc);
+        m.delivery = Delivery::StoreAndForward;
+        m.hop_latency = 2;
+        let t: Vec<u64> = arrival_times(&m, 10, 3, 3).collect();
+        assert_eq!(t, vec![12, 15, 18]);
+        m.delivery = Delivery::Multicast;
+        let t: Vec<u64> = arrival_times(&m, 10, 3, 3).collect();
+        assert_eq!(t, vec![12, 12, 12]);
+    }
+}

@@ -1,0 +1,210 @@
+//! PE-cluster geometry and the per-step work plan.
+//!
+//! A mapping's outer loop nest is flattened (in `inter_order`, empty
+//! boundary steps skipped) into a vector of [`StepPlan`]s: each carries
+//! the step's tile ranges, which clusters are active, and each cluster's
+//! compute duration — the critical path over its PEs (1 MAC/cycle) plus
+//! any in-network reduction latency when K is spatial.
+
+use crate::arch::Accelerator;
+use crate::dataflow::{Dim, Mapping};
+use crate::workloads::Gemm;
+
+/// Half-open element range `[start, end)` of one GEMM dim.
+#[derive(Debug, Clone, Copy)]
+pub struct Range {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Range {
+    pub fn len(&self) -> u64 {
+        self.end.saturating_sub(self.start)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+pub(crate) fn dim_of(wl: &Gemm, d: Dim) -> u64 {
+    match d {
+        Dim::M => wl.m,
+        Dim::N => wl.n,
+        Dim::K => wl.k,
+    }
+}
+
+/// Element range of dim `d` covered by outer step `step_idx`.
+pub(crate) fn outer_range(map: &Mapping, wl: &Gemm, pes: u64, d: Dim, step_idx: u64) -> Range {
+    let span = map.step_span(d, pes).max(1);
+    let dim = dim_of(wl, d);
+    let start = (step_idx * span).min(dim);
+    Range {
+        start,
+        end: (start + span).min(dim),
+    }
+}
+
+/// Slice ranges for worker `idx` of `count` along partition dim `d`:
+/// the partition dim is chunked, other dims pass through.
+pub(crate) fn slice_for(
+    (rm, rn, rk): (&Range, &Range, &Range),
+    d: Dim,
+    idx: u64,
+    count: u64,
+) -> (Range, Range, Range) {
+    let chunk = |r: &Range| -> Range {
+        let len = r.len();
+        let per = len.div_ceil(count).max(1);
+        let start = (r.start + idx * per).min(r.end);
+        Range {
+            start,
+            end: (start + per).min(r.end),
+        }
+    };
+    match d {
+        Dim::M => (chunk(rm), *rn, *rk),
+        Dim::N => (*rm, chunk(rn), *rk),
+        Dim::K => (*rm, *rn, chunk(rk)),
+    }
+}
+
+/// One outer step of the flattened schedule.
+#[derive(Debug)]
+pub struct StepPlan {
+    /// Step index per dim, `[m_step, n_step, k_step]`.
+    pub coord: [u64; 3],
+    /// Element ranges this step covers.
+    pub rm: Range,
+    pub rn: Range,
+    pub rk: Range,
+    /// Per-cluster compute duration in cycles (0 = cluster idle).
+    pub duration: Vec<u64>,
+    /// Per-cluster operand-slice footprint (A+B+C elements).
+    pub slice_elems: Vec<u64>,
+}
+
+impl StepPlan {
+    pub fn active(&self, cl: usize) -> bool {
+        self.duration[cl] > 0
+    }
+
+    pub fn active_clusters(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.duration.len()).filter(move |&cl| self.active(cl))
+    }
+}
+
+/// Flatten the outer nest into non-empty steps, in `inter_order`, with
+/// per-cluster durations. Returns `(plan, max_cluster_slice_elems)`.
+pub(crate) fn build_plan(acc: &Accelerator, map: &Mapping, wl: &Gemm) -> (Vec<StepPlan>, u64) {
+    let pes = acc.config.pes;
+    let clusters = map.clusters(pes);
+    let lambda = map.cluster_size;
+    let order = map.inter_order;
+    let steps = crate::cost::steps_for(map, wl, pes);
+    let idx_of = |d: Dim| order.position(d);
+    let counts = [
+        steps[order.0[0] as usize],
+        steps[order.0[1] as usize],
+        steps[order.0[2] as usize],
+    ];
+    // in-network reduction latencies when K is spatial at either level
+    let red_intra = if map.intra_spatial == Dim::K {
+        acc.noc.reduction_latency(lambda)
+    } else {
+        0
+    };
+    let red_inter = if map.inter_spatial == Dim::K {
+        acc.noc.reduction_latency(clusters)
+    } else {
+        0
+    };
+
+    let mut plan = Vec::new();
+    let mut max_slice = 0u64;
+    for i0 in 0..counts[0] {
+        for i1 in 0..counts[1] {
+            for i2 in 0..counts[2] {
+                let step_of = |d: Dim| [i0, i1, i2][idx_of(d)];
+                let rm = outer_range(map, wl, pes, Dim::M, step_of(Dim::M));
+                let rn = outer_range(map, wl, pes, Dim::N, step_of(Dim::N));
+                let rk = outer_range(map, wl, pes, Dim::K, step_of(Dim::K));
+                if rm.is_empty() || rn.is_empty() || rk.is_empty() {
+                    continue;
+                }
+                let mut duration = vec![0u64; clusters as usize];
+                let mut slice_elems = vec![0u64; clusters as usize];
+                for cl in 0..clusters {
+                    let (cm, cn, ck) =
+                        slice_for((&rm, &rn, &rk), map.inter_spatial, cl, clusters);
+                    if cm.is_empty() || cn.is_empty() || ck.is_empty() {
+                        continue;
+                    }
+                    let mut pe_max = 0u64;
+                    for pe in 0..lambda {
+                        let (pm, pn, pk) =
+                            slice_for((&cm, &cn, &ck), map.intra_spatial, pe, lambda);
+                        pe_max = pe_max.max(pm.len() * pn.len() * pk.len());
+                    }
+                    if pe_max > 0 {
+                        duration[cl as usize] = pe_max + red_intra + red_inter;
+                    }
+                    let fp = cm.len() * ck.len() + ck.len() * cn.len() + cm.len() * cn.len();
+                    slice_elems[cl as usize] = fp;
+                    max_slice = max_slice.max(fp);
+                }
+                plan.push(StepPlan {
+                    coord: [step_of(Dim::M), step_of(Dim::N), step_of(Dim::K)],
+                    rm,
+                    rn,
+                    rk,
+                    duration,
+                    slice_elems,
+                });
+            }
+        }
+    }
+    (plan, max_slice)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::dataflow::{LoopOrder, Tiles};
+
+    #[test]
+    fn plan_covers_every_mac_exactly_once_in_durations() {
+        // fig-5 style schedule on the tiny config
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let wl = Gemm::new("t", 4, 4, 4);
+        let map = Mapping {
+            inter_order: LoopOrder::MNK,
+            intra_order: LoopOrder::MNK,
+            inter_spatial: Dim::N,
+            intra_spatial: Dim::K,
+            cluster_size: 4,
+            outer: Tiles::new(1, 1, 4),
+            inner: Tiles::new(1, 1, 1),
+        };
+        let (plan, max_slice) = build_plan(&acc, &map, &wl);
+        assert!(!plan.is_empty());
+        assert!(max_slice > 0);
+        for s in &plan {
+            assert!(s.active_clusters().count() > 0, "no empty steps in plan");
+            assert!(!s.rm.is_empty() && !s.rn.is_empty() && !s.rk.is_empty());
+        }
+    }
+
+    #[test]
+    fn boundary_steps_clamp_ranges() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::tiny());
+        let wl = Gemm::new("ragged", 5, 7, 3);
+        let best = crate::flash::search(&acc, &wl).unwrap();
+        let (plan, _) = build_plan(&acc, best.mapping(), &wl);
+        for s in &plan {
+            assert!(s.rm.end <= wl.m && s.rn.end <= wl.n && s.rk.end <= wl.k);
+        }
+    }
+}

@@ -10,7 +10,7 @@ use flash_gemm::cost::CostModel;
 use flash_gemm::dataflow::LoopOrder;
 use flash_gemm::flash::{self, candidates, inner_bound, outer_bound_fixed, outer_bound_maeri};
 use flash_gemm::prop::{forall, Gen};
-use flash_gemm::sim::simulate;
+use flash_gemm::sim::{simulate, simulate_with, SimOptions};
 use flash_gemm::workloads::Gemm;
 
 fn random_style(g: &mut Gen) -> Style {
@@ -158,6 +158,97 @@ fn prop_sim_functional_coverage() {
             (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
             "{style} {wl}: {got} vs {want}"
         );
+    });
+}
+
+/// Simulated S2→S1 transfer traffic is physically bounded: at least the
+/// compulsory tile traffic (every operand element crosses the NoC at
+/// least once to be computed on), and — when no capacity evictions
+/// occurred — at most the analytical model's revisit-clamped prediction
+/// (the model is deliberately conservative about revisits).
+#[test]
+fn prop_sim_traffic_between_compulsory_and_model_bound() {
+    forall(30, 0x7AFF1C, |g| {
+        let style = random_style(g);
+        let wl = Gemm::new("traf", g.u64_in(2, 24), g.u64_in(2, 24), g.u64_in(2, 24));
+        let acc = Accelerator::of_style(style, HwConfig::tiny());
+        let best = flash::search(&acc, &wl).expect("search");
+        let a: Vec<f32> = (0..wl.m * wl.k).map(|i| (i % 13) as f32).collect();
+        let b: Vec<f32> = (0..wl.k * wl.n).map(|i| (i % 7) as f32).collect();
+        let r = simulate(&acc, best.mapping(), &wl, &a, &b);
+        // compulsory: every A/B element is consumed by some PE, so it
+        // must cross S2→S1 at least once
+        assert!(
+            r.s2_reads.a >= wl.m * wl.k,
+            "{style} {wl}: A traffic {} < compulsory {}",
+            r.s2_reads.a,
+            wl.m * wl.k
+        );
+        assert!(
+            r.s2_reads.b >= wl.k * wl.n,
+            "{style} {wl}: B traffic {} < compulsory {}",
+            r.s2_reads.b,
+            wl.k * wl.n
+        );
+        // without capacity pressure, emergent reuse can only *save*
+        // traffic relative to the analytical revisit bound
+        if r.s1_evictions == 0 && r.s2_evictions == 0 {
+            let model = CostModel::new(acc.clone()).evaluate(best.mapping(), &wl);
+            for (name, sim, bound) in [
+                ("A", r.s2_reads.a, model.accesses.s2_reads.a),
+                ("B", r.s2_reads.b, model.accesses.s2_reads.b),
+                ("C", r.s2_reads.c, model.accesses.s2_reads.c),
+            ] {
+                assert!(
+                    sim <= bound,
+                    "{style} {wl}: sim {name} traffic {sim} exceeds model bound {bound}"
+                );
+            }
+        }
+    });
+}
+
+/// Timing must not leak into function: under any NoC bandwidth and any
+/// pipeline-fill/exec-tile option, every MAC executes exactly once
+/// (asserted inside the simulator) and the produced C is bit-identical
+/// across all variants — event interleaving only moves *when* things
+/// happen, never *what* is computed.
+#[test]
+fn prop_sim_function_invariant_under_timing() {
+    forall(20, 0xB17F00D, |g| {
+        let style = random_style(g);
+        let wl = Gemm::new("tim", g.u64_in(1, 16), g.u64_in(1, 16), g.u64_in(1, 16));
+        let base = Accelerator::of_style(style, HwConfig::tiny());
+        let best = flash::search(&base, &wl).expect("search");
+        let a: Vec<f32> = (0..wl.m * wl.k).map(|i| (i % 19) as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..wl.k * wl.n).map(|i| (i % 23) as f32 * 0.25).collect();
+        let mut reference: Option<Vec<f32>> = None;
+        for bw_mult in [1u64, 8] {
+            let mut cfg = HwConfig::tiny();
+            cfg.noc_bytes_per_sec *= bw_mult;
+            let acc = Accelerator::of_style(style, cfg);
+            for fill in [0u64, 4, 64] {
+                let r = simulate_with(
+                    &acc,
+                    best.mapping(),
+                    &wl,
+                    &a,
+                    &b,
+                    &SimOptions {
+                        exec_tile: None,
+                        pipeline_fill: fill,
+                    },
+                );
+                assert_eq!(r.macs, wl.macs(), "{style} {wl}");
+                match &reference {
+                    None => reference = Some(r.c),
+                    Some(want) => assert_eq!(
+                        &r.c, want,
+                        "{style} {wl}: C changed under bw x{bw_mult}, fill {fill}"
+                    ),
+                }
+            }
+        }
     });
 }
 
