@@ -18,6 +18,12 @@
 //! (`BENCH_executor.json`, `BENCH_search.json`, `BENCH_engine.json`,
 //! `BENCH_sim.json`) from the current directory.
 //!
+//! A missing or unparseable record, a record without a `bench` name,
+//! and an unparseable baseline each become a **failing row with a
+//! per-file diagnostic** — the table still renders every other record,
+//! and the gate exits nonzero. A gate that silently skipped a corrupt
+//! artifact would pass CI on exactly the runs it exists to catch.
+//!
 //! `--promote` writes each current record over its baseline, but **only**
 //! when that baseline is missing or `"provisional": true` — measured CI
 //! numbers replace the null-metric seeds exactly once, after which the
@@ -211,6 +217,67 @@ fn load_json(path: &std::path::Path) -> Result<Value> {
     serde_json::from_str(&text).with_context(|| format!("parsing {}", path.display()))
 }
 
+/// A failing row carrying a per-file diagnostic instead of a metric.
+fn diagnostic_row(label: &str, note: String) -> Row {
+    Row {
+        bench: label.to_string(),
+        metric: "?",
+        baseline: None,
+        current: None,
+        status: Status::Fail,
+        note,
+    }
+}
+
+/// One gateable record with its baseline (if any) and the baseline's
+/// path (for `--promote`).
+#[derive(Debug)]
+struct LoadedRecord {
+    record: Value,
+    baseline: Option<Value>,
+    base_path: PathBuf,
+}
+
+/// Load a record and its baseline, mapping every failure mode —
+/// missing record, corrupt record, nameless record, corrupt baseline —
+/// to a failing diagnostic row so one bad artifact can't abort or
+/// silently pass the whole gate.
+fn load_for_gate(path: &std::path::Path, history: &std::path::Path) -> Result<LoadedRecord, Row> {
+    let label = path.display().to_string();
+    if !path.exists() {
+        return Err(diagnostic_row(&label, "record file missing".into()));
+    }
+    let record = match load_json(path) {
+        Ok(v) => v,
+        Err(e) => return Err(diagnostic_row(&label, format!("unreadable record: {e:#}"))),
+    };
+    let Some(bench) = record.get("bench").and_then(Value::as_str).map(str::to_string) else {
+        return Err(diagnostic_row(
+            &label,
+            "record has no \"bench\" field (bad envelope)".into(),
+        ));
+    };
+    let base_path = history.join(format!("{bench}-baseline.json"));
+    let baseline = if base_path.exists() {
+        match load_json(&base_path) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                return Err(diagnostic_row(
+                    &bench,
+                    format!("unreadable baseline: {e:#}"),
+                ))
+            }
+        }
+    } else {
+        None
+    };
+    Ok(LoadedRecord {
+        record,
+        baseline,
+        base_path,
+    })
+}
+
 fn main() -> Result<()> {
     let mut history = default_history_dir();
     let mut promote = false;
@@ -239,31 +306,27 @@ fn main() -> Result<()> {
 
     let mut rows = Vec::new();
     for path in &records {
-        if !path.exists() {
-            println!("bench_gate: {} not found — skipped", path.display());
-            continue;
-        }
-        let record = load_json(path)?;
-        let bench = record.get("bench").and_then(Value::as_str).unwrap_or("?");
-        let base_path = history.join(format!("{bench}-baseline.json"));
-        let baseline = if base_path.exists() {
-            Some(load_json(&base_path)?)
-        } else {
-            None
+        let loaded = match load_for_gate(path, &history) {
+            Ok(l) => l,
+            Err(row) => {
+                println!("bench_gate: {}: {}", row.bench, row.note);
+                rows.push(row);
+                continue;
+            }
         };
-        if promote && should_promote(baseline.as_ref()) {
-            let body = serde_json::to_string_pretty(&record)?;
+        if promote && should_promote(loaded.baseline.as_ref()) {
+            let body = serde_json::to_string_pretty(&loaded.record)?;
             std::fs::create_dir_all(&history)
-                .and_then(|()| std::fs::write(&base_path, &body))
-                .with_context(|| format!("promoting baseline {}", base_path.display()))?;
+                .and_then(|()| std::fs::write(&loaded.base_path, &body))
+                .with_context(|| format!("promoting baseline {}", loaded.base_path.display()))?;
             println!(
                 "bench_gate: promoted {} over {} baseline {}",
                 path.display(),
-                if baseline.is_some() { "provisional" } else { "missing" },
-                base_path.display()
+                if loaded.baseline.is_some() { "provisional" } else { "missing" },
+                loaded.base_path.display()
             );
         }
-        rows.push(gate(&record, baseline.as_ref()));
+        rows.push(gate(&loaded.record, loaded.baseline.as_ref()));
     }
 
     let table = markdown_table(&rows);
@@ -278,8 +341,12 @@ fn main() -> Result<()> {
         writeln!(f, "## Bench gate\n\n{table}")?;
     }
 
-    if rows.iter().any(|r| r.status == Status::Fail) {
-        anyhow::bail!("bench gate failed: throughput regressed >25% vs baseline");
+    let fails = rows.iter().filter(|r| r.status == Status::Fail).count();
+    if fails > 0 {
+        anyhow::bail!(
+            "bench gate failed: {fails} failing record(s) — regression >25% vs baseline, \
+             or a missing/corrupt artifact (see table)"
+        );
     }
     Ok(())
 }
@@ -371,6 +438,80 @@ mod tests {
             "metrics": {"sim_macs_per_sec": 1e6}
         });
         assert!(!should_promote(Some(&explicit_false)));
+    }
+
+    #[test]
+    fn missing_and_corrupt_artifacts_become_failing_rows() {
+        let dir = std::env::temp_dir().join("bench_gate_harden_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let history = dir.join("history");
+        std::fs::create_dir_all(&history).unwrap();
+
+        // missing record file
+        let row = load_for_gate(&dir.join("BENCH_nope.json"), &history).unwrap_err();
+        assert_eq!(row.status, Status::Fail);
+        assert!(row.note.contains("missing"), "{}", row.note);
+        assert!(row.bench.contains("BENCH_nope.json"), "{}", row.bench);
+
+        // corrupt record JSON
+        let corrupt = dir.join("BENCH_corrupt.json");
+        std::fs::write(&corrupt, "{not json").unwrap();
+        let row = load_for_gate(&corrupt, &history).unwrap_err();
+        assert_eq!(row.status, Status::Fail);
+        assert!(row.note.contains("unreadable record"), "{}", row.note);
+        assert!(row.note.contains("BENCH_corrupt.json"), "{}", row.note);
+
+        // record without a bench name
+        let nameless = dir.join("BENCH_nameless.json");
+        std::fs::write(&nameless, r#"{"metrics": {}}"#).unwrap();
+        let row = load_for_gate(&nameless, &history).unwrap_err();
+        assert_eq!(row.status, Status::Fail);
+        assert!(row.note.contains("bench"), "{}", row.note);
+
+        // corrupt baseline next to a good record
+        let rec = dir.join("BENCH_engine.json");
+        std::fs::write(
+            &rec,
+            record("engine", "shuffled_reqs_per_sec", 10.0).to_string(),
+        )
+        .unwrap();
+        std::fs::write(history.join("engine-baseline.json"), "]]").unwrap();
+        let row = load_for_gate(&rec, &history).unwrap_err();
+        assert_eq!(row.status, Status::Fail);
+        assert!(row.note.contains("unreadable baseline"), "{}", row.note);
+        assert_eq!(row.bench, "engine");
+
+        // repaired baseline: the same pair loads and gates cleanly
+        std::fs::write(
+            history.join("engine-baseline.json"),
+            record("engine", "shuffled_reqs_per_sec", 9.0).to_string(),
+        )
+        .unwrap();
+        let loaded = load_for_gate(&rec, &history).expect("good pair loads");
+        assert_eq!(
+            gate(&loaded.record, loaded.baseline.as_ref()).status,
+            Status::Pass
+        );
+        // and a record with no baseline file still passes ungated
+        let fresh = dir.join("BENCH_search.json");
+        std::fs::write(&fresh, record("search", "searches_per_sec", 5.0).to_string()).unwrap();
+        let loaded = load_for_gate(&fresh, &history).expect("record without baseline loads");
+        assert!(loaded.baseline.is_none());
+        let r = gate(&loaded.record, None);
+        assert_eq!(r.status, Status::Pass);
+        assert!(r.note.contains("no baseline"), "{}", r.note);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn diagnostic_rows_render_in_the_table() {
+        let rows = vec![diagnostic_row(
+            "BENCH_engine.json",
+            "record file missing".into(),
+        )];
+        let t = markdown_table(&rows);
+        assert!(t.contains("record file missing"), "{t}");
+        assert!(t.contains("fail"), "{t}");
     }
 
     #[test]

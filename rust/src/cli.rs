@@ -72,6 +72,13 @@ impl Args {
         }
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
     pub fn config(&self) -> Result<HwConfig> {
         match self.get("config").unwrap_or("edge").to_ascii_lowercase().as_str() {
             "edge" => Ok(HwConfig::edge()),
@@ -150,6 +157,71 @@ pub fn resolve_spec(value: &str) -> Result<ArchSpec> {
     )
 }
 
+/// The flags each subcommand accepts; `None` means the subcommand
+/// itself is unknown (the dispatcher reports that separately). Keeping
+/// this next to the dispatcher means a typo'd flag fails fast with the
+/// valid set instead of silently running on defaults.
+fn valid_flags(command: &str) -> Option<&'static [&'static str]> {
+    Some(match command {
+        "table2" | "table3" | "table4" | "table5" | "fig9" | "validate" | "help" | "" => &[],
+        "table6" => &["workload", "config", "m", "n", "k"],
+        "pruning" => &["workload", "config", "m", "n", "k", "style", "arch"],
+        "fig7" => &["config", "bins"],
+        "fig8" => &["config", "workloads"],
+        "fig10" | "summa" => &["config"],
+        "resnet" => &["config", "batch"],
+        "search" => &["style", "arch", "config", "workload", "m", "n", "k", "format"],
+        "pareto" => &["style", "arch", "config", "workload", "m", "n", "k", "weight"],
+        "route" => &["objective", "config", "arch"],
+        "sweep-cluster" | "export-mapping" => {
+            &["style", "arch", "config", "workload", "m", "n", "k"]
+        }
+        "validate-model" => &["quick", "out", "format"],
+        "arch" => &["arch", "config"],
+        "serve" => &[
+            "trace",
+            "random",
+            "seed",
+            "verify",
+            "style",
+            "arch",
+            "config",
+            "max-exec-dim",
+            "tile",
+            "listen",
+            "max-conns",
+            "queue-depth",
+            "batch-max",
+            "batch-window-ms",
+            "reply-timeout-ms",
+            "max-frame",
+            "frame-timeout-ms",
+            "idle-timeout-ms",
+            "fault-seed",
+            "fault-exec-error",
+            "fault-exec-panic",
+            "fault-drop-response",
+            "fault-plan-delay-ms",
+            "fault-exec-delay-ms",
+        ],
+        "loadgen" => &[
+            "addr",
+            "requests",
+            "rate",
+            "conns",
+            "seed",
+            "deadline-ms",
+            "verify",
+            "return-result",
+            "garble",
+            "shutdown",
+            "out",
+            "timeout-ms",
+        ],
+        _ => return None,
+    })
+}
+
 const HELP: &str = "\
 repro — FLASH + MAESTRO-BLAS reproduction (CS.DC 2021)
 
@@ -189,6 +261,17 @@ tools:
   validate-model       fig-8-grid model-vs-simulator sweep, 7 architectures
                        [--quick] [--out report.json] [--format json]
   serve                GEMM service      [--trace FILE | --random N] [--verify true] [--style|--arch --config]
+                       with --listen HOST:PORT: network server (length-prefixed
+                       JSON frames) with bounded admission, deadlines, graceful
+                       drain on SIGTERM/CTRL-C or a shutdown frame, and
+                       deterministic fault injection [--max-conns 32]
+                       [--queue-depth 256] [--batch-max 64] [--batch-window-ms 2]
+                       [--fault-seed N --fault-exec-error P --fault-exec-panic P
+                        --fault-drop-response P --fault-exec-delay-ms MS]
+  loadgen              open-loop client for `serve --listen`  [--addr HOST:PORT]
+                       [--requests 64] [--rate RPS] [--conns 4] [--deadline-ms MS]
+                       [--verify] [--return-result] [--garble P] [--shutdown]
+                       [--out BENCH_serve.json]
   help                 this text
 ";
 
@@ -203,6 +286,34 @@ pub fn run(args: Args) -> Result<String> {
             args.positional,
             args.command
         );
+    }
+    // same fail-fast contract for flags: a typo'd or misplaced flag is
+    // rejected with the subcommand's valid set, never silently ignored
+    if let Some(valid) = valid_flags(&args.command) {
+        let mut unknown: Vec<&str> = args
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !valid.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            unknown.sort_unstable();
+            let unknown: Vec<String> = unknown.iter().map(|k| format!("--{k}")).collect();
+            let catalog = if valid.is_empty() {
+                "none".to_string()
+            } else {
+                valid
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            bail!(
+                "unknown flag(s) {} for {:?} (valid flags: {catalog})",
+                unknown.join(" "),
+                args.command
+            );
+        }
     }
     match args.command.as_str() {
         "table2" => Ok(experiments::table2().render()),
@@ -412,6 +523,7 @@ pub fn run(args: Args) -> Result<String> {
         }
         "arch" => arch_cmd(&args),
         "serve" => serve(&args),
+        "loadgen" => loadgen(&args),
         "help" | "" => Ok(HELP.to_string()),
         other => bail!("unknown command {other:?}\n\n{HELP}"),
     }
@@ -501,8 +613,129 @@ fn arch_cmd(args: &Args) -> Result<String> {
     }
 }
 
+/// Build the serving engine shared by the in-process replay and the
+/// network front-end: accelerator from flags, AOT artifacts when
+/// built, synthetic native tiles otherwise.
+fn serve_engine(args: &Args) -> Result<crate::engine::Engine> {
+    let acc = args.accelerator()?;
+    // Prefer the AOT artifacts when built; otherwise serve through the
+    // native interpreter over a synthetic tile set.
+    let dir = default_artifacts_dir();
+    let runtime = if dir.join("manifest.txt").exists() {
+        Runtime::load(&dir)?
+    } else {
+        Runtime::native(Manifest::synthetic(&[16, 32, 64]))
+    };
+    crate::engine::Engine::builder()
+        .accelerator(acc)
+        .runtime(runtime)
+        .max_exec_dim(args.get_u64("max-exec-dim", 512)?)
+        .tile(args.get_u64("tile", 0)?)
+        .faults(fault_plan(args)?)
+        .build()
+}
+
+/// Deterministic fault plan from the `--fault-*` flags (inert when
+/// none are given).
+fn fault_plan(args: &Args) -> Result<crate::engine::FaultPlan> {
+    Ok(crate::engine::FaultPlan {
+        seed: args.get_u64("fault-seed", 0xF417)?,
+        exec_error: args.get_f64("fault-exec-error", 0.0)?,
+        exec_panic: args.get_f64("fault-exec-panic", 0.0)?,
+        drop_response: args.get_f64("fault-drop-response", 0.0)?,
+        plan_delay: std::time::Duration::from_millis(args.get_u64("fault-plan-delay-ms", 0)?),
+        exec_delay: std::time::Duration::from_millis(args.get_u64("fault-exec-delay-ms", 0)?),
+    })
+}
+
+/// `repro serve --listen HOST:PORT` — the network front-end. Blocks
+/// until graceful drain (SIGTERM, CTRL-C, or a `shutdown` frame) and
+/// returns the final cumulative metrics.
+fn serve_network(args: &Args, listen: &str) -> Result<String> {
+    use crate::serve::{serve_listener, signals, ServeConfig};
+    let engine = serve_engine(args)?;
+    let mut config = ServeConfig {
+        listen: listen.to_string(),
+        max_conns: args.get_u64("max-conns", 32)? as usize,
+        queue_depth: args.get_u64("queue-depth", 256)? as usize,
+        batch_max: args.get_u64("batch-max", 64)? as usize,
+        batch_window: std::time::Duration::from_millis(args.get_u64("batch-window-ms", 2)?),
+        reply_timeout: std::time::Duration::from_millis(
+            args.get_u64("reply-timeout-ms", 30_000)?,
+        ),
+        ..ServeConfig::default()
+    };
+    config.limits.max_frame = args.get_u64("max-frame", 256 * 1024)? as usize;
+    config.limits.frame_timeout =
+        std::time::Duration::from_millis(args.get_u64("frame-timeout-ms", 5_000)?);
+    config.limits.idle_timeout =
+        std::time::Duration::from_millis(args.get_u64("idle-timeout-ms", 30_000)?);
+    let listener = std::net::TcpListener::bind(&config.listen)
+        .with_context(|| format!("bind {}", config.listen))?;
+    signals::install();
+    eprintln!(
+        "serving on {} (drain with SIGTERM/CTRL-C or a shutdown frame)",
+        listener.local_addr()?
+    );
+    let metrics = serve_listener(listener, engine, &config)?;
+    Ok(format!(
+        "drained: {}\nthroughput: {}\nlatency: {}\n",
+        metrics.serving_summary(),
+        metrics.throughput_summary(),
+        metrics.latency.summary()
+    ))
+}
+
+/// `repro loadgen` — open-loop client for `serve --listen`.
+fn loadgen(args: &Args) -> Result<String> {
+    use crate::serve::loadgen::{run as run_load, write_report};
+    use crate::serve::LoadgenConfig;
+    let mut cfg = LoadgenConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7474").to_string(),
+        requests: args.get_u64("requests", 64)?,
+        rate: args.get_f64("rate", 0.0)?,
+        conns: args.get_u64("conns", 4)? as usize,
+        seed: args.get_u64("seed", crate::engine::DEFAULT_SEED)?,
+        deadline_ms: match args.get("deadline-ms") {
+            Some(v) => Some(v.parse().with_context(|| format!("--deadline-ms {v:?}"))?),
+            None => None,
+        },
+        verify: args.flag("verify"),
+        return_result: args.flag("return-result"),
+        garble: args.get_f64("garble", 0.0)?,
+        shutdown: args.flag("shutdown"),
+        ..LoadgenConfig::default()
+    };
+    let timeout = std::time::Duration::from_millis(args.get_u64("timeout-ms", 10_000)?);
+    cfg.limits.frame_timeout = timeout;
+    cfg.limits.idle_timeout = timeout;
+    cfg.limits.write_timeout = timeout;
+    let report = run_load(&cfg)?;
+    if let Some(out) = args.get("out") {
+        write_report(&report, Path::new(out))?;
+    }
+    let taxonomy: Vec<String> = report
+        .taxonomy
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    Ok(format!(
+        "{}\ntaxonomy: [{}]\nnoise: sent={} acked={}\naccounted={} drain_acked={}\n",
+        report.summary(),
+        taxonomy.join(" "),
+        report.noise_sent,
+        report.noise_acked,
+        report.accounted(),
+        report.drain_acked
+    ))
+}
+
 fn serve(args: &Args) -> Result<String> {
-    use crate::engine::{Engine, Query, DEFAULT_SEED};
+    use crate::engine::{Query, DEFAULT_SEED};
+
+    if let Some(listen) = args.get("listen") {
+        return serve_network(args, listen);
+    }
 
     let requests: Vec<Gemm> = if let Some(path) = args.get("trace") {
         read_trace(std::path::Path::new(path))?
@@ -520,21 +753,7 @@ fn serve(args: &Args) -> Result<String> {
             })
             .collect()
     };
-    let acc = args.accelerator()?;
-    // Prefer the AOT artifacts when built; otherwise serve through the
-    // native interpreter over a synthetic tile set.
-    let dir = default_artifacts_dir();
-    let runtime = if dir.join("manifest.txt").exists() {
-        Runtime::load(&dir)?
-    } else {
-        Runtime::native(Manifest::synthetic(&[16, 32, 64]))
-    };
-    let mut engine = Engine::builder()
-        .accelerator(acc)
-        .runtime(runtime)
-        .max_exec_dim(args.get_u64("max-exec-dim", 512)?)
-        .tile(args.get_u64("tile", 0)?)
-        .build()?;
+    let mut engine = serve_engine(args)?;
     let verify = args.get("verify").map(|v| v == "true").unwrap_or(false);
     // one submission window: same-shape requests coalesce across the
     // whole trace, not just consecutive runs
@@ -742,6 +961,50 @@ mod tests {
         let on_disk = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(on_disk, out);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_the_valid_set() {
+        // typo'd flag on a flag-taking command: lists the valid flags
+        let err = run(Args::parse(["search", "--stile", "tpu"].map(String::from)).unwrap());
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("--stile"), "{err}");
+        assert!(err.contains("--style") && err.contains("--arch"), "{err}");
+        assert!(err.contains("\"search\""), "{err}");
+
+        // flag on a flagless command: says so explicitly
+        let err = run(Args::parse(["table2", "--config", "edge"].map(String::from)).unwrap());
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("--config") && err.contains("none"), "{err}");
+
+        // multiple unknown flags are all reported, sorted
+        let err = run(Args::parse(
+            ["fig7", "--zz", "1", "--aa", "2"].map(String::from),
+        )
+        .unwrap());
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("--aa --zz"), "{err}");
+
+        // loadgen flags are validated before any network activity
+        let err = run(Args::parse(["loadgen", "--bogus"].map(String::from)).unwrap());
+        let err = format!("{:#}", err.unwrap_err());
+        assert!(err.contains("--bogus") && err.contains("--requests"), "{err}");
+
+        // valid flags still pass the gate (and the command runs)
+        assert!(run(Args::parse(["fig7", "--bins", "10"].map(String::from)).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn every_dispatched_command_has_a_flag_table() {
+        // the dispatcher and the flag table must not drift apart
+        for cmd in [
+            "table2", "table3", "table4", "table5", "table6", "pruning", "fig7", "fig8",
+            "fig9", "fig10", "search", "pareto", "route", "summa", "resnet", "sweep-cluster",
+            "export-mapping", "validate", "validate-model", "arch", "serve", "loadgen", "help",
+        ] {
+            assert!(valid_flags(cmd).is_some(), "no flag table for {cmd}");
+        }
+        assert!(valid_flags("definitely-not-a-command").is_none());
     }
 
     #[test]

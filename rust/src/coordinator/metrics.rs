@@ -76,6 +76,17 @@ pub struct ServiceMetrics {
     pub macs_executed: u64,
     /// Tile-kernel invocations across all executed requests.
     pub tile_calls: u64,
+    /// Queries shed because their deadline expired before execution
+    /// (the work was never run).
+    pub shed_deadline: u64,
+    /// Requests rejected at admission because the serving queue was
+    /// full (load shedding under saturation).
+    pub shed_overload: u64,
+    /// Queries that failed with a typed per-query error (infeasible,
+    /// injected fault, caught worker panic, executor failure).
+    pub errors: u64,
+    /// Graceful-drain events completed (server-side).
+    pub drains: u64,
     pub latency: LatencyStats,
     pub search_time: Duration,
     /// Wall-clock time spent in numeric execution. Batched same-shape
@@ -96,6 +107,10 @@ impl ServiceMetrics {
         self.mapping_cache_misses += other.mapping_cache_misses;
         self.macs_executed += other.macs_executed;
         self.tile_calls += other.tile_calls;
+        self.shed_deadline += other.shed_deadline;
+        self.shed_overload += other.shed_overload;
+        self.errors += other.errors;
+        self.drains += other.drains;
         self.latency.merge(&other.latency);
         self.search_time += other.search_time;
         self.exec_time += other.exec_time;
@@ -127,6 +142,15 @@ impl ServiceMetrics {
             self.exec_throughput_gflops(),
             self.exec_tiles_per_sec(),
             self.exec_time
+        )
+    }
+
+    /// One-line serving outcome summary (success / shed / error
+    /// taxonomy) — printed by the server on graceful drain.
+    pub fn serving_summary(&self) -> String {
+        format!(
+            "served={} shed_deadline={} shed_overload={} errors={} drains={}",
+            self.requests, self.shed_deadline, self.shed_overload, self.errors, self.drains
         )
     }
 }
@@ -175,6 +199,10 @@ mod tests {
             mapping_cache_misses: 2,
             macs_executed: 50,
             tile_calls: 6,
+            shed_deadline: 2,
+            shed_overload: 4,
+            errors: 1,
+            drains: 1,
             exec_time: Duration::from_millis(3),
             ..Default::default()
         };
@@ -183,6 +211,11 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.requests, 5);
         assert_eq!(a.batches, 3);
+        assert_eq!(a.shed_deadline, 2);
+        assert_eq!(a.shed_overload, 4);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.drains, 1);
+        assert!(a.serving_summary().contains("shed_overload=4"));
         assert_eq!(a.mapping_cache_hits, 1);
         assert_eq!(a.mapping_cache_misses, 2);
         assert_eq!(a.macs_executed, 150);

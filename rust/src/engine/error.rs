@@ -1,0 +1,103 @@
+//! Typed errors for the serving path.
+//!
+//! The engine's batch pipeline never aborts a whole submission window
+//! because one query failed: every query gets its own
+//! `Result<Response, EngineError>` (see `Engine::try_run`), and the
+//! serving front-end maps each variant onto a wire-level error kind.
+//! `EngineError` is `Clone` because a group-level failure (e.g. an
+//! infeasible plan) fans out to every member of the coalesced group.
+
+/// Why one query could not be served. One query's error never affects
+/// the other queries in its coalesced batch.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum EngineError {
+    /// No accelerator in the pool has a feasible mapping for the shape.
+    #[error("no accelerator in the pool can run {workload}: {reason}")]
+    Infeasible { workload: String, reason: String },
+    /// The shape is degenerate or its element/MAC counts overflow.
+    #[error("invalid shape for {workload}: {detail}")]
+    DimensionOverflow { workload: String, detail: String },
+    /// The query's deadline expired before `stage` ran; the work was
+    /// shed, never executed.
+    #[error("deadline exceeded before {stage}")]
+    DeadlineExceeded { stage: &'static str },
+    /// A fault-plan-injected executor error (testing only).
+    #[error("injected fault: {0}")]
+    Injected(String),
+    /// A worker panicked mid-execution; the panic was caught and only
+    /// this query failed.
+    #[error("worker panic: {0}")]
+    WorkerPanic(String),
+    /// The execution backend failed (missing artifact, packing error).
+    #[error("execution failed: {0}")]
+    Exec(String),
+}
+
+impl EngineError {
+    /// Stable machine-readable kind string (the wire protocol's error
+    /// taxonomy uses these verbatim).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::Infeasible { .. } => "infeasible",
+            EngineError::DimensionOverflow { .. } => "unknown_shape",
+            EngineError::DeadlineExceeded { .. } => "deadline_exceeded",
+            EngineError::Injected(_) => "injected_fault",
+            EngineError::WorkerPanic(_) => "worker_panic",
+            EngineError::Exec(_) => "exec_failed",
+        }
+    }
+
+    /// `true` for load-shedding outcomes (the work was intentionally
+    /// not performed), as opposed to genuine failures.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, EngineError::DeadlineExceeded { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_shed_classification() {
+        let cases: Vec<(EngineError, &str, bool)> = vec![
+            (
+                EngineError::Infeasible {
+                    workload: "w".into(),
+                    reason: "r".into(),
+                },
+                "infeasible",
+                false,
+            ),
+            (
+                EngineError::DimensionOverflow {
+                    workload: "w".into(),
+                    detail: "zero".into(),
+                },
+                "unknown_shape",
+                false,
+            ),
+            (
+                EngineError::DeadlineExceeded { stage: "execute" },
+                "deadline_exceeded",
+                true,
+            ),
+            (EngineError::Injected("x".into()), "injected_fault", false),
+            (EngineError::WorkerPanic("p".into()), "worker_panic", false),
+            (EngineError::Exec("e".into()), "exec_failed", false),
+        ];
+        for (e, kind, shed) in cases {
+            assert_eq!(e.kind(), kind);
+            assert_eq!(e.is_shed(), shed, "{e}");
+            // every variant displays its payload
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        let e = EngineError::DeadlineExceeded { stage: "execute" };
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("deadline"));
+    }
+}

@@ -2,6 +2,7 @@
 //! execution fan-out.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -15,6 +16,8 @@ use crate::flash::{self, EvaluatedMapping, MappingCache, SearchOpts, SearchResul
 use crate::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
 use crate::workloads::Gemm;
 
+use super::error::EngineError;
+use super::faults::{domain, FaultPlan};
 use super::query::{Query, Response};
 
 /// Stage-1 output: the objective-aware selection for one shape over the
@@ -50,6 +53,31 @@ pub struct EngineReport {
     pub metrics: ServiceMetrics,
 }
 
+/// What one [`Engine::try_run`] window produced: a per-query outcome
+/// (in submission order — one query's failure never disturbs the
+/// others) plus the window's own metrics. This is the serving-path
+/// sibling of [`EngineReport`].
+#[derive(Debug)]
+pub struct EngineWindow {
+    /// One outcome per submitted query, submission order.
+    pub outcomes: Vec<Result<Response, EngineError>>,
+    /// The window's metrics (already merged into the engine's
+    /// cumulative [`Engine::metrics`]).
+    pub metrics: ServiceMetrics,
+}
+
+impl EngineWindow {
+    /// Number of successfully answered queries.
+    pub fn ok_count(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.is_ok()).count()
+    }
+
+    /// Number of failed/shed queries.
+    pub fn err_count(&self) -> usize {
+        self.outcomes.len() - self.ok_count()
+    }
+}
+
 /// Builder for [`Engine`] — see the module docs for the pipeline it
 /// configures. (Not `Debug`: it may hold a [`Runtime`], which wraps
 /// backend state without a `Debug` impl.)
@@ -60,6 +88,7 @@ pub struct EngineBuilder {
     cache: Option<Arc<MappingCache>>,
     max_exec_dim: u64,
     tile: u64,
+    faults: FaultPlan,
 }
 
 impl EngineBuilder {
@@ -135,6 +164,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Thread a deterministic [`FaultPlan`] through the pipeline
+    /// (testing/soak only; the default plan is inert).
+    pub fn faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
     /// Build the engine; fails on an empty accelerator pool.
     pub fn build(self) -> Result<Engine> {
         if self.pool.is_empty() {
@@ -149,6 +185,7 @@ impl EngineBuilder {
             cache: self.cache.unwrap_or_default(),
             max_exec_dim: self.max_exec_dim,
             tile: self.tile,
+            faults: self.faults,
             metrics: ServiceMetrics::default(),
         })
     }
@@ -173,6 +210,7 @@ pub struct Engine {
     cache: Arc<MappingCache>,
     max_exec_dim: u64,
     tile: u64,
+    faults: FaultPlan,
     metrics: ServiceMetrics,
 }
 
@@ -186,6 +224,7 @@ impl Engine {
             cache: None,
             max_exec_dim: 512,
             tile: 0,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -212,6 +251,17 @@ impl Engine {
     /// The default selection objective.
     pub fn objective(&self) -> Objective {
         self.objective
+    }
+
+    /// The active fault-injection plan (inert by default).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// Swap the fault-injection plan on a built engine (the serving
+    /// front-end uses this to arm/disarm faults without rebuilding).
+    pub fn set_faults(&mut self, faults: FaultPlan) {
+        self.faults = faults;
     }
 
     /// **Stage 1 — plan.** Objective-aware mapping selection over the
@@ -266,6 +316,29 @@ impl Engine {
             best,
             scores,
             cache_hit: searches == 0,
+        })
+    }
+
+    /// [`Engine::plan`] with a typed, cloneable error: infeasibility
+    /// becomes [`EngineError::Infeasible`], so a group-level planning
+    /// failure can fan out to every member of the coalesced group
+    /// without aborting the window.
+    pub fn plan_checked(
+        &self,
+        workload: &Gemm,
+        objective: Objective,
+    ) -> Result<Plan, EngineError> {
+        self.plan(workload, objective).map_err(|e| {
+            let root = e.root_cause().to_string();
+            let reason = if root.contains("no accelerator in the pool") {
+                "every pool member is infeasible for this shape".to_string()
+            } else {
+                root
+            };
+            EngineError::Infeasible {
+                workload: workload.to_string(),
+                reason,
+            }
         })
     }
 
@@ -357,15 +430,59 @@ impl Engine {
     ///
     /// Responses come back in submission order; the window's metrics are
     /// returned and merged into [`Engine::metrics`].
+    ///
+    /// This is the strict variant: the first per-query failure aborts
+    /// the whole window with an error (and the window's metrics are
+    /// discarded, as before). The serving path uses
+    /// [`Engine::try_run`], which keeps going and returns one `Result`
+    /// per query.
     pub fn run(&mut self, queries: &[Query]) -> Result<EngineReport> {
+        let EngineWindow { outcomes, metrics } = self.run_window(queries);
+        let mut responses = Vec::with_capacity(outcomes.len());
+        for outcome in outcomes {
+            responses.push(outcome?);
+        }
+        self.metrics.merge(&metrics);
+        Ok(EngineReport { responses, metrics })
+    }
+
+    /// Serve a submission window with per-query fault isolation: every
+    /// query gets its own `Result<Response, EngineError>`, and one
+    /// query's failure — infeasible shape, dimension overflow, injected
+    /// fault, caught worker panic, expired deadline — never aborts its
+    /// coalesced batch; the other members still plan, execute, and
+    /// verify exactly as they would alone. Deadlines are re-checked
+    /// immediately before execution (and again between execution
+    /// chunks), so expired work is shed, never run. The window's
+    /// metrics are merged into [`Engine::metrics`].
+    pub fn try_run(&mut self, queries: &[Query]) -> EngineWindow {
+        let window = self.run_window(queries);
+        self.metrics.merge(&window.metrics);
+        window
+    }
+
+    fn run_window(&mut self, queries: &[Query]) -> EngineWindow {
         let mut window = ServiceMetrics::default();
-        let mut responses: Vec<Option<Response>> = queries.iter().map(|_| None).collect();
+        let mut outcomes: Vec<Option<Result<Response, EngineError>>> =
+            queries.iter().map(|_| None).collect();
+
+        // stage 0 — validate: degenerate or overflowing shapes become
+        // typed errors here, before they can panic arithmetic downstream
+        for (qi, q) in queries.iter().enumerate() {
+            if let Err(e) = validate_shape(&q.workload) {
+                window.errors += 1;
+                outcomes[qi] = Some(Err(e));
+            }
+        }
 
         // stage 2 — schedule: coalesce by (shape, objective) across the
         // whole window, groups in first-appearance order
         let mut group_of: HashMap<(u64, u64, u64, Objective), usize> = HashMap::new();
         let mut groups: Vec<(Objective, Vec<usize>)> = Vec::new();
         for (qi, q) in queries.iter().enumerate() {
+            if outcomes[qi].is_some() {
+                continue;
+            }
             let objective = q.objective.unwrap_or(self.objective);
             let key = (q.workload.m, q.workload.n, q.workload.k, objective);
             let gi = *group_of.entry(key).or_insert_with(|| {
@@ -379,26 +496,49 @@ impl Engine {
             window.batches += 1;
             let shape = &queries[members[0]].workload;
 
-            // stage 1 — plan, cache-first
+            // stage 1 — plan, cache-first; an infeasible shape fails
+            // only its own group, the window keeps going
             let t0 = Instant::now();
-            let plan = self.plan(shape, *objective)?;
+            let plan = match self.plan_checked(shape, *objective) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    for &qi in members {
+                        window.errors += 1;
+                        outcomes[qi] = Some(Err(e.clone()));
+                    }
+                    continue;
+                }
+            };
             if plan.cache_hit {
                 window.mapping_cache_hits += 1;
             } else {
                 window.mapping_cache_misses += 1;
                 window.search_time += t0.elapsed();
             }
+            if !self.faults.plan_delay.is_zero() {
+                std::thread::sleep(self.faults.plan_delay);
+            }
 
-            let can_exec = shape.m.max(shape.n).max(shape.k) <= self.max_exec_dim;
-            let (exec, skip): (Vec<usize>, Vec<usize>) = members
+            // deadline check: shed members that expired while queued
+            let now = Instant::now();
+            let (live, expired): (Vec<usize>, Vec<usize>) = members
                 .iter()
                 .copied()
+                .partition(|&qi| !queries[qi].deadline_expired(now));
+            for qi in expired {
+                window.shed_deadline += 1;
+                outcomes[qi] = Some(Err(EngineError::DeadlineExceeded { stage: "execute" }));
+            }
+
+            let can_exec = shape.m.max(shape.n).max(shape.k) <= self.max_exec_dim;
+            let (exec, skip): (Vec<usize>, Vec<usize>) = live
+                .into_iter()
                 .partition(|&qi| can_exec && queries[qi].execute);
 
             for qi in skip {
                 window.latency.record(Duration::ZERO);
                 window.requests += 1;
-                responses[qi] = Some(Self::plan_only_response(&plan, *objective, &queries[qi]));
+                outcomes[qi] = Some(Ok(Self::plan_only_response(&plan, *objective, &queries[qi])));
             }
 
             if !exec.is_empty() {
@@ -414,22 +554,27 @@ impl Engine {
                     members: &exec,
                 };
                 if self.runtime.is_native() {
-                    self.exec_packed(&group, queries, &mut window, &mut responses)?;
+                    self.exec_packed(&group, queries, &mut window, &mut outcomes);
                 } else {
-                    self.exec_serial(&group, queries, &mut window, &mut responses)?;
+                    self.exec_serial(&group, queries, &mut window, &mut outcomes);
                 }
             }
         }
 
-        let responses = responses
+        // invariant: every query got an outcome above; a typed error
+        // (not a panic) guards the serving path even if it ever breaks
+        let outcomes = outcomes
             .into_iter()
-            .map(|r| r.expect("every query answered"))
+            .map(|o| {
+                o.unwrap_or_else(|| {
+                    Err(EngineError::Exec("internal: query left unanswered".into()))
+                })
+            })
             .collect();
-        self.metrics.merge(&window);
-        Ok(EngineReport {
-            responses,
+        EngineWindow {
+            outcomes,
             metrics: window,
-        })
+        }
     }
 
     fn plan_only_response(plan: &Plan, objective: Objective, q: &Query) -> Response {
@@ -451,24 +596,59 @@ impl Engine {
     /// engine. Operand generation, execution, and verification each fan
     /// over rayon; `exec_time` accounts the execution phase's wall clock
     /// only. The group is processed in bounded chunks (a few queries per
-    /// worker thread) so memory stays O(chunk), not O(group).
+    /// worker thread) so memory stays O(chunk), not O(group). Every
+    /// query is individually fallible: injected faults and worker
+    /// panics are caught per query, and the rest of the chunk finishes
+    /// untouched.
     fn exec_packed(
         &mut self,
         group: &GroupRun,
         queries: &[Query],
         window: &mut ServiceMetrics,
-        responses: &mut [Option<Response>],
-    ) -> Result<()> {
-        // tile artifact must exist, exactly as the per-tile path demands
-        self.runtime.warm(&format!("gemm_tile_{}", group.tile))?;
+        outcomes: &mut [Option<Result<Response, EngineError>>],
+    ) {
         let shape = &queries[group.members[0]].workload;
-        let pg = PackedGemm::new(shape, group.tile as usize, group.plan.best.mapping.inter_order)?;
+        // tile artifact must exist, exactly as the per-tile path demands
+        let prepared = self
+            .runtime
+            .warm(&format!("gemm_tile_{}", group.tile))
+            .and_then(|_| {
+                PackedGemm::new(shape, group.tile as usize, group.plan.best.mapping.inter_order)
+            });
+        let pg = match prepared {
+            Ok(pg) => pg,
+            Err(e) => {
+                // backend preparation failed: the group fails with a
+                // typed error, the rest of the window keeps going
+                for &qi in group.members {
+                    window.errors += 1;
+                    outcomes[qi] = Some(Err(EngineError::Exec(format!("{e:#}"))));
+                }
+                return;
+            }
+        };
         let calls = pg.tile_calls();
         let chunk_len = rayon::current_num_threads().max(1) * 4;
+        let faults = self.faults.clone();
 
         for chunk in group.members.chunks(chunk_len) {
+            // deadlines re-checked per chunk: work that expired while
+            // earlier chunks executed is shed, never run
+            let now = Instant::now();
+            let (live, expired): (Vec<usize>, Vec<usize>) = chunk
+                .iter()
+                .copied()
+                .partition(|&qi| !queries[qi].deadline_expired(now));
+            for qi in expired {
+                window.shed_deadline += 1;
+                outcomes[qi] = Some(Err(EngineError::DeadlineExceeded { stage: "execute" }));
+            }
+            if live.is_empty() {
+                continue;
+            }
+
             // phase 1: deterministic operands from each query's own seed
-            let inputs: Vec<(Vec<f32>, Vec<f32>, Duration)> = chunk
+            let inputs: Vec<(Vec<f32>, Vec<f32>, Duration)> = live
                 .par_iter()
                 .map(|&qi| {
                     let t0 = Instant::now();
@@ -478,15 +658,40 @@ impl Engine {
                 })
                 .collect();
 
-            // phase 2: packed-panel parallel execution
+            // phase 2: packed-panel parallel execution, per-query
+            // fallible — injected faults fire deterministically off the
+            // query seed, and panics are caught so one poisoned query
+            // never takes down its batchmates
             let te0 = Instant::now();
-            let mut execs: Vec<(Vec<f32>, Duration)> = inputs
+            let mut execs: Vec<Result<(Vec<f32>, Duration), EngineError>> = inputs
                 .par_iter()
-                .map(|(a, b, _)| {
+                .zip(&live)
+                .map(|((a, b, _), &qi)| {
+                    let q = &queries[qi];
+                    if faults.fire(faults.exec_error, domain::EXEC_ERROR, q.seed) {
+                        return Err(EngineError::Injected(format!(
+                            "executor error for seed {:#x}",
+                            q.seed
+                        )));
+                    }
+                    let panic_now = faults.fire(faults.exec_panic, domain::EXEC_PANIC, q.seed);
                     let t0 = Instant::now();
-                    pg.run(a, b).map(|c| (c, t0.elapsed()))
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        if panic_now {
+                            panic!("injected worker panic");
+                        }
+                        if !faults.exec_delay.is_zero() {
+                            std::thread::sleep(faults.exec_delay);
+                        }
+                        pg.run(a, b)
+                    }));
+                    match run {
+                        Ok(Ok(c)) => Ok((c, t0.elapsed())),
+                        Ok(Err(e)) => Err(EngineError::Exec(format!("{e:#}"))),
+                        Err(payload) => Err(EngineError::WorkerPanic(panic_message(&*payload))),
+                    }
                 })
-                .collect::<Result<_>>()?;
+                .collect();
             window.exec_time += te0.elapsed();
 
             // phase 3: per-query verification against the reference GEMM
@@ -494,68 +699,113 @@ impl Engine {
                 .par_iter()
                 .zip(&execs)
                 .enumerate()
-                .map(|(ci, ((a, b, _), (c, _)))| {
-                    let q = &queries[chunk[ci]];
-                    if q.verify {
-                        let t0 = Instant::now();
-                        let r = reference_gemm(&q.workload, a, b);
-                        (Some(close(c, &r)), t0.elapsed())
-                    } else {
-                        (None, Duration::ZERO)
+                .map(|(ci, ((a, b, _), exec))| {
+                    let q = &queries[live[ci]];
+                    match exec {
+                        Ok((c, _)) if q.verify => {
+                            let t0 = Instant::now();
+                            let r = reference_gemm(&q.workload, a, b);
+                            (Some(close(c, &r)), t0.elapsed())
+                        }
+                        _ => (None, Duration::ZERO),
                     }
                 })
                 .collect();
 
-            self.runtime.note_executions(calls * chunk.len() as u64);
-            for (ci, &qi) in chunk.iter().enumerate() {
+            let ok_runs = execs.iter().filter(|e| e.is_ok()).count() as u64;
+            self.runtime.note_executions(calls * ok_runs);
+            for (ci, &qi) in live.iter().enumerate() {
                 let q = &queries[qi];
-                let latency = inputs[ci].2 + execs[ci].1 + checks[ci].1;
-                window.latency.record(latency);
-                window.requests += 1;
-                window.macs_executed += q.workload.macs();
-                window.tile_calls += calls;
-                let result = q
-                    .return_result
-                    .then(|| std::mem::take(&mut execs[ci].0));
-                responses[qi] = Some(Response {
-                    workload: q.workload.clone(),
-                    objective: group.objective,
-                    accelerator_idx: group.plan.accelerator_idx,
-                    mapping: group.plan.best.clone(),
-                    scores: group.plan.scores.clone(),
-                    cache_hit: group.plan.cache_hit,
-                    executed: true,
-                    verified: checks[ci].0,
-                    latency_us: latency.as_micros() as u64,
-                    result,
-                });
+                match &mut execs[ci] {
+                    Ok((c, exec_dt)) => {
+                        let latency = inputs[ci].2 + *exec_dt + checks[ci].1;
+                        window.latency.record(latency);
+                        window.requests += 1;
+                        window.macs_executed += q.workload.macs();
+                        window.tile_calls += calls;
+                        let result = q.return_result.then(|| std::mem::take(c));
+                        outcomes[qi] = Some(Ok(Response {
+                            workload: q.workload.clone(),
+                            objective: group.objective,
+                            accelerator_idx: group.plan.accelerator_idx,
+                            mapping: group.plan.best.clone(),
+                            scores: group.plan.scores.clone(),
+                            cache_hit: group.plan.cache_hit,
+                            executed: true,
+                            verified: checks[ci].0,
+                            latency_us: latency.as_micros() as u64,
+                            result,
+                        }));
+                    }
+                    Err(e) => {
+                        window.errors += 1;
+                        outcomes[qi] = Some(Err(e.clone()));
+                    }
+                }
             }
         }
-        Ok(())
     }
 
     /// **Stage 3 — execute** one group query-by-query through the
     /// per-tile artifact path (`--features pjrt`, or any non-native
     /// backend): the real compiled kernel runs once per grid point.
+    /// Per-query fallible, same fault semantics as the packed path.
     fn exec_serial(
         &mut self,
         group: &GroupRun,
         queries: &[Query],
         window: &mut ServiceMetrics,
-        responses: &mut [Option<Response>],
-    ) -> Result<()> {
+        outcomes: &mut [Option<Result<Response, EngineError>>],
+    ) {
+        let faults = self.faults.clone();
         for &qi in group.members {
             let q = &queries[qi];
+            if q.deadline_expired(Instant::now()) {
+                window.shed_deadline += 1;
+                outcomes[qi] = Some(Err(EngineError::DeadlineExceeded { stage: "execute" }));
+                continue;
+            }
+            if faults.fire(faults.exec_error, domain::EXEC_ERROR, q.seed) {
+                window.errors += 1;
+                outcomes[qi] = Some(Err(EngineError::Injected(format!(
+                    "executor error for seed {:#x}",
+                    q.seed
+                ))));
+                continue;
+            }
             let t0 = Instant::now();
             let (a, b) = operands(&q.workload, q.seed);
             let te0 = Instant::now();
-            let mut exec = TiledExecutor::new(
-                &mut self.runtime,
-                group.tile as usize,
-                group.plan.best.mapping.inter_order,
-            )?;
-            let c = exec.gemm(&q.workload, &a, &b)?;
-            window.tile_calls += exec.tile_calls;
+            let panic_now = faults.fire(faults.exec_panic, domain::EXEC_PANIC, q.seed);
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                if panic_now {
+                    panic!("injected worker panic");
+                }
+                if !faults.exec_delay.is_zero() {
+                    std::thread::sleep(faults.exec_delay);
+                }
+                let mut exec = TiledExecutor::new(
+                    &mut self.runtime,
+                    group.tile as usize,
+                    group.plan.best.mapping.inter_order,
+                )?;
+                let c = exec.gemm(&q.workload, &a, &b)?;
+                Ok::<_, anyhow::Error>((c, exec.tile_calls))
+            }));
+            let (c, tile_calls) = match run {
+                Ok(Ok(v)) => v,
+                Ok(Err(e)) => {
+                    window.errors += 1;
+                    outcomes[qi] = Some(Err(EngineError::Exec(format!("{e:#}"))));
+                    continue;
+                }
+                Err(payload) => {
+                    window.errors += 1;
+                    outcomes[qi] = Some(Err(EngineError::WorkerPanic(panic_message(&*payload))));
+                    continue;
+                }
+            };
+            window.tile_calls += tile_calls;
             window.exec_time += te0.elapsed();
             window.macs_executed += q.workload.macs();
             let verified = q
@@ -564,7 +814,7 @@ impl Engine {
             let latency = t0.elapsed();
             window.latency.record(latency);
             window.requests += 1;
-            responses[qi] = Some(Response {
+            outcomes[qi] = Some(Ok(Response {
                 workload: q.workload.clone(),
                 objective: group.objective,
                 accelerator_idx: group.plan.accelerator_idx,
@@ -575,9 +825,41 @@ impl Engine {
                 verified,
                 latency_us: latency.as_micros() as u64,
                 result: q.return_result.then_some(c),
-            });
+            }));
         }
-        Ok(())
+    }
+}
+
+/// Pre-flight shape validation: zero dimensions and element/MAC counts
+/// that would overflow `u64` become typed errors instead of downstream
+/// arithmetic panics.
+fn validate_shape(wl: &Gemm) -> Result<(), EngineError> {
+    let err = |detail: &str| EngineError::DimensionOverflow {
+        workload: wl.to_string(),
+        detail: detail.into(),
+    };
+    if wl.m == 0 || wl.n == 0 || wl.k == 0 {
+        return Err(err("dimensions must be nonzero"));
+    }
+    let products = [
+        wl.m.checked_mul(wl.k),
+        wl.k.checked_mul(wl.n),
+        wl.m.checked_mul(wl.n).and_then(|mn| mn.checked_mul(wl.k)),
+    ];
+    if products.iter().any(|p| p.is_none()) {
+        return Err(err("element/MAC count overflows u64"));
+    }
+    Ok(())
+}
+
+/// Render a caught panic payload as a message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).into()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".into()
     }
 }
 
@@ -822,6 +1104,136 @@ mod tests {
             .unwrap();
         assert!(r.executed);
         assert_eq!(r.verified, Some(true));
+    }
+
+    #[test]
+    fn try_run_isolates_per_query_failures() {
+        let mut engine = native_engine();
+        let window = engine.try_run(&[
+            Query::new(Gemm::new("ok", 32, 32, 32)).verify(true),
+            Query::new(Gemm::new("zero", 0, 32, 32)),
+        ]);
+        assert_eq!(window.ok_count(), 1);
+        assert_eq!(window.err_count(), 1);
+        let ok = window.outcomes[0].as_ref().unwrap();
+        assert!(ok.executed);
+        assert_eq!(ok.verified, Some(true));
+        let err = window.outcomes[1].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "unknown_shape");
+        assert_eq!(window.metrics.errors, 1);
+        assert_eq!(window.metrics.requests, 1);
+        // try_run merges its window into the cumulative ledger
+        assert_eq!(engine.metrics().errors, 1);
+        assert_eq!(engine.metrics().requests, 1);
+    }
+
+    #[test]
+    fn run_surfaces_first_failure_and_discards_window_metrics() {
+        let mut engine = native_engine();
+        let err = engine
+            .run(&[Query::new(Gemm::new("zero", 8, 0, 8))])
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid shape"), "{err:#}");
+        assert_eq!(engine.metrics().requests, 0);
+        assert_eq!(engine.metrics().errors, 0);
+    }
+
+    #[test]
+    fn overflowing_shapes_are_typed_errors_not_panics() {
+        let mut engine = native_engine();
+        let window = engine.try_run(&[Query::new(Gemm::new("huge", u64::MAX, 2, 2))]);
+        let err = window.outcomes[0].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "unknown_shape");
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn injected_faults_fail_only_their_queries() {
+        let plan = FaultPlan {
+            seed: 9,
+            exec_error: 0.5,
+            ..FaultPlan::default()
+        };
+        let fire = (0..64u64)
+            .find(|&s| plan.fire(plan.exec_error, domain::EXEC_ERROR, s))
+            .unwrap();
+        let calm = (0..64u64)
+            .find(|&s| !plan.fire(plan.exec_error, domain::EXEC_ERROR, s))
+            .unwrap();
+        let mut faulty = Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+            .max_exec_dim(128)
+            .faults(plan)
+            .build()
+            .unwrap();
+        assert!(faulty.faults().is_active());
+        let wl = Gemm::new("w", 32, 32, 32);
+        let queries = vec![
+            Query::new(wl.clone()).seed(fire).return_result(true),
+            Query::new(wl.clone()).seed(calm).return_result(true),
+        ];
+        let window = faulty.try_run(&queries);
+        let err = window.outcomes[0].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "injected_fault");
+        let survivor = window.outcomes[1].as_ref().unwrap();
+        assert!(survivor.executed);
+        // the surviving batchmate is bit-identical to a clean engine
+        let mut clean = native_engine();
+        let clean_rep = clean.run(std::slice::from_ref(&queries[1])).unwrap();
+        assert_eq!(survivor.result, clean_rep.responses[0].result);
+        // and the whole thing replays deterministically
+        let replay = faulty.try_run(&queries);
+        assert_eq!(replay.outcomes[0].as_ref().unwrap_err().kind(), "injected_fault");
+        assert_eq!(
+            replay.outcomes[1].as_ref().unwrap().result,
+            survivor.result
+        );
+    }
+
+    #[test]
+    fn worker_panics_are_caught_per_query() {
+        let mut engine = Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+            .max_exec_dim(128)
+            .faults(FaultPlan {
+                seed: 3,
+                exec_panic: 1.0,
+                ..FaultPlan::default()
+            })
+            .build()
+            .unwrap();
+        let window = engine.try_run(&[Query::new(Gemm::new("p", 32, 32, 32))]);
+        let err = window.outcomes[0].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "worker_panic");
+        assert!(err.to_string().contains("injected worker panic"), "{err}");
+        assert_eq!(window.metrics.errors, 1);
+        // the engine is still perfectly usable afterwards
+        engine.set_faults(FaultPlan::none());
+        let ok = engine.try_run(&[Query::new(Gemm::new("p", 32, 32, 32))]);
+        assert!(ok.outcomes[0].is_ok());
+    }
+
+    #[test]
+    fn expired_deadlines_shed_instead_of_execute() {
+        let mut engine = native_engine();
+        let past = Instant::now() - Duration::from_secs(1);
+        let wl = Gemm::new("d", 32, 32, 32);
+        let window = engine.try_run(&[
+            Query::new(wl.clone()).deadline(past),
+            Query::new(wl.clone()),
+        ]);
+        let err = window.outcomes[0].as_ref().unwrap_err();
+        assert_eq!(err.kind(), "deadline_exceeded");
+        assert!(err.is_shed());
+        assert!(window.outcomes[1].as_ref().unwrap().executed);
+        assert_eq!(window.metrics.shed_deadline, 1);
+        assert_eq!(window.metrics.requests, 1);
+        // a generous deadline does not shed
+        let far = Instant::now() + Duration::from_secs(3600);
+        let ok = engine.try_run(&[Query::new(wl).deadline(far)]);
+        assert!(ok.outcomes[0].is_ok());
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Deterministic, seedable fault injection for the serving path.
+//!
+//! A [`FaultPlan`] threads through `Engine::builder().faults(..)` (and
+//! from there into the network front-end) and perturbs the pipeline in
+//! exactly reproducible ways: injected executor errors, caught worker
+//! panics, and artificial per-stage latency. Every decision is a pure
+//! function of `(plan seed, fault domain, event id)` — rerunning the
+//! same plan over the same query stream fires the same faults, so the
+//! robustness tests and the CI soak are deterministic, not
+//! probabilistic hope.
+//!
+//! The plan deliberately lives at the engine layer (not the socket
+//! layer): the serving front-end reuses the same plan for its
+//! frame-level faults (dropped responses), so one `--fault-*` flag set
+//! drives the whole stack.
+
+use std::time::Duration;
+
+/// Fault domains — mixed into the hash so the same event id draws
+/// independent decisions per fault class.
+pub mod domain {
+    pub const EXEC_ERROR: u64 = 1;
+    pub const EXEC_PANIC: u64 = 2;
+    pub const DROP_RESPONSE: u64 = 3;
+    pub const CLIENT_GARBLE: u64 = 4;
+}
+
+/// A deterministic fault-injection plan. The default plan is inert
+/// (all rates zero, no delays) and adds no work to the hot path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every fault decision.
+    pub seed: u64,
+    /// Probability a query's execution is replaced by
+    /// [`EngineError::Injected`](super::EngineError::Injected).
+    pub exec_error: f64,
+    /// Probability a query's worker panics mid-execution (the panic is
+    /// caught and becomes a per-query
+    /// [`EngineError::WorkerPanic`](super::EngineError::WorkerPanic)).
+    pub exec_panic: f64,
+    /// Artificial latency added once per planned group (plan stage).
+    pub plan_delay: Duration,
+    /// Artificial latency added to each query's execution.
+    pub exec_delay: Duration,
+    /// Probability the serving front-end silently drops a response
+    /// frame (the connection stays up; the client times out).
+    pub drop_response: f64,
+}
+
+impl FaultPlan {
+    /// An inert plan (no faults, no delays).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// `true` when any fault or delay is configured.
+    pub fn is_active(&self) -> bool {
+        self.exec_error > 0.0
+            || self.exec_panic > 0.0
+            || self.drop_response > 0.0
+            || !self.plan_delay.is_zero()
+            || !self.exec_delay.is_zero()
+    }
+
+    /// Deterministic uniform draw in `[0, 1)` for `(domain, id)` —
+    /// splitmix64 over the mixed key.
+    pub fn roll(&self, domain: u64, id: u64) -> f64 {
+        let mut z = self
+            .seed
+            .wrapping_add(domain.wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add(id.wrapping_mul(0xBF58476D1CE4E5B9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Should a fault with probability `rate` fire for `(domain, id)`?
+    pub fn fire(&self, rate: f64, domain: u64, id: u64) -> bool {
+        rate > 0.0 && self.roll(domain, id) < rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        for id in 0..1000 {
+            assert!(!p.fire(p.exec_error, domain::EXEC_ERROR, id));
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_domain_independent() {
+        let p = FaultPlan {
+            seed: 42,
+            exec_error: 0.5,
+            ..FaultPlan::default()
+        };
+        let q = p.clone();
+        let mut differs = false;
+        for id in 0..256 {
+            assert_eq!(
+                p.fire(0.5, domain::EXEC_ERROR, id),
+                q.fire(0.5, domain::EXEC_ERROR, id),
+                "same plan, same decision"
+            );
+            if p.fire(0.5, domain::EXEC_ERROR, id) != p.fire(0.5, domain::EXEC_PANIC, id) {
+                differs = true;
+            }
+        }
+        assert!(differs, "domains must draw independently");
+    }
+
+    #[test]
+    fn rates_are_respected_roughly() {
+        let p = FaultPlan {
+            seed: 7,
+            ..FaultPlan::default()
+        };
+        let n = 10_000u64;
+        let hits = (0..n)
+            .filter(|&id| p.fire(0.1, domain::EXEC_ERROR, id))
+            .count();
+        let frac = hits as f64 / n as f64;
+        assert!((0.05..0.15).contains(&frac), "got {frac}");
+        // rolls are uniform-ish: never all-zero, never all-one
+        assert!((0..n).any(|id| p.roll(domain::EXEC_ERROR, id) > 0.9));
+        assert!((0..n).any(|id| p.roll(domain::EXEC_ERROR, id) < 0.1));
+    }
+
+    #[test]
+    fn activity_detection() {
+        assert!(FaultPlan {
+            exec_panic: 0.01,
+            ..FaultPlan::default()
+        }
+        .is_active());
+        assert!(FaultPlan {
+            exec_delay: Duration::from_micros(1),
+            ..FaultPlan::default()
+        }
+        .is_active());
+        assert!(!FaultPlan {
+            seed: 99,
+            ..FaultPlan::default()
+        }
+        .is_active());
+    }
+}

@@ -41,10 +41,15 @@
 //! assert_eq!(response.verified, Some(true));
 //! ```
 
+mod error;
 mod facade;
+mod faults;
 mod query;
 
+pub use error::EngineError;
 pub use facade::{
-    close, operands, reference_gemm, Engine, EngineBuilder, EngineReport, GridResult, Plan,
+    close, operands, reference_gemm, Engine, EngineBuilder, EngineReport, EngineWindow,
+    GridResult, Plan,
 };
+pub use faults::{domain as fault_domain, FaultPlan};
 pub use query::{Query, Response, DEFAULT_SEED};

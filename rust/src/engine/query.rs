@@ -7,6 +7,8 @@
 //! per-pool scores, execution/verification status, latency, and (on
 //! request) the computed result matrix.
 
+use std::time::Instant;
+
 use crate::cost::Objective;
 use crate::flash::EvaluatedMapping;
 use crate::workloads::Gemm;
@@ -34,6 +36,11 @@ pub struct Query {
     pub verify: bool,
     /// Return the computed `M×N` result matrix in the response.
     pub return_result: bool,
+    /// Serve-by deadline. The engine re-checks it immediately before
+    /// execution: expired queries are shed with
+    /// [`EngineError::DeadlineExceeded`](super::EngineError::DeadlineExceeded),
+    /// never run. `None` means no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Query {
@@ -47,6 +54,7 @@ impl Query {
             execute: true,
             verify: false,
             return_result: false,
+            deadline: None,
         }
     }
 
@@ -78,6 +86,18 @@ impl Query {
     pub fn return_result(mut self, return_result: bool) -> Self {
         self.return_result = return_result;
         self
+    }
+
+    /// Shed this query (instead of executing it) once `deadline` has
+    /// passed.
+    pub fn deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// `true` when the query carries a deadline that has passed.
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
     }
 }
 
@@ -155,5 +175,19 @@ mod tests {
         assert_eq!(q.seed, DEFAULT_SEED);
         assert!(q.execute && !q.verify && !q.return_result);
         assert!(q.objective.is_none());
+        assert!(q.deadline.is_none());
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let now = Instant::now();
+        let q = Query::new(Gemm::new("q", 8, 8, 8));
+        assert!(!q.deadline_expired(now), "no deadline never expires");
+        let q = q.deadline(now + std::time::Duration::from_secs(3600));
+        assert!(!q.deadline_expired(now));
+        assert!(q.deadline_expired(now + std::time::Duration::from_secs(7200)));
+        // a deadline exactly at `now` counts as expired
+        let q = Query::new(Gemm::new("q", 8, 8, 8)).deadline(now);
+        assert!(q.deadline_expired(now));
     }
 }

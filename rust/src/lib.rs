@@ -54,6 +54,7 @@ pub mod flash;
 pub mod prop;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod workloads;
 

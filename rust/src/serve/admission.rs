@@ -1,0 +1,261 @@
+//! Bounded admission queue and the batching thread that feeds the
+//! engine.
+//!
+//! Connection handlers push [`Job`]s into an [`AdmissionQueue`] with a
+//! hard depth bound — a full queue is an explicit [`AdmitError::Overloaded`]
+//! rejection, never an unbounded buffer. A single [`Batcher`] thread
+//! owns the [`Engine`] and drains the queue in time/count-bounded
+//! windows ([`AdmissionQueue::next_window`]): each window becomes one
+//! `Engine::try_run` submission, so same-shape requests from different
+//! connections coalesce into one planned group exactly like an
+//! in-process batch. Per-query outcomes travel back to their handler
+//! over the job's reply channel.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{Engine, EngineError, Query, Response};
+
+/// One admitted request: the query plus the channel its outcome is
+/// delivered on.
+pub struct Job {
+    pub query: Query,
+    pub reply: mpsc::Sender<Result<Response, EngineError>>,
+}
+
+/// Why admission refused a job.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AdmitError {
+    /// The queue is at its depth bound; the request is shed.
+    #[error("admission queue full at depth {depth}")]
+    Overloaded { depth: usize },
+    /// The server is draining and admits no new work.
+    #[error("server is draining")]
+    Draining,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// A bounded MPSC queue with condvar wakeups and batch-window draining.
+pub struct AdmissionQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    depth: usize,
+}
+
+impl AdmissionQueue {
+    pub fn new(depth: usize) -> Arc<AdmissionQueue> {
+        Arc::new(AdmissionQueue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+        })
+    }
+
+    /// The serving path must survive a poisoned lock (a panicking
+    /// handler thread must not wedge every other connection).
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Admit a job, or refuse with a typed reason.
+    pub fn push(&self, job: Job) -> Result<(), AdmitError> {
+        let mut s = self.lock();
+        if s.closed {
+            return Err(AdmitError::Draining);
+        }
+        if s.jobs.len() >= self.depth {
+            return Err(AdmitError::Overloaded { depth: self.depth });
+        }
+        s.jobs.push_back(job);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Stop admitting; pending jobs still drain. Idempotent.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block for the next batch window: waits for a first job, then
+    /// gathers more until `max` jobs or `window` elapses. Returns
+    /// `None` only when the queue is closed *and* fully drained.
+    pub fn next_window(&self, max: usize, window: Duration) -> Option<Vec<Job>> {
+        let max = max.max(1);
+        let mut s = self.lock();
+        while s.jobs.is_empty() {
+            if s.closed {
+                return None;
+            }
+            let (guard, _timeout) = self
+                .ready
+                .wait_timeout(s, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
+        }
+        let mut batch = Vec::with_capacity(max.min(s.jobs.len()));
+        let deadline = Instant::now() + window;
+        loop {
+            while batch.len() < max {
+                match s.jobs.pop_front() {
+                    Some(job) => batch.push(job),
+                    None => break,
+                }
+            }
+            if batch.len() >= max || s.closed {
+                break;
+            }
+            let remaining = match deadline.checked_duration_since(Instant::now()) {
+                Some(d) if !d.is_zero() => d,
+                _ => break,
+            };
+            let (guard, _timeout) = self
+                .ready
+                .wait_timeout(s, remaining)
+                .unwrap_or_else(|e| e.into_inner());
+            s = guard;
+            if s.jobs.is_empty() && Instant::now() >= deadline {
+                break;
+            }
+        }
+        Some(batch)
+    }
+}
+
+/// The thread that owns the engine and turns queue windows into
+/// `try_run` submissions.
+pub struct Batcher {
+    handle: JoinHandle<Engine>,
+}
+
+impl Batcher {
+    /// Spawn the batching thread. It runs until the queue is closed and
+    /// drained, then returns the engine (with its cumulative metrics)
+    /// through [`Batcher::join`].
+    pub fn spawn(
+        mut engine: Engine,
+        queue: Arc<AdmissionQueue>,
+        batch_max: usize,
+        batch_window: Duration,
+    ) -> Batcher {
+        let handle = std::thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || {
+                while let Some(jobs) = queue.next_window(batch_max, batch_window) {
+                    if jobs.is_empty() {
+                        continue;
+                    }
+                    let queries: Vec<Query> = jobs.iter().map(|j| j.query.clone()).collect();
+                    let window = engine.try_run(&queries);
+                    for (job, outcome) in jobs.into_iter().zip(window.outcomes) {
+                        // a handler that gave up (reply timeout) just
+                        // means a dropped receiver — not our problem
+                        let _ = job.reply.send(outcome);
+                    }
+                }
+                engine
+            })
+            .expect("spawn serve-batcher thread");
+        Batcher { handle }
+    }
+
+    /// Wait for the batcher to drain and recover the engine.
+    pub fn join(self) -> anyhow::Result<Engine> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve-batcher thread panicked"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Accelerator, HwConfig, Style};
+    use crate::engine::DEFAULT_SEED;
+    use crate::workloads::Gemm;
+
+    fn job(name: &str, reply: &mpsc::Sender<Result<Response, EngineError>>) -> Job {
+        Job {
+            query: Query::new(Gemm::new(name, 8, 8, 8)).seed(DEFAULT_SEED),
+            reply: reply.clone(),
+        }
+    }
+
+    #[test]
+    fn queue_bounds_and_typed_refusals() {
+        let q = AdmissionQueue::new(2);
+        let (tx, _rx) = mpsc::channel();
+        assert!(q.push(job("a", &tx)).is_ok());
+        assert!(q.push(job("b", &tx)).is_ok());
+        assert_eq!(
+            q.push(job("c", &tx)),
+            Err(AdmitError::Overloaded { depth: 2 })
+        );
+        q.close();
+        q.close(); // idempotent
+        assert!(q.is_closed());
+        // still drains the two admitted jobs, refuses new ones
+        assert_eq!(q.push(job("d", &tx)), Err(AdmitError::Draining));
+        let w = q.next_window(16, Duration::from_millis(1)).unwrap();
+        assert_eq!(w.len(), 2);
+        assert!(q.next_window(16, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn window_gathers_up_to_max() {
+        let q = AdmissionQueue::new(64);
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..5 {
+            q.push(job(&format!("q{i}"), &tx)).unwrap();
+        }
+        let w = q.next_window(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(w.len(), 3);
+        let w = q.next_window(3, Duration::from_millis(1)).unwrap();
+        assert_eq!(w.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn batcher_runs_jobs_and_returns_engine() {
+        let engine = Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .build()
+            .expect("pool");
+        let q = AdmissionQueue::new(16);
+        let batcher = Batcher::spawn(engine, Arc::clone(&q), 8, Duration::from_millis(2));
+
+        let (tx, rx) = mpsc::channel();
+        // same shape from "different connections" coalesces in a window
+        q.push(job("a", &tx)).unwrap();
+        q.push(job("b", &tx)).unwrap();
+        let r1 = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let r2 = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(r1.executed && r2.executed);
+
+        q.close();
+        let engine = batcher.join().expect("engine back");
+        assert_eq!(engine.metrics().requests, 2);
+    }
+}

@@ -1,0 +1,258 @@
+//! Bounded length-prefixed framing over a [`TcpStream`].
+//!
+//! Wire format: a 4-byte big-endian payload length followed by that
+//! many bytes of JSON. Reads are bounded three ways:
+//!
+//! * **size** — a frame whose declared length exceeds
+//!   [`FrameLimits::max_frame`] is rejected *before* any payload
+//!   allocation ([`FrameError::Oversized`]);
+//! * **per-frame time** — once the first header byte arrives the rest
+//!   of the frame must complete within [`FrameLimits::frame_timeout`],
+//!   which defeats slow-loris clients that dribble one byte per poll
+//!   ([`FrameError::TimedOut`]);
+//! * **idle time** — waiting *between* frames is bounded separately by
+//!   [`FrameLimits::idle_timeout`] ([`FrameError::Idle`]), so a quiet
+//!   but healthy connection is distinguishable from a stalled one.
+//!
+//! A peer that disconnects cleanly at a frame boundary yields
+//! [`FrameError::Closed`]; mid-frame EOF is [`FrameError::Truncated`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Hard cap on *outbound* frames. Far larger than the inbound cap
+/// because replies may carry a full M×N f32 result matrix as JSON.
+pub const MAX_WRITE_FRAME: usize = 64 << 20;
+
+/// Per-connection framing bounds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameLimits {
+    /// Maximum inbound payload length in bytes.
+    pub max_frame: usize,
+    /// Budget for receiving one whole frame after its first byte.
+    pub frame_timeout: Duration,
+    /// Budget for waiting at a frame boundary for the next request.
+    pub idle_timeout: Duration,
+    /// Budget for writing one reply frame.
+    pub write_timeout: Duration,
+}
+
+impl Default for FrameLimits {
+    fn default() -> Self {
+        FrameLimits {
+            max_frame: 256 << 10,
+            frame_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Why a frame could not be read or written.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FrameError {
+    /// Peer disconnected cleanly at a frame boundary.
+    #[error("connection closed at frame boundary")]
+    Closed,
+    /// Peer disconnected mid-frame.
+    #[error("connection closed mid-frame")]
+    Truncated,
+    /// No frame arrived within the idle budget.
+    #[error("idle timeout waiting for next frame")]
+    Idle,
+    /// A frame started but did not complete within the frame budget.
+    #[error("frame did not complete within its time budget")]
+    TimedOut,
+    /// Declared payload length exceeds the cap.
+    #[error("frame of {len} bytes exceeds the {max}-byte cap")]
+    Oversized { len: usize, max: usize },
+    /// Any other socket error.
+    #[error("socket error: {0}")]
+    Io(String),
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e.to_string())
+    }
+}
+
+fn is_timeout(kind: ErrorKind) -> bool {
+    // unix returns WouldBlock for SO_RCVTIMEO expiry, windows TimedOut
+    matches!(kind, ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read exactly `buf.len()` bytes before `deadline`, mapping timeouts
+/// and EOF to typed errors. `at_boundary` selects the flavor of the
+/// timeout/EOF errors (between frames vs mid-frame).
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    at_boundary: bool,
+) -> Result<(), FrameError> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let remaining = deadline
+            .checked_duration_since(Instant::now())
+            .filter(|d| !d.is_zero())
+            .ok_or(if at_boundary && filled == 0 {
+                FrameError::Idle
+            } else {
+                FrameError::TimedOut
+            })?;
+        // a zero read timeout means "block forever", so clamp up
+        stream.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if at_boundary && filled == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated
+                });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(e.kind()) => continue, // deadline check re-raises
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one length-prefixed frame under `limits`. The idle budget
+/// applies until the first header byte arrives; from then on the whole
+/// frame must land within the frame budget.
+pub fn read_frame(stream: &mut TcpStream, limits: &FrameLimits) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; 4];
+    read_exact_deadline(
+        stream,
+        &mut header[..1],
+        Instant::now() + limits.idle_timeout,
+        true,
+    )?;
+    let frame_deadline = Instant::now() + limits.frame_timeout;
+    read_exact_deadline(stream, &mut header[1..], frame_deadline, false)?;
+    let len = u32::from_be_bytes(header) as usize;
+    if len > limits.max_frame {
+        return Err(FrameError::Oversized {
+            len,
+            max: limits.max_frame,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_deadline(stream, &mut payload, frame_deadline, false)?;
+    Ok(payload)
+}
+
+/// Write one length-prefixed frame under the write budget.
+pub fn write_frame(
+    stream: &mut TcpStream,
+    payload: &[u8],
+    limits: &FrameLimits,
+) -> Result<(), FrameError> {
+    if payload.len() > MAX_WRITE_FRAME {
+        return Err(FrameError::Oversized {
+            len: payload.len(),
+            max: MAX_WRITE_FRAME,
+        });
+    }
+    stream.set_write_timeout(Some(limits.write_timeout.max(Duration::from_millis(1))))?;
+    let header = (payload.len() as u32).to_be_bytes();
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A connected localhost socket pair.
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        (client, server)
+    }
+
+    fn quick_limits() -> FrameLimits {
+        FrameLimits {
+            max_frame: 1024,
+            frame_timeout: Duration::from_millis(200),
+            idle_timeout: Duration::from_millis(200),
+            write_timeout: Duration::from_millis(200),
+        }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let (mut client, mut server) = pair();
+        let limits = quick_limits();
+        write_frame(&mut client, b"{\"op\":\"ping\"}", &limits).unwrap();
+        write_frame(&mut client, b"", &limits).unwrap();
+        assert_eq!(read_frame(&mut server, &limits).unwrap(), b"{\"op\":\"ping\"}");
+        assert_eq!(read_frame(&mut server, &limits).unwrap(), b"");
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_without_allocation() {
+        let (mut client, mut server) = pair();
+        let limits = quick_limits();
+        // declare a 512 MiB payload; only the header ever goes out
+        client.write_all(&(512u32 << 20).to_be_bytes()).unwrap();
+        match read_frame(&mut server, &limits) {
+            Err(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, 512 << 20);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_close_vs_truncation() {
+        let limits = quick_limits();
+        let (client, mut server) = pair();
+        drop(client); // boundary EOF
+        assert_eq!(read_frame(&mut server, &limits), Err(FrameError::Closed));
+
+        let (mut client, mut server) = pair();
+        client.write_all(&10u32.to_be_bytes()).unwrap();
+        client.write_all(b"abc").unwrap(); // 3 of 10 payload bytes
+        drop(client); // mid-frame EOF
+        assert_eq!(read_frame(&mut server, &limits), Err(FrameError::Truncated));
+    }
+
+    #[test]
+    fn idle_and_slow_loris_budgets_are_distinct() {
+        let limits = quick_limits();
+        // idle: no bytes at all
+        let (_client, mut server) = pair();
+        assert_eq!(read_frame(&mut server, &limits), Err(FrameError::Idle));
+
+        // slow loris: header arrives, payload dribbles too slowly
+        let (mut client, mut server) = pair();
+        client.write_all(&8u32.to_be_bytes()).unwrap();
+        client.write_all(b"ab").unwrap();
+        // frame_timeout elapses with 6 bytes outstanding; the sender
+        // keeps the connection open, so only the time bound can fire
+        assert_eq!(read_frame(&mut server, &limits), Err(FrameError::TimedOut));
+        drop(client);
+    }
+
+    #[test]
+    fn oversized_writes_are_refused_locally() {
+        let (mut client, _server) = pair();
+        let limits = quick_limits();
+        let big = vec![0u8; MAX_WRITE_FRAME + 1];
+        assert!(matches!(
+            write_frame(&mut client, &big, &limits),
+            Err(FrameError::Oversized { .. })
+        ));
+    }
+}

@@ -1,0 +1,572 @@
+//! Open-loop load generator for the serving front-end.
+//!
+//! Drives a running server with a Poisson-free deterministic open-loop
+//! schedule: request `i` is *due* at `t0 + i/rate` regardless of how
+//! long earlier requests took, so a slow server accumulates backlog
+//! and sheds — exactly the regime admission control exists for. Shapes
+//! rotate through a fixed mix, per-request deadlines are drawn from a
+//! deterministic ±50% jitter window around the configured budget, and
+//! an optional garble rate injects deterministic broken-JSON noise
+//! frames to exercise the server's malformed-frame path.
+//!
+//! Every attempted request is accounted exactly once as ok, shed, or
+//! error ([`LoadReport::accounted`]); the taxonomy map splits errors by
+//! kind. The report serializes into `BENCH_serve.json` with the same
+//! envelope the bench harness writes (`bench`/`schema`/`git_sha`/
+//! `threads`/`features`/`metrics`).
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use serde::Serialize;
+
+use crate::coordinator::LatencyStats;
+use crate::engine::{fault_domain, FaultPlan};
+
+use super::framing::{read_frame, write_frame, FrameError, FrameLimits, MAX_WRITE_FRAME};
+use super::protocol::{GemmRequest, Reply, Request};
+
+/// The fixed shape mix, one entry per `request_id % 4`.
+pub const SHAPES: [(u64, u64, u64); 4] = [(64, 64, 64), (32, 96, 48), (96, 80, 64), (48, 40, 24)];
+
+/// Seed perturbation separating client-side garble decisions from the
+/// server's fault plan.
+const GARBLE_SEED_SALT: u64 = 0x6A5B_C0DE;
+
+/// Load generator knobs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address, e.g. `127.0.0.1:7474`.
+    pub addr: String,
+    /// Total requests to attempt.
+    pub requests: u64,
+    /// Open-loop arrival rate in requests/second; `0` means closed
+    /// loop (send as fast as replies come back).
+    pub rate: f64,
+    /// Concurrent client connections; request `i` rides connection
+    /// `i % conns`.
+    pub conns: usize,
+    /// Base seed; request `i` carries operand seed `seed + i`.
+    pub seed: u64,
+    /// Base deadline budget; each request draws a deterministic jitter
+    /// in `[base/2, 3*base/2)`. `None` sends no deadline.
+    pub deadline_ms: Option<u64>,
+    pub verify: bool,
+    pub return_result: bool,
+    /// Probability that a request is preceded by a deterministic
+    /// broken-JSON noise frame.
+    pub garble: f64,
+    /// Send a `shutdown` frame after the run and wait for the drain
+    /// acknowledgement.
+    pub shutdown: bool,
+    /// Client-side framing bounds; `idle_timeout` doubles as the reply
+    /// wait budget.
+    pub limits: FrameLimits,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7474".into(),
+            requests: 64,
+            rate: 0.0,
+            conns: 4,
+            seed: crate::engine::DEFAULT_SEED,
+            deadline_ms: None,
+            verify: false,
+            return_result: false,
+            garble: 0.0,
+            shutdown: false,
+            limits: FrameLimits {
+                // replies may carry full result matrices
+                max_frame: MAX_WRITE_FRAME,
+                frame_timeout: Duration::from_secs(10),
+                idle_timeout: Duration::from_secs(10),
+                write_timeout: Duration::from_secs(10),
+            },
+        }
+    }
+}
+
+/// How one attempted request ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Outcome {
+    Ok,
+    /// Intentional refusal (deadline/overload/drain) with its kind.
+    Shed(String),
+    /// Failure with its taxonomy kind.
+    Error(String),
+}
+
+/// Classify a reply that matched its request id.
+pub fn classify(reply: &Reply, verify_requested: bool) -> Outcome {
+    if reply.is_ok() {
+        if verify_requested && reply.verified == Some(false) {
+            return Outcome::Error("verify_failed".into());
+        }
+        return Outcome::Ok;
+    }
+    let kind = reply.kind.clone().unwrap_or_else(|| "unknown_error".into());
+    if reply.is_shed() {
+        Outcome::Shed(kind)
+    } else {
+        Outcome::Error(kind)
+    }
+}
+
+/// Per-worker tallies, merged into the final report.
+#[derive(Debug, Default)]
+struct WorkerStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    verify_failures: u64,
+    noise_sent: u64,
+    noise_acked: u64,
+    taxonomy: BTreeMap<String, u64>,
+    latency: LatencyStats,
+}
+
+impl WorkerStats {
+    fn bump(&mut self, kind: &str) {
+        *self.taxonomy.entry(kind.to_string()).or_insert(0) += 1;
+    }
+
+    fn record(&mut self, outcome: Outcome, rtt: Option<Duration>) {
+        match outcome {
+            Outcome::Ok => {
+                self.ok += 1;
+                if let Some(d) = rtt {
+                    self.latency.record(d);
+                }
+            }
+            Outcome::Shed(kind) => {
+                self.shed += 1;
+                self.bump(&kind);
+            }
+            Outcome::Error(kind) => {
+                self.errors += 1;
+                if kind == "verify_failed" {
+                    self.verify_failures += 1;
+                }
+                self.bump(&kind);
+            }
+        }
+    }
+
+    fn merge(&mut self, other: WorkerStats) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.errors += other.errors;
+        self.verify_failures += other.verify_failures;
+        self.noise_sent += other.noise_sent;
+        self.noise_acked += other.noise_acked;
+        for (k, v) in other.taxonomy {
+            *self.taxonomy.entry(k).or_insert(0) += v;
+        }
+        self.latency.merge(&other.latency);
+    }
+}
+
+/// The final client-side report; serializes into `BENCH_serve.json`.
+#[derive(Debug, Clone, Serialize)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub verify_failures: u64,
+    pub noise_sent: u64,
+    pub noise_acked: u64,
+    /// Error/shed counts keyed by wire kind.
+    pub taxonomy: BTreeMap<String, u64>,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    /// Successful replies per second of wall time.
+    pub goodput_rps: f64,
+    /// Shed fraction of all attempted requests.
+    pub shed_rate: f64,
+    pub elapsed_ms: u64,
+    /// Whether the server acknowledged the final `shutdown` frame.
+    pub drain_acked: bool,
+}
+
+impl LoadReport {
+    /// Every attempted request is accounted exactly once.
+    pub fn accounted(&self) -> bool {
+        self.ok + self.shed + self.errors == self.sent
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "sent={} ok={} shed={} errors={} p50={}µs p95={}µs p99={}µs goodput={:.1}rps shed_rate={:.3}",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.goodput_rps,
+            self.shed_rate
+        )
+    }
+}
+
+/// Deterministic per-request deadline: jitter in `[base/2, 3*base/2)`.
+pub fn deadline_for(base_ms: u64, seed: u64, id: u64) -> u64 {
+    let plan = FaultPlan {
+        seed: seed ^ GARBLE_SEED_SALT,
+        ..FaultPlan::none()
+    };
+    let jitter = plan.roll(fault_domain::CLIENT_GARBLE + 16, id);
+    let lo = base_ms / 2;
+    lo + ((base_ms as f64) * jitter) as u64
+}
+
+fn connect(cfg: &LoadgenConfig) -> Result<TcpStream, FrameError> {
+    let stream = TcpStream::connect(&cfg.addr).map_err(|e| FrameError::Io(e.to_string()))?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+/// Send one deterministic broken-JSON noise frame and consume the
+/// server's malformed-frame reply. Returns `(acked, keep_stream)`.
+fn send_noise(s: &mut TcpStream, cfg: &LoadgenConfig, id: u64) -> (bool, bool) {
+    let noise = format!("@garbled-frame-{id}!");
+    if write_frame(s, noise.as_bytes(), &cfg.limits).is_err() {
+        return (false, false);
+    }
+    match read_frame(s, &cfg.limits) {
+        Ok(payload) => {
+            let acked = serde_json::from_slice::<Reply>(&payload)
+                .map(|r| !r.is_ok() && r.id.is_none())
+                .unwrap_or(false);
+            (acked, true)
+        }
+        Err(_) => (false, false),
+    }
+}
+
+/// One request/reply transaction. Returns the outcome, the measured
+/// RTT for successes, and whether the connection is still trustworthy.
+fn transact(s: &mut TcpStream, cfg: &LoadgenConfig, id: u64) -> (Outcome, Option<Duration>, bool) {
+    let (m, n, k) = SHAPES[(id % SHAPES.len() as u64) as usize];
+    let request = Request::Gemm(GemmRequest {
+        id,
+        name: Some(format!("lg{id}")),
+        m,
+        n,
+        k,
+        objective: None,
+        seed: Some(cfg.seed.wrapping_add(id)),
+        verify: cfg.verify,
+        return_result: cfg.return_result,
+        deadline_ms: cfg.deadline_ms.map(|base| deadline_for(base, cfg.seed, id)),
+    });
+    let payload = serde_json::to_vec(&request).expect("serializable request");
+    let sent_at = Instant::now();
+    if write_frame(s, &payload, &cfg.limits).is_err() {
+        return (Outcome::Error("connection_lost".into()), None, false);
+    }
+    match read_frame(s, &cfg.limits) {
+        Ok(payload) => match serde_json::from_slice::<Reply>(&payload) {
+            Ok(reply) if reply.id == Some(id) => {
+                (classify(&reply, cfg.verify), Some(sent_at.elapsed()), true)
+            }
+            // wrong id: this connection's request/reply stream is no
+            // longer trustworthy — drop it
+            Ok(_) => (Outcome::Error("client_desync".into()), None, false),
+            Err(_) => (Outcome::Error("client_garbled_reply".into()), None, false),
+        },
+        // dropped-response fault or a wedged server: a late reply
+        // would desync, so reconnect
+        Err(FrameError::Idle) | Err(FrameError::TimedOut) => {
+            (Outcome::Error("client_timeout".into()), None, false)
+        }
+        Err(_) => (Outcome::Error("connection_lost".into()), None, false),
+    }
+}
+
+/// One worker: owns one connection, drives its slice of the id space.
+fn worker(cfg: &LoadgenConfig, worker_idx: usize, t0: Instant) -> WorkerStats {
+    let mut stats = WorkerStats::default();
+    let garble_plan = FaultPlan {
+        seed: cfg.seed ^ GARBLE_SEED_SALT,
+        ..FaultPlan::none()
+    };
+    let mut stream = connect(cfg).ok();
+    let stride = cfg.conns.max(1) as u64;
+    let mut id = worker_idx as u64;
+    while id < cfg.requests {
+        // open-loop pacing: due times are fixed at t0, independent of
+        // service latency
+        if cfg.rate > 0.0 {
+            let due = t0 + Duration::from_secs_f64(id as f64 / cfg.rate);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+        }
+        stats.sent += 1;
+        if stream.is_none() {
+            stream = connect(cfg).ok();
+        }
+        let Some(s) = stream.as_mut() else {
+            stats.record(Outcome::Error("connect_failed".into()), None);
+            id += stride;
+            continue;
+        };
+
+        // deterministic noise frame ahead of the real request
+        let mut keep = true;
+        if garble_plan.fire(cfg.garble, fault_domain::CLIENT_GARBLE, id) {
+            stats.noise_sent += 1;
+            let (acked, k) = send_noise(s, cfg, id);
+            if acked {
+                stats.noise_acked += 1;
+            }
+            keep = k;
+        }
+        if !keep {
+            stats.record(Outcome::Error("connection_lost".into()), None);
+            stream = None;
+            id += stride;
+            continue;
+        }
+
+        let (outcome, rtt, keep) = transact(s, cfg, id);
+        stats.record(outcome, rtt);
+        if !keep {
+            stream = None;
+        }
+        id += stride;
+    }
+    stats
+}
+
+/// Send a `shutdown` frame and wait for the drain acknowledgement.
+pub fn request_shutdown(cfg: &LoadgenConfig) -> bool {
+    let Ok(mut s) = connect(cfg) else {
+        return false;
+    };
+    let frame = serde_json::to_vec(&Request::Shutdown { id: Some(u64::MAX) })
+        .expect("serializable shutdown");
+    if write_frame(&mut s, &frame, &cfg.limits).is_err() {
+        return false;
+    }
+    match read_frame(&mut s, &cfg.limits) {
+        Ok(payload) => serde_json::from_slice::<Reply>(&payload)
+            .map(|r| r.is_ok() && r.kind.as_deref() == Some("draining"))
+            .unwrap_or(false),
+        Err(_) => false,
+    }
+}
+
+/// Run the full load schedule and aggregate the report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let conns = cfg.conns.max(1);
+    let t0 = Instant::now();
+    let mut total = WorkerStats::default();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..conns)
+            .map(|w| {
+                let cfg = cfg.clone();
+                scope.spawn(move || worker(&cfg, w, t0))
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(stats) => total.merge(stats),
+                Err(_) => anyhow::bail!("loadgen worker panicked"),
+            }
+        }
+        Ok(())
+    })?;
+    let drain_acked = if cfg.shutdown {
+        request_shutdown(cfg)
+    } else {
+        false
+    };
+    let elapsed = t0.elapsed();
+    let secs = elapsed.as_secs_f64().max(1e-9);
+    let report = LoadReport {
+        sent: total.sent,
+        ok: total.ok,
+        shed: total.shed,
+        errors: total.errors,
+        verify_failures: total.verify_failures,
+        noise_sent: total.noise_sent,
+        noise_acked: total.noise_acked,
+        taxonomy: total.taxonomy,
+        p50_us: total.latency.percentile_us(50.0),
+        p95_us: total.latency.percentile_us(95.0),
+        p99_us: total.latency.percentile_us(99.0),
+        mean_us: total.latency.mean_us(),
+        max_us: total.latency.max_us(),
+        goodput_rps: total.ok as f64 / secs,
+        shed_rate: if total.sent == 0 {
+            0.0
+        } else {
+            total.shed as f64 / total.sent as f64
+        },
+        elapsed_ms: elapsed.as_millis() as u64,
+        drain_acked,
+    };
+    Ok(report)
+}
+
+/// Write the report under the standard bench envelope.
+pub fn write_report(report: &LoadReport, out: &Path) -> Result<()> {
+    let record = serde_json::json!({
+        "bench": "serve",
+        "schema": 1,
+        "git_sha": git_sha(),
+        "threads": rayon::current_num_threads(),
+        "features": features(),
+        "metrics": report,
+    });
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    std::fs::write(out, serde_json::to_string_pretty(&record)?)
+        .with_context(|| format!("write {}", out.display()))?;
+    Ok(())
+}
+
+fn features() -> Vec<&'static str> {
+    let mut f = Vec::new();
+    if cfg!(feature = "simd") {
+        f.push("simd");
+    }
+    if cfg!(feature = "pjrt") {
+        f.push("pjrt");
+    }
+    f
+}
+
+fn git_sha() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::protocol::kind;
+
+    #[test]
+    fn classification_taxonomy() {
+        let ok = Reply {
+            id: Some(1),
+            status: "ok".into(),
+            verified: Some(true),
+            ..Reply::default()
+        };
+        assert_eq!(classify(&ok, true), Outcome::Ok);
+
+        let bad_verify = Reply {
+            verified: Some(false),
+            ..ok.clone()
+        };
+        assert_eq!(
+            classify(&bad_verify, true),
+            Outcome::Error("verify_failed".into())
+        );
+        // verification not requested: a stale field does not fail it
+        assert_eq!(classify(&bad_verify, false), Outcome::Ok);
+
+        let shed = Reply::error(Some(2), kind::OVERLOADED, "full");
+        assert_eq!(classify(&shed, false), Outcome::Shed("overloaded".into()));
+        let shed = Reply::error(Some(2), kind::DEADLINE_EXCEEDED, "late");
+        assert!(matches!(classify(&shed, false), Outcome::Shed(_)));
+        let err = Reply::error(Some(3), "worker_panic", "boom");
+        assert_eq!(classify(&err, false), Outcome::Error("worker_panic".into()));
+    }
+
+    #[test]
+    fn stats_accounting_invariant() {
+        let mut s = WorkerStats {
+            sent: 4,
+            ..WorkerStats::default()
+        };
+        s.record(Outcome::Ok, Some(Duration::from_micros(120)));
+        s.record(Outcome::Shed("overloaded".into()), None);
+        s.record(Outcome::Error("client_timeout".into()), None);
+        s.record(Outcome::Error("verify_failed".into()), None);
+        let mut total = WorkerStats::default();
+        total.merge(s);
+        assert_eq!(total.ok + total.shed + total.errors, total.sent);
+        assert_eq!(total.verify_failures, 1);
+        assert_eq!(total.taxonomy.get("overloaded"), Some(&1));
+        assert_eq!(total.latency.count(), 1);
+    }
+
+    #[test]
+    fn deadline_jitter_is_deterministic_and_bounded() {
+        for id in 0..200u64 {
+            let a = deadline_for(100, 42, id);
+            let b = deadline_for(100, 42, id);
+            assert_eq!(a, b);
+            assert!((50..150).contains(&a), "deadline {a} outside jitter window");
+        }
+        // different seeds decorrelate
+        let same = (0..50u64)
+            .filter(|&id| deadline_for(100, 1, id) == deadline_for(100, 2, id))
+            .count();
+        assert!(same < 50);
+    }
+
+    #[test]
+    fn shape_mix_covers_all_ids() {
+        for id in 0..16u64 {
+            let (m, n, k) = SHAPES[(id % SHAPES.len() as u64) as usize];
+            assert!(m > 0 && n > 0 && k > 0);
+        }
+    }
+
+    #[test]
+    fn report_accounting() {
+        let report = LoadReport {
+            sent: 10,
+            ok: 7,
+            shed: 2,
+            errors: 1,
+            verify_failures: 0,
+            noise_sent: 3,
+            noise_acked: 3,
+            taxonomy: BTreeMap::new(),
+            p50_us: 100,
+            p95_us: 200,
+            p99_us: 300,
+            mean_us: 120.0,
+            max_us: 400,
+            goodput_rps: 70.0,
+            shed_rate: 0.2,
+            elapsed_ms: 100,
+            drain_acked: true,
+        };
+        assert!(report.accounted());
+        assert!(report.summary().contains("ok=7"));
+        let mut broken = report.clone();
+        broken.errors = 0;
+        assert!(!broken.accounted());
+    }
+}

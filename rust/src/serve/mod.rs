@@ -1,0 +1,52 @@
+//! Fault-tolerant network serving front-end for the engine.
+//!
+//! Std-library TCP and threads only — no async runtime. The stack,
+//! bottom to top:
+//!
+//! * [`framing`] — length-prefixed frames (4-byte big-endian length +
+//!   JSON payload) with a hard inbound size cap and three time bounds:
+//!   per-frame (defeats slow-loris), idle (culls dead peers), and
+//!   write. Every violation is a typed [`framing::FrameError`].
+//! * [`protocol`] — the JSON request/reply bodies and the error
+//!   taxonomy. Serving-layer kinds (`malformed_frame`,
+//!   `oversized_frame`, `overloaded`, `deadline_exceeded`, `draining`,
+//!   `timeout`) extend the engine's per-query kinds unchanged.
+//! * [`admission`] — a depth-bounded queue with typed refusals and a
+//!   single engine-owning batcher thread that drains it in time/count
+//!   bounded windows, so same-shape requests from different
+//!   connections coalesce exactly like an in-process batch.
+//! * [`server`] — the accept loop (bounded handler set, immediate
+//!   `overloaded` rejection beyond it), per-connection handlers, and
+//!   the graceful-drain sequence triggered by SIGTERM/CTRL-C or a
+//!   `shutdown` frame: stop accepting → close the queue → flush every
+//!   admitted window → join handlers → report final metrics.
+//! * [`loadgen`] — the open-loop client (`repro loadgen`): fixed
+//!   arrival schedule, rotating shape mix, jittered deadlines,
+//!   deterministic garble noise, and a fully-accounted
+//!   ok/shed/error report written to `BENCH_serve.json`.
+//!
+//! **Deadline semantics.** A request's `deadline_ms` budget starts at
+//! arrival. It is checked at admission (expired → shed before
+//! queueing) and re-checked by the engine immediately before execute
+//! (expired → shed without running). Expired work is never executed.
+//!
+//! **Fault matrix.** One [`FaultPlan`](crate::engine::FaultPlan)
+//! drives the whole stack deterministically: `exec_error` and
+//! `exec_panic` fire inside the engine (per-query typed errors; the
+//! rest of the batch succeeds), `drop_response` fires in the server
+//! (reply withheld, client times out), and the loadgen's `--garble`
+//! rate draws from the same hash family for client-side noise frames.
+//! Every decision keys on the query seed / request id, so replaying a
+//! schedule replays its faults.
+
+pub mod admission;
+pub mod framing;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use admission::{AdmissionQueue, AdmitError, Batcher, Job};
+pub use framing::{read_frame, write_frame, FrameError, FrameLimits, MAX_WRITE_FRAME};
+pub use loadgen::{LoadReport, LoadgenConfig};
+pub use protocol::{GemmRequest, Reply, Request};
+pub use server::{serve_listener, signals, ServeConfig};

@@ -1,0 +1,287 @@
+//! The wire protocol: JSON request/reply bodies and the serving error
+//! taxonomy.
+//!
+//! Every frame (see [`super::framing`]) carries one JSON document. A
+//! request is a tagged op — `gemm`, `ping`, or `shutdown` — and every
+//! reply is a flat [`Reply`] whose `status` is `"ok"` or `"error"`;
+//! error replies carry a stable machine-readable `kind` from [`kind`]
+//! plus a human-readable `message`. Engine-level failures reuse
+//! [`EngineError::kind`](crate::engine::EngineError::kind) verbatim, so
+//! the taxonomy a load generator aggregates is the same one the engine
+//! tests assert on.
+
+use serde::{Deserialize, Serialize};
+
+use crate::engine::{EngineError, Response};
+
+/// Wire-level error kinds added by the serving layer itself (engine
+/// failures use [`EngineError::kind`] — `infeasible`, `unknown_shape`,
+/// `deadline_exceeded`, `injected_fault`, `worker_panic`,
+/// `exec_failed`).
+pub mod kind {
+    /// The frame's payload was not a valid request document.
+    pub const MALFORMED_FRAME: &str = "malformed_frame";
+    /// The frame's declared length exceeds the hard cap.
+    pub const OVERSIZED_FRAME: &str = "oversized_frame";
+    /// The request was shed at admission: queue or connection set full.
+    pub const OVERLOADED: &str = "overloaded";
+    /// The request's deadline had already expired at admission.
+    pub const DEADLINE_EXCEEDED: &str = "deadline_exceeded";
+    /// The server is draining and admits no new work.
+    pub const DRAINING: &str = "draining";
+    /// The handler gave up waiting for the engine's outcome.
+    pub const TIMEOUT: &str = "timeout";
+}
+
+/// One client → server request frame.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(tag = "op", rename_all = "snake_case")]
+pub enum Request {
+    /// A GEMM query through the engine pipeline.
+    Gemm(GemmRequest),
+    /// Liveness probe; answered immediately, never queued.
+    Ping {
+        #[serde(default)]
+        id: Option<u64>,
+    },
+    /// Ask the server to drain gracefully (same sequence as SIGTERM:
+    /// stop accepting, flush the in-flight window, report metrics).
+    Shutdown {
+        #[serde(default)]
+        id: Option<u64>,
+    },
+}
+
+/// The body of a `gemm` request.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+pub struct GemmRequest {
+    /// Client-chosen correlation id, echoed in the reply.
+    pub id: u64,
+    /// Optional workload name (defaults to `q<id>`).
+    #[serde(default)]
+    pub name: Option<String>,
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// `runtime` | `energy` | `edp`; the server default when absent.
+    #[serde(default)]
+    pub objective: Option<String>,
+    /// Operand seed (server default when absent) — the bit-identity
+    /// contract keys on this.
+    #[serde(default)]
+    pub seed: Option<u64>,
+    #[serde(default)]
+    pub verify: bool,
+    #[serde(default)]
+    pub return_result: bool,
+    /// Serve-by budget in milliseconds, relative to arrival. Checked at
+    /// admission and again before execute; expired work is shed.
+    #[serde(default)]
+    pub deadline_ms: Option<u64>,
+}
+
+/// One server → client reply frame (flat; absent fields are omitted).
+#[derive(Debug, Clone, Default, Serialize, Deserialize)]
+pub struct Reply {
+    /// Echo of the request id; absent when the request was too
+    /// malformed to carry one.
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub id: Option<u64>,
+    /// `"ok"` or `"error"`.
+    pub status: String,
+    /// Machine-readable detail: an error kind, or `pong`/`draining`
+    /// for control replies.
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub kind: Option<String>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub message: Option<String>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub mapping: Option<String>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub accelerator: Option<usize>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub projected_ms: Option<f64>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub executed: Option<bool>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub verified: Option<bool>,
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub latency_us: Option<u64>,
+    /// Row-major M×N result (f32 survives the JSON round-trip
+    /// bit-exactly, so this supports bit-identity checks on the wire).
+    #[serde(default, skip_serializing_if = "Option::is_none")]
+    pub result: Option<Vec<f32>>,
+}
+
+impl Reply {
+    /// A successful GEMM reply carrying the engine's [`Response`].
+    pub fn ok(id: u64, r: &Response) -> Reply {
+        Reply {
+            id: Some(id),
+            status: "ok".into(),
+            mapping: Some(r.mapping_name()),
+            accelerator: Some(r.accelerator_idx),
+            projected_ms: Some(r.projected_ms()),
+            executed: Some(r.executed),
+            verified: r.verified,
+            latency_us: Some(r.latency_us),
+            result: r.result.clone(),
+            ..Reply::default()
+        }
+    }
+
+    /// A `ping` answer.
+    pub fn pong(id: Option<u64>) -> Reply {
+        Reply {
+            id,
+            status: "ok".into(),
+            kind: Some("pong".into()),
+            ..Reply::default()
+        }
+    }
+
+    /// Acknowledgement that the server has begun draining.
+    pub fn draining(id: Option<u64>) -> Reply {
+        Reply {
+            id,
+            status: "ok".into(),
+            kind: Some(kind::DRAINING.into()),
+            ..Reply::default()
+        }
+    }
+
+    /// A typed error reply.
+    pub fn error(id: Option<u64>, kind: &str, message: &str) -> Reply {
+        Reply {
+            id,
+            status: "error".into(),
+            kind: Some(kind.into()),
+            message: Some(message.into()),
+            ..Reply::default()
+        }
+    }
+
+    /// A per-query engine failure, taxonomy preserved.
+    pub fn engine_error(id: u64, e: &EngineError) -> Reply {
+        Reply::error(Some(id), e.kind(), &e.to_string())
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == "ok"
+    }
+
+    /// `true` for load-shedding outcomes (deadline, overload, drain) —
+    /// intentional refusals, not failures.
+    pub fn is_shed(&self) -> bool {
+        !self.is_ok()
+            && matches!(
+                self.kind.as_deref(),
+                Some(kind::DEADLINE_EXCEEDED) | Some(kind::OVERLOADED) | Some(kind::DRAINING)
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requests_round_trip() {
+        let g = Request::Gemm(GemmRequest {
+            id: 7,
+            name: Some("w".into()),
+            m: 64,
+            n: 48,
+            k: 32,
+            objective: Some("energy".into()),
+            seed: Some(99),
+            verify: true,
+            return_result: true,
+            deadline_ms: Some(250),
+        });
+        let s = serde_json::to_string(&g).unwrap();
+        assert!(s.contains("\"op\":\"gemm\""), "{s}");
+        let back: Request = serde_json::from_str(&s).unwrap();
+        match back {
+            Request::Gemm(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!((r.m, r.n, r.k), (64, 48, 32));
+                assert_eq!(r.deadline_ms, Some(250));
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        // minimal gemm: optional fields default
+        let min: Request =
+            serde_json::from_str(r#"{"op":"gemm","id":1,"m":8,"n":8,"k":8}"#).unwrap();
+        match min {
+            Request::Gemm(r) => {
+                assert_eq!(r.seed, None);
+                assert!(!r.verify && !r.return_result);
+                assert!(r.deadline_ms.is_none());
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        let ping: Request = serde_json::from_str(r#"{"op":"ping"}"#).unwrap();
+        assert!(matches!(ping, Request::Ping { id: None }));
+        let down: Request = serde_json::from_str(r#"{"op":"shutdown","id":3}"#).unwrap();
+        assert!(matches!(down, Request::Shutdown { id: Some(3) }));
+    }
+
+    #[test]
+    fn malformed_requests_fail_to_parse() {
+        for bad in [
+            "not json at all",
+            r#"{"op":"explode"}"#,
+            r#"{"op":"gemm","id":1}"#,        // missing shape
+            r#"{"op":"gemm","m":8,"n":8,"k":8}"#, // missing id
+            r#"{"id":1,"m":8,"n":8,"k":8}"#,  // missing op
+        ] {
+            assert!(
+                serde_json::from_str::<Request>(bad).is_err(),
+                "should reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn reply_constructors_and_classification() {
+        let e = EngineError::DeadlineExceeded { stage: "execute" };
+        let r = Reply::engine_error(4, &e);
+        assert!(!r.is_ok());
+        assert!(r.is_shed());
+        assert_eq!(r.kind.as_deref(), Some("deadline_exceeded"));
+        assert_eq!(r.id, Some(4));
+
+        let r = Reply::error(None, kind::MALFORMED_FRAME, "bad json");
+        assert!(!r.is_ok() && !r.is_shed());
+        assert_eq!(r.id, None);
+        // absent fields are omitted on the wire
+        let s = serde_json::to_string(&r).unwrap();
+        assert!(!s.contains("mapping"), "{s}");
+        assert!(!s.contains("\"id\""), "{s}");
+
+        assert!(Reply::pong(Some(1)).is_ok());
+        assert!(Reply::draining(None).is_ok());
+        let over = Reply::error(Some(2), kind::OVERLOADED, "queue full");
+        assert!(over.is_shed());
+    }
+
+    #[test]
+    fn f32_results_survive_json_bit_exactly() {
+        // the bit-identity contract rides on this: serde_json encodes
+        // f32 via f64 (exact) with shortest-round-trip formatting
+        let vals: Vec<f32> = vec![0.1, -3.25e-7, 1.0 / 3.0, f32::MIN_POSITIVE, 1e30];
+        let r = Reply {
+            id: Some(1),
+            status: "ok".into(),
+            result: Some(vals.clone()),
+            ..Reply::default()
+        };
+        let s = serde_json::to_string(&r).unwrap();
+        let back: Reply = serde_json::from_str(&s).unwrap();
+        let got = back.result.unwrap();
+        for (a, b) in vals.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,397 @@
+//! The TCP serving front-end: bounded accept loop, per-connection
+//! handlers, and the graceful-drain sequence.
+//!
+//! Std-library TCP and threads only — no async runtime. The accept
+//! loop admits at most [`ServeConfig::max_conns`] concurrent handler
+//! threads; connections beyond that receive an immediate `overloaded`
+//! reply and are dropped. Each handler reads bounded frames
+//! (see [`super::framing`]), answers protocol errors in-band with
+//! typed replies, and funnels GEMM work through the bounded
+//! [`AdmissionQueue`](super::admission::AdmissionQueue) into the
+//! single engine-owning batcher thread.
+//!
+//! **Drain sequence** (SIGTERM, CTRL-C, or a `shutdown` frame): stop
+//! accepting, close the admission queue (new pushes refused with
+//! `draining`), let the batcher flush every admitted window, join all
+//! handler threads, then recover the engine and report its final
+//! cumulative [`ServiceMetrics`] — every admitted request is answered
+//! before the listener exits.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::ServiceMetrics;
+use crate::cost::Objective;
+use crate::engine::{fault_domain, Engine, FaultPlan, Query, DEFAULT_SEED};
+use crate::workloads::Gemm;
+
+use super::admission::{AdmissionQueue, AdmitError, Batcher, Job};
+use super::framing::{read_frame, write_frame, FrameError, FrameLimits};
+use super::protocol::{kind, GemmRequest, Reply, Request};
+
+/// Serving knobs. Defaults favor a local benchmark target: small
+/// batching window, bounded everything.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Address to bind, e.g. `127.0.0.1:7474`.
+    pub listen: String,
+    /// Maximum concurrent connection handler threads.
+    pub max_conns: usize,
+    /// Admission queue depth; pushes beyond this are shed.
+    pub queue_depth: usize,
+    /// Maximum queries coalesced into one engine window.
+    pub batch_max: usize,
+    /// Time bound on gathering one batch window.
+    pub batch_window: Duration,
+    /// Per-connection framing bounds.
+    pub limits: FrameLimits,
+    /// How long a handler waits for the engine's outcome before
+    /// answering `timeout`.
+    pub reply_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:7474".into(),
+            max_conns: 32,
+            queue_depth: 256,
+            batch_max: 64,
+            batch_window: Duration::from_millis(2),
+            limits: FrameLimits::default(),
+            reply_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Process-wide SIGINT/SIGTERM latch. Installed only by the CLI serve
+/// path — library users and tests drive drain through the `shutdown`
+/// frame instead, so running tests never replaces process handlers.
+pub mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+    /// Route SIGINT (2) and SIGTERM (15) to a latch the accept loop
+    /// polls. Uses the libc `signal(2)` symbol directly — the only
+    /// work in the handler is one atomic store, which is async-signal
+    /// safe.
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" fn on_signal(_signum: i32) {
+            SIGNALED.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            let _ = signal(2, on_signal);
+            let _ = signal(15, on_signal);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    /// `true` once a termination signal has been observed.
+    pub fn signaled() -> bool {
+        SIGNALED.load(Ordering::SeqCst)
+    }
+}
+
+/// State shared between the accept loop and every handler thread.
+struct Shared {
+    queue: Arc<AdmissionQueue>,
+    drain: AtomicBool,
+    /// Admission-layer shed/error counters; engine-side outcomes are
+    /// counted by the engine itself, so nothing is double-counted.
+    shed_overload: AtomicU64,
+    shed_deadline: AtomicU64,
+    protocol_errors: AtomicU64,
+    faults: FaultPlan,
+    limits: FrameLimits,
+    reply_timeout: Duration,
+}
+
+impl Shared {
+    fn draining(&self) -> bool {
+        self.drain.load(Ordering::SeqCst)
+    }
+
+    fn start_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+        self.queue.close();
+    }
+}
+
+/// Run the serving loop on an already-bound listener until drain
+/// completes, then return the engine's final cumulative metrics.
+/// Binding is the caller's job so tests can use port 0.
+pub fn serve_listener(
+    listener: TcpListener,
+    engine: Engine,
+    config: &ServeConfig,
+) -> Result<ServiceMetrics> {
+    let queue = AdmissionQueue::new(config.queue_depth);
+    let shared = Arc::new(Shared {
+        queue: Arc::clone(&queue),
+        drain: AtomicBool::new(false),
+        shed_overload: AtomicU64::new(0),
+        shed_deadline: AtomicU64::new(0),
+        protocol_errors: AtomicU64::new(0),
+        faults: engine.faults().clone(),
+        limits: config.limits.clone(),
+        reply_timeout: config.reply_timeout,
+    });
+    let batcher = Batcher::spawn(engine, queue, config.batch_max, config.batch_window);
+
+    listener.set_nonblocking(true)?;
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        if signals::signaled() {
+            shared.start_drain();
+        }
+        if shared.draining() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                handlers.retain(|h| !h.is_finished());
+                if handlers.len() >= config.max_conns.max(1) {
+                    shared.shed_overload.fetch_add(1, Ordering::Relaxed);
+                    reject_connection(stream, &shared);
+                    continue;
+                }
+                let shared = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || handle_conn(stream, &shared))
+                    .expect("spawn serve-conn thread");
+                handlers.push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    // Drain: the queue is closed; the batcher flushes every admitted
+    // window and hands the engine back; handlers notice the flag at
+    // their next poll tick and exit after their in-flight reply.
+    for h in handlers {
+        let _ = h.join();
+    }
+    let engine = batcher.join()?;
+    let mut metrics = engine.metrics().clone();
+    metrics.shed_overload += shared.shed_overload.load(Ordering::Relaxed);
+    metrics.shed_deadline += shared.shed_deadline.load(Ordering::Relaxed);
+    metrics.errors += shared.protocol_errors.load(Ordering::Relaxed);
+    metrics.drains += 1;
+    Ok(metrics)
+}
+
+/// Tell an over-cap connection why it is being dropped. Best-effort —
+/// a peer that refuses the frame is dropped silently.
+fn reject_connection(mut stream: TcpStream, shared: &Shared) {
+    let mut limits = shared.limits.clone();
+    limits.write_timeout = limits.write_timeout.min(Duration::from_secs(1));
+    let reply = Reply::error(None, kind::OVERLOADED, "connection limit reached");
+    let _ = send(&mut stream, &limits, &reply);
+}
+
+fn send(stream: &mut TcpStream, limits: &FrameLimits, reply: &Reply) -> bool {
+    let payload = match serde_json::to_vec(reply) {
+        Ok(p) => p,
+        Err(_) => return false,
+    };
+    write_frame(stream, &payload, limits).is_ok()
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    // Poll in short slices so the handler notices a drain that begins
+    // while it sits at a frame boundary; slices accumulate toward the
+    // configured idle budget.
+    let poll = Duration::from_millis(100).min(shared.limits.idle_timeout);
+    let mut poll_limits = shared.limits.clone();
+    poll_limits.idle_timeout = poll;
+    let mut idle_spent = Duration::ZERO;
+    loop {
+        if shared.draining() {
+            return;
+        }
+        match read_frame(&mut stream, &poll_limits) {
+            Ok(payload) => {
+                idle_spent = Duration::ZERO;
+                if !handle_frame(&mut stream, shared, &payload) {
+                    return;
+                }
+            }
+            Err(FrameError::Idle) => {
+                idle_spent += poll;
+                if idle_spent >= shared.limits.idle_timeout {
+                    return;
+                }
+            }
+            Err(FrameError::Oversized { len, max }) => {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let reply = Reply::error(
+                    None,
+                    kind::OVERSIZED_FRAME,
+                    &format!("frame of {len} bytes exceeds the {max}-byte cap"),
+                );
+                let _ = send(&mut stream, &shared.limits, &reply);
+                // the oversized payload was never read, so the stream
+                // position is unrecoverable: close
+                return;
+            }
+            Err(FrameError::Closed) => return,
+            Err(FrameError::Truncated) | Err(FrameError::TimedOut) => {
+                // half-delivered frame (disconnect mid-frame or slow
+                // loris): nothing sane to reply to
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            Err(FrameError::Io(_)) => return,
+        }
+    }
+}
+
+/// Dispatch one inbound frame. Returns `false` when the connection
+/// should close.
+fn handle_frame(stream: &mut TcpStream, shared: &Shared, payload: &[u8]) -> bool {
+    let request: Request = match serde_json::from_slice(payload) {
+        Ok(r) => r,
+        Err(e) => {
+            // malformed JSON inside an intact frame: framing is still
+            // synchronized, so answer in-band and keep the connection
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply::error(
+                None,
+                kind::MALFORMED_FRAME,
+                &format!("unparseable request: {e}"),
+            );
+            return send(stream, &shared.limits, &reply);
+        }
+    };
+    match request {
+        Request::Ping { id } => send(stream, &shared.limits, &Reply::pong(id)),
+        Request::Shutdown { id } => {
+            shared.start_drain();
+            let _ = send(stream, &shared.limits, &Reply::draining(id));
+            false
+        }
+        Request::Gemm(g) => handle_gemm(stream, shared, g),
+    }
+}
+
+fn handle_gemm(stream: &mut TcpStream, shared: &Shared, g: GemmRequest) -> bool {
+    let arrival = Instant::now();
+    let objective = match g.objective.as_deref() {
+        None => None,
+        Some(s) => match s.parse::<Objective>() {
+            Ok(o) => Some(o),
+            Err(e) => {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let reply = Reply::error(Some(g.id), kind::MALFORMED_FRAME, &e.to_string());
+                return send(stream, &shared.limits, &reply);
+            }
+        },
+    };
+    let deadline = g.deadline_ms.map(|ms| arrival + Duration::from_millis(ms));
+
+    // Admission-time deadline check: a request that arrives already
+    // expired is shed without touching the queue. The engine re-checks
+    // right before execute.
+    if let Some(d) = deadline {
+        if d <= Instant::now() {
+            shared.shed_deadline.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply::error(
+                Some(g.id),
+                kind::DEADLINE_EXCEEDED,
+                "deadline expired at admission",
+            );
+            return send(stream, &shared.limits, &reply);
+        }
+    }
+
+    let name = g.name.clone().unwrap_or_else(|| format!("q{}", g.id));
+    let mut query = Query::new(Gemm::new(&name, g.m, g.n, g.k))
+        .seed(g.seed.unwrap_or(DEFAULT_SEED))
+        .verify(g.verify)
+        .return_result(g.return_result);
+    if let Some(o) = objective {
+        query = query.objective(o);
+    }
+    if let Some(d) = deadline {
+        query = query.deadline(d);
+    }
+
+    let (tx, rx) = mpsc::channel();
+    match shared.queue.push(Job { query, reply: tx }) {
+        Ok(()) => {}
+        Err(AdmitError::Overloaded { depth }) => {
+            shared.shed_overload.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply::error(
+                Some(g.id),
+                kind::OVERLOADED,
+                &format!("admission queue full (depth {depth})"),
+            );
+            return send(stream, &shared.limits, &reply);
+        }
+        Err(AdmitError::Draining) => {
+            let reply = Reply::error(Some(g.id), kind::DRAINING, "server is draining");
+            let _ = send(stream, &shared.limits, &reply);
+            return false;
+        }
+    }
+
+    let outcome = match rx.recv_timeout(shared.reply_timeout) {
+        Ok(o) => o,
+        Err(_) => {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let reply = Reply::error(
+                Some(g.id),
+                kind::TIMEOUT,
+                "engine did not answer within the reply budget",
+            );
+            return send(stream, &shared.limits, &reply);
+        }
+    };
+
+    // Injected response drop: the work ran (and is counted engine-side)
+    // but the reply never leaves — the client's read times out.
+    if shared
+        .faults
+        .fire(shared.faults.drop_response, fault_domain::DROP_RESPONSE, g.id)
+    {
+        return true;
+    }
+
+    let reply = match &outcome {
+        Ok(r) => Reply::ok(g.id, r),
+        Err(e) => Reply::engine_error(g.id, e),
+    };
+    send(stream, &shared.limits, &reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_bounded() {
+        let c = ServeConfig::default();
+        assert!(c.max_conns >= 1);
+        assert!(c.queue_depth >= 1);
+        assert!(c.batch_max >= 1);
+        assert!(c.limits.max_frame <= 1 << 20);
+        assert!(!signals::signaled());
+    }
+}

@@ -234,6 +234,79 @@ fn hundred_request_trace_searches_once_per_shape_objective() {
 }
 
 #[test]
+fn one_infeasible_query_leaves_nineteen_bit_identical() {
+    use flash_gemm::arch::ClusterRule;
+
+    // a MAERI-style spec restricted to 32-wide clusters: an 8×8×8 GEMM
+    // has no legal λ (every dimension is smaller than the only cluster
+    // size) and is infeasible, while 64×64×64 maps fine
+    let mut spec = Style::Maeri.spec();
+    spec.name = "maeri-fixed32".into();
+    spec.dataflow.cluster = ClusterRule::Fixed {
+        sizes: vec![32],
+        include_sqrt: false,
+    };
+    let acc32 = Accelerator::from_spec(spec, HwConfig::edge());
+    let build = || {
+        Engine::builder()
+            .accelerator(acc32.clone())
+            .runtime(native_runtime())
+            .max_exec_dim(128)
+            .build()
+            .unwrap()
+    };
+    assert!(
+        build()
+            .plan(&Gemm::new("probe", 8, 8, 8), Objective::Runtime)
+            .is_err(),
+        "8×8×8 must be infeasible for this test to mean anything"
+    );
+
+    let feasible: Vec<Query> = (0..19)
+        .map(|i| {
+            Query::new(Gemm::new(&format!("ok{i}"), 64, 64, 64))
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+                .return_result(true)
+        })
+        .collect();
+    let mut window = feasible.clone();
+    window.insert(
+        7,
+        Query::new(Gemm::new("bad", 8, 8, 8))
+            .verify(true)
+            .return_result(true),
+    );
+    assert_eq!(window.len(), 20);
+
+    let mut eng = build();
+    let out = eng.try_run(&window);
+    let err = out.outcomes[7].as_ref().unwrap_err();
+    assert_eq!(err.kind(), "infeasible");
+    assert_eq!(out.ok_count(), 19);
+    assert_eq!(out.metrics.errors, 1);
+    assert_eq!(out.metrics.requests, 19);
+
+    // the 19 survivors are bit-identical to a clean window that never
+    // contained the poisoned query
+    let mut clean = build();
+    let clean_rep = clean.run(&feasible).unwrap();
+    let survivors: Vec<&flash_gemm::engine::Response> = out
+        .outcomes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != 7)
+        .map(|(_, o)| o.as_ref().unwrap())
+        .collect();
+    assert_eq!(survivors.len(), clean_rep.responses.len());
+    for (r, s) in survivors.iter().zip(&clean_rep.responses) {
+        assert_eq!(r.workload.name, s.workload.name);
+        assert_eq!(r.verified, Some(true), "{}", r.workload.name);
+        assert_eq!(result_bits(r), result_bits(s), "{}", r.workload.name);
+    }
+}
+
+#[test]
 fn shim_batches_consecutively_while_engine_coalesces_windows() {
     // the same interleaved trace: the legacy shim batches consecutive
     // runs (6 batches, 4 cache hits), the engine coalesces the whole

@@ -1,0 +1,411 @@
+//! Integration: the network serving front-end end to end over real
+//! sockets — protocol error taxonomy, framing bounds (oversized,
+//! truncated, slow-loris), admission deadlines, graceful drain, fault
+//! injection, and bit-identity between served results and an
+//! in-process engine run. Everything binds 127.0.0.1:0 and drains via
+//! the `shutdown` frame, so no process signals are involved.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::coordinator::ServiceMetrics;
+use flash_gemm::engine::{Engine, FaultPlan, Query, DEFAULT_SEED};
+use flash_gemm::runtime::{Manifest, Runtime};
+use flash_gemm::serve::{
+    loadgen, read_frame, serve_listener, write_frame, FrameLimits, GemmRequest, LoadgenConfig,
+    Reply, Request, ServeConfig,
+};
+use flash_gemm::workloads::Gemm;
+
+fn engine() -> Engine {
+    Engine::builder()
+        .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+        .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+        .max_exec_dim(128)
+        .build()
+        .unwrap()
+}
+
+fn quick_config() -> ServeConfig {
+    ServeConfig {
+        batch_window: Duration::from_millis(1),
+        limits: FrameLimits {
+            max_frame: 64 << 10,
+            frame_timeout: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(5),
+        },
+        ..ServeConfig::default()
+    }
+}
+
+/// Start a server on an ephemeral port; returns the address and the
+/// handle that yields the final metrics after drain.
+fn start_server(
+    engine: Engine,
+    config: ServeConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceMetrics>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handle = std::thread::spawn(move || serve_listener(listener, engine, &config));
+    (addr, handle)
+}
+
+fn client_limits() -> FrameLimits {
+    FrameLimits {
+        max_frame: 64 << 20,
+        frame_timeout: Duration::from_secs(30),
+        idle_timeout: Duration::from_secs(30),
+        write_timeout: Duration::from_secs(30),
+    }
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_nodelay(true).ok();
+    s
+}
+
+fn send_request(stream: &mut TcpStream, request: &Request) -> Reply {
+    let payload = serde_json::to_vec(request).expect("serialize");
+    write_frame(stream, &payload, &client_limits()).expect("write frame");
+    recv_reply(stream)
+}
+
+fn recv_reply(stream: &mut TcpStream) -> Reply {
+    let payload = read_frame(stream, &client_limits()).expect("read frame");
+    serde_json::from_slice(&payload).expect("reply parses")
+}
+
+fn gemm_request(id: u64, (m, n, k): (u64, u64, u64)) -> Request {
+    Request::Gemm(GemmRequest {
+        id,
+        name: Some(format!("t{id}")),
+        m,
+        n,
+        k,
+        objective: None,
+        seed: Some(DEFAULT_SEED + id),
+        verify: true,
+        return_result: true,
+        deadline_ms: None,
+    })
+}
+
+fn shutdown(addr: &str) {
+    let mut s = connect(addr);
+    let reply = send_request(&mut s, &Request::Shutdown { id: Some(999) });
+    assert!(reply.is_ok());
+    assert_eq!(reply.kind.as_deref(), Some("draining"));
+}
+
+#[test]
+fn ping_gemm_and_drain_round_trip() {
+    let (addr, handle) = start_server(engine(), quick_config());
+    let mut s = connect(&addr);
+
+    let pong = send_request(&mut s, &Request::Ping { id: Some(5) });
+    assert!(pong.is_ok());
+    assert_eq!(pong.kind.as_deref(), Some("pong"));
+    assert_eq!(pong.id, Some(5));
+
+    let reply = send_request(&mut s, &gemm_request(1, (64, 64, 64)));
+    assert!(reply.is_ok(), "{reply:?}");
+    assert_eq!(reply.id, Some(1));
+    assert_eq!(reply.executed, Some(true));
+    assert_eq!(reply.verified, Some(true));
+    let result = reply.result.expect("result requested");
+    assert_eq!(result.len(), 64 * 64);
+    assert!(reply.mapping.is_some() && reply.accelerator.is_some());
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.drains, 1);
+    assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 0);
+}
+
+#[test]
+fn malformed_frame_gets_typed_reply_and_framing_survives() {
+    let (addr, handle) = start_server(engine(), quick_config());
+    let mut s = connect(&addr);
+
+    // broken JSON in an intact frame: typed error, connection stays up
+    write_frame(&mut s, b"this is not json{", &client_limits()).unwrap();
+    let reply = recv_reply(&mut s);
+    assert!(!reply.is_ok());
+    assert_eq!(reply.kind.as_deref(), Some("malformed_frame"));
+    assert_eq!(reply.id, None);
+
+    // valid JSON that is not a valid request: same taxonomy
+    write_frame(&mut s, br#"{"op":"explode"}"#, &client_limits()).unwrap();
+    let reply = recv_reply(&mut s);
+    assert_eq!(reply.kind.as_deref(), Some("malformed_frame"));
+
+    // the same connection still serves real work afterwards
+    let reply = send_request(&mut s, &gemm_request(2, (32, 96, 48)));
+    assert!(reply.is_ok(), "{reply:?}");
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    // the two protocol errors are accounted in the final ledger
+    assert_eq!(metrics.errors, 2);
+    assert_eq!(metrics.requests, 1);
+}
+
+#[test]
+fn oversized_and_truncated_frames_are_bounded() {
+    let (addr, handle) = start_server(engine(), quick_config());
+
+    // declared length beyond the cap: typed reply, then close — the
+    // payload itself is never read
+    let mut s = connect(&addr);
+    use std::io::Write as _;
+    s.write_all(&(1u32 << 20).to_be_bytes()).unwrap();
+    let reply = recv_reply(&mut s);
+    assert_eq!(reply.kind.as_deref(), Some("oversized_frame"));
+    assert!(read_frame(&mut s, &client_limits()).is_err(), "conn closed");
+
+    // disconnect mid-frame: server tolerates and keeps serving
+    let mut s = connect(&addr);
+    s.write_all(&100u32.to_be_bytes()).unwrap();
+    s.write_all(b"only a few bytes").unwrap();
+    drop(s);
+
+    let mut s = connect(&addr);
+    let reply = send_request(&mut s, &gemm_request(3, (48, 40, 24)));
+    assert!(reply.is_ok(), "{reply:?}");
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.requests, 1);
+    // oversized + truncated are both accounted as protocol errors
+    assert_eq!(metrics.errors, 2);
+}
+
+#[test]
+fn slow_loris_is_culled_within_the_frame_budget() {
+    let (addr, handle) = start_server(engine(), quick_config());
+
+    // dribble a header and stall: the per-frame budget (500ms here)
+    // must cull the connection even though it never goes idle-quiet
+    let mut loris = connect(&addr);
+    use std::io::{Read as _, Write as _};
+    loris.write_all(&64u32.to_be_bytes()).unwrap();
+    loris.write_all(b"ab").unwrap();
+
+    // meanwhile real clients are served
+    let mut s = connect(&addr);
+    let reply = send_request(&mut s, &gemm_request(4, (64, 64, 64)));
+    assert!(reply.is_ok());
+
+    // the loris socket gets closed by the server
+    loris
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 16];
+    let n = loris.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server should close the slow-loris connection");
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.requests, 1);
+    assert!(metrics.errors >= 1, "loris counted as protocol error");
+}
+
+#[test]
+fn expired_deadlines_and_zero_shapes_are_typed() {
+    let (addr, handle) = start_server(engine(), quick_config());
+    let mut s = connect(&addr);
+
+    // deadline_ms 0 expires at admission: shed, never queued
+    let mut expired = match gemm_request(5, (64, 64, 64)) {
+        Request::Gemm(g) => g,
+        _ => unreachable!(),
+    };
+    expired.deadline_ms = Some(0);
+    let reply = send_request(&mut s, &Request::Gemm(expired));
+    assert!(!reply.is_ok());
+    assert_eq!(reply.kind.as_deref(), Some("deadline_exceeded"));
+    assert!(reply.is_shed());
+
+    // zero dimension: typed unknown_shape from the engine, not a hang
+    let reply = send_request(&mut s, &gemm_request(6, (0, 8, 8)));
+    assert_eq!(reply.kind.as_deref(), Some("unknown_shape"));
+
+    // a bad objective string is a malformed request, listing the menu
+    let mut bad_obj = match gemm_request(7, (64, 64, 64)) {
+        Request::Gemm(g) => g,
+        _ => unreachable!(),
+    };
+    bad_obj.objective = Some("latency".into());
+    let reply = send_request(&mut s, &Request::Gemm(bad_obj));
+    assert_eq!(reply.kind.as_deref(), Some("malformed_frame"));
+    assert!(reply.message.unwrap_or_default().contains("runtime"));
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.shed_deadline, 1);
+    assert_eq!(metrics.requests, 0);
+}
+
+#[test]
+fn concurrent_clients_are_bit_identical_to_in_process_execution() {
+    const SHAPES: [(u64, u64, u64); 4] =
+        [(64, 64, 64), (32, 96, 48), (96, 80, 64), (48, 40, 24)];
+    let n = 8usize;
+
+    // in-process reference: same engine construction, same queries
+    let queries: Vec<Query> = (0..n)
+        .map(|i| {
+            let (m, nn, k) = SHAPES[i % SHAPES.len()];
+            Query::new(Gemm::new(&format!("t{i}"), m, nn, k))
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+                .return_result(true)
+        })
+        .collect();
+    let reference = engine().run(&queries).expect("in-process run");
+    let expected: Vec<Vec<u32>> = reference
+        .responses
+        .iter()
+        .map(|r| {
+            r.result
+                .as_ref()
+                .expect("result")
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        })
+        .collect();
+
+    // served: one thread per client, each its own connection
+    let (addr, handle) = start_server(engine(), quick_config());
+    let mut got: Vec<Option<Vec<u32>>> = vec![None; n];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut s = connect(&addr);
+                    let reply = send_request(&mut s, &gemm_request(i as u64, SHAPES[i % 4]));
+                    assert!(reply.is_ok(), "{reply:?}");
+                    assert_eq!(reply.verified, Some(true));
+                    reply
+                        .result
+                        .expect("result")
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            got[i] = Some(h.join().expect("client thread"));
+        }
+    });
+
+    for (i, bits) in got.into_iter().enumerate() {
+        assert_eq!(
+            bits.expect("client result"),
+            expected[i],
+            "served result {i} must be bit-identical to in-process execution"
+        );
+    }
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.requests, n as u64);
+    assert_eq!(metrics.errors, 0);
+}
+
+#[test]
+fn injected_faults_surface_as_typed_per_query_errors() {
+    let mut engine = engine();
+    engine.set_faults(FaultPlan {
+        seed: 77,
+        exec_error: 1.0,
+        ..FaultPlan::none()
+    });
+    let (addr, handle) = start_server(engine, quick_config());
+    let mut s = connect(&addr);
+
+    let reply = send_request(&mut s, &gemm_request(10, (64, 64, 64)));
+    assert!(!reply.is_ok());
+    assert_eq!(reply.kind.as_deref(), Some("injected_fault"));
+    assert_eq!(reply.id, Some(10));
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.errors, 1);
+}
+
+#[test]
+fn dropped_responses_time_out_client_side() {
+    let mut engine = engine();
+    engine.set_faults(FaultPlan {
+        seed: 77,
+        drop_response: 1.0,
+        ..FaultPlan::none()
+    });
+    let (addr, handle) = start_server(engine, quick_config());
+    let mut s = connect(&addr);
+
+    let payload = serde_json::to_vec(&gemm_request(11, (64, 64, 64))).unwrap();
+    let short = FrameLimits {
+        idle_timeout: Duration::from_millis(300),
+        ..client_limits()
+    };
+    write_frame(&mut s, &payload, &short).unwrap();
+    // the server executes but withholds the reply: the client's wait
+    // must end in a bounded timeout, not a hang
+    assert!(read_frame(&mut s, &short).is_err());
+
+    shutdown(&addr);
+    let metrics = handle.join().unwrap().expect("drain completes");
+    // the work itself ran and succeeded server-side
+    assert_eq!(metrics.requests, 1);
+}
+
+#[test]
+fn loadgen_accounts_every_request_and_writes_the_report() {
+    let (addr, handle) = start_server(engine(), quick_config());
+    let cfg = LoadgenConfig {
+        addr: addr.clone(),
+        requests: 12,
+        rate: 0.0,
+        conns: 3,
+        seed: 424242,
+        deadline_ms: None,
+        verify: true,
+        return_result: false,
+        garble: 0.5,
+        shutdown: true,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.sent, 12);
+    assert!(report.accounted(), "{report:?}");
+    assert_eq!(report.ok, 12, "all requests succeed: {report:?}");
+    assert!(report.noise_sent > 0, "garble 0.5 over 12 ids fires");
+    assert_eq!(report.noise_acked, report.noise_sent);
+    assert!(report.drain_acked);
+    assert!(report.p50_us > 0 && report.p99_us >= report.p50_us);
+
+    let out = std::env::temp_dir().join("serve_protocol_BENCH_serve.json");
+    loadgen::write_report(&report, &out).expect("write report");
+    let text = std::fs::read_to_string(&out).unwrap();
+    std::fs::remove_file(&out).ok();
+    let v: serde_json::Value = serde_json::from_str(&text).expect("valid json");
+    assert_eq!(v["bench"], "serve");
+    assert_eq!(v["schema"], 1);
+    assert_eq!(v["metrics"]["sent"], 12);
+    assert!(v["metrics"]["taxonomy"].is_object());
+
+    let metrics = handle.join().unwrap().expect("drain completes");
+    assert_eq!(metrics.drains, 1);
+    assert_eq!(metrics.requests, 12);
+    // the garble noise frames are the only errors in the ledger
+    assert_eq!(metrics.errors, report.noise_sent);
+}
