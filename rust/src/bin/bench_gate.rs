@@ -16,7 +16,9 @@
 //! Usage: `bench_gate [--history <dir>] [--promote] [record.json ...]`
 //! — with no record arguments it reads the four standard records
 //! (`BENCH_executor.json`, `BENCH_search.json`, `BENCH_engine.json`,
-//! `BENCH_sim.json`) from the current directory.
+//! `BENCH_sim.json`) from the current directory. The serving record
+//! (`BENCH_serve.json`, gated on `goodput_rps`) is produced by the
+//! soak jobs' loadgen run and passed explicitly.
 //!
 //! A missing or unparseable record, a record without a `bench` name,
 //! and an unparseable baseline each become a **failing row with a
@@ -41,11 +43,12 @@ const FAIL_RATIO: f64 = 0.75;
 const WARN_RATIO: f64 = 0.90;
 
 /// The throughput metric each bench is gated on (higher is better).
-const GATED_METRICS: [(&str, &str); 4] = [
+const GATED_METRICS: [(&str, &str); 5] = [
     ("executor", "gflops_parallel"),
     ("search", "searches_per_sec"),
     ("engine", "shuffled_reqs_per_sec"),
     ("sim", "sim_macs_per_sec"),
+    ("serve", "goodput_rps"),
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -421,6 +424,24 @@ mod tests {
         assert_eq!(r.status, Status::Fail);
         let r = gate(&record("sim", "sim_macs_per_sec", 2e6), Some(&base));
         assert_eq!(r.status, Status::Pass);
+    }
+
+    #[test]
+    fn serve_goodput_is_gated() {
+        let base = record("serve", "goodput_rps", 80.0);
+        let r = gate(&record("serve", "goodput_rps", 50.0), Some(&base));
+        assert_eq!(r.status, Status::Fail);
+        let r = gate(&record("serve", "goodput_rps", 85.0), Some(&base));
+        assert_eq!(r.status, Status::Pass);
+        // until the soak job promotes a measured number, the committed
+        // provisional seed keeps the gate advisory
+        let provisional = json!({
+            "bench": "serve", "provisional": true,
+            "metrics": {"goodput_rps": null}
+        });
+        let r = gate(&record("serve", "goodput_rps", 50.0), Some(&provisional));
+        assert_eq!(r.status, Status::Pass);
+        assert!(r.note.contains("provisional"), "{}", r.note);
     }
 
     #[test]

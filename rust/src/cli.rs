@@ -203,6 +203,9 @@ fn valid_flags(command: &str) -> Option<&'static [&'static str]> {
             "fault-drop-response",
             "fault-plan-delay-ms",
             "fault-exec-delay-ms",
+            "fault-worker-kill",
+            "shards",
+            "no-steal",
         ],
         "loadgen" => &[
             "addr",
@@ -268,6 +271,10 @@ tools:
                        [--queue-depth 256] [--batch-max 64] [--batch-window-ms 2]
                        [--fault-seed N --fault-exec-error P --fault-exec-panic P
                         --fault-drop-response P --fault-exec-delay-ms MS]
+                       with --shards N: sharded control plane — N workers,
+                       affinity-routed mapping-cache shards, work stealing
+                       (disable: --no-steal), supervised restart-and-replay
+                       under --fault-worker-kill P
   loadgen              open-loop client for `serve --listen`  [--addr HOST:PORT]
                        [--requests 64] [--rate RPS] [--conns 4] [--deadline-ms MS]
                        [--verify] [--return-result] [--garble P] [--shutdown]
@@ -643,8 +650,44 @@ fn fault_plan(args: &Args) -> Result<crate::engine::FaultPlan> {
         exec_error: args.get_f64("fault-exec-error", 0.0)?,
         exec_panic: args.get_f64("fault-exec-panic", 0.0)?,
         drop_response: args.get_f64("fault-drop-response", 0.0)?,
+        worker_kill: args.get_f64("fault-worker-kill", 0.0)?,
         plan_delay: std::time::Duration::from_millis(args.get_u64("fault-plan-delay-ms", 0)?),
         exec_delay: std::time::Duration::from_millis(args.get_u64("fault-exec-delay-ms", 0)?),
+    })
+}
+
+/// Build the sharded control plane for `--shards N`: every worker gets
+/// an engine configured exactly like [`serve_engine`]'s (same pool,
+/// runtime selection, and fault plan), planning against its
+/// supervisor-owned cache shard.
+fn serve_cluster(args: &Args, shards: usize) -> Result<crate::cluster::Cluster> {
+    let acc = args.accelerator()?;
+    let max_exec_dim = args.get_u64("max-exec-dim", 512)?;
+    let tile = args.get_u64("tile", 0)?;
+    let faults = fault_plan(args)?;
+    let artifacts = default_artifacts_dir();
+    let config = crate::cluster::ClusterConfig {
+        shards,
+        steal: !args.flag("no-steal"),
+        faults: faults.clone(),
+        ..crate::cluster::ClusterConfig::default()
+    };
+    crate::cluster::Cluster::new(config, move |_shard, cache| {
+        // Runtime is per-worker state (compile caches, perf counters),
+        // so each seat builds its own — same selection as serve_engine.
+        let runtime = if artifacts.join("manifest.txt").exists() {
+            Runtime::load(&artifacts)?
+        } else {
+            Runtime::native(Manifest::synthetic(&[16, 32, 64]))
+        };
+        crate::engine::Engine::builder()
+            .accelerator(acc.clone())
+            .runtime(runtime)
+            .max_exec_dim(max_exec_dim)
+            .tile(tile)
+            .shared_cache(cache)
+            .faults(faults.clone())
+            .build()
     })
 }
 
@@ -652,8 +695,8 @@ fn fault_plan(args: &Args) -> Result<crate::engine::FaultPlan> {
 /// until graceful drain (SIGTERM, CTRL-C, or a `shutdown` frame) and
 /// returns the final cumulative metrics.
 fn serve_network(args: &Args, listen: &str) -> Result<String> {
-    use crate::serve::{serve_listener, signals, ServeConfig};
-    let engine = serve_engine(args)?;
+    use crate::serve::{serve_listener, serve_listener_cluster, signals, ServeConfig};
+    let shards = args.get_u64("shards", 1)? as usize;
     let mut config = ServeConfig {
         listen: listen.to_string(),
         max_conns: args.get_u64("max-conns", 32)? as usize,
@@ -677,6 +720,18 @@ fn serve_network(args: &Args, listen: &str) -> Result<String> {
         "serving on {} (drain with SIGTERM/CTRL-C or a shutdown frame)",
         listener.local_addr()?
     );
+    if shards > 1 {
+        let cluster = serve_cluster(args, shards)?;
+        let report = serve_listener_cluster(listener, cluster, &config)?;
+        return Ok(format!(
+            "drained: {}\ncluster: {}\nthroughput: {}\nlatency: {}\n",
+            report.metrics.serving_summary(),
+            report.summary(),
+            report.metrics.throughput_summary(),
+            report.metrics.latency.summary()
+        ));
+    }
+    let engine = serve_engine(args)?;
     let metrics = serve_listener(listener, engine, &config)?;
     Ok(format!(
         "drained: {}\nthroughput: {}\nlatency: {}\n",
@@ -753,7 +808,6 @@ fn serve(args: &Args) -> Result<String> {
             })
             .collect()
     };
-    let mut engine = serve_engine(args)?;
     let verify = args.get("verify").map(|v| v == "true").unwrap_or(false);
     // one submission window: same-shape requests coalesce across the
     // whole trace, not just consecutive runs
@@ -766,10 +820,25 @@ fn serve(args: &Args) -> Result<String> {
                 .verify(verify)
         })
         .collect();
-    let report = engine.run(&queries)?;
+    let shards = args.get_u64("shards", 1)? as usize;
+    let (responses, metrics, cluster_line) = if shards > 1 {
+        // replay the trace through the sharded control plane — results
+        // are bit-identical to the single-engine path below
+        let cluster = serve_cluster(args, shards)?;
+        let responses = cluster
+            .run(&queries)
+            .into_iter()
+            .collect::<Result<Vec<_>, crate::engine::EngineError>>()?;
+        let report = cluster.shutdown()?;
+        (responses, report.metrics, Some(report.summary()))
+    } else {
+        let mut engine = serve_engine(args)?;
+        let report = engine.run(&queries)?;
+        (report.responses, report.metrics, None)
+    };
 
     let mut out = String::new();
-    for r in &report.responses {
+    for r in &responses {
         out.push_str(&format!(
             "{:<14} {:>6}x{:<6}x{:<6} {} proj={:.3}ms exec={} verified={:?} latency={}µs\n",
             r.workload.name,
@@ -783,7 +852,7 @@ fn serve(args: &Args) -> Result<String> {
             r.latency_us
         ));
     }
-    let m = &report.metrics;
+    let m = &metrics;
     out.push_str(&format!(
         "\nrequests={} batches={} cache hit/miss={}/{} macs={} tiles={}\nlatency: {}\nsearch={:?} exec: {}\n",
         m.requests,
@@ -796,6 +865,9 @@ fn serve(args: &Args) -> Result<String> {
         m.search_time,
         m.throughput_summary()
     ));
+    if let Some(line) = cluster_line {
+        out.push_str(&format!("cluster: {line}\n"));
+    }
     Ok(out)
 }
 
@@ -1043,6 +1115,27 @@ mod tests {
         let out = run(a).unwrap();
         assert!(out.contains("requests=3"), "{out}");
         assert!(!out.contains("verified=Some(false)"), "{out}");
+    }
+
+    #[test]
+    fn serve_with_shards_matches_the_single_engine_replay() {
+        let flags = ["serve", "--random", "3", "--verify", "true", "--seed", "7"];
+        let single = run(Args::parse(flags.map(String::from)).unwrap()).unwrap();
+        let mut sharded_flags: Vec<String> = flags.iter().map(|s| s.to_string()).collect();
+        sharded_flags.extend(["--shards", "2"].map(String::from));
+        let sharded = run(Args::parse(sharded_flags).unwrap()).unwrap();
+        assert!(sharded.contains("requests=3"), "{sharded}");
+        assert!(sharded.contains("cluster: shards=2"), "{sharded}");
+        assert!(!sharded.contains("verified=Some(false)"), "{sharded}");
+        // per-response lines up to the latency field are deterministic
+        // and must be identical across the two control planes
+        let stable = |out: &str| -> Vec<String> {
+            out.lines()
+                .filter(|l| l.contains("proj="))
+                .map(|l| l.split(" latency=").next().unwrap().to_string())
+                .collect()
+        };
+        assert_eq!(stable(&single), stable(&sharded));
     }
 
     #[test]

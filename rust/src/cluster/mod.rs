@@ -1,0 +1,402 @@
+//! Sharded multi-worker control plane: N engines behind one router.
+//!
+//! Scales the engine past one process: `shards` workers
+//! (threads-as-processes for the offline image — each worker owns its
+//! engine, its slice of the accelerator pool, and its
+//! [`MappingCache`] shard, and communicates only through queues and
+//! reply channels, exactly the discipline a process boundary would
+//! force), behind a router that places queries by (shape, objective)
+//! affinity so every key's cache entries live on exactly one shard.
+//!
+//! Guarantees, cluster-wide:
+//!
+//! * **Bit-identity** — every query's numeric result is identical to a
+//!   single in-process `Engine::run`, regardless of shard count, steals,
+//!   or worker restarts: operands are seeded per-query and planning is
+//!   deterministic over the same pool.
+//! * **One search per distinct key** — affinity routing sends each
+//!   (shape, spec, config, objective) key to one home shard; work
+//!   stealing moves only *planned* keys and imports the home shard's
+//!   cached mapping instead of re-searching; worker restarts resume the
+//!   same supervisor-owned cache shard.
+//! * **Zero lost admitted work under worker death** — the supervisor
+//!   health-checks workers, recovers the job a dead worker held from
+//!   its in-flight slot, restarts the seat, and replays the job
+//!   (kill-exempt) until every reply channel is answered.
+//!
+//! Worker death is injected deterministically through the engine's
+//! [`FaultPlan`] (`worker_kill` rate, keyed by job admission sequence),
+//! so the restart path is tested by plan, not by hope. Metrics roll up
+//! across shards through [`ServiceMetrics::merge`], with a per-shard
+//! request breakdown for skew visibility.
+
+mod router;
+mod shard;
+mod supervisor;
+mod worker;
+
+pub use router::{affinity_hash, affinity_of, shard_of, AffinityKey};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ServiceMetrics;
+use crate::cost::Objective;
+use crate::engine::{Engine, EngineError, FaultPlan, Query, Response};
+use crate::flash::MappingCache;
+
+use shard::{ClusterJob, ClusterShared, ShardQueue};
+use supervisor::{spawn_worker, supervise};
+
+/// Builds one worker's engine. Called once per shard at startup and
+/// again on every restart; receives the shard index and the
+/// supervisor-owned cache shard the engine must plan against.
+pub type EngineFactory = dyn Fn(usize, Arc<MappingCache>) -> Result<Engine> + Send + Sync;
+
+/// Cluster sizing and policy knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker count; clamped to at least 1.
+    pub shards: usize,
+    /// Allow idle workers to steal planned work from loaded siblings.
+    pub steal: bool,
+    /// Cluster-wide default objective, used to resolve queries that do
+    /// not pin one — must match what the factory's engines default to,
+    /// or routing and planning would disagree.
+    pub objective: Objective,
+    /// Fault plan shared by the router layer (worker kills) and, via
+    /// the factory, the worker engines.
+    pub faults: FaultPlan,
+    /// Supervisor health-check period.
+    pub poll: Duration,
+    /// How long [`Cluster::run`] waits for each outcome before giving
+    /// up with a typed error.
+    pub reply_timeout: Duration,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            shards: 1,
+            steal: true,
+            objective: Objective::default(),
+            faults: FaultPlan::none(),
+            poll: Duration::from_millis(2),
+            reply_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// What a drained cluster hands back: the cross-shard roll-up plus the
+/// counters that describe how the run went operationally.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub shards: usize,
+    /// All shards merged via [`ServiceMetrics::merge`], with
+    /// `shard_requests` populated for skew reporting.
+    pub metrics: ServiceMetrics,
+    /// Each shard's own ledger, index = shard id.
+    pub per_shard: Vec<ServiceMetrics>,
+    /// Queries routed to each home shard (pre-steal placement).
+    pub routed: Vec<u64>,
+    /// Jobs executed away from their home shard.
+    pub steals: u64,
+    /// Simulated worker deaths (injected via `FaultPlan::worker_kill`).
+    pub kills: u64,
+    /// Worker seats respawned by the supervisor.
+    pub restarts: u64,
+    /// Which pool accelerators each worker hosts (round-robin slices).
+    pub pool_slices: Vec<Vec<String>>,
+}
+
+impl ClusterReport {
+    /// One operational line for drain logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} kills={} restarts={} steals={} routed={:?}",
+            self.shards, self.kills, self.restarts, self.steals, self.routed
+        )
+    }
+}
+
+/// A running sharded control plane. Submit work with [`Cluster::submit`]
+/// (reply channels, the serving path) or [`Cluster::run`] (blocking,
+/// the in-process path); finish with [`Cluster::shutdown`].
+pub struct Cluster {
+    shared: Arc<ClusterShared>,
+    supervisor: std::thread::JoinHandle<ClusterReport>,
+    pool_slices: Vec<Vec<String>>,
+    reply_timeout: Duration,
+}
+
+impl Cluster {
+    /// Build caches and queues, spawn one worker per shard through the
+    /// factory, and start the supervisor. Fails fast if the factory
+    /// cannot build any initial engine.
+    pub fn new<F>(config: ClusterConfig, factory: F) -> Result<Cluster>
+    where
+        F: Fn(usize, Arc<MappingCache>) -> Result<Engine> + Send + Sync + 'static,
+    {
+        let shards = config.shards.max(1);
+        let caches: Vec<Arc<MappingCache>> =
+            (0..shards).map(|_| Arc::new(MappingCache::new())).collect();
+        let shared = Arc::new(ClusterShared {
+            queues: (0..shards).map(|_| ShardQueue::new()).collect(),
+            planned: Mutex::new(Default::default()),
+            caches: caches.clone(),
+            ledgers: (0..shards).map(|_| Mutex::new(Default::default())).collect(),
+            routed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            seq: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            kills: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            steal_enabled: config.steal,
+            faults: config.faults.clone(),
+            default_objective: config.objective,
+        });
+        let factory: Arc<EngineFactory> = Arc::new(factory);
+
+        let mut engines = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let engine = factory(shard, Arc::clone(&caches[shard]))
+                .with_context(|| format!("building the engine for shard {shard}"))?;
+            engines.push(engine);
+        }
+        // Hosting assignment: round-robin slices of the (replicated)
+        // planning pool. Planning itself scores the full pool on every
+        // shard — required for routing-independent plan parity.
+        let pool_names: Vec<String> = engines[0]
+            .pool()
+            .iter()
+            .map(|acc| acc.name().to_string())
+            .collect();
+        let pool_slices: Vec<Vec<String>> = (0..shards)
+            .map(|s| {
+                pool_names
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % shards == s)
+                    .map(|(_, name)| name.clone())
+                    .collect()
+            })
+            .collect();
+
+        let slots = engines
+            .into_iter()
+            .enumerate()
+            .map(|(shard, engine)| spawn_worker(shard, &shared, engine))
+            .collect();
+        let supervisor = std::thread::Builder::new()
+            .name("cluster-supervisor".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                let poll = config.poll;
+                move || supervise(shared, factory, slots, poll)
+            })
+            .expect("spawn cluster supervisor thread");
+
+        Ok(Cluster {
+            shared,
+            supervisor,
+            pool_slices,
+            reply_timeout: config.reply_timeout,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    pub fn faults(&self) -> &FaultPlan {
+        &self.shared.faults
+    }
+
+    /// Which pool accelerators each worker hosts.
+    pub fn pool_slices(&self) -> &[Vec<String>] {
+        &self.pool_slices
+    }
+
+    /// Route a window of queries: coalesce by affinity key (preserving
+    /// first-seen order, like the engine's own window coalescing), then
+    /// enqueue one job per key on its home shard. Non-blocking; each
+    /// outcome is delivered on its query's reply channel.
+    pub fn submit(
+        &self,
+        queries: Vec<Query>,
+        replies: Vec<mpsc::Sender<Result<Response, EngineError>>>,
+    ) {
+        debug_assert_eq!(queries.len(), replies.len());
+        let shards = self.shards();
+        let mut order: Vec<AffinityKey> = Vec::new();
+        type Group = (Vec<Query>, Vec<mpsc::Sender<Result<Response, EngineError>>>);
+        let mut groups: HashMap<AffinityKey, Group> = HashMap::new();
+        for (query, reply) in queries.into_iter().zip(replies) {
+            let key = affinity_of(&query, self.shared.default_objective);
+            let group = groups.entry(key).or_insert_with(|| {
+                order.push(key);
+                (Vec::new(), Vec::new())
+            });
+            group.0.push(query);
+            group.1.push(reply);
+        }
+        for key in order {
+            let (queries, replies) = groups.remove(&key).expect("grouped key");
+            let home = shard_of(&key, shards);
+            self.shared.routed[home].fetch_add(queries.len() as u64, Ordering::Relaxed);
+            let seq = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+            self.shared.queues[home].push_back(ClusterJob {
+                key,
+                home,
+                seq,
+                attempts: 0,
+                queries,
+                replies,
+            });
+        }
+    }
+
+    /// Blocking convenience path: submit, then collect every outcome in
+    /// submission order. A worker death mid-trace is replayed by the
+    /// supervisor, so this returns one outcome per query even under an
+    /// active kill plan.
+    pub fn run(&self, queries: &[Query]) -> Vec<Result<Response, EngineError>> {
+        let mut senders = Vec::with_capacity(queries.len());
+        let mut receivers = Vec::with_capacity(queries.len());
+        for _ in queries {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        self.submit(queries.to_vec(), senders);
+        receivers
+            .into_iter()
+            .map(|rx| match rx.recv_timeout(self.reply_timeout) {
+                Ok(outcome) => outcome,
+                Err(_) => Err(EngineError::Exec(
+                    "cluster reply timed out".into(),
+                )),
+            })
+            .collect()
+    }
+
+    /// Drain: stop the workers once every queued and in-flight job is
+    /// answered, join them, and roll up every shard's ledger.
+    pub fn shutdown(self) -> Result<ClusterReport> {
+        self.shared.start_drain();
+        let mut report = self
+            .supervisor
+            .join()
+            .map_err(|_| anyhow::anyhow!("cluster supervisor thread panicked"))?;
+        report.pool_slices = self.pool_slices;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{Accelerator, HwConfig, Style};
+    use crate::engine::DEFAULT_SEED;
+    use crate::runtime::{Manifest, Runtime};
+    use crate::workloads::Gemm;
+
+    fn factory(faults: FaultPlan) -> impl Fn(usize, Arc<MappingCache>) -> Result<Engine> {
+        move |_shard, cache| {
+            Engine::builder()
+                .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+                .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+                .max_exec_dim(128)
+                .shared_cache(cache)
+                .faults(faults.clone())
+                .build()
+        }
+    }
+
+    fn trace(n: usize) -> Vec<Query> {
+        const SHAPES: [(u64, u64, u64); 4] =
+            [(64, 64, 64), (32, 96, 48), (96, 80, 64), (48, 40, 24)];
+        (0..n)
+            .map(|i| {
+                let (m, nn, k) = SHAPES[i % SHAPES.len()];
+                Query::new(Gemm::new(&format!("t{i}"), m, nn, k))
+                    .seed(DEFAULT_SEED + i as u64)
+                    .verify(true)
+                    .return_result(true)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cluster_serves_a_trace_and_rolls_up() {
+        let cluster = Cluster::new(
+            ClusterConfig {
+                shards: 2,
+                ..ClusterConfig::default()
+            },
+            factory(FaultPlan::none()),
+        )
+        .expect("cluster");
+        assert_eq!(cluster.shards(), 2);
+        let outcomes = cluster.run(&trace(8));
+        assert!(outcomes.iter().all(|o| o.is_ok()), "all answered ok");
+        let report = cluster.shutdown().expect("drain");
+        assert_eq!(report.metrics.requests, 8);
+        assert_eq!(report.metrics.shard_requests.iter().sum::<u64>(), 8);
+        assert_eq!(report.routed.iter().sum::<u64>(), 8);
+        assert_eq!(report.kills, 0);
+        // 4 distinct (shape, objective) keys → 4 searches cluster-wide
+        assert_eq!(report.metrics.mapping_cache_misses, 4);
+        assert!(report.summary().contains("shards=2"));
+        assert!(report.metrics.throughput_summary().contains("shard-skew"));
+        // the single-accelerator pool is hosted by exactly one shard
+        let hosted: usize = report.pool_slices.iter().map(|s| s.len()).sum();
+        assert_eq!(hosted, 1);
+    }
+
+    #[test]
+    fn worker_kills_are_replayed_with_zero_loss() {
+        // kill every first-attempt job: each job costs one worker death,
+        // then its replay is kill-exempt and must answer everything
+        let faults = FaultPlan {
+            seed: 7,
+            worker_kill: 1.0,
+            ..FaultPlan::none()
+        };
+        let cluster = Cluster::new(
+            ClusterConfig {
+                shards: 2,
+                faults: faults.clone(),
+                ..ClusterConfig::default()
+            },
+            factory(FaultPlan::none()),
+        )
+        .expect("cluster");
+        let queries = trace(8);
+        let outcomes = cluster.run(&queries);
+        assert_eq!(outcomes.len(), 8);
+        assert!(
+            outcomes.iter().all(|o| o.is_ok()),
+            "every admitted query is answered despite kills"
+        );
+        let report = cluster.shutdown().expect("drain");
+        assert!(report.kills >= 1, "{}", report.summary());
+        assert!(report.restarts >= report.kills, "{}", report.summary());
+        assert_eq!(report.metrics.requests, 8);
+        assert_eq!(report.metrics.errors, 0);
+        // restarts resume the same cache shards: still one search/key
+        assert_eq!(report.metrics.mapping_cache_misses, 4);
+    }
+
+    #[test]
+    fn shutdown_of_an_idle_cluster_is_clean() {
+        let cluster = Cluster::new(ClusterConfig::default(), factory(FaultPlan::none()))
+            .expect("cluster");
+        let report = cluster.shutdown().expect("drain");
+        assert_eq!(report.metrics.requests, 0);
+        assert_eq!(report.restarts, 0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Affinity routing: which shard owns a (shape, objective) key.
+//!
+//! The shard key is everything the mapping cache keys on besides the
+//! accelerator spec — shape dims plus objective. Placing every query of
+//! one key on one home shard therefore places all of that key's cache
+//! entries (one per pool member, under PR 5's content-hashed spec
+//! identity) on that shard too, which is what makes per-shard caches
+//! safe and keeps each shard's working set hot.
+
+use crate::cost::Objective;
+use crate::engine::Query;
+
+/// The routing key: `(m, n, k, objective)`.
+pub type AffinityKey = (u64, u64, u64, Objective);
+
+/// Resolve a query's affinity key, substituting the cluster-wide
+/// default objective exactly like the engine does for `None`.
+pub fn affinity_of(query: &Query, default_objective: Objective) -> AffinityKey {
+    (
+        query.workload.m,
+        query.workload.n,
+        query.workload.k,
+        query.objective.unwrap_or(default_objective),
+    )
+}
+
+/// FNV-1a over the key bytes — stable across runs, processes, and
+/// machines, so a replayed trace routes identically everywhere.
+pub fn affinity_hash(key: &AffinityKey) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in [key.0, key.1, key.2, key.3 as u64] {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Home shard for a key.
+pub fn shard_of(key: &AffinityKey, shards: usize) -> usize {
+    (affinity_hash(key) % shards.max(1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Gemm;
+
+    #[test]
+    fn routing_is_deterministic_and_objective_aware() {
+        let q = Query::new(Gemm::new("a", 64, 32, 16));
+        let key = affinity_of(&q, Objective::Runtime);
+        assert_eq!(key, (64, 32, 16, Objective::Runtime));
+        assert_eq!(affinity_hash(&key), affinity_hash(&key));
+        // the name does not route; shape + objective do
+        let q2 = Query::new(Gemm::new("b", 64, 32, 16));
+        assert_eq!(key, affinity_of(&q2, Objective::Runtime));
+        let q3 = q2.clone().objective(Objective::Energy);
+        assert_ne!(
+            affinity_hash(&key),
+            affinity_hash(&affinity_of(&q3, Objective::Runtime))
+        );
+    }
+
+    #[test]
+    fn shards_are_in_range_and_traffic_spreads() {
+        let shards = 4;
+        let mut hit = vec![false; shards];
+        for m in 1..64u64 {
+            let key = (m * 8, 32, 16, Objective::Runtime);
+            let s = shard_of(&key, shards);
+            assert!(s < shards);
+            hit[s] = true;
+        }
+        assert!(
+            hit.iter().all(|&h| h),
+            "63 distinct shapes must reach every one of 4 shards: {hit:?}"
+        );
+        // one shard degenerates to identity routing
+        assert_eq!(shard_of(&(8, 8, 8, Objective::Edp), 1), 0);
+        assert_eq!(shard_of(&(8, 8, 8, Objective::Edp), 0), 0);
+    }
+}

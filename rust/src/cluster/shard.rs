@@ -1,0 +1,147 @@
+//! Per-shard work queues and the state every cluster thread shares.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::coordinator::ServiceMetrics;
+use crate::cost::Objective;
+use crate::engine::{EngineError, FaultPlan, Query, Response};
+use crate::flash::MappingCache;
+
+use super::router::AffinityKey;
+
+/// One routed unit of work: a coalesced same-key group of queries plus
+/// the channels their outcomes travel back on.
+pub(crate) struct ClusterJob {
+    pub key: AffinityKey,
+    /// Home shard — the owner of this key's cache entries.
+    pub home: usize,
+    /// Cluster-wide admission sequence; the deterministic id the
+    /// worker-kill fault is keyed by.
+    pub seq: u64,
+    /// Delivery attempt: 0 = first, >0 = replay after a worker death.
+    /// Replays are kill-exempt so one job cannot crash-loop a shard.
+    pub attempts: u32,
+    pub queries: Vec<Query>,
+    pub replies: Vec<mpsc::Sender<Result<Response, EngineError>>>,
+}
+
+/// A per-shard FIFO with condvar wakeups. Unbounded on purpose: the
+/// serving path already bounds admission upstream, and the in-process
+/// path submits finite traces.
+pub(crate) struct ShardQueue {
+    state: Mutex<VecDeque<ClusterJob>>,
+    ready: Condvar,
+}
+
+impl ShardQueue {
+    pub fn new() -> ShardQueue {
+        ShardQueue {
+            state: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// The cluster must survive a poisoned lock — a panicking worker
+    /// must not wedge the supervisor or its siblings.
+    fn lock(&self) -> MutexGuard<'_, VecDeque<ClusterJob>> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn push_back(&self, job: ClusterJob) {
+        self.lock().push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Replayed jobs go to the front so a recovered request is not
+    /// charged a second full queueing delay on top of the restart.
+    pub fn push_front(&self, job: ClusterJob) {
+        self.lock().push_front(job);
+        self.ready.notify_one();
+    }
+
+    pub fn pop_front(&self) -> Option<ClusterJob> {
+        self.lock().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Steal the newest queued job whose key its home shard has already
+    /// planned. Unplanned keys are never stolen: their first FLASH
+    /// search must run on the home shard's cache, or the thief would
+    /// duplicate it and break the one-search-per-key invariant.
+    ///
+    /// Lock order is queue → planned (the only place both are held);
+    /// everything else takes at most one of the two.
+    pub fn steal_back(&self, planned: &Mutex<HashSet<AffinityKey>>) -> Option<ClusterJob> {
+        let mut q = self.lock();
+        let planned = planned.lock().unwrap_or_else(|e| e.into_inner());
+        for i in (0..q.len()).rev() {
+            if planned.contains(&q[i].key) {
+                return q.remove(i);
+            }
+        }
+        None
+    }
+
+    /// Park until a push or `timeout`, whichever comes first.
+    pub fn wait(&self, timeout: Duration) {
+        let guard = self.lock();
+        if guard.is_empty() {
+            let _ = self
+                .ready
+                .wait_timeout(guard, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    pub fn notify_all(&self) {
+        self.ready.notify_all();
+    }
+}
+
+/// State shared by the router, every worker, and the supervisor.
+pub(crate) struct ClusterShared {
+    pub queues: Vec<ShardQueue>,
+    /// Keys whose home shard has completed planning (their cache
+    /// entries exist); only these are eligible for stealing.
+    pub planned: Mutex<HashSet<AffinityKey>>,
+    /// One mapping-cache shard per worker. Owned here, not by the
+    /// worker thread, so a restarted worker resumes the same shard and
+    /// never re-searches keys its predecessor already planned.
+    pub caches: Vec<Arc<MappingCache>>,
+    /// Per-shard metrics ledgers. Workers fold each window in as soon
+    /// as it completes, so a later simulated death loses no accounting.
+    pub ledgers: Vec<Mutex<ServiceMetrics>>,
+    /// Queries routed to each home shard (pre-steal placement).
+    pub routed: Vec<AtomicU64>,
+    /// Admission sequence for jobs; feeds the worker-kill fault.
+    pub seq: AtomicU64,
+    pub steals: AtomicU64,
+    pub kills: AtomicU64,
+    pub draining: AtomicBool,
+    pub steal_enabled: bool,
+    pub faults: FaultPlan,
+    pub default_objective: Objective,
+}
+
+impl ClusterShared {
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+        for q in &self.queues {
+            q.notify_all();
+        }
+    }
+}

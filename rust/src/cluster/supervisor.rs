@@ -1,0 +1,126 @@
+//! Worker health-checks, restart-and-replay, and the final roll-up.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::ServiceMetrics;
+use crate::engine::Engine;
+
+use super::shard::{ClusterJob, ClusterShared};
+use super::worker::worker_loop;
+use super::{ClusterReport, EngineFactory};
+
+/// One worker seat: the thread handle plus the in-flight slot used to
+/// recover the job a dead worker was holding.
+pub(crate) struct WorkerSlot {
+    handle: Option<JoinHandle<()>>,
+    inflight: Arc<Mutex<Option<ClusterJob>>>,
+}
+
+pub(crate) fn spawn_worker(
+    shard: usize,
+    shared: &Arc<ClusterShared>,
+    engine: Engine,
+) -> WorkerSlot {
+    let inflight = Arc::new(Mutex::new(None));
+    let handle = std::thread::Builder::new()
+        .name(format!("cluster-worker-{shard}"))
+        .spawn({
+            let shared = Arc::clone(shared);
+            let inflight = Arc::clone(&inflight);
+            move || worker_loop(shard, shared, engine, inflight)
+        })
+        .expect("spawn cluster worker thread");
+    WorkerSlot {
+        handle: Some(handle),
+        inflight,
+    }
+}
+
+/// Health-check loop. Every `poll`: join any finished worker, recover
+/// the job it died holding (replayed attempts+1, at the front of its
+/// queue), and respawn the seat on the *same* cache shard — restart
+/// loses no cache entries, so nothing is ever searched twice. Exits
+/// once the cluster is draining, every queue and in-flight slot is
+/// empty, and every worker has exited cleanly; returns the roll-up.
+pub(crate) fn supervise(
+    shared: Arc<ClusterShared>,
+    factory: Arc<EngineFactory>,
+    mut slots: Vec<WorkerSlot>,
+    poll: Duration,
+) -> ClusterReport {
+    let mut restarts = 0u64;
+    loop {
+        let mut all_done = true;
+        for (shard, slot) in slots.iter_mut().enumerate() {
+            let finished = match &slot.handle {
+                Some(handle) => handle.is_finished(),
+                None => true,
+            };
+            if !finished {
+                all_done = false;
+                continue;
+            }
+            if let Some(handle) = slot.handle.take() {
+                let _ = handle.join();
+            }
+            // Recover the orphaned job, if the worker died owning one.
+            let recovered = slot
+                .inflight
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take();
+            let replaying = recovered.is_some();
+            if let Some(mut job) = recovered {
+                job.attempts += 1;
+                shared.queues[shard].push_front(job);
+            }
+            // A seat stays filled while serving; during drain it is
+            // refilled only if there is still work to answer for.
+            if replaying || !shared.draining() || !shared.queues[shard].is_empty() {
+                match factory(shard, Arc::clone(&shared.caches[shard])) {
+                    Ok(engine) => {
+                        restarts += 1;
+                        *slot = spawn_worker(shard, &shared, engine);
+                    }
+                    Err(_) => {
+                        // transient factory failure: retry next poll
+                        // (the factory succeeded once at startup)
+                    }
+                }
+                all_done = false;
+            }
+        }
+        if shared.draining() && all_done {
+            break;
+        }
+        std::thread::sleep(poll);
+    }
+
+    let per_shard: Vec<ServiceMetrics> = shared
+        .ledgers
+        .iter()
+        .map(|m| m.lock().unwrap_or_else(|e| e.into_inner()).clone())
+        .collect();
+    let mut metrics = ServiceMetrics::default();
+    for shard in &per_shard {
+        metrics.merge(shard);
+    }
+    metrics.shard_requests = per_shard.iter().map(|m| m.requests).collect();
+    ClusterReport {
+        shards: shared.queues.len(),
+        metrics,
+        per_shard,
+        routed: shared
+            .routed
+            .iter()
+            .map(|r| r.load(Ordering::Relaxed))
+            .collect(),
+        steals: shared.steals.load(Ordering::Relaxed),
+        kills: shared.kills.load(Ordering::Relaxed),
+        restarts,
+        pool_slices: Vec::new(),
+    }
+}

@@ -1,0 +1,122 @@
+//! The shard worker loop: drain the home queue, steal planned work
+//! when idle, and die deterministically under the worker-kill fault.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::{fault_domain, Engine};
+use crate::flash::MappingCache;
+
+use super::shard::{ClusterJob, ClusterShared};
+
+/// How long an idle worker parks before re-checking its queue, the
+/// drain flag, and steal opportunities.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+
+/// Run one shard's worker until the cluster drains (clean exit) or the
+/// worker-kill fault fires (simulated process death).
+///
+/// The in-flight slot is the crash-recovery handshake with the
+/// supervisor: a job is parked there before any fault decision and
+/// cleared only after its replies are sent, so a worker that dies
+/// owning a job leaves it where the supervisor can replay it.
+pub(crate) fn worker_loop(
+    shard: usize,
+    shared: Arc<ClusterShared>,
+    mut engine: Engine,
+    inflight: Arc<Mutex<Option<ClusterJob>>>,
+) {
+    loop {
+        let job = match next_job(shard, &shared) {
+            Some(job) => job,
+            None => return, // drained
+        };
+        let (attempts, seq) = (job.attempts, job.seq);
+        *lock_slot(&inflight) = Some(job);
+
+        // Simulated process death: first-attempt jobs only (replays are
+        // kill-exempt), keyed by admission sequence so a fixed trace
+        // kills at the same points every run. Exit without answering;
+        // the job stays in the slot for the supervisor to recover.
+        if attempts == 0
+            && shared
+                .faults
+                .fire(shared.faults.worker_kill, fault_domain::WORKER_KILL, seq)
+        {
+            shared.kills.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+
+        let job = lock_slot(&inflight).take().expect("in-flight job");
+        if job.home != shard {
+            adopt_plan(&shared.caches[job.home], &engine, &job);
+        }
+        let window = engine.try_run(&job.queries);
+        shared.ledgers[shard]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .merge(&window.metrics);
+        shared
+            .planned
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(job.key);
+        for (tx, outcome) in job.replies.iter().zip(window.outcomes) {
+            // a handler that gave up just means a dropped receiver
+            let _ = tx.send(outcome);
+        }
+    }
+}
+
+fn lock_slot(
+    slot: &Mutex<Option<ClusterJob>>,
+) -> std::sync::MutexGuard<'_, Option<ClusterJob>> {
+    slot.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Next job for this worker: own queue first, then (when enabled) a
+/// steal from the most-loaded sibling. Returns `None` once the cluster
+/// is draining and the home queue is empty.
+fn next_job(shard: usize, shared: &ClusterShared) -> Option<ClusterJob> {
+    loop {
+        if let Some(job) = shared.queues[shard].pop_front() {
+            return Some(job);
+        }
+        if shared.draining() {
+            return None;
+        }
+        if shared.steal_enabled {
+            if let Some(job) = steal(shard, shared) {
+                shared.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(job);
+            }
+        }
+        shared.queues[shard].wait(IDLE_POLL);
+    }
+}
+
+/// Pick victims deepest-queue-first and take their newest planned job.
+fn steal(thief: usize, shared: &ClusterShared) -> Option<ClusterJob> {
+    let mut victims: Vec<usize> = (0..shared.queues.len()).filter(|&i| i != thief).collect();
+    victims.sort_by_key(|&i| std::cmp::Reverse(shared.queues[i].len()));
+    victims
+        .into_iter()
+        .find_map(|v| shared.queues[v].steal_back(&shared.planned))
+}
+
+/// Import the home shard's cached plan for a stolen key, so the
+/// thief's engine executes under the identical mapping with zero
+/// additional searches — work stealing moves execution, never planning,
+/// and the cluster-wide one-search-per-key invariant survives it.
+fn adopt_plan(home: &MappingCache, engine: &Engine, job: &ClusterJob) {
+    let objective = job.key.3;
+    let wl = &job.queries[0].workload;
+    for acc in engine.pool() {
+        if let Some(best) = home.get_with(acc, wl, objective) {
+            engine.cache().insert_with(acc, wl, objective, best);
+        } else if home.is_infeasible(acc, wl, objective) {
+            engine.cache().note_infeasible(acc, wl, objective);
+        }
+    }
+}

@@ -87,6 +87,11 @@ pub struct ServiceMetrics {
     pub errors: u64,
     /// Graceful-drain events completed (server-side).
     pub drains: u64,
+    /// Per-shard served-request counts, populated only by the cluster
+    /// roll-up (index = shard id; empty for a single-engine ledger).
+    /// Lets a report show routing balance without carrying the full
+    /// per-shard ledgers around.
+    pub shard_requests: Vec<u64>,
     pub latency: LatencyStats,
     pub search_time: Duration,
     /// Wall-clock time spent in numeric execution. Batched same-shape
@@ -111,6 +116,12 @@ impl ServiceMetrics {
         self.shed_overload += other.shed_overload;
         self.errors += other.errors;
         self.drains += other.drains;
+        if self.shard_requests.len() < other.shard_requests.len() {
+            self.shard_requests.resize(other.shard_requests.len(), 0);
+        }
+        for (mine, theirs) in self.shard_requests.iter_mut().zip(&other.shard_requests) {
+            *mine += *theirs;
+        }
         self.latency.merge(&other.latency);
         self.search_time += other.search_time;
         self.exec_time += other.exec_time;
@@ -135,14 +146,36 @@ impl ServiceMetrics {
         self.tile_calls as f64 / secs
     }
 
-    /// One-line throughput summary for reports.
+    /// Ratio of the busiest shard's request count to the mean across
+    /// shards (1.0 = perfectly balanced routing). 0.0 when there is no
+    /// shard breakdown or no shard served anything.
+    pub fn shard_skew(&self) -> f64 {
+        let max = match self.shard_requests.iter().max() {
+            Some(&m) if m > 0 => m as f64,
+            _ => return 0.0,
+        };
+        let mean =
+            self.shard_requests.iter().sum::<u64>() as f64 / self.shard_requests.len() as f64;
+        max / mean
+    }
+
+    /// One-line throughput summary for reports. Cluster roll-ups append
+    /// a shard-skew clause so imbalanced routing is visible at a glance.
     pub fn throughput_summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:.3} GFLOP/s, {:.0} tiles/s over {:?} exec",
             self.exec_throughput_gflops(),
             self.exec_tiles_per_sec(),
             self.exec_time
-        )
+        );
+        if !self.shard_requests.is_empty() {
+            line.push_str(&format!(
+                ", shard-skew {:.2} (reqs/shard {:?})",
+                self.shard_skew(),
+                self.shard_requests
+            ));
+        }
+        line
     }
 
     /// One-line serving outcome summary (success / shed / error
@@ -223,6 +256,41 @@ mod tests {
         assert_eq!(a.latency.count(), 3);
         assert_eq!(a.latency.max_us(), 30);
         assert_eq!(a.exec_time, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn shard_breakdown_merges_and_reports_skew() {
+        // no breakdown: no skew clause, skew 0
+        let plain = ServiceMetrics::default();
+        assert_eq!(plain.shard_skew(), 0.0);
+        assert!(!plain.throughput_summary().contains("shard-skew"));
+
+        let mut a = ServiceMetrics {
+            shard_requests: vec![6, 2],
+            ..Default::default()
+        };
+        // merging a wider breakdown extends element-wise
+        let b = ServiceMetrics {
+            shard_requests: vec![0, 2, 8],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.shard_requests, vec![6, 4, 8]);
+        // max 8 over mean 6 = 1.333...
+        assert!((a.shard_skew() - 8.0 / 6.0).abs() < 1e-9);
+        assert!(a.throughput_summary().contains("shard-skew 1.33"));
+
+        // merging a breakdown into a plain ledger adopts it
+        let mut plain = ServiceMetrics::default();
+        plain.merge(&a);
+        assert_eq!(plain.shard_requests, vec![6, 4, 8]);
+
+        // all-zero shards report 0 skew, not NaN
+        let zero = ServiceMetrics {
+            shard_requests: vec![0, 0],
+            ..Default::default()
+        };
+        assert_eq!(zero.shard_skew(), 0.0);
     }
 
     #[test]

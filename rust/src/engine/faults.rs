@@ -23,6 +23,7 @@ pub mod domain {
     pub const EXEC_PANIC: u64 = 2;
     pub const DROP_RESPONSE: u64 = 3;
     pub const CLIENT_GARBLE: u64 = 4;
+    pub const WORKER_KILL: u64 = 5;
 }
 
 /// A deterministic fault-injection plan. The default plan is inert
@@ -45,6 +46,12 @@ pub struct FaultPlan {
     /// Probability the serving front-end silently drops a response
     /// frame (the connection stays up; the client times out).
     pub drop_response: f64,
+    /// Probability a cluster worker dies (simulated process kill) right
+    /// before it would process a job, keyed by the job's admission
+    /// sequence. The supervisor detects the dead worker, restarts it on
+    /// the same cache shard, and replays the orphaned job — replayed
+    /// jobs are kill-exempt so a poisonous job cannot crash-loop.
+    pub worker_kill: f64,
 }
 
 impl FaultPlan {
@@ -58,6 +65,7 @@ impl FaultPlan {
         self.exec_error > 0.0
             || self.exec_panic > 0.0
             || self.drop_response > 0.0
+            || self.worker_kill > 0.0
             || !self.plan_delay.is_zero()
             || !self.exec_delay.is_zero()
     }
@@ -142,6 +150,11 @@ mod tests {
         .is_active());
         assert!(FaultPlan {
             exec_delay: Duration::from_micros(1),
+            ..FaultPlan::default()
+        }
+        .is_active());
+        assert!(FaultPlan {
+            worker_kill: 0.2,
             ..FaultPlan::default()
         }
         .is_active());

@@ -15,7 +15,9 @@
 //!   search with its shape-keyed mapping cache ([`flash`]), baselines
 //!   ([`baselines`]), a cycle-approximate simulator substrate ([`sim`]),
 //!   the execution runtime ([`runtime`]), the unified Query → Plan →
-//!   Response serving pipeline ([`engine`]), and its legacy
+//!   Response serving pipeline ([`engine`]), the sharded multi-worker
+//!   control plane that scales it past one process ([`cluster`]), the
+//!   TCP serving front-end ([`serve`]), and the engine's legacy
 //!   coordinator adapters ([`coordinator`]).
 //! * L2/L1 (`python/compile`): JAX GEMM/MLP graphs calling the Pallas
 //!   tiled-GEMM kernel, AOT-lowered once to `artifacts/*.hlo.txt`.
@@ -45,6 +47,7 @@
 pub mod arch;
 pub mod baselines;
 pub mod cli;
+pub mod cluster;
 pub mod coordinator;
 pub mod cost;
 pub mod dataflow;

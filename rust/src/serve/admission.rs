@@ -10,6 +10,11 @@
 //! connections coalesce into one planned group exactly like an
 //! in-process batch. Per-query outcomes travel back to their handler
 //! over the job's reply channel.
+//!
+//! Under `--shards N` the engine-owning [`Batcher`] is swapped for a
+//! [`ClusterBatcher`] that routes the same windows across the sharded
+//! control plane (see [`crate::cluster`]) — admission, batching, and
+//! reply semantics are unchanged.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -186,6 +191,52 @@ impl Batcher {
         self.handle
             .join()
             .map_err(|_| anyhow::anyhow!("serve-batcher thread panicked"))
+    }
+}
+
+/// The sharded counterpart of [`Batcher`]: drains the same admission
+/// queue in the same time/count windows, but fans each window across
+/// the cluster's shard queues instead of running it on one engine.
+/// Submission is non-blocking — outcomes travel straight from the
+/// shard workers to each job's reply channel, so one slow shard never
+/// stalls the router.
+pub struct ClusterBatcher {
+    handle: JoinHandle<anyhow::Result<crate::cluster::ClusterReport>>,
+}
+
+impl ClusterBatcher {
+    /// Spawn the routing thread. It runs until the queue is closed and
+    /// drained, then drains the cluster itself and returns the
+    /// cross-shard roll-up through [`ClusterBatcher::join`].
+    pub fn spawn(
+        cluster: crate::cluster::Cluster,
+        queue: Arc<AdmissionQueue>,
+        batch_max: usize,
+        batch_window: Duration,
+    ) -> ClusterBatcher {
+        let handle = std::thread::Builder::new()
+            .name("serve-router".into())
+            .spawn(move || {
+                while let Some(jobs) = queue.next_window(batch_max, batch_window) {
+                    if jobs.is_empty() {
+                        continue;
+                    }
+                    let (queries, replies) =
+                        jobs.into_iter().map(|j| (j.query, j.reply)).unzip();
+                    cluster.submit(queries, replies);
+                }
+                cluster.shutdown()
+            })
+            .expect("spawn serve-router thread");
+        ClusterBatcher { handle }
+    }
+
+    /// Wait for the router and every shard to drain; recover the
+    /// cluster report.
+    pub fn join(self) -> anyhow::Result<crate::cluster::ClusterReport> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve-router thread panicked"))?
     }
 }
 

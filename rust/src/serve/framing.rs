@@ -121,10 +121,20 @@ fn read_exact_deadline(
     Ok(())
 }
 
-/// Read one length-prefixed frame under `limits`. The idle budget
-/// applies until the first header byte arrives; from then on the whole
-/// frame must land within the frame budget.
-pub fn read_frame(stream: &mut TcpStream, limits: &FrameLimits) -> Result<Vec<u8>, FrameError> {
+/// Read one length-prefixed frame under `limits` into a caller-owned
+/// buffer, returning the payload length. The payload occupies
+/// `buf[..len]`; the buffer grows to the connection's high-water frame
+/// size and is never shrunk, so a handler that reuses one buffer across
+/// frames allocates at most once per growth step instead of once per
+/// frame. Oversized frames are still rejected before the buffer grows.
+///
+/// The idle budget applies until the first header byte arrives; from
+/// then on the whole frame must land within the frame budget.
+pub fn read_frame_into(
+    stream: &mut TcpStream,
+    limits: &FrameLimits,
+    buf: &mut Vec<u8>,
+) -> Result<usize, FrameError> {
     let mut header = [0u8; 4];
     read_exact_deadline(
         stream,
@@ -141,8 +151,20 @@ pub fn read_frame(stream: &mut TcpStream, limits: &FrameLimits) -> Result<Vec<u8
             max: limits.max_frame,
         });
     }
-    let mut payload = vec![0u8; len];
-    read_exact_deadline(stream, &mut payload, frame_deadline, false)?;
+    if buf.len() < len {
+        buf.resize(len, 0);
+    }
+    read_exact_deadline(stream, &mut buf[..len], frame_deadline, false)?;
+    Ok(len)
+}
+
+/// Read one length-prefixed frame under `limits` into a fresh
+/// allocation. Convenience wrapper over [`read_frame_into`] for clients
+/// and tests; the serving path reuses a per-connection buffer instead.
+pub fn read_frame(stream: &mut TcpStream, limits: &FrameLimits) -> Result<Vec<u8>, FrameError> {
+    let mut payload = Vec::new();
+    let len = read_frame_into(stream, limits, &mut payload)?;
+    payload.truncate(len);
     Ok(payload)
 }
 
@@ -197,6 +219,45 @@ mod tests {
         write_frame(&mut client, b"", &limits).unwrap();
         assert_eq!(read_frame(&mut server, &limits).unwrap(), b"{\"op\":\"ping\"}");
         assert_eq!(read_frame(&mut server, &limits).unwrap(), b"");
+    }
+
+    #[test]
+    fn reused_buffer_grows_once_and_never_shrinks() {
+        let (mut client, mut server) = pair();
+        let limits = quick_limits();
+        let mut buf = Vec::new();
+
+        write_frame(&mut client, &[7u8; 512], &limits).unwrap();
+        let n = read_frame_into(&mut server, &limits, &mut buf).unwrap();
+        assert_eq!(n, 512);
+        assert!(buf[..n].iter().all(|&b| b == 7));
+        let high_water = buf.capacity();
+        assert!(high_water >= 512);
+
+        // a smaller frame reuses the same storage: no shrink, no realloc
+        write_frame(&mut client, b"tiny", &limits).unwrap();
+        let n = read_frame_into(&mut server, &limits, &mut buf).unwrap();
+        assert_eq!(&buf[..n], b"tiny");
+        assert_eq!(buf.capacity(), high_water);
+        // stale bytes past the payload are never exposed to the caller
+        assert_eq!(n, 4);
+
+        // a larger frame grows to the new high-water mark
+        write_frame(&mut client, &[9u8; 1024], &limits).unwrap();
+        let n = read_frame_into(&mut server, &limits, &mut buf).unwrap();
+        assert_eq!(n, 1024);
+        assert!(buf[..n].iter().all(|&b| b == 9));
+        assert!(buf.capacity() >= 1024);
+
+        // an oversized declaration leaves the buffer untouched
+        use std::io::Write as _;
+        let before = buf.capacity();
+        client.write_all(&(1u32 << 30).to_be_bytes()).unwrap();
+        assert!(matches!(
+            read_frame_into(&mut server, &limits, &mut buf),
+            Err(FrameError::Oversized { .. })
+        ));
+        assert_eq!(buf.capacity(), before);
     }
 
     #[test]

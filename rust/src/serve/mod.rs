@@ -14,7 +14,10 @@
 //! * [`admission`] — a depth-bounded queue with typed refusals and a
 //!   single engine-owning batcher thread that drains it in time/count
 //!   bounded windows, so same-shape requests from different
-//!   connections coalesce exactly like an in-process batch.
+//!   connections coalesce exactly like an in-process batch. Under
+//!   `--shards N` the same windows are routed across the sharded
+//!   control plane ([`crate::cluster`]) by a [`ClusterBatcher`]
+//!   instead, with identical wire and drain semantics.
 //! * [`server`] — the accept loop (bounded handler set, immediate
 //!   `overloaded` rejection beyond it), per-connection handlers, and
 //!   the graceful-drain sequence triggered by SIGTERM/CTRL-C or a
@@ -45,8 +48,10 @@ pub mod loadgen;
 pub mod protocol;
 pub mod server;
 
-pub use admission::{AdmissionQueue, AdmitError, Batcher, Job};
-pub use framing::{read_frame, write_frame, FrameError, FrameLimits, MAX_WRITE_FRAME};
+pub use admission::{AdmissionQueue, AdmitError, Batcher, ClusterBatcher, Job};
+pub use framing::{
+    read_frame, read_frame_into, write_frame, FrameError, FrameLimits, MAX_WRITE_FRAME,
+};
 pub use loadgen::{LoadReport, LoadgenConfig};
 pub use protocol::{GemmRequest, Reply, Request};
-pub use server::{serve_listener, signals, ServeConfig};
+pub use server::{serve_listener, serve_listener_cluster, signals, ServeConfig};

@@ -24,13 +24,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::cluster::{Cluster, ClusterReport};
 use crate::coordinator::ServiceMetrics;
 use crate::cost::Objective;
 use crate::engine::{fault_domain, Engine, FaultPlan, Query, DEFAULT_SEED};
 use crate::workloads::Gemm;
 
-use super::admission::{AdmissionQueue, AdmitError, Batcher, Job};
-use super::framing::{read_frame, write_frame, FrameError, FrameLimits};
+use super::admission::{AdmissionQueue, AdmitError, Batcher, ClusterBatcher, Job};
+use super::framing::{read_frame_into, write_frame, FrameError, FrameLimits};
 use super::protocol::{kind, GemmRequest, Reply, Request};
 
 /// Serving knobs. Defaults favor a local benchmark target: small
@@ -128,27 +129,30 @@ impl Shared {
     }
 }
 
-/// Run the serving loop on an already-bound listener until drain
-/// completes, then return the engine's final cumulative metrics.
-/// Binding is the caller's job so tests can use port 0.
-pub fn serve_listener(
-    listener: TcpListener,
-    engine: Engine,
-    config: &ServeConfig,
-) -> Result<ServiceMetrics> {
-    let queue = AdmissionQueue::new(config.queue_depth);
-    let shared = Arc::new(Shared {
-        queue: Arc::clone(&queue),
+/// Build the accept-loop/handler shared state for a backend with the
+/// given fault plan.
+fn make_shared(queue: Arc<AdmissionQueue>, faults: FaultPlan, config: &ServeConfig) -> Arc<Shared> {
+    Arc::new(Shared {
+        queue,
         drain: AtomicBool::new(false),
         shed_overload: AtomicU64::new(0),
         shed_deadline: AtomicU64::new(0),
         protocol_errors: AtomicU64::new(0),
-        faults: engine.faults().clone(),
+        faults,
         limits: config.limits.clone(),
         reply_timeout: config.reply_timeout,
-    });
-    let batcher = Batcher::spawn(engine, queue, config.batch_max, config.batch_window);
+    })
+}
 
+/// The accept loop, shared by the single-engine and sharded paths: run
+/// until drain begins, then join every handler thread. On return the
+/// admission queue is closed and every admitted job's reply is either
+/// sent or owned by the backend batcher.
+fn accept_until_drain(
+    listener: TcpListener,
+    shared: &Arc<Shared>,
+    config: &ServeConfig,
+) -> Result<()> {
     listener.set_nonblocking(true)?;
     let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     loop {
@@ -163,10 +167,10 @@ pub fn serve_listener(
                 handlers.retain(|h| !h.is_finished());
                 if handlers.len() >= config.max_conns.max(1) {
                     shared.shed_overload.fetch_add(1, Ordering::Relaxed);
-                    reject_connection(stream, &shared);
+                    reject_connection(stream, shared);
                     continue;
                 }
-                let shared = Arc::clone(&shared);
+                let shared = Arc::clone(shared);
                 let handle = std::thread::Builder::new()
                     .name("serve-conn".into())
                     .spawn(move || handle_conn(stream, &shared))
@@ -181,19 +185,59 @@ pub fn serve_listener(
         }
     }
 
-    // Drain: the queue is closed; the batcher flushes every admitted
-    // window and hands the engine back; handlers notice the flag at
-    // their next poll tick and exit after their in-flight reply.
+    // Drain: the queue is closed; the backend flushes every admitted
+    // window; handlers notice the flag at their next poll tick and
+    // exit after their in-flight reply.
     for h in handlers {
         let _ = h.join();
     }
-    let engine = batcher.join()?;
-    let mut metrics = engine.metrics().clone();
+    Ok(())
+}
+
+/// Fold the admission-layer counters into a backend's final ledger.
+fn fold_admission(metrics: &mut ServiceMetrics, shared: &Shared) {
     metrics.shed_overload += shared.shed_overload.load(Ordering::Relaxed);
     metrics.shed_deadline += shared.shed_deadline.load(Ordering::Relaxed);
     metrics.errors += shared.protocol_errors.load(Ordering::Relaxed);
     metrics.drains += 1;
+}
+
+/// Run the serving loop on an already-bound listener until drain
+/// completes, then return the engine's final cumulative metrics.
+/// Binding is the caller's job so tests can use port 0.
+pub fn serve_listener(
+    listener: TcpListener,
+    engine: Engine,
+    config: &ServeConfig,
+) -> Result<ServiceMetrics> {
+    let queue = AdmissionQueue::new(config.queue_depth);
+    let shared = make_shared(Arc::clone(&queue), engine.faults().clone(), config);
+    let batcher = Batcher::spawn(engine, queue, config.batch_max, config.batch_window);
+    accept_until_drain(listener, &shared, config)?;
+    let engine = batcher.join()?;
+    let mut metrics = engine.metrics().clone();
+    fold_admission(&mut metrics, &shared);
     Ok(metrics)
+}
+
+/// The sharded counterpart of [`serve_listener`]: identical wire
+/// behavior and drain sequence, but admission windows fan out across
+/// the cluster's shard workers instead of one engine. Returns the full
+/// cross-shard [`ClusterReport`] (its `metrics` field is the roll-up a
+/// single-engine run would have reported, plus the per-shard
+/// breakdown).
+pub fn serve_listener_cluster(
+    listener: TcpListener,
+    cluster: Cluster,
+    config: &ServeConfig,
+) -> Result<ClusterReport> {
+    let queue = AdmissionQueue::new(config.queue_depth);
+    let shared = make_shared(Arc::clone(&queue), cluster.faults().clone(), config);
+    let batcher = ClusterBatcher::spawn(cluster, queue, config.batch_max, config.batch_window);
+    accept_until_drain(listener, &shared, config)?;
+    let mut report = batcher.join()?;
+    fold_admission(&mut report.metrics, &shared);
+    Ok(report)
 }
 
 /// Tell an over-cap connection why it is being dropped. Best-effort —
@@ -222,14 +266,19 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
     let mut poll_limits = shared.limits.clone();
     poll_limits.idle_timeout = poll;
     let mut idle_spent = Duration::ZERO;
+    // Grow-once read buffer reused across this connection's frames: it
+    // expands to the connection's high-water frame size and is never
+    // shrunk, so steady-state serving allocates nothing per frame.
+    let mut frame_buf: Vec<u8> = Vec::new();
     loop {
         if shared.draining() {
             return;
         }
-        match read_frame(&mut stream, &poll_limits) {
-            Ok(payload) => {
+        match read_frame_into(&mut stream, &poll_limits, &mut frame_buf) {
+            Ok(len) => {
                 idle_spent = Duration::ZERO;
-                if !handle_frame(&mut stream, shared, &payload) {
+                let handled = handle_frame(&mut stream, shared, &frame_buf[..len]);
+                if !handled {
                     return;
                 }
             }

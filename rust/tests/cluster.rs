@@ -1,0 +1,253 @@
+//! Integration: the sharded control plane against its single-engine
+//! reference — bit-identity across shard counts, the cluster-wide
+//! one-search-per-distinct-key invariant, work stealing under skew,
+//! and restart-and-replay under injected worker kills.
+
+use std::sync::Arc;
+
+use flash_gemm::cluster::{affinity_of, shard_of, Cluster, ClusterConfig};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::{Engine, FaultPlan, Query, Response, DEFAULT_SEED};
+use flash_gemm::flash::MappingCache;
+use flash_gemm::prelude::{Accelerator, HwConfig, Style};
+use flash_gemm::runtime::{Manifest, Runtime};
+use flash_gemm::workloads::Gemm;
+
+/// The single-engine reference every cluster run must match bit-wise.
+fn reference_engine() -> Engine {
+    Engine::builder()
+        .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+        .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+        .max_exec_dim(128)
+        .build()
+        .unwrap()
+}
+
+/// Worker factory: the same construction as the reference, planning
+/// against the supervisor-owned cache shard.
+fn factory(
+    faults: FaultPlan,
+) -> impl Fn(usize, Arc<MappingCache>) -> anyhow::Result<Engine> + Send + Sync + 'static {
+    move |_shard, cache| {
+        Engine::builder()
+            .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+            .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+            .max_exec_dim(128)
+            .shared_cache(cache)
+            .faults(faults.clone())
+            .build()
+    }
+}
+
+fn queries_over(shapes: &[(u64, u64, u64)], n: usize) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let (m, nn, k) = shapes[i % shapes.len()];
+            Query::new(Gemm::new(&format!("t{i}"), m, nn, k))
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+                .return_result(true)
+        })
+        .collect()
+}
+
+fn bits_of(responses: &[Response]) -> Vec<Vec<u32>> {
+    responses
+        .iter()
+        .map(|r| {
+            r.result
+                .as_ref()
+                .expect("result requested")
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        })
+        .collect()
+}
+
+const SHAPES: [(u64, u64, u64); 5] = [
+    (64, 64, 64),
+    (32, 96, 48),
+    (96, 80, 64),
+    (48, 40, 24),
+    (80, 56, 32),
+];
+
+#[test]
+fn shard_counts_do_not_change_result_bits_or_search_counts() {
+    let n = 12usize;
+    let queries = queries_over(&SHAPES, n);
+    let reference = reference_engine().run(&queries).expect("reference run");
+    let expected = bits_of(&reference.responses);
+    // the reference searches once per distinct (shape, objective) key
+    assert_eq!(reference.metrics.mapping_cache_misses, SHAPES.len() as u64);
+
+    for shards in [1usize, 4] {
+        let cluster = Cluster::new(
+            ClusterConfig {
+                shards,
+                ..ClusterConfig::default()
+            },
+            factory(FaultPlan::none()),
+        )
+        .expect("cluster");
+        let responses: Vec<Response> = cluster
+            .run(&queries)
+            .into_iter()
+            .collect::<Result<_, _>>()
+            .expect("all served");
+        assert_eq!(
+            bits_of(&responses),
+            expected,
+            "{shards}-shard results must be bit-identical to the single engine"
+        );
+        let report = cluster.shutdown().expect("drain");
+        assert_eq!(report.shards, shards);
+        assert_eq!(report.metrics.requests, n as u64);
+        assert_eq!(report.metrics.errors, 0);
+        assert_eq!(
+            report.metrics.mapping_cache_misses,
+            reference.metrics.mapping_cache_misses,
+            "one search per distinct key, cluster-wide ({shards} shards)"
+        );
+        assert_eq!(report.metrics.shard_requests.iter().sum::<u64>(), n as u64);
+        assert_eq!(report.routed.iter().sum::<u64>(), n as u64);
+    }
+}
+
+#[test]
+fn repeat_windows_hit_the_shard_caches_instead_of_researching() {
+    let queries = queries_over(&SHAPES, 10);
+    let cluster = Cluster::new(
+        ClusterConfig {
+            shards: 3,
+            ..ClusterConfig::default()
+        },
+        factory(FaultPlan::none()),
+    )
+    .expect("cluster");
+    let first: Vec<Response> = cluster
+        .run(&queries)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("first window");
+    let second: Vec<Response> = cluster
+        .run(&queries)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("second window");
+    // same seeds → same bits, and no second round of searches
+    assert_eq!(bits_of(&first), bits_of(&second));
+    let report = cluster.shutdown().expect("drain");
+    assert_eq!(report.metrics.requests, 20);
+    assert_eq!(report.metrics.mapping_cache_misses, SHAPES.len() as u64);
+}
+
+#[test]
+fn idle_workers_steal_planned_keys_without_extra_searches() {
+    // build a skewed mix: distinct shapes that all route home to the
+    // same shard of 2, so the other worker can only contribute by
+    // stealing
+    let objective = Objective::default();
+    let mut skewed: Vec<(u64, u64, u64)> = Vec::new();
+    let mut candidate = 0u64;
+    while skewed.len() < 6 {
+        let shape = (
+            16 + 8 * (candidate % 15),
+            16 + 8 * ((candidate / 15) % 15),
+            16 + 8 * ((candidate / 225) % 15),
+        );
+        candidate += 1;
+        let probe = Query::new(Gemm::new("probe", shape.0, shape.1, shape.2));
+        if shard_of(&affinity_of(&probe, objective), 2) == 0 {
+            skewed.push(shape);
+        }
+    }
+
+    let cluster = Cluster::new(
+        ClusterConfig {
+            shards: 2,
+            ..ClusterConfig::default()
+        },
+        // slow execution down so the home shard visibly backs up
+        factory(FaultPlan {
+            exec_delay: std::time::Duration::from_millis(10),
+            ..FaultPlan::none()
+        }),
+    )
+    .expect("cluster");
+
+    // window 1 plants every key in the planned set (and the home
+    // shard's cache); window 2 re-submits them as six separate jobs,
+    // which the idle worker is allowed to steal
+    let queries = queries_over(&skewed, skewed.len());
+    let first: Vec<Response> = cluster
+        .run(&queries)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("first window");
+    let second: Vec<Response> = cluster
+        .run(&queries)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("second window");
+    assert_eq!(
+        bits_of(&first),
+        bits_of(&second),
+        "stolen work must be bit-identical to home execution"
+    );
+
+    let report = cluster.shutdown().expect("drain");
+    assert!(
+        report.steals >= 1,
+        "the idle shard should have stolen from the backlog: {}",
+        report.summary()
+    );
+    // stealing imports the home shard's mapping — never re-searches
+    assert_eq!(report.metrics.mapping_cache_misses, skewed.len() as u64);
+    assert_eq!(report.metrics.errors, 0);
+    // placement is all-shard-0 by construction; execution is not
+    assert_eq!(report.routed[1], 0, "{}", report.summary());
+}
+
+#[test]
+fn killed_workers_replay_without_losing_results_or_bit_identity() {
+    let n = 10usize;
+    let queries = queries_over(&SHAPES, n);
+    let expected = bits_of(
+        &reference_engine()
+            .run(&queries)
+            .expect("reference run")
+            .responses,
+    );
+
+    // kill every job's first attempt; the replay is kill-exempt
+    let cluster = Cluster::new(
+        ClusterConfig {
+            shards: 3,
+            faults: FaultPlan {
+                seed: 42,
+                worker_kill: 1.0,
+                ..FaultPlan::none()
+            },
+            ..ClusterConfig::default()
+        },
+        factory(FaultPlan::none()),
+    )
+    .expect("cluster");
+    let responses: Vec<Response> = cluster
+        .run(&queries)
+        .into_iter()
+        .collect::<Result<_, _>>()
+        .expect("every admitted query answered despite kills");
+    assert_eq!(bits_of(&responses), expected);
+
+    let report = cluster.shutdown().expect("drain");
+    assert!(report.kills >= 1, "{}", report.summary());
+    assert!(report.restarts >= report.kills, "{}", report.summary());
+    assert_eq!(report.metrics.requests, n as u64);
+    assert_eq!(report.metrics.errors, 0);
+    // restarts resume the supervisor-owned cache shards: still exactly
+    // one search per distinct key
+    assert_eq!(report.metrics.mapping_cache_misses, SHAPES.len() as u64);
+}

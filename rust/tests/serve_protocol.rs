@@ -9,12 +9,13 @@ use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::cluster::{Cluster, ClusterConfig, ClusterReport};
 use flash_gemm::coordinator::ServiceMetrics;
 use flash_gemm::engine::{Engine, FaultPlan, Query, DEFAULT_SEED};
 use flash_gemm::runtime::{Manifest, Runtime};
 use flash_gemm::serve::{
-    loadgen, read_frame, serve_listener, write_frame, FrameLimits, GemmRequest, LoadgenConfig,
-    Reply, Request, ServeConfig,
+    loadgen, read_frame, serve_listener, serve_listener_cluster, write_frame, FrameLimits,
+    GemmRequest, LoadgenConfig, Reply, Request, ServeConfig,
 };
 use flash_gemm::workloads::Gemm;
 
@@ -318,6 +319,105 @@ fn concurrent_clients_are_bit_identical_to_in_process_execution() {
     let metrics = handle.join().unwrap().expect("drain completes");
     assert_eq!(metrics.requests, n as u64);
     assert_eq!(metrics.errors, 0);
+}
+
+#[test]
+fn sharded_server_is_bit_identical_to_in_process_execution() {
+    const SHAPES: [(u64, u64, u64); 4] =
+        [(64, 64, 64), (32, 96, 48), (96, 80, 64), (48, 40, 24)];
+    let n = 8usize;
+
+    // in-process reference: one engine, one submission window
+    let queries: Vec<Query> = (0..n)
+        .map(|i| {
+            let (m, nn, k) = SHAPES[i % SHAPES.len()];
+            Query::new(Gemm::new(&format!("t{i}"), m, nn, k))
+                .seed(DEFAULT_SEED + i as u64)
+                .verify(true)
+                .return_result(true)
+        })
+        .collect();
+    let reference = engine().run(&queries).expect("in-process run");
+    let expected: Vec<Vec<u32>> = reference
+        .responses
+        .iter()
+        .map(|r| {
+            r.result
+                .as_ref()
+                .expect("result")
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        })
+        .collect();
+
+    // served through 4 shards: same engine construction per worker
+    let cluster = Cluster::new(
+        ClusterConfig {
+            shards: 4,
+            ..ClusterConfig::default()
+        },
+        |_shard, cache| {
+            Engine::builder()
+                .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+                .runtime(Runtime::native(Manifest::synthetic(&[16, 32])))
+                .max_exec_dim(128)
+                .shared_cache(cache)
+                .build()
+        },
+    )
+    .expect("cluster");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let config = quick_config();
+    let handle: std::thread::JoinHandle<anyhow::Result<ClusterReport>> =
+        std::thread::spawn(move || serve_listener_cluster(listener, cluster, &config));
+
+    let mut got: Vec<Option<Vec<u32>>> = vec![None; n];
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut s = connect(&addr);
+                    let reply = send_request(&mut s, &gemm_request(i as u64, SHAPES[i % 4]));
+                    assert!(reply.is_ok(), "{reply:?}");
+                    assert_eq!(reply.verified, Some(true));
+                    reply
+                        .result
+                        .expect("result")
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            got[i] = Some(h.join().expect("client thread"));
+        }
+    });
+
+    for (i, bits) in got.into_iter().enumerate() {
+        assert_eq!(
+            bits.expect("client result"),
+            expected[i],
+            "sharded result {i} must be bit-identical to in-process execution"
+        );
+    }
+
+    shutdown(&addr);
+    let report = handle.join().unwrap().expect("drain completes");
+    assert_eq!(report.shards, 4);
+    assert_eq!(report.metrics.requests, n as u64);
+    assert_eq!(report.metrics.errors, 0);
+    assert_eq!(report.metrics.drains, 1);
+    // one search per distinct (shape, objective) key, cluster-wide —
+    // exactly what the single engine reference performed
+    assert_eq!(
+        report.metrics.mapping_cache_misses,
+        reference.metrics.mapping_cache_misses
+    );
+    assert_eq!(report.metrics.shard_requests.iter().sum::<u64>(), n as u64);
 }
 
 #[test]
