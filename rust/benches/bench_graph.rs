@@ -1,0 +1,138 @@
+//! Bench — the operator-graph path. Plans both shipped traces (BERT
+//! encoder layer, ResNet res2 bottleneck) jointly, then times fused vs
+//! unfused chain execution through the engine, recording throughput and
+//! the joint-vs-independent planning advantage to `BENCH_graph.json`
+//! (override with `BENCH_GRAPH_OUT`; knobs: `BENCH_GRAPH_ITERS`).
+//!
+//! The gated metric is `fused_gflops` — aggregate fused-chain MAC
+//! throughput across both traces — so a regression in either the fused
+//! executor hand-off path or the joint planner's tile choices trips the
+//! CI gate.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use flash_gemm::arch::{Accelerator, HwConfig, Style};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::Engine;
+use flash_gemm::graph::{self, OpGraph};
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn engine() -> Engine {
+    Engine::builder()
+        .accelerator(Accelerator::of_style(Style::Maeri, HwConfig::edge()))
+        .build()
+        .expect("engine")
+}
+
+/// Best-of-`iters` wall time for one run mode (after the caller warmed
+/// the plan cache); asserts fused/unfused agree bit for bit each pass.
+fn time_runs(
+    engine: &Engine,
+    g: &OpGraph,
+    iters: u64,
+    fused: bool,
+    want_digest: u64,
+) -> Duration {
+    let mut best = Duration::MAX;
+    for i in 0..iters {
+        let t0 = Instant::now();
+        let report = if fused {
+            engine.run_graph(g, 42 + i)
+        } else {
+            engine.run_graph_unfused(g, 42 + i)
+        }
+        .expect("graph run");
+        best = best.min(t0.elapsed());
+        if i == 0 {
+            assert_eq!(report.output.digest(), want_digest, "digest drift");
+        }
+    }
+    best
+}
+
+fn main() {
+    let iters = env_u64("BENCH_GRAPH_ITERS", 3).max(1);
+    let out_path =
+        std::env::var("BENCH_GRAPH_OUT").unwrap_or_else(|_| "BENCH_graph.json".to_string());
+
+    harness::section("operator-graph chains (fused vs unfused, joint vs independent)");
+
+    let mut per_trace = serde_json::Map::new();
+    let mut total_macs = 0u64;
+    let mut total_fused = Duration::ZERO;
+    let mut total_unfused = Duration::ZERO;
+
+    for name in graph::TRACES {
+        let g = graph::by_name(name).expect("shipped trace");
+        let chain = g.lower().expect("trace lowers");
+        let macs = chain.macs();
+        total_macs += macs;
+
+        // cold joint-plan latency on a fresh engine (one search per key)
+        let eng = engine();
+        let t0 = Instant::now();
+        let plan = eng.plan_graph(&g, Objective::Runtime).expect("joint plan");
+        let plan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(!plan.cache_hit, "fresh engine must search");
+
+        // warm pass pins the reference digest and fills every cache
+        let warm = eng.run_graph(&g, 42).expect("warm fused run");
+        let want = warm.output.digest();
+        let warm_unfused = eng.run_graph_unfused(&g, 42).expect("warm unfused run");
+        assert_eq!(warm_unfused.output.digest(), want, "fused != unfused");
+
+        let t_fused = time_runs(&eng, &g, iters, true, want);
+        let t_unfused = time_runs(&eng, &g, iters, false, want);
+        total_fused += t_fused;
+        total_unfused += t_unfused;
+
+        let gflops = |t: Duration| macs as f64 / t.as_secs_f64() / 1e9;
+        println!(
+            "bench graph/{name}: fused {t_fused:?} ({:.2} GFLOP/s), unfused {t_unfused:?} \
+             ({:.2} GFLOP/s), {:.2}x, joint {:.4} vs independent {:.4} ms, plan {plan_ms:.1} ms",
+            gflops(t_fused),
+            gflops(t_unfused),
+            t_unfused.as_secs_f64() / t_fused.as_secs_f64(),
+            plan.plan.joint_score,
+            plan.plan.independent_score,
+        );
+        per_trace.insert(
+            name.to_string(),
+            serde_json::json!({
+                "macs": macs,
+                "stages": chain.stages.len(),
+                "fused_ms": t_fused.as_secs_f64() * 1e3,
+                "unfused_ms": t_unfused.as_secs_f64() * 1e3,
+                "fused_gflops": gflops(t_fused),
+                "unfused_gflops": gflops(t_unfused),
+                "fused_handoffs": warm.output.fused_handoffs,
+                "joint_score": plan.plan.joint_score,
+                "independent_score": plan.plan.independent_score,
+                "fused_edges": plan.plan.fused_count(),
+                "plan_ms": plan_ms,
+            }),
+        );
+    }
+
+    let agg = |t: Duration| total_macs as f64 / t.as_secs_f64() / 1e9;
+    let metrics = serde_json::json!({
+        "iters": iters,
+        "total_macs": total_macs,
+        "fused_ms": total_fused.as_secs_f64() * 1e3,
+        "unfused_ms": total_unfused.as_secs_f64() * 1e3,
+        "fused_gflops": agg(total_fused),
+        "unfused_gflops": agg(total_unfused),
+        "fusion_speedup": total_unfused.as_secs_f64() / total_fused.as_secs_f64(),
+        "traces": serde_json::Value::Object(per_trace),
+    });
+    harness::write_record("graph", &out_path, metrics);
+}

@@ -178,6 +178,17 @@ fn valid_flags(command: &str) -> Option<&'static [&'static str]> {
         }
         "validate-model" => &["quick", "out", "format"],
         "arch" => &["arch", "config"],
+        "graph" => &[
+            "trace",
+            "objective",
+            "style",
+            "arch",
+            "config",
+            "seed",
+            "shards",
+            "tile",
+            "iters",
+        ],
         "serve" => &[
             "trace",
             "random",
@@ -257,6 +268,13 @@ extensions:
   resnet               conv-as-GEMM ResNet-50 layers × 5 styles    [--config edge] [--batch 1]
   sweep-cluster        cluster-size ablation  [--style|--arch] [--config edge] [--workload VI]
   export-mapping       best mapping in MAESTRO directive syntax [--style|--arch --config --workload|-m-n-k]
+  graph plan           joint chain mapping vs independent per-op  [--trace bert|resnet]
+                       [--objective runtime|energy|edp] [--arch a,b,... | all presets]
+  graph run            plan + execute a chain fused and unfused (bit-identical)
+                       [--trace bert|resnet] [--style|--arch --config] [--seed N] [--tile T]
+                       with --shards N: per-stage planning through the sharded
+                       control plane, execution in-process (same bits)
+  graph bench          fused vs unfused chain throughput  [--trace bert|resnet] [--iters 3]
 
 tools:
   search               one FLASH search  [--style|--arch] [--config edge] [--m --n --k | --workload ID] [--format json]
@@ -284,10 +302,10 @@ tools:
 
 /// Run the CLI; returns the text to print.
 pub fn run(args: Args) -> Result<String> {
-    // only `arch` takes positionals; anywhere else a stray token is a
-    // mistake (e.g. `-style` instead of `--style`) that must fail fast,
-    // not silently fall back to defaults
-    if args.command != "arch" && !args.positional.is_empty() {
+    // only `arch` and `graph` take positionals; anywhere else a stray
+    // token is a mistake (e.g. `-style` instead of `--style`) that must
+    // fail fast, not silently fall back to defaults
+    if args.command != "arch" && args.command != "graph" && !args.positional.is_empty() {
         bail!(
             "unexpected positional arguments {:?} for {:?} (flags are `--key value`)",
             args.positional,
@@ -529,6 +547,7 @@ pub fn run(args: Args) -> Result<String> {
             Ok(out)
         }
         "arch" => arch_cmd(&args),
+        "graph" => graph_cmd(&args),
         "serve" => serve(&args),
         "loadgen" => loadgen(&args),
         "help" | "" => Ok(HELP.to_string()),
@@ -618,6 +637,249 @@ fn arch_cmd(args: &Args) -> Result<String> {
         }
         other => bail!("unknown arch action {other:?} (valid: list|show|validate)"),
     }
+}
+
+/// `repro graph plan|run|bench` — the operator-graph tooling.
+fn graph_cmd(args: &Args) -> Result<String> {
+    use crate::cost::Objective;
+    use crate::graph;
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("plan");
+    let trace = args.get("trace").unwrap_or("bert");
+    let g = graph::by_name(trace).ok_or_else(|| {
+        anyhow!(
+            "unknown --trace {trace:?} (valid: {})",
+            graph::TRACES.join("|")
+        )
+    })?;
+    let objective: Objective = args
+        .get("objective")
+        .unwrap_or("runtime")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    match action {
+        "plan" => graph_plan_cmd(args, &g, objective),
+        "run" => graph_run_cmd(args, &g, objective),
+        "bench" => graph_bench_cmd(args, &g, objective),
+        other => bail!("unknown graph action {other:?} (valid: plan|run|bench)"),
+    }
+}
+
+/// `repro graph plan` — joint chain mapping over the accelerator pool,
+/// per-arch joint vs independent scores, and the winner's stage picks.
+fn graph_plan_cmd(args: &Args, g: &crate::graph::OpGraph, objective: crate::cost::Objective) -> Result<String> {
+    let engine = crate::engine::Engine::builder()
+        .pool(args.pool()?)
+        .objective(objective)
+        .build()?;
+    let chain = g.lower()?;
+    let plan = engine.plan_graph(g, objective)?;
+    let mut t = crate::report::Table::new(&[
+        "arch", "joint", "independent", "advantage", "fused edges", "searches",
+    ]);
+    for acc in engine.pool() {
+        match engine.graph_cache().get(acc, &chain, objective) {
+            Some(p) => t.row(&[
+                acc.name().to_string(),
+                format!("{:.4}", p.joint_score),
+                format!("{:.4}", p.independent_score),
+                format!("{:.3}x", p.advantage()),
+                format!("{}/{}", p.fused_count(), chain.stages.len() - 1),
+                p.searches.to_string(),
+            ]),
+            None => t.row(&[
+                acc.name().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "infeasible".into(),
+            ]),
+        }
+    }
+    let winner = engine.pool()[plan.accelerator_idx].name().to_string();
+    let mut picks = crate::report::Table::new(&["stage", "m x n x k", "edge", "outer tiles", "score"]);
+    for (s, p) in chain.stages.iter().zip(&plan.plan.picks) {
+        let edge = if s.edge.from_input {
+            "input"
+        } else if s.edge.gather.is_some() {
+            "im2col"
+        } else {
+            "direct"
+        };
+        picks.row(&[
+            s.gemm.name.clone(),
+            format!("{}x{}x{}", s.gemm.m, s.gemm.n, s.gemm.k),
+            edge.to_string(),
+            format!("{:?}", p.signature),
+            format!("{:.4}", p.score),
+        ]);
+    }
+    Ok(format!(
+        "graph {} ({} stages, {} objective)\n{}\nwinner: {} (joint {:.4} vs independent {:.4}, cache_hit={})\n{}",
+        g.name,
+        chain.stages.len(),
+        objective,
+        t.render(),
+        winner,
+        plan.plan.joint_score,
+        plan.plan.independent_score,
+        plan.cache_hit,
+        picks.render()
+    ))
+}
+
+/// `repro graph run` — plan and execute a chain on the fused path and
+/// its unfused reference, asserting bit-identity. With `--shards N`,
+/// per-stage planning routes through the sharded control plane
+/// (execution stays in-process — results are bit-identical by
+/// construction, which is the point).
+fn graph_run_cmd(args: &Args, g: &crate::graph::OpGraph, objective: crate::cost::Objective) -> Result<String> {
+    use crate::graph;
+    let seed = args.get_u64("seed", crate::engine::DEFAULT_SEED)?;
+    let shards = args.get_u64("shards", 1)? as usize;
+    let acc = args.accelerator()?;
+    let chain = g.lower()?;
+    let engine = crate::engine::Engine::builder()
+        .accelerator(acc.clone())
+        .objective(objective)
+        .tile(args.get_u64("tile", 0)?)
+        .build()?;
+    let mut out = String::new();
+    let (orders, stage_mappings, plan_line) = if shards > 1 {
+        // plan-only control-plane exercise: each stage's mapping comes
+        // back from a cluster shard; the walk order never changes
+        // result bits, so execution below matches the joint path
+        let cluster = serve_cluster(args, shards)?;
+        let queries: Vec<crate::engine::Query> = chain
+            .stages
+            .iter()
+            .map(|s| {
+                crate::engine::Query::new(s.gemm.clone())
+                    .objective(objective)
+                    .execute(false)
+            })
+            .collect();
+        let responses = cluster
+            .run(&queries)
+            .into_iter()
+            .collect::<Result<Vec<_>, crate::engine::EngineError>>()?;
+        let report = cluster.shutdown()?;
+        let orders: Vec<crate::dataflow::LoopOrder> = responses
+            .iter()
+            .map(|r| r.mapping.mapping.inter_order)
+            .collect();
+        let names: Vec<String> = responses.iter().map(|r| r.mapping_name()).collect();
+        (orders, names, format!("cluster: {}", report.summary()))
+    } else {
+        let plan = engine.plan_graph(g, objective)?;
+        let orders = graph::plan_orders(&plan.plan);
+        let names: Vec<String> = plan
+            .plan
+            .picks
+            .iter()
+            .map(|p| p.evaluated.mapping.name())
+            .collect();
+        (
+            orders,
+            names,
+            format!(
+                "joint {:.4} vs independent {:.4} ({:.3}x), cache_hit={}",
+                plan.plan.joint_score,
+                plan.plan.independent_score,
+                plan.plan.advantage(),
+                plan.cache_hit
+            ),
+        )
+    };
+    let data = graph::chain_data(&chain, seed);
+    let tiles = graph::segment_tiles(
+        &chain,
+        &engine.runtime().manifest().tile_sizes(),
+        match args.get_u64("tile", 0)? {
+            0 => None,
+            t => Some(t as usize),
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let fused = graph::run_fused(&chain, &data, &orders, &tiles)?;
+    let fused_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let unfused = graph::run_unfused(&chain, &data, &orders, &tiles)?;
+    let unfused_ms = t1.elapsed().as_secs_f64() * 1e3;
+    if fused.output != unfused.output {
+        bail!(
+            "fused execution diverged from the unfused reference \
+             (digest {:016x} vs {:016x})",
+            fused.digest(),
+            unfused.digest()
+        );
+    }
+    out.push_str(&format!(
+        "graph {} on {} ({} stages, seed {seed})\n",
+        g.name,
+        acc.name(),
+        chain.stages.len()
+    ));
+    for ((s, name), tile) in chain.stages.iter().zip(&stage_mappings).zip(&tiles) {
+        out.push_str(&format!(
+            "  {:<16} {:>5}x{:<5}x{:<5} tile={tile:<3} {name}\n",
+            s.gemm.name, s.gemm.m, s.gemm.n, s.gemm.k
+        ));
+    }
+    out.push_str(&format!("plan: {plan_line}\n"));
+    out.push_str(&format!(
+        "output {}x{} digest={:016x} fused==unfused: true handoffs={}\n",
+        fused.m,
+        fused.n,
+        fused.digest(),
+        fused.fused_handoffs
+    ));
+    out.push_str(&format!(
+        "timing: fused={fused_ms:.2}ms unfused={unfused_ms:.2}ms\n"
+    ));
+    Ok(out)
+}
+
+/// `repro graph bench` — quick fused vs unfused chain throughput.
+fn graph_bench_cmd(args: &Args, g: &crate::graph::OpGraph, objective: crate::cost::Objective) -> Result<String> {
+    use crate::graph;
+    let iters = args.get_u64("iters", 3)?.max(1);
+    let acc = args.accelerator()?;
+    let engine = crate::engine::Engine::builder()
+        .accelerator(acc.clone())
+        .objective(objective)
+        .build()?;
+    let chain = g.lower()?;
+    let plan = engine.plan_graph(g, objective)?;
+    let orders = graph::plan_orders(&plan.plan);
+    let tiles = graph::segment_tiles(&chain, &engine.runtime().manifest().tile_sizes(), None);
+    let data = graph::chain_data(&chain, crate::engine::DEFAULT_SEED);
+    let mut best = [f64::INFINITY; 2];
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        graph::run_fused(&chain, &data, &orders, &tiles)?;
+        best[0] = best[0].min(t0.elapsed().as_secs_f64() * 1e3);
+        let t1 = std::time::Instant::now();
+        graph::run_unfused(&chain, &data, &orders, &tiles)?;
+        best[1] = best[1].min(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    let gflops = |ms: f64| chain.macs() as f64 / ms / 1e6;
+    Ok(format!(
+        "graph bench {} on {} ({} stages, {} MACs, iters={iters})\nfused:   {:.2} ms  {:.2} GFLOPS\nunfused: {:.2} ms  {:.2} GFLOPS\nspeedup: {:.3}x\n",
+        g.name,
+        acc.name(),
+        chain.stages.len(),
+        chain.macs(),
+        best[0],
+        gflops(best[0]),
+        best[1],
+        gflops(best[1]),
+        best[1] / best[0]
+    ))
 }
 
 /// Build the serving engine shared by the in-process replay and the
@@ -1072,7 +1334,8 @@ mod tests {
         for cmd in [
             "table2", "table3", "table4", "table5", "table6", "pruning", "fig7", "fig8",
             "fig9", "fig10", "search", "pareto", "route", "summa", "resnet", "sweep-cluster",
-            "export-mapping", "validate", "validate-model", "arch", "serve", "loadgen", "help",
+            "export-mapping", "validate", "validate-model", "arch", "graph", "serve", "loadgen",
+            "help",
         ] {
             assert!(valid_flags(cmd).is_some(), "no flag table for {cmd}");
         }
@@ -1136,6 +1399,55 @@ mod tests {
                 .collect()
         };
         assert_eq!(stable(&single), stable(&sharded));
+    }
+
+    #[test]
+    fn graph_plan_renders_joint_vs_independent() {
+        let a = Args::parse(
+            ["graph", "plan", "--trace", "bert", "--arch", "maeri,tpu"].map(String::from),
+        )
+        .unwrap();
+        let out = run(a).unwrap();
+        assert!(out.contains("graph bert-layer"), "{out}");
+        assert!(out.contains("winner:"), "{out}");
+        assert!(out.contains("independent"), "{out}");
+        // bad trace and bad action both fail fast
+        let err = run(Args::parse(["graph", "plan", "--trace", "vgg"].map(String::from)).unwrap());
+        assert!(format!("{:#}", err.unwrap_err()).contains("bert|resnet"));
+        let err = run(Args::parse(["graph", "explode"].map(String::from)).unwrap());
+        assert!(format!("{:#}", err.unwrap_err()).contains("plan|run|bench"));
+    }
+
+    #[test]
+    fn graph_run_is_bit_identical_across_shard_counts() {
+        let base = ["graph", "run", "--trace", "bert", "--style", "maeri", "--seed", "9"];
+        let single = run(Args::parse(base.map(String::from)).unwrap()).unwrap();
+        assert!(single.contains("fused==unfused: true"), "{single}");
+        let with_shards = |n: &str| {
+            let mut f: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+            f.extend(["--shards".to_string(), n.to_string()]);
+            run(Args::parse(f).unwrap()).unwrap()
+        };
+        let two = with_shards("2");
+        let three = with_shards("3");
+        // the output digest line is the bit-identity witness: it must
+        // match across the in-process and sharded control planes
+        let digest = |out: &str| {
+            out.lines()
+                .find(|l| l.contains("digest="))
+                .expect("digest line")
+                .to_string()
+        };
+        assert_eq!(digest(&single), digest(&two));
+        assert_eq!(digest(&two), digest(&three));
+        // and everything except timing is identical across shard counts
+        let stable = |out: &str| -> Vec<String> {
+            out.lines()
+                .filter(|l| !l.starts_with("timing:") && !l.contains("cluster:"))
+                .map(String::from)
+                .collect()
+        };
+        assert_eq!(stable(&two), stable(&three));
     }
 
     #[test]

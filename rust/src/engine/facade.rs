@@ -13,6 +13,7 @@ use crate::arch::{Accelerator, ArchSpec, HwConfig};
 use crate::coordinator::ServiceMetrics;
 use crate::cost::Objective;
 use crate::flash::{self, EvaluatedMapping, MappingCache, SearchOpts, SearchResult};
+use crate::graph::{self, ChainOutput, ChainPlan, GraphPlanCache, OpGraph};
 use crate::runtime::{Manifest, PackedGemm, Runtime, TiledExecutor};
 use crate::workloads::Gemm;
 
@@ -34,6 +35,34 @@ pub struct Plan {
     /// `true` when every pool member was served from the shared mapping
     /// cache — no FLASH search ran for this plan.
     pub cache_hit: bool,
+}
+
+/// Stage-1 output for an operator graph: the joint chain selection
+/// over the engine's accelerator pool (the graph sibling of [`Plan`]).
+#[derive(Debug, Clone)]
+pub struct GraphPlan {
+    /// Index of the winning accelerator in the pool.
+    pub accelerator_idx: usize,
+    /// The winning joint chain plan (shared with the cache).
+    pub plan: Arc<ChainPlan>,
+    /// Per-accelerator joint scores, pool order (`None` = infeasible on
+    /// that pool member).
+    pub scores: Vec<Option<f64>>,
+    /// `true` when every pool member was served from the shared
+    /// [`GraphPlanCache`] — no frontier search ran for this plan.
+    pub cache_hit: bool,
+}
+
+/// What one [`Engine::run_graph`] produced: the joint plan, the pinned
+/// per-stage execution tiles, and the executed chain output.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    pub graph_name: String,
+    pub plan: GraphPlan,
+    /// Per-stage execution tile (shared across each fusable segment).
+    pub tiles: Vec<usize>,
+    pub output: ChainOutput,
+    pub latency_us: u64,
 }
 
 /// One cell of a (accelerator × workload) planning grid.
@@ -86,6 +115,7 @@ pub struct EngineBuilder {
     runtime: Option<Runtime>,
     objective: Objective,
     cache: Option<Arc<MappingCache>>,
+    graph_cache: Option<Arc<GraphPlanCache>>,
     max_exec_dim: u64,
     tile: u64,
     faults: FaultPlan,
@@ -151,6 +181,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Share a graph-plan cache with other engines — a chain jointly
+    /// planned by any sharing instance is a hit for all of them.
+    pub fn shared_graph_cache(mut self, cache: Arc<GraphPlanCache>) -> Self {
+        self.graph_cache = Some(cache);
+        self
+    }
+
     /// Cap on M/N/K for numeric execution (larger queries get plan-only
     /// responses). Default 512.
     pub fn max_exec_dim(mut self, max_exec_dim: u64) -> Self {
@@ -183,6 +220,7 @@ impl EngineBuilder {
                 .unwrap_or_else(|| Runtime::native(Manifest::synthetic(&[16, 32, 64]))),
             objective: self.objective,
             cache: self.cache.unwrap_or_default(),
+            graph_cache: self.graph_cache.unwrap_or_default(),
             max_exec_dim: self.max_exec_dim,
             tile: self.tile,
             faults: self.faults,
@@ -208,6 +246,7 @@ pub struct Engine {
     runtime: Runtime,
     objective: Objective,
     cache: Arc<MappingCache>,
+    graph_cache: Arc<GraphPlanCache>,
     max_exec_dim: u64,
     tile: u64,
     faults: FaultPlan,
@@ -222,6 +261,7 @@ impl Engine {
             runtime: None,
             objective: Objective::Runtime,
             cache: None,
+            graph_cache: None,
             max_exec_dim: 512,
             tile: 0,
             faults: FaultPlan::none(),
@@ -241,6 +281,11 @@ impl Engine {
     /// The shared mapping cache (e.g. to pre-warm, share, or inspect).
     pub fn cache(&self) -> &Arc<MappingCache> {
         &self.cache
+    }
+
+    /// The shared graph-plan cache.
+    pub fn graph_cache(&self) -> &Arc<GraphPlanCache> {
+        &self.graph_cache
     }
 
     /// Cumulative metrics across every window this engine served.
@@ -407,6 +452,120 @@ impl Engine {
         )?;
         self.cache.insert_with(acc, workload, objective, r.best.clone());
         Ok(r)
+    }
+
+    /// Jointly plan an operator graph over the pool, cache-first: each
+    /// pool member's [`ChainPlan`] comes from the shared
+    /// [`GraphPlanCache`] — one joint search per distinct
+    /// (graph, architecture, objective) key, ever — and the member with
+    /// the lowest joint score wins.
+    pub fn plan_graph(
+        &self,
+        graph: &OpGraph,
+        objective: Objective,
+    ) -> Result<GraphPlan, EngineError> {
+        let infeasible = |reason: String| EngineError::Infeasible {
+            workload: graph.name.clone(),
+            reason,
+        };
+        let chain = graph.lower().map_err(|e| infeasible(e.to_string()))?;
+        let mut scores = Vec::with_capacity(self.pool.len());
+        let mut searches = 0usize;
+        let mut last_err = None;
+        let mut best: Option<(usize, Arc<ChainPlan>)> = None;
+        for (i, acc) in self.pool.iter().enumerate() {
+            if self.graph_cache.is_infeasible(acc, &chain, objective) {
+                scores.push(None);
+                continue;
+            }
+            match self.graph_cache.get_or_plan(acc, &chain, objective) {
+                Ok((plan, hit)) => {
+                    if !hit {
+                        searches += 1;
+                    }
+                    scores.push(Some(plan.joint_score));
+                    let better = match &best {
+                        Some((_, b)) => plan.joint_score < b.joint_score,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((i, plan));
+                    }
+                }
+                Err(e) => {
+                    searches += 1;
+                    last_err = Some(e);
+                    scores.push(None);
+                }
+            }
+        }
+        let Some((accelerator_idx, plan)) = best else {
+            return Err(infeasible(match last_err {
+                Some(e) => e.root_cause().to_string(),
+                None => "every pool member is infeasible for this chain".into(),
+            }));
+        };
+        Ok(GraphPlan {
+            accelerator_idx,
+            plan,
+            scores,
+            cache_hit: searches == 0,
+        })
+    }
+
+    /// Plan and execute an operator graph end to end on the fused
+    /// packed path: epilogues applied in-tile, direct edges handing
+    /// packed output tiles straight to the consumer's `A` panels.
+    /// Operand data is derived deterministically from `seed`.
+    pub fn run_graph(&self, graph: &OpGraph, seed: u64) -> Result<GraphReport, EngineError> {
+        self.run_graph_inner(graph, seed, true)
+    }
+
+    /// The unfused node-by-node reference for [`Engine::run_graph`]:
+    /// same plan, same data, same tiles — pack / execute / unpack per
+    /// stage with a matrix epilogue pass. Bit-identical output by
+    /// construction (the fusion-correctness tests pin this).
+    pub fn run_graph_unfused(
+        &self,
+        graph: &OpGraph,
+        seed: u64,
+    ) -> Result<GraphReport, EngineError> {
+        self.run_graph_inner(graph, seed, false)
+    }
+
+    fn run_graph_inner(
+        &self,
+        graph: &OpGraph,
+        seed: u64,
+        fused: bool,
+    ) -> Result<GraphReport, EngineError> {
+        let started = Instant::now();
+        let plan = self.plan_graph(graph, self.objective)?;
+        let chain = graph.lower().map_err(|e| EngineError::Infeasible {
+            workload: graph.name.clone(),
+            reason: e.to_string(),
+        })?;
+        let data = graph::chain_data(&chain, seed);
+        let tiles = graph::segment_tiles(
+            &chain,
+            &self.runtime.manifest().tile_sizes(),
+            (self.tile > 0).then_some(self.tile as usize),
+        );
+        let orders = graph::plan_orders(&plan.plan);
+        let run = if fused {
+            graph::run_fused
+        } else {
+            graph::run_unfused
+        };
+        let output = run(&chain, &data, &orders, &tiles)
+            .map_err(|e| EngineError::Exec(e.to_string()))?;
+        Ok(GraphReport {
+            graph_name: graph.name.clone(),
+            plan,
+            tiles,
+            output,
+            latency_us: started.elapsed().as_micros() as u64,
+        })
     }
 
     /// Serve one query (a one-element [`Engine::run`] window).

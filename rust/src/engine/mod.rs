@@ -49,7 +49,7 @@ mod query;
 pub use error::EngineError;
 pub use facade::{
     close, operands, reference_gemm, Engine, EngineBuilder, EngineReport, EngineWindow,
-    GridResult, Plan,
+    GraphPlan, GraphReport, GridResult, Plan,
 };
 pub use faults::{domain as fault_domain, FaultPlan};
 pub use query::{Query, Response, DEFAULT_SEED};

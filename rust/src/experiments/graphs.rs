@@ -1,0 +1,115 @@
+//! Operator-graph planning advantage — joint chain mapping vs
+//! independent per-op mapping, swept over the same seven architectures
+//! the simulator validation gate uses (five style presets plus the two
+//! shipped TOML specs) and both shipped traces.
+//!
+//! The acceptance bound this sweep pins: the joint plan's chain score
+//! (stage scores plus induced repack penalties) never exceeds the
+//! independent baseline, on any architecture, for any trace — the DP
+//! over per-stage frontiers subsumes independent planning as one of its
+//! paths, so equality is the worst case and any advantage is repack
+//! traffic the joint planner avoided by agreeing on tiles.
+
+use anyhow::Result;
+
+use crate::cost::Objective;
+use crate::experiments::validation_architectures;
+use crate::graph::{by_name, plan_chain, TRACES};
+use crate::report::Table;
+
+/// One (architecture, trace) cell of the advantage sweep.
+#[derive(Debug, Clone)]
+pub struct GraphAdvantageRow {
+    pub arch: String,
+    pub trace: String,
+    pub stages: usize,
+    pub joint: f64,
+    pub independent: f64,
+    /// `independent / joint` (≥ 1; how much joint planning saved).
+    pub advantage: f64,
+    pub fused_edges: usize,
+}
+
+/// Jointly plan both shipped traces on every validation architecture.
+pub fn graph_advantage(objective: Objective) -> Result<Vec<GraphAdvantageRow>> {
+    let mut rows = Vec::new();
+    for acc in validation_architectures() {
+        for trace in TRACES {
+            let chain = by_name(trace)
+                .expect("shipped trace")
+                .lower()
+                .expect("shipped trace lowers");
+            let plan = plan_chain(&acc, &chain, objective)?;
+            rows.push(GraphAdvantageRow {
+                arch: acc.name().to_string(),
+                trace: trace.to_string(),
+                stages: chain.stages.len(),
+                joint: plan.joint_score,
+                independent: plan.independent_score,
+                advantage: plan.advantage(),
+                fused_edges: plan.fused_count(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the sweep as the CLI table.
+pub fn graph_advantage_table(objective: Objective, rows: &[GraphAdvantageRow]) -> Table {
+    let obj = format!("joint ({objective})");
+    let mut t = Table::new(&[
+        "architecture",
+        "trace",
+        "stages",
+        obj.as_str(),
+        "independent",
+        "advantage",
+        "fused edges",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.arch.clone(),
+            r.trace.clone(),
+            r.stages.to_string(),
+            format!("{:.4}", r.joint),
+            format!("{:.4}", r.independent),
+            format!("{:.3}x", r.advantage),
+            r.fused_edges.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn joint_never_exceeds_independent_on_any_validation_architecture() {
+        for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+            let rows = graph_advantage(objective).unwrap();
+            // 7 architectures × 2 traces
+            assert_eq!(rows.len(), 14);
+            for r in &rows {
+                assert!(
+                    r.joint <= r.independent + 1e-12,
+                    "{} {} {objective}: joint {} > independent {}",
+                    r.arch,
+                    r.trace,
+                    r.joint,
+                    r.independent
+                );
+                assert!(r.advantage >= 1.0 - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn advantage_table_renders_every_cell() {
+        let rows = graph_advantage(Objective::Runtime).unwrap();
+        let t = graph_advantage_table(Objective::Runtime, &rows);
+        let s = t.render();
+        assert!(s.contains("bert") && s.contains("resnet"), "{s}");
+        assert!(s.contains("os-mesh") && s.contains("picoedge"), "{s}");
+    }
+}

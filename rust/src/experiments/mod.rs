@@ -4,12 +4,14 @@
 
 mod ablations;
 mod figures;
+mod graphs;
 mod pruning;
 mod tables;
 mod validation;
 
 pub use ablations::{cluster_sweep, cluster_sweep_spread, resnet_table, summa_table};
 pub use figures::{fig10, fig7, fig8, fig9, Fig7Data};
+pub use graphs::{graph_advantage, graph_advantage_table, GraphAdvantageRow};
 pub use pruning::{pruning_report, PruningReport};
 pub use tables::{table2, table2_for, table3, table4, table5, table6};
 pub use validation::{

@@ -1,0 +1,252 @@
+//! Signature frontiers — the per-node search primitive of the joint
+//! chain planner ([`crate::graph`]).
+//!
+//! A chain planner cannot use the single best mapping per node: a
+//! slightly-worse mapping whose outer tiles *agree* with its neighbor
+//! can win overall by skipping an inter-op repack. What it needs per
+//! node is the best mapping **per outer-tile signature**
+//! `(T_M^out, T_N^out, T_K^out)` — the frontier — because the repack
+//! penalty of an edge depends on the adjacent signatures only.
+//!
+//! The search reuses the whole region machinery of the single-GEMM
+//! path: [`candidates::regions`] decomposes the space,
+//! [`region_bound`] gives each region a closed-form lower bound, and
+//! only cost-equivalence group leaders are evaluated (followers differ
+//! in inner tiles the cost model never reads — and inner tiles are not
+//! part of the signature, so the leader represents its group here too).
+//! Regions are visited cheapest-bound-first and skipped once their
+//! bound exceeds `best + slack`, where `slack` is the caller's bound on
+//! how much repack traffic a non-optimal signature could possibly save
+//! (GOMA-style: an entry worse than the node optimum by more than the
+//! adjacent edges' total repack penalty can never be part of an optimal
+//! chain, so dropping it is lossless). With `slack = 0` the surviving
+//! global best is exactly the [`super::search_with`] winner.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Result};
+use rayon::prelude::*;
+
+use crate::arch::Accelerator;
+use crate::cost::{CostModel, Objective};
+use crate::dataflow::Mapping;
+use crate::workloads::Gemm;
+
+use super::candidates::{self, Region};
+use super::prune::{region_bound, PruneStats};
+use super::search::{EvaluatedMapping, EVAL_CHUNK};
+
+/// A mapping's outer-tile signature: `(T_M^out, T_N^out, T_K^out)`.
+/// Producer/consumer tile agreement is judged on these (the outer tiles
+/// are what S2 exchanges with the NoC, so agreement means the
+/// producer's output tiles are the consumer's input panels verbatim).
+pub type Signature = (u64, u64, u64);
+
+/// The signature of one mapping.
+pub fn outer_signature(m: &Mapping) -> Signature {
+    (m.outer.m, m.outer.n, m.outer.k)
+}
+
+/// One frontier entry: the best mapping of its signature.
+#[derive(Debug, Clone)]
+pub struct FrontierEntry {
+    pub signature: Signature,
+    pub evaluated: EvaluatedMapping,
+    /// The objective score of `evaluated` (node contribution to a
+    /// chain's joint score).
+    pub score: f64,
+}
+
+/// Best mapping per outer-tile signature for one (accelerator,
+/// workload, objective), ascending by score.
+#[derive(Debug, Clone)]
+pub struct Frontier {
+    /// Entries sorted by (score, signature) — `entries[0]` is the node
+    /// optimum, bit-identical to the [`super::search_with`] winner.
+    pub entries: Vec<FrontierEntry>,
+    /// Region/evaluation counters (same semantics as the single-GEMM
+    /// pruned search).
+    pub stats: PruneStats,
+}
+
+impl Frontier {
+    /// Score of the node optimum (what independent per-op planning pays).
+    pub fn best_score(&self) -> f64 {
+        self.entries[0].score
+    }
+}
+
+/// Compute the signature frontier. `slack` widens the region-pruning
+/// threshold: a region survives while `bound ≤ best + slack`. Pass the
+/// total repack penalty of the node's fusable adjacent edges — any
+/// entry scoring worse than that over the optimum is provably never
+/// part of an optimal chain, so the frontier stays exact for joint
+/// planning while whole regions are still skipped.
+pub fn signature_frontier(
+    acc: &Accelerator,
+    wl: &Gemm,
+    objective: Objective,
+    slack: f64,
+) -> Result<Frontier> {
+    ensure!(slack >= 0.0 && slack.is_finite(), "slack must be finite and ≥ 0");
+    let model = CostModel::new(acc.clone());
+    let regions: Vec<Region> = candidates::regions(acc, wl);
+    let bounds: Vec<f64> = regions
+        .iter()
+        .map(|r| region_bound(&model, wl, r, objective).score_lb)
+        .collect();
+    let mut visit: Vec<usize> = (0..regions.len()).collect();
+    visit.sort_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(a.cmp(&b)));
+
+    let mut stats = PruneStats {
+        regions: regions.len(),
+        ..Default::default()
+    };
+    // per signature: (objective key, (region idx, leader idx), entry)
+    type Keyed = ((u64, u64, u64), (usize, usize), EvaluatedMapping);
+    let mut by_sig: HashMap<Signature, Keyed> = HashMap::new();
+    let mut best_score = f64::INFINITY;
+    let (mut ms, mut leaders) = (Vec::new(), Vec::new());
+    for &ri in &visit {
+        if bounds[ri] > best_score + slack {
+            stats.regions_pruned += 1;
+            continue;
+        }
+        ms.clear();
+        leaders.clear();
+        candidates::region_candidates(acc, wl, &regions[ri], &mut ms, &mut leaders);
+        stats.generated += ms.len();
+        stats.evaluated += leaders.len();
+        // parallel evaluation, order-preserving collect; the serial
+        // merge below keeps the result deterministic under any schedule
+        let evaluated: Vec<(usize, EvaluatedMapping)> = leaders
+            .par_chunks(EVAL_CHUNK)
+            .flat_map_iter(|chunk| {
+                chunk.iter().map(|&wi| {
+                    let mapping = ms[wi].clone();
+                    let cost = model.evaluate(&mapping, wl);
+                    (wi, EvaluatedMapping { mapping, cost })
+                })
+            })
+            .collect();
+        for (wi, em) in evaluated {
+            let key = (em.objective_key(objective), (ri, wi));
+            let score = objective.score(&em.cost);
+            best_score = best_score.min(score);
+            let sig = outer_signature(&em.mapping);
+            match by_sig.get_mut(&sig) {
+                Some(cur) if (key.0, key.1) >= (cur.0, cur.1) => {}
+                Some(cur) => *cur = (key.0, key.1, em),
+                None => {
+                    by_sig.insert(sig, (key.0, key.1, em));
+                }
+            }
+        }
+    }
+
+    if by_sig.is_empty() {
+        bail!("no feasible mapping for {} on {}", wl.name, acc.name());
+    }
+    // Drop entries that can never beat the optimum even with every
+    // adjacent repack saved, then order deterministically.
+    let mut entries: Vec<FrontierEntry> = by_sig
+        .into_iter()
+        .filter(|(_, (_, _, em))| objective.score(&em.cost) <= best_score + slack)
+        .map(|(signature, (_, _, evaluated))| {
+            let score = objective.score(&evaluated.cost);
+            FrontierEntry {
+                signature,
+                evaluated,
+                score,
+            }
+        })
+        .collect();
+    entries.sort_by(|a, b| a.score.total_cmp(&b.score).then(a.signature.cmp(&b.signature)));
+    Ok(Frontier { entries, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::flash::search::{search_with, SearchOpts};
+
+    #[test]
+    fn frontier_head_matches_the_single_gemm_search_winner() {
+        let wl = Gemm::new("VI", 512, 256, 256);
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+                for slack in [0.0, 1.0e9] {
+                    let f = signature_frontier(&acc, &wl, objective, slack).unwrap();
+                    let best = search_with(
+                        &acc,
+                        &wl,
+                        &SearchOpts {
+                            objective,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+                    .best;
+                    assert_eq!(
+                        f.entries[0].evaluated.mapping, best.mapping,
+                        "{style} {objective} slack={slack}"
+                    );
+                    assert_eq!(
+                        f.entries[0].evaluated.selection_key(),
+                        best.selection_key(),
+                        "{style} {objective} slack={slack}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_has_one_entry_per_signature_sorted_by_score() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let f = signature_frontier(&acc, &wl, Objective::Runtime, 1.0e9).unwrap();
+        assert!(f.entries.len() > 1, "expected several signatures");
+        let mut seen = std::collections::HashSet::new();
+        for e in &f.entries {
+            assert_eq!(outer_signature(&e.evaluated.mapping), e.signature);
+            assert!(seen.insert(e.signature), "duplicate {:?}", e.signature);
+        }
+        for w in f.entries.windows(2) {
+            assert!(w[0].score <= w[1].score);
+        }
+        // every entry is within the slack of the optimum
+        let best = f.best_score();
+        assert!(f.entries.iter().all(|e| e.score <= best + 1.0e9));
+    }
+
+    #[test]
+    fn zero_slack_prunes_at_least_as_hard_as_wide_slack() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let wl = Gemm::new("VI", 512, 256, 256);
+        let tight = signature_frontier(&acc, &wl, Objective::Runtime, 0.0).unwrap();
+        let wide = signature_frontier(&acc, &wl, Objective::Runtime, 1.0e12).unwrap();
+        assert!(tight.stats.regions_pruned >= wide.stats.regions_pruned);
+        assert!(tight.entries.len() <= wide.entries.len());
+        assert_eq!(tight.entries[0].score, wide.entries[0].score);
+    }
+
+    #[test]
+    fn infeasible_pair_is_an_error() {
+        // a MAERI-style spec whose only cluster size exceeds every dim
+        // enumerates no candidates at all
+        use crate::arch::{ArchSpec, ClusterRule};
+        let mut spec = ArchSpec::preset(Style::Maeri);
+        spec.name = "maeri-huge-lambda".into();
+        spec.dataflow.cluster = ClusterRule::Fixed {
+            sizes: vec![512],
+            include_sqrt: false,
+        };
+        spec.validate().unwrap();
+        let acc = Accelerator::from_spec(spec, HwConfig::edge());
+        let wl = Gemm::new("small", 32, 32, 32);
+        assert!(signature_frontier(&acc, &wl, Objective::Runtime, 0.0).is_err());
+    }
+}

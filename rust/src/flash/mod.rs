@@ -12,6 +12,7 @@
 
 pub mod cache;
 pub mod candidates;
+pub mod frontier;
 pub mod pareto;
 pub mod prune;
 pub mod search;
@@ -19,6 +20,7 @@ pub mod tiles;
 
 pub use cache::MappingCache;
 pub use candidates::{enumerate, regions, unpruned_space, CandidateSet, Region};
+pub use frontier::{outer_signature, signature_frontier, Frontier, FrontierEntry, Signature};
 pub use pareto::{pareto_frontier, select_weighted, ParetoPoint};
 pub use prune::{region_bound, PruneStats, RegionBound};
 pub use search::{

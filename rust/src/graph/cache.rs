@@ -1,0 +1,243 @@
+//! Graph-plan cache — one joint search per distinct
+//! `(graph, architecture, objective)` key, ever.
+//!
+//! Mirrors [`crate::flash::MappingCache`], but keyed on the chain's
+//! [`canonical encoding`](super::ir::Chain::canonical_encoding) instead
+//! of a single GEMM shape: the encoding is name-free and
+//! layout-complete, so two graphs that lower to the same stages share
+//! one entry, while any semantic difference — a shape, an epilogue
+//! constant, an edge kind — separates them exactly (string equality, no
+//! hash-collision caveat). The architecture identity is the spec's
+//! interned canonical encoding plus the effective [`HwConfig`], the
+//! same pair the GEMM cache uses. Plans are stored behind `Arc` so a
+//! hit is a pointer bump, and failed plans are negative-cached:
+//! infeasibility is a deterministic function of the key, so a
+//! remembered failure never re-searches.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::arch::{Accelerator, HwConfig};
+use crate::cost::Objective;
+
+use super::ir::Chain;
+use super::plan::{plan_chain, ChainPlan};
+
+/// Cache key: canonical chain encoding + architecture identity +
+/// effective hardware + objective.
+type Key = (Arc<str>, Arc<str>, HwConfig, Objective);
+
+/// A concurrent (graph, architecture, config, objective) → joint-plan
+/// cache with a negative side for infeasible chains.
+#[derive(Debug, Default)]
+pub struct GraphPlanCache {
+    plans: RwLock<HashMap<Key, Arc<ChainPlan>>>,
+    infeasible: RwLock<HashSet<Key>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl GraphPlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn key(acc: &Accelerator, chain: &Chain, objective: Objective) -> Key {
+        (
+            Arc::from(chain.canonical_encoding().as_str()),
+            acc.spec_ident(),
+            acc.config.clone(),
+            objective,
+        )
+    }
+
+    /// Cached joint plan for this chain on this accelerator, if any.
+    /// Does not touch the hit/miss counters — [`GraphPlanCache::get_or_plan`]
+    /// is the accounted path.
+    pub fn get(
+        &self,
+        acc: &Accelerator,
+        chain: &Chain,
+        objective: Objective,
+    ) -> Option<Arc<ChainPlan>> {
+        self.plans
+            .read()
+            .expect("graph plan cache lock")
+            .get(&Self::key(acc, chain, objective))
+            .cloned()
+    }
+
+    /// Store a joint plan for this chain on this accelerator.
+    pub fn insert(
+        &self,
+        acc: &Accelerator,
+        chain: &Chain,
+        objective: Objective,
+        plan: Arc<ChainPlan>,
+    ) {
+        self.plans
+            .write()
+            .expect("graph plan cache lock")
+            .insert(Self::key(acc, chain, objective), plan);
+    }
+
+    /// Whether this (chain, accelerator, objective) previously failed
+    /// its joint search.
+    pub fn is_infeasible(&self, acc: &Accelerator, chain: &Chain, objective: Objective) -> bool {
+        self.infeasible
+            .read()
+            .expect("graph infeasibility set lock")
+            .contains(&Self::key(acc, chain, objective))
+    }
+
+    /// Remember that this (chain, accelerator, objective) has no
+    /// feasible joint plan.
+    pub fn note_infeasible(&self, acc: &Accelerator, chain: &Chain, objective: Objective) {
+        self.infeasible
+            .write()
+            .expect("graph infeasibility set lock")
+            .insert(Self::key(acc, chain, objective));
+    }
+
+    /// Serve from the cache, or run the joint chain search and remember
+    /// the result — including a failed search, which is negative-cached
+    /// and fails fast on repeats. Returns the plan and whether it was a
+    /// cache hit.
+    pub fn get_or_plan(
+        &self,
+        acc: &Accelerator,
+        chain: &Chain,
+        objective: Objective,
+    ) -> Result<(Arc<ChainPlan>, bool)> {
+        if let Some(plan) = self.get(acc, chain, objective) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((plan, true));
+        }
+        if self.is_infeasible(acc, chain, objective) {
+            bail!(
+                "no feasible joint plan for {} on {} (cached infeasibility)",
+                chain.name,
+                acc.name()
+            );
+        }
+        match plan_chain(acc, chain, objective) {
+            Ok(plan) => {
+                let plan = Arc::new(plan);
+                self.insert(acc, chain, objective, Arc::clone(&plan));
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Ok((plan, false))
+            }
+            Err(e) => {
+                self.note_infeasible(acc, chain, objective);
+                Err(e)
+            }
+        }
+    }
+
+    /// Cache hits served through [`GraphPlanCache::get_or_plan`].
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (joint searches run) through
+    /// [`GraphPlanCache::get_or_plan`].
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct (chain, architecture, config, objective) entries.
+    pub fn len(&self) -> usize {
+        self.plans.read().expect("graph plan cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.read().expect("graph plan cache lock").is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchSpec, ClusterRule, HwConfig, Style};
+    use crate::graph::ir::OpGraph;
+
+    fn small_chain(name: &str) -> Chain {
+        OpGraph::new(name)
+            .gemm(64, 128, 32)
+            .gemm(64, 32, 128)
+            .lower()
+            .unwrap()
+    }
+
+    #[test]
+    fn miss_then_hit_shares_the_plan() {
+        let cache = GraphPlanCache::new();
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let chain = small_chain("a");
+        let (p1, hit1) = cache.get_or_plan(&acc, &chain, Objective::Runtime).unwrap();
+        let (p2, hit2) = cache.get_or_plan(&acc, &chain, Objective::Runtime).unwrap();
+        assert!(!hit1 && hit2);
+        assert!(Arc::ptr_eq(&p1, &p2), "a hit must be the same Arc");
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (1, 1, 1));
+    }
+
+    #[test]
+    fn key_is_the_canonical_encoding_not_the_name() {
+        let cache = GraphPlanCache::new();
+        let acc = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        cache
+            .get_or_plan(&acc, &small_chain("first"), Objective::Runtime)
+            .unwrap();
+        let (_, hit) = cache
+            .get_or_plan(&acc, &small_chain("second"), Objective::Runtime)
+            .unwrap();
+        assert!(hit, "same lowered chain under a new name must hit");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn key_separates_arch_objective_and_shape() {
+        let cache = GraphPlanCache::new();
+        let chain = small_chain("a");
+        let maeri = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let tpu = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        cache.get_or_plan(&maeri, &chain, Objective::Runtime).unwrap();
+        cache.get_or_plan(&tpu, &chain, Objective::Runtime).unwrap();
+        cache.get_or_plan(&maeri, &chain, Objective::Energy).unwrap();
+        let other = OpGraph::new("a").gemm(64, 128, 32).lower().unwrap();
+        cache.get_or_plan(&maeri, &other, Objective::Runtime).unwrap();
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[test]
+    fn infeasible_chains_are_negative_cached() {
+        let cache = GraphPlanCache::new();
+        // a MAERI-style spec whose only cluster size exceeds every dim
+        // has no feasible mapping for a small stage
+        let mut spec = ArchSpec::preset(Style::Maeri);
+        spec.name = "maeri-huge-lambda".into();
+        spec.dataflow.cluster = ClusterRule::Fixed {
+            sizes: vec![512],
+            include_sqrt: false,
+        };
+        spec.validate().unwrap();
+        let acc = Accelerator::from_spec(spec, HwConfig::edge());
+        let chain = small_chain("doomed");
+        assert!(cache.get_or_plan(&acc, &chain, Objective::Runtime).is_err());
+        assert!(cache.is_infeasible(&acc, &chain, Objective::Runtime));
+        // the repeat fails fast without searching or counting a miss
+        let err = cache
+            .get_or_plan(&acc, &chain, Objective::Runtime)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cached infeasibility"), "{err}");
+        assert_eq!(cache.misses(), 0);
+        assert_eq!(cache.len(), 0);
+        // other objectives are independent keys
+        assert!(!cache.is_infeasible(&acc, &chain, Objective::Energy));
+    }
+}

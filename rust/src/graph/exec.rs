@@ -1,0 +1,499 @@
+//! Chain execution: the fused packed path and its unfused reference.
+//!
+//! Both paths run every stage through [`PackedGemm`] with the same
+//! per-stage tile size and apply the same
+//! [`EpilogueSpec::apply`](super::ir::EpilogueSpec::apply) element
+//! function, so they are **bit-identical** by construction:
+//!
+//! * Unfused: each stage packs its `A` from the producer's row-major
+//!   output, executes, unpacks, and applies the epilogue as a matrix
+//!   pass.
+//! * Fused: the producer applies the epilogue **in-tile** while its
+//!   output is still packed, and — when the consumer is
+//!   [`fusable`](super::ir::StageEdge::fusable) and shares the tile
+//!   size — writes its output tiles straight into the consumer's
+//!   k-major `A` panels ([`PackedGemm::execute_fused_into_a_panels`]),
+//!   skipping the unpack → repack round trip entirely.
+//!
+//! Bit-identity holds because a handed-off panel contains exactly the
+//! values a fresh `pack` of the epilogued matrix would place (same tile
+//! size ⇒ same k-group summation order; padding lanes stay zero; the
+//! epilogue touches only valid lanes), and because per-tile arithmetic
+//! never depends on the walk order. Mapping-dependent loop orders
+//! therefore change traffic, never results — which is what lets the
+//! sharded control-plane path reuse this executor verbatim.
+//!
+//! Tile sizes are pinned per **fusable segment** (maximal run of
+//! stages joined by fusable edges) by [`segment_tiles`]: the largest
+//! manifest tile that fits every dimension of every stage in the
+//! segment, mirroring `TiledExecutor::auto_tile`. Sharing one size per
+//! segment is what makes the handoff legal; deriving it from the chain
+//! alone (never the mapping) is what keeps results identical across
+//! plans, shard counts, and fused/unfused paths.
+
+use anyhow::Result;
+
+use crate::dataflow::LoopOrder;
+use crate::runtime::PackedGemm;
+
+use super::ir::Chain;
+use super::plan::ChainPlan;
+
+/// Deterministic operand data for one chain run: the graph input, one
+/// weight matrix per stage, and a bias vector per biased epilogue. All
+/// streams are seeded xorshift64* — same `(chain, seed)` ⇒ same bits,
+/// on any machine, thread count, or shard layout.
+#[derive(Debug, Clone)]
+pub struct ChainData {
+    pub input: Vec<f32>,
+    pub weights: Vec<Vec<f32>>,
+    pub biases: Vec<Option<Vec<f32>>>,
+}
+
+/// One executed chain: the final output matrix and the path counters.
+#[derive(Debug, Clone)]
+pub struct ChainOutput {
+    pub output: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    /// Direct-edge handoffs that skipped the unpack → repack round trip
+    /// (always 0 on the unfused path).
+    pub fused_handoffs: usize,
+    pub tile_calls: u64,
+}
+
+impl ChainOutput {
+    /// An order-dependent FNV-1a digest of the exact output bits —
+    /// equal digests mean bit-identical outputs.
+    pub fn digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in &self.output {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+}
+
+/// xorshift64* stream mapped to `[-0.5, 0.5)`.
+fn fill(seed: u64, len: usize) -> Vec<f32> {
+    let mut s = seed.max(1);
+    (0..len)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            let r = s.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            (r >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
+/// Derive a per-purpose sub-seed so input, weights, and biases draw
+/// from independent deterministic streams.
+fn stream(seed: u64, tag: u64) -> u64 {
+    seed.wrapping_mul(0x100_0000_01b3)
+        .wrapping_add(tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Generate the chain's operand data from one seed.
+pub fn chain_data(chain: &Chain, seed: u64) -> ChainData {
+    let (rows, cols) = chain.input_shape();
+    let input = fill(stream(seed, 0), (rows * cols) as usize);
+    let mut weights = Vec::with_capacity(chain.stages.len());
+    let mut biases = Vec::with_capacity(chain.stages.len());
+    for (i, s) in chain.stages.iter().enumerate() {
+        let g = &s.gemm;
+        weights.push(fill(stream(seed, 1 + 2 * i as u64), (g.k * g.n) as usize));
+        biases.push(if s.epilogue.bias {
+            Some(fill(stream(seed, 2 + 2 * i as u64), g.n as usize))
+        } else {
+            None
+        });
+    }
+    ChainData {
+        input,
+        weights,
+        biases,
+    }
+}
+
+/// Pin one execution tile per stage, shared across each fusable
+/// segment: the largest manifest size that fits `min(m, n, k)` of every
+/// stage in the segment, else the smallest manifest size, else 16
+/// (`auto_tile` semantics, lifted from one GEMM to a segment). A
+/// `forced` size overrides everything (the CLI's `--tile`).
+pub fn segment_tiles(chain: &Chain, sizes: &[u64], forced: Option<usize>) -> Vec<usize> {
+    let n = chain.stages.len();
+    if let Some(t) = forced {
+        return vec![t; n];
+    }
+    let mut tiles = vec![0usize; n];
+    let mut start = 0;
+    while start < n {
+        let mut end = start + 1;
+        while end < n && chain.stages[end].edge.fusable() {
+            end += 1;
+        }
+        let dims_min = chain.stages[start..end]
+            .iter()
+            .map(|s| s.gemm.m.min(s.gemm.n).min(s.gemm.k))
+            .min()
+            .expect("non-empty segment");
+        let t = sizes
+            .iter()
+            .rev()
+            .find(|&&t| t <= dims_min)
+            .copied()
+            .or_else(|| sizes.first().copied())
+            .unwrap_or(16) as usize;
+        tiles[start..end].iter_mut().for_each(|x| *x = t);
+        start = end;
+    }
+    tiles
+}
+
+/// The per-stage inter-tile walk orders a [`ChainPlan`] chose. The walk
+/// order never changes results (only traffic), so any order vector is
+/// output-equivalent — this just makes execution follow the plan.
+pub fn plan_orders(plan: &ChainPlan) -> Vec<LoopOrder> {
+    plan.picks
+        .iter()
+        .map(|p| p.evaluated.mapping.inter_order)
+        .collect()
+}
+
+/// Build the in-tile epilogue closure for stage `si`. `epi(tile, i, j,
+/// rows, cols)` applies [`EpilogueSpec::apply`](super::ir::EpilogueSpec::apply)
+/// to the valid `rows × cols` corner of output tile `(i, j)`; the bias
+/// column index is global (`j·t + c`).
+fn stage_epilogue<'a>(
+    chain: &Chain,
+    data: &'a ChainData,
+    si: usize,
+    t: usize,
+) -> impl Fn(&mut [f32], usize, usize, usize, usize) + Sync + 'a {
+    let spec = chain.stages[si].epilogue;
+    let bias = data.biases[si].as_deref();
+    move |tile: &mut [f32], _i: usize, j: usize, rows: usize, cols: usize| {
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = &mut tile[r * t + c];
+                *v = spec.apply(*v, j * t + c, bias);
+            }
+        }
+    }
+}
+
+fn stage_input<'a>(chain: &Chain, si: usize, cur: &'a [f32]) -> std::borrow::Cow<'a, [f32]> {
+    match &chain.stages[si].edge.gather {
+        Some(g) => std::borrow::Cow::Owned(g.gather(cur)),
+        None => std::borrow::Cow::Borrowed(cur),
+    }
+}
+
+/// Run the chain with fused epilogues and direct-edge tile handoffs.
+pub fn run_fused(
+    chain: &Chain,
+    data: &ChainData,
+    orders: &[LoopOrder],
+    tiles: &[usize],
+) -> Result<ChainOutput> {
+    let n_stages = chain.stages.len();
+    let mut cur = data.input.clone();
+    let mut fused_handoffs = 0usize;
+    let mut tile_calls = 0u64;
+    let mut si = 0;
+    while si < n_stages {
+        // segment entry: gather (if the edge demands it) and full pack
+        let a = stage_input(chain, si, &cur);
+        let mut plan = PackedGemm::new(&chain.stages[si].gemm, tiles[si], orders[si])?;
+        let mut ops = plan.pack(&a, &data.weights[si])?;
+        loop {
+            tile_calls += plan.tile_calls();
+            let epi = stage_epilogue(chain, data, si, plan.tile());
+            let fuse_next = si + 1 < n_stages
+                && chain.stages[si + 1].edge.fusable()
+                && tiles[si + 1] == tiles[si];
+            if fuse_next {
+                let next_plan =
+                    PackedGemm::new(&chain.stages[si + 1].gemm, tiles[si + 1], orders[si + 1])?;
+                let mut next_ops = next_plan.pack_b(&data.weights[si + 1])?;
+                plan.execute_fused_into_a_panels(&ops, &next_plan, &mut next_ops, &epi)?;
+                fused_handoffs += 1;
+                si += 1;
+                plan = next_plan;
+                ops = next_ops;
+            } else {
+                // segment exit: epilogue in-tile, then one unpack
+                let mut c_tiles = vec![0f32; plan.c_tiles_len()];
+                plan.execute_epilogued_into(&ops, &mut c_tiles, &epi);
+                let g = &chain.stages[si].gemm;
+                let mut c = vec![0f32; (g.m * g.n) as usize];
+                plan.unpack_into(&c_tiles, &mut c);
+                cur = c;
+                si += 1;
+                break;
+            }
+        }
+    }
+    let (m, n) = chain.output_shape();
+    Ok(ChainOutput {
+        output: cur,
+        m: m as usize,
+        n: n as usize,
+        fused_handoffs,
+        tile_calls,
+    })
+}
+
+/// Run the chain node by node: pack, execute, unpack, then the epilogue
+/// as a row-major matrix pass. The bit-exact reference for
+/// [`run_fused`].
+pub fn run_unfused(
+    chain: &Chain,
+    data: &ChainData,
+    orders: &[LoopOrder],
+    tiles: &[usize],
+) -> Result<ChainOutput> {
+    let mut cur = data.input.clone();
+    let mut tile_calls = 0u64;
+    for (si, stage) in chain.stages.iter().enumerate() {
+        let a = stage_input(chain, si, &cur);
+        let plan = PackedGemm::new(&stage.gemm, tiles[si], orders[si])?;
+        let mut c = plan.run(&a, &data.weights[si])?;
+        tile_calls += plan.tile_calls();
+        let (m, n) = (stage.gemm.m as usize, stage.gemm.n as usize);
+        let spec = stage.epilogue;
+        let bias = data.biases[si].as_deref();
+        for r in 0..m {
+            for col in 0..n {
+                let v = &mut c[r * n + col];
+                *v = spec.apply(*v, col, bias);
+            }
+        }
+        cur = c;
+    }
+    let (m, n) = chain.output_shape();
+    Ok(ChainOutput {
+        output: cur,
+        m: m as usize,
+        n: n as usize,
+        fused_handoffs: 0,
+        tile_calls,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{EpilogueSpec, OpGraph};
+    use crate::workloads::Conv2d;
+
+    fn orders_for(n: usize) -> Vec<LoopOrder> {
+        // deliberately varied walk orders — results must not care
+        [LoopOrder::MNK, LoopOrder::NKM, LoopOrder::KMN]
+            .iter()
+            .cycle()
+            .take(n)
+            .copied()
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_unfused_bit_for_bit_on_a_ragged_epilogued_chain() {
+        let g = OpGraph::new("ragged")
+            .gemm(13, 9, 7)
+            .epilogue(EpilogueSpec {
+                scale: Some(1.25),
+                bias: true,
+                relu: true,
+            })
+            .gemm(13, 5, 9)
+            .epilogue(EpilogueSpec {
+                bias: true,
+                ..Default::default()
+            })
+            .gemm(13, 11, 5);
+        let chain = g.lower().unwrap();
+        let data = chain_data(&chain, 7);
+        let tiles = segment_tiles(&chain, &[4], None);
+        assert_eq!(tiles, vec![4, 4, 4]);
+        let orders = orders_for(3);
+        let fused = run_fused(&chain, &data, &orders, &tiles).unwrap();
+        let unfused = run_unfused(&chain, &data, &orders, &tiles).unwrap();
+        assert_eq!(fused.output, unfused.output, "must be bit-identical");
+        assert_eq!(fused.digest(), unfused.digest());
+        assert_eq!(fused.fused_handoffs, 2);
+        assert_eq!(unfused.fused_handoffs, 0);
+    }
+
+    #[test]
+    fn fused_output_matches_a_naive_reference_through_gather_edges() {
+        let g = OpGraph::new("block")
+            .conv(Conv2d {
+                name: "a".into(),
+                batch: 1,
+                in_ch: 3,
+                out_ch: 6,
+                in_hw: 5,
+                kernel: 1,
+                stride: 1,
+                padding: 0,
+            })
+            .epilogue(EpilogueSpec {
+                relu: true,
+                ..Default::default()
+            })
+            .conv(Conv2d {
+                name: "b".into(),
+                batch: 1,
+                in_ch: 6,
+                out_ch: 4,
+                in_hw: 5,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            });
+        let chain = g.lower().unwrap();
+        let data = chain_data(&chain, 11);
+        let tiles = segment_tiles(&chain, &[2, 4], None);
+        let orders = orders_for(2);
+        let fused = run_fused(&chain, &data, &orders, &tiles).unwrap();
+        let unfused = run_unfused(&chain, &data, &orders, &tiles).unwrap();
+        assert_eq!(fused.output, unfused.output);
+        // the im2col edge must not be counted as a handoff
+        assert_eq!(fused.fused_handoffs, 0);
+
+        // naive f64 reference chain guards against a bug shared by both
+        // packed paths
+        let mut cur: Vec<f64> = data.input.iter().map(|&v| v as f64).collect();
+        for (si, stage) in chain.stages.iter().enumerate() {
+            let a: Vec<f64> = match &stage.edge.gather {
+                Some(geom) => {
+                    let f32in: Vec<f32> = cur.iter().map(|&v| v as f32).collect();
+                    geom.gather(&f32in).iter().map(|&v| v as f64).collect()
+                }
+                None => cur.clone(),
+            };
+            let (m, n, k) = (
+                stage.gemm.m as usize,
+                stage.gemm.n as usize,
+                stage.gemm.k as usize,
+            );
+            let w = &data.weights[si];
+            let mut c = vec![0f64; m * n];
+            for r in 0..m {
+                for col in 0..n {
+                    let mut acc = 0f64;
+                    for kk in 0..k {
+                        acc += a[r * k + kk] * w[kk * n + col] as f64;
+                    }
+                    c[r * n + col] =
+                        stage
+                            .epilogue
+                            .apply(acc as f32, col, data.biases[si].as_deref())
+                            as f64;
+                }
+            }
+            cur = c;
+        }
+        for (got, want) in fused.output.iter().zip(&cur) {
+            let tol = 1e-4 * want.abs().max(1.0);
+            assert!(
+                (*got as f64 - want).abs() < tol,
+                "packed {got} vs naive {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn attention_pair_fuses_and_matches_unfused() {
+        let g = OpGraph::new("attn")
+            .gemm(24, 8, 16)
+            .attention(24, 8)
+            .epilogue(EpilogueSpec {
+                bias: true,
+                relu: true,
+                ..Default::default()
+            });
+        let chain = g.lower().unwrap();
+        assert_eq!(chain.stages.len(), 3);
+        let data = chain_data(&chain, 3);
+        let tiles = segment_tiles(&chain, &[4, 8], None);
+        // one segment: min dim is 8 across all three stages
+        assert_eq!(tiles, vec![8, 8, 8]);
+        let orders = orders_for(3);
+        let fused = run_fused(&chain, &data, &orders, &tiles).unwrap();
+        let unfused = run_unfused(&chain, &data, &orders, &tiles).unwrap();
+        assert_eq!(fused.output, unfused.output);
+        assert_eq!(fused.fused_handoffs, 2);
+        assert_eq!((fused.m, fused.n), (24, 8));
+    }
+
+    #[test]
+    fn results_are_identical_across_walk_orders_and_seed_sensitive() {
+        let chain = OpGraph::new("pair")
+            .gemm(12, 10, 6)
+            .gemm(12, 6, 10)
+            .lower()
+            .unwrap();
+        let data = chain_data(&chain, 42);
+        let tiles = segment_tiles(&chain, &[4], None);
+        let a = run_fused(&chain, &data, &[LoopOrder::MNK, LoopOrder::MNK], &tiles).unwrap();
+        let b = run_fused(&chain, &data, &[LoopOrder::KNM, LoopOrder::NMK], &tiles).unwrap();
+        assert_eq!(a.output, b.output, "walk order must never change bits");
+        let other = chain_data(&chain, 43);
+        let c = run_fused(&chain, &other, &[LoopOrder::MNK, LoopOrder::MNK], &tiles).unwrap();
+        assert_ne!(a.output, c.output, "different seed must change data");
+    }
+
+    #[test]
+    fn segment_tiles_pins_one_size_per_fusable_segment() {
+        let g = OpGraph::new("block")
+            .conv(Conv2d {
+                name: "a".into(),
+                batch: 1,
+                in_ch: 16,
+                out_ch: 64,
+                in_hw: 8,
+                kernel: 1,
+                stride: 1,
+                padding: 0,
+            })
+            .conv(Conv2d {
+                name: "b".into(),
+                batch: 1,
+                in_ch: 64,
+                out_ch: 64,
+                in_hw: 8,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            })
+            .conv(Conv2d {
+                name: "c".into(),
+                batch: 1,
+                in_ch: 64,
+                out_ch: 32,
+                in_hw: 8,
+                kernel: 1,
+                stride: 1,
+                padding: 0,
+            });
+        let chain = g.lower().unwrap();
+        // segments: [stage0] (input), [stage1] (gather), [stage2] joins
+        // stage1 via the identity-conv direct edge
+        let tiles = segment_tiles(&chain, &[8, 16, 32], None);
+        // stage0: min dim 16 → tile 16; stages 1+2 share min dim 32
+        assert_eq!(tiles, vec![16, 32, 32]);
+        assert_eq!(segment_tiles(&chain, &[8, 16, 32], Some(8)), vec![8, 8, 8]);
+        // nothing fits → smallest artifact
+        assert_eq!(
+            segment_tiles(&chain, &[64, 128], None),
+            vec![64, 64, 64]
+        );
+    }
+}

@@ -1,0 +1,486 @@
+//! The operator-graph IR: a linear chain of tensor operators that
+//! lowers to a [`Chain`] of GEMM stages the planner and executor share.
+//!
+//! ## Shapes and layout
+//!
+//! Activations flow between stages as row-major matrices
+//! (`rows = batch·spatial`, `cols = channels` — see
+//! [`crate::workloads::Im2col`] for the convention). Each stage computes
+//! `C = epilogue(A · B)` where `A` is the incoming activation
+//! (`m × k`), `B` the stage's external operand (`k × n`, weights), and
+//! the epilogue an optional elementwise `scale → bias → relu`.
+//!
+//! * [`Op::Gemm`] — an explicit `m×n×k` stage (fully-connected layer,
+//!   projection). After the first op, `m` must match the producer's `m`
+//!   and `k` the producer's `n`.
+//! * [`Op::ConvAsGemm`] — a conv layer lowered through the shared
+//!   im2col shape derivation. A 1×1 stride-1 unpadded conv consumes its
+//!   producer verbatim (a fusable direct edge); anything else gathers.
+//! * [`Op::Epilogue`] — elementwise bias/relu/scale, attached to (fused
+//!   into) the preceding GEMM-like stage during lowering.
+//! * [`Op::Attention`] — the QK^T·V pair: two chained GEMM stages
+//!   (`S = Q·K^T`, `O = S·V`) with K^T and V as external operands.
+//!   The softmax between them is out of scope (see DESIGN.md §14); the
+//!   pair exercises the m/n/k-rotating shape pattern attention induces.
+//!
+//! ## Cache identity
+//!
+//! [`Chain::canonical_encoding`] is a name-free, layout-complete
+//! encoding of the lowered chain — two graphs that lower to the same
+//! stages share one planning-cache entry no matter what they are
+//! called, mirroring how the GEMM mapping cache normalizes workload
+//! names away.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::workloads::{Conv2d, Gemm, Im2col};
+
+/// An elementwise epilogue: `x → relu?(scale?·x + bias?[col])`, applied
+/// in that fixed order. The bias vector is per output column.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EpilogueSpec {
+    pub scale: Option<f32>,
+    pub bias: bool,
+    pub relu: bool,
+}
+
+impl EpilogueSpec {
+    pub fn is_noop(&self) -> bool {
+        self.scale.is_none() && !self.bias && !self.relu
+    }
+
+    /// The one elementwise application both the fused in-tile path and
+    /// the unfused matrix path call — sharing it is what makes fused
+    /// execution trivially bit-identical to unfused.
+    #[inline]
+    pub fn apply(&self, x: f32, col: usize, bias: Option<&[f32]>) -> f32 {
+        let mut v = x;
+        if let Some(s) = self.scale {
+            v *= s;
+        }
+        if self.bias {
+            v += bias.expect("epilogue bias vector")[col];
+        }
+        if self.relu && v < 0.0 {
+            v = 0.0;
+        }
+        v
+    }
+
+    /// Name-free encoding component (scale by exact bits, so two specs
+    /// encode equal iff they compute identically).
+    fn encode(&self) -> String {
+        format!(
+            "e{}:{}:{}",
+            self.scale.map(|s| format!("{:08x}", s.to_bits())).unwrap_or_default(),
+            self.bias as u8,
+            self.relu as u8
+        )
+    }
+}
+
+/// One operator of an [`OpGraph`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// An explicit GEMM stage (`m × n × k`).
+    Gemm { m: u64, n: u64, k: u64 },
+    /// A conv layer, lowered via the shared im2col derivation.
+    ConvAsGemm(Conv2d),
+    /// Elementwise epilogue fused into the preceding stage.
+    Epilogue(EpilogueSpec),
+    /// The attention QK^T·V pair over `seq × d` queries.
+    Attention { seq: u64, d: u64 },
+}
+
+/// A named linear operator chain. Build with the fluent helpers, then
+/// [`OpGraph::lower`] validates shapes and produces the planning/
+/// execution [`Chain`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpGraph {
+    pub name: String,
+    pub ops: Vec<Op>,
+}
+
+impl OpGraph {
+    pub fn new(name: &str) -> Self {
+        OpGraph {
+            name: name.to_string(),
+            ops: Vec::new(),
+        }
+    }
+
+    pub fn gemm(mut self, m: u64, n: u64, k: u64) -> Self {
+        self.ops.push(Op::Gemm { m, n, k });
+        self
+    }
+
+    pub fn conv(mut self, conv: Conv2d) -> Self {
+        self.ops.push(Op::ConvAsGemm(conv));
+        self
+    }
+
+    pub fn epilogue(mut self, spec: EpilogueSpec) -> Self {
+        self.ops.push(Op::Epilogue(spec));
+        self
+    }
+
+    pub fn attention(mut self, seq: u64, d: u64) -> Self {
+        self.ops.push(Op::Attention { seq, d });
+        self
+    }
+
+    /// Validate and lower to the GEMM-stage chain. Errors name the
+    /// offending op and the shape mismatch.
+    pub fn lower(&self) -> Result<Chain> {
+        ensure!(!self.ops.is_empty(), "graph {:?} has no operators", self.name);
+        let mut stages: Vec<Stage> = Vec::new();
+        // (m, n) of the producing stage, None before the first
+        let mut prev: Option<(u64, u64)> = None;
+        for (oi, op) in self.ops.iter().enumerate() {
+            match op {
+                Op::Gemm { m, n, k } => {
+                    ensure!(
+                        *m > 0 && *n > 0 && *k > 0,
+                        "op {oi}: degenerate gemm {m}x{n}x{k}"
+                    );
+                    let edge = match prev {
+                        None => StageEdge::input(),
+                        Some((pm, pn)) => {
+                            ensure!(
+                                *m == pm && *k == pn,
+                                "op {oi}: gemm {m}x{n}x{k} cannot consume a {pm}x{pn} producer \
+                                 (want m={pm}, k={pn})"
+                            );
+                            StageEdge::direct()
+                        }
+                    };
+                    stages.push(Stage {
+                        gemm: Gemm::new(&format!("{}:{}", self.name, stages.len()), *m, *n, *k),
+                        epilogue: EpilogueSpec::default(),
+                        edge,
+                    });
+                    prev = Some((*m, *n));
+                }
+                Op::ConvAsGemm(c) => {
+                    let geom = c.im2col();
+                    let (m, k) = geom.gemm_mk();
+                    ensure!(
+                        m > 0 && c.out_ch > 0 && k > 0,
+                        "op {oi}: conv {} lowers to a degenerate gemm",
+                        c.name
+                    );
+                    let edge = match prev {
+                        None => StageEdge {
+                            from_input: true,
+                            gather: if geom.is_identity() { None } else { Some(geom) },
+                        },
+                        Some((pm, pn)) => {
+                            ensure!(
+                                pm == geom.input_rows() && pn == c.in_ch,
+                                "op {oi}: conv {} wants a {}x{} activation, producer is {pm}x{pn}",
+                                c.name,
+                                geom.input_rows(),
+                                c.in_ch
+                            );
+                            StageEdge {
+                                from_input: false,
+                                gather: if geom.is_identity() { None } else { Some(geom) },
+                            }
+                        }
+                    };
+                    stages.push(Stage {
+                        gemm: Gemm::new(
+                            &format!("{}:{}", self.name, stages.len()),
+                            m,
+                            c.out_ch,
+                            k,
+                        ),
+                        epilogue: EpilogueSpec::default(),
+                        edge,
+                    });
+                    prev = Some((m, c.out_ch));
+                }
+                Op::Epilogue(spec) => {
+                    let Some(stage) = stages.last_mut() else {
+                        bail!("op {oi}: epilogue has no preceding stage to fuse into");
+                    };
+                    ensure!(
+                        stage.epilogue.is_noop(),
+                        "op {oi}: stage already carries an epilogue (merge them upstream)"
+                    );
+                    ensure!(!spec.is_noop(), "op {oi}: no-op epilogue");
+                    stage.epilogue = *spec;
+                }
+                Op::Attention { seq, d } => {
+                    ensure!(*seq > 0 && *d > 0, "op {oi}: degenerate attention");
+                    let edge = match prev {
+                        None => StageEdge::input(),
+                        Some((pm, pn)) => {
+                            ensure!(
+                                pm == *seq && pn == *d,
+                                "op {oi}: attention wants {seq}x{d} queries, producer is {pm}x{pn}"
+                            );
+                            StageEdge::direct()
+                        }
+                    };
+                    // S = Q·K^T (seq×seq×d), then O = S·V (seq×d×seq):
+                    // S feeds O directly (m matches, k_O = n_S = seq)
+                    stages.push(Stage {
+                        gemm: Gemm::new(
+                            &format!("{}:{}", self.name, stages.len()),
+                            *seq,
+                            *seq,
+                            *d,
+                        ),
+                        epilogue: EpilogueSpec::default(),
+                        edge,
+                    });
+                    stages.push(Stage {
+                        gemm: Gemm::new(
+                            &format!("{}:{}", self.name, stages.len()),
+                            *seq,
+                            *d,
+                            *seq,
+                        ),
+                        epilogue: EpilogueSpec::default(),
+                        edge: StageEdge::direct(),
+                    });
+                    prev = Some((*seq, *d));
+                }
+            }
+        }
+        Ok(Chain {
+            name: self.name.clone(),
+            stages,
+        })
+    }
+}
+
+/// How a stage's `A` operand arrives.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageEdge {
+    /// First stage only: `A` is the graph input.
+    pub from_input: bool,
+    /// A real im2col gather stands between producer and consumer
+    /// (never fusable); `None` means the producer's output matrix is
+    /// consumed verbatim.
+    pub gather: Option<Im2col>,
+}
+
+impl StageEdge {
+    fn input() -> Self {
+        StageEdge {
+            from_input: true,
+            gather: None,
+        }
+    }
+
+    fn direct() -> Self {
+        StageEdge {
+            from_input: false,
+            gather: None,
+        }
+    }
+
+    /// A fused tile handoff is legal here: the producer's output matrix
+    /// is this stage's `A` verbatim.
+    pub fn fusable(&self) -> bool {
+        !self.from_input && self.gather.is_none()
+    }
+}
+
+/// One lowered GEMM stage: shape, fused epilogue, incoming edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    pub gemm: Gemm,
+    pub epilogue: EpilogueSpec,
+    pub edge: StageEdge,
+}
+
+/// The lowered chain — what the planner searches and the executor runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chain {
+    pub name: String,
+    pub stages: Vec<Stage>,
+}
+
+impl Chain {
+    /// Name-free canonical encoding: stage shapes, epilogues (by exact
+    /// bits), and edge kinds. The planning-cache identity — one joint
+    /// search per distinct encoding × architecture × objective, ever.
+    pub fn canonical_encoding(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            let edge = if s.edge.from_input {
+                "in".to_string()
+            } else {
+                match &s.edge.gather {
+                    None => "d".to_string(),
+                    Some(g) => format!(
+                        "i{}x{}x{}k{}s{}p{}",
+                        g.batch, g.in_ch, g.in_hw, g.kernel, g.stride, g.padding
+                    ),
+                }
+            };
+            out.push_str(&format!(
+                "g{}x{}x{}|{}|{};",
+                s.gemm.m,
+                s.gemm.n,
+                s.gemm.k,
+                s.epilogue.encode(),
+                edge
+            ));
+        }
+        out
+    }
+
+    /// Total MACs across all stages.
+    pub fn macs(&self) -> u64 {
+        self.stages.iter().map(|s| s.gemm.macs()).sum()
+    }
+
+    /// The graph-input matrix shape `(rows, cols)` stage 0 consumes
+    /// (pre-gather for a leading non-identity conv).
+    pub fn input_shape(&self) -> (u64, u64) {
+        let s0 = &self.stages[0];
+        match &s0.edge.gather {
+            Some(g) => (g.input_rows(), g.in_ch),
+            None => (s0.gemm.m, s0.gemm.k),
+        }
+    }
+
+    /// Output matrix shape `(m, n)` of the final stage.
+    pub fn output_shape(&self) -> (u64, u64) {
+        let last = &self.stages[self.stages.len() - 1].gemm;
+        (last.m, last.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, in_ch: u64, out_ch: u64, in_hw: u64, k: u64, s: u64, p: u64) -> Conv2d {
+        Conv2d {
+            name: name.into(),
+            batch: 1,
+            in_ch,
+            out_ch,
+            in_hw,
+            kernel: k,
+            stride: s,
+            padding: p,
+        }
+    }
+
+    #[test]
+    fn gemm_chain_lowers_with_shape_checks() {
+        let g = OpGraph::new("mlp")
+            .gemm(8, 16, 4)
+            .epilogue(EpilogueSpec {
+                bias: true,
+                relu: true,
+                ..Default::default()
+            })
+            .gemm(8, 4, 16);
+        let chain = g.lower().unwrap();
+        assert_eq!(chain.stages.len(), 2);
+        assert!(chain.stages[0].edge.from_input);
+        assert!(chain.stages[1].edge.fusable());
+        assert!(chain.stages[0].epilogue.bias);
+        assert_eq!(chain.input_shape(), (8, 4));
+        assert_eq!(chain.output_shape(), (8, 4));
+        // mismatched k fails loudly
+        let bad = OpGraph::new("bad").gemm(8, 16, 4).gemm(8, 4, 99);
+        let err = bad.lower().unwrap_err().to_string();
+        assert!(err.contains("k=16"), "{err}");
+    }
+
+    #[test]
+    fn attention_lowers_to_the_qkt_v_pair() {
+        let chain = OpGraph::new("attn").attention(32, 8).lower().unwrap();
+        assert_eq!(chain.stages.len(), 2);
+        let s = &chain.stages[0].gemm;
+        let o = &chain.stages[1].gemm;
+        assert_eq!((s.m, s.n, s.k), (32, 32, 8));
+        assert_eq!((o.m, o.n, o.k), (32, 8, 32));
+        assert!(chain.stages[1].edge.fusable());
+        assert_eq!(chain.output_shape(), (32, 8));
+    }
+
+    #[test]
+    fn conv_edges_distinguish_identity_from_gather() {
+        let g = OpGraph::new("block")
+            .conv(conv("a", 4, 8, 6, 1, 1, 0))
+            .conv(conv("b", 8, 8, 6, 3, 1, 1))
+            .conv(conv("c", 8, 16, 6, 1, 1, 0));
+        let chain = g.lower().unwrap();
+        assert!(chain.stages[0].edge.from_input);
+        assert!(chain.stages[1].edge.gather.is_some());
+        assert!(!chain.stages[1].edge.fusable());
+        assert!(chain.stages[2].edge.gather.is_none());
+        assert!(chain.stages[2].edge.fusable());
+        assert_eq!(chain.stages[1].gemm.k, 8 * 9);
+        // channel mismatch is rejected
+        let bad = OpGraph::new("bad")
+            .conv(conv("a", 4, 8, 6, 1, 1, 0))
+            .conv(conv("b", 9, 8, 6, 3, 1, 1));
+        assert!(bad.lower().is_err());
+    }
+
+    #[test]
+    fn epilogue_rules() {
+        // epilogue with no stage, and double epilogue, both fail
+        assert!(OpGraph::new("e")
+            .epilogue(EpilogueSpec {
+                relu: true,
+                ..Default::default()
+            })
+            .lower()
+            .is_err());
+        let double = OpGraph::new("d")
+            .gemm(4, 4, 4)
+            .epilogue(EpilogueSpec {
+                relu: true,
+                ..Default::default()
+            })
+            .epilogue(EpilogueSpec {
+                bias: true,
+                ..Default::default()
+            });
+        assert!(double.lower().is_err());
+    }
+
+    #[test]
+    fn canonical_encoding_is_name_free_and_shape_sensitive() {
+        let a = OpGraph::new("alpha").gemm(8, 16, 4).lower().unwrap();
+        let b = OpGraph::new("beta").gemm(8, 16, 4).lower().unwrap();
+        assert_eq!(a.canonical_encoding(), b.canonical_encoding());
+        let c = OpGraph::new("alpha").gemm(8, 16, 8).lower().unwrap();
+        assert_ne!(a.canonical_encoding(), c.canonical_encoding());
+        // epilogue and edge kind are part of the identity
+        let d = OpGraph::new("alpha")
+            .gemm(8, 16, 4)
+            .epilogue(EpilogueSpec {
+                relu: true,
+                ..Default::default()
+            })
+            .lower()
+            .unwrap();
+        assert_ne!(a.canonical_encoding(), d.canonical_encoding());
+    }
+
+    #[test]
+    fn epilogue_apply_order_is_scale_bias_relu() {
+        let spec = EpilogueSpec {
+            scale: Some(2.0),
+            bias: true,
+            relu: true,
+        };
+        let bias = [-10.0f32, 3.0];
+        // 2·4 + (−10) = −2 → relu → 0
+        assert_eq!(spec.apply(4.0, 0, Some(&bias)), 0.0);
+        // 2·4 + 3 = 11
+        assert_eq!(spec.apply(4.0, 1, Some(&bias)), 11.0);
+    }
+}

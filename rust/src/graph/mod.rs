@@ -1,0 +1,39 @@
+//! Operator graphs: a linear-chain tensor IR, a joint chain planner,
+//! and a fused packed execution path.
+//!
+//! The per-op pipeline (FLASH search → packed executor) treats every
+//! GEMM in isolation; real inference traffic arrives as *chains* —
+//! projection → attention → FFN, or conv → conv → conv — where the
+//! mapping chosen for one op decides whether its neighbor gets its
+//! input panels for free or pays a full unpack → NoC → repack round
+//! trip for the intermediate. This module closes that gap end to end:
+//!
+//! * [`ir`] — the graph IR ([`OpGraph`]: `Gemm`, `ConvAsGemm` via the
+//!   shared im2col derivation, `Epilogue`, the `Attention` QK^T·V
+//!   pair) and its lowering to a validated [`Chain`] of GEMM stages
+//!   with typed edges and a name-free canonical encoding.
+//! * [`plan`] — the joint planner: per-stage signature frontiers
+//!   (slack-widened by the GOMA-style repack lower bound, see
+//!   [`crate::flash::signature_frontier`]) plus an exact DP over the
+//!   chain; `joint_score ≤ independent_score` holds structurally.
+//! * [`cache`] — [`GraphPlanCache`]: one joint search per distinct
+//!   (graph, architecture, objective) key, ever, with negative caching
+//!   of infeasible chains.
+//! * [`exec`] — fused execution: epilogues applied in-tile, direct
+//!   edges handing packed output tiles straight to the consumer's `A`
+//!   panels; bit-identical to the unfused node-by-node reference.
+//! * [`suites`] — the shipped BERT-layer and ResNet-block traces.
+
+pub mod cache;
+pub mod exec;
+pub mod ir;
+pub mod plan;
+pub mod suites;
+
+pub use cache::GraphPlanCache;
+pub use exec::{
+    chain_data, plan_orders, run_fused, run_unfused, segment_tiles, ChainData, ChainOutput,
+};
+pub use ir::{Chain, EpilogueSpec, Op, OpGraph, Stage, StageEdge};
+pub use plan::{plan_chain, repack_penalty, tiles_agree, ChainPlan, NodePick};
+pub use suites::{bert_layer_graph, by_name, resnet_block_graph, TRACES};

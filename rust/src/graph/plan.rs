@@ -1,0 +1,320 @@
+//! Joint chain planning: map every stage of a lowered [`Chain`] at
+//! once, trading per-node mapping optimality against inter-op repack
+//! traffic.
+//!
+//! Independent per-op planning picks each stage's best mapping in
+//! isolation; whenever adjacent picks disagree on outer tiles, the
+//! intermediate has to be unpacked to a row-major matrix and repacked
+//! into the consumer's panel layout — S2 write + S2 read of the whole
+//! intermediate, plus the NoC transfer. The joint planner instead
+//! searches per-stage **signature frontiers**
+//! ([`crate::flash::signature_frontier`]) — best mapping per outer-tile
+//! signature, with the frontier's pruning slack set to the stage's
+//! total adjacent repack penalty (the GOMA-style lower bound on what a
+//! non-optimal signature could possibly save, so the widened frontier
+//! is provably sufficient) — then runs an exact dynamic program over
+//! the chain: `dp[c] = score(c) + min_p (dp[p] + penalty(p → c))`.
+//! Because the chain is linear, the DP *is* the branch-and-bound
+//! fixpoint: it minimizes over the full cross-node product without
+//! enumerating it, in `Σ |F_i|·|F_{i+1}|` steps.
+//!
+//! The independent plan (every stage's `entries[0]`) is one path of
+//! that product, so `joint_score ≤ independent_score` holds
+//! structurally, for every chain, architecture, and objective.
+
+use anyhow::Result;
+
+use crate::arch::Accelerator;
+use crate::cost::{EnergyModel, Objective};
+use crate::flash::{signature_frontier, PruneStats, Signature};
+use crate::flash::search::EvaluatedMapping;
+
+use super::ir::Chain;
+
+/// Tile agreement across a fusable edge: the producer writes
+/// `(T_M, T_N)` output tiles; the consumer wants `(T_M, T_K)` input
+/// panels. Equal sizes mean the producer's tiles are the consumer's
+/// panels verbatim — no repack.
+pub fn tiles_agree(producer: Signature, consumer: Signature) -> bool {
+    producer.0 == consumer.0 && producer.1 == consumer.2
+}
+
+/// The objective-typed cost of repacking one `m × n` intermediate
+/// (S2 write + S2 read of every element, i.e. `2·m·n` element touches).
+///
+/// * `Runtime` — milliseconds to move `2·m·n` elements over the NoC.
+/// * `Energy` — joules for `2·m·n` S2 accesses (default energy model).
+/// * `Edp` — the product of the two; not a true chain EDP delta (that
+///   would need the whole chain's runtime and energy), but an additive
+///   lower-is-better surrogate that is monotone in traffic, which is
+///   all the DP's comparisons consume.
+pub fn repack_penalty(objective: Objective, acc: &Accelerator, m: u64, n: u64) -> f64 {
+    let elems = 2 * m * n;
+    let cfg = &acc.config;
+    let ms = (elems * cfg.elem_bytes) as f64 / cfg.noc_bytes_per_sec * 1e3;
+    let joules = elems as f64 * EnergyModel::default().s2_access_j;
+    match objective {
+        Objective::Runtime => ms,
+        Objective::Energy => joules,
+        Objective::Edp => ms * joules,
+    }
+}
+
+/// One stage's chosen mapping inside a [`ChainPlan`].
+#[derive(Debug, Clone)]
+pub struct NodePick {
+    pub signature: Signature,
+    pub evaluated: EvaluatedMapping,
+    /// This stage's own objective score (no edge terms).
+    pub score: f64,
+}
+
+/// A fully planned chain on one accelerator.
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    /// Chosen mapping per stage, in chain order.
+    pub picks: Vec<NodePick>,
+    /// Per-edge repack penalty actually paid by the joint picks
+    /// (`len = stages − 1`; `0.0` where the handoff fuses).
+    pub edge_penalties: Vec<f64>,
+    /// Which edges fuse under the joint picks: the edge is fusable in
+    /// the IR *and* the chosen signatures agree.
+    pub fused_edges: Vec<bool>,
+    /// `Σ pick scores + Σ edge penalties` — what the chain costs with
+    /// the joint picks.
+    pub joint_score: f64,
+    /// What independent per-op planning would cost: each stage's own
+    /// best mapping, plus the repack penalties those picks induce.
+    /// Structurally `≥ joint_score`.
+    pub independent_score: f64,
+    /// Frontier searches performed (= stage count on a cache miss).
+    pub searches: usize,
+    /// Aggregated region/evaluation counters across the stage searches.
+    pub stats: PruneStats,
+}
+
+impl ChainPlan {
+    /// Edges fused under the joint picks.
+    pub fn fused_count(&self) -> usize {
+        self.fused_edges.iter().filter(|f| **f).count()
+    }
+
+    /// `independent / joint` (≥ 1; how much joint planning saved).
+    pub fn advantage(&self) -> f64 {
+        self.independent_score / self.joint_score
+    }
+}
+
+/// Plan a lowered chain on one accelerator: per-stage frontiers with
+/// repack-bounded slack, then the exact DP over signatures.
+pub fn plan_chain(acc: &Accelerator, chain: &Chain, objective: Objective) -> Result<ChainPlan> {
+    let stages = &chain.stages;
+    // Per-edge penalty *ceilings* (what a repack there would cost) and
+    // whether the edge is fusable at all. Non-fusable edges pay their
+    // ceiling no matter which signatures are picked, so they contribute
+    // a constant to every path — and zero to the frontier slack.
+    let edge_cost: Vec<f64> = stages
+        .windows(2)
+        .map(|w| repack_penalty(objective, acc, w[0].gemm.m, w[0].gemm.n))
+        .collect();
+    let edge_fusable: Vec<bool> = stages[1..].iter().map(|s| s.edge.fusable()).collect();
+
+    let mut stats = PruneStats::default();
+    let mut frontiers = Vec::with_capacity(stages.len());
+    for (i, stage) in stages.iter().enumerate() {
+        let mut slack = 0.0;
+        if i > 0 && edge_fusable[i - 1] {
+            slack += edge_cost[i - 1];
+        }
+        if i < stages.len() - 1 && edge_fusable[i] {
+            slack += edge_cost[i];
+        }
+        let f = signature_frontier(acc, &stage.gemm, objective, slack)?;
+        stats.regions += f.stats.regions;
+        stats.regions_pruned += f.stats.regions_pruned;
+        stats.generated += f.stats.generated;
+        stats.evaluated += f.stats.evaluated;
+        frontiers.push(f);
+    }
+
+    // DP over the linear chain. dp[j] = best accumulated score ending
+    // at frontier entry j of the current stage; back[i][j] = chosen
+    // entry of stage i−1. Ties break toward the earlier (lower-score,
+    // then lower-signature) entry on both sides, deterministically.
+    let pay = |i: usize, p: Signature, c: Signature| -> f64 {
+        if edge_fusable[i] && tiles_agree(p, c) {
+            0.0
+        } else {
+            edge_cost[i]
+        }
+    };
+    let mut dp: Vec<f64> = frontiers[0].entries.iter().map(|e| e.score).collect();
+    let mut back: Vec<Vec<usize>> = Vec::with_capacity(stages.len());
+    for i in 1..stages.len() {
+        let (prev, cur) = (&frontiers[i - 1], &frontiers[i]);
+        let mut next = vec![f64::INFINITY; cur.entries.len()];
+        let mut from = vec![0usize; cur.entries.len()];
+        for (ci, ce) in cur.entries.iter().enumerate() {
+            for (pi, pe) in prev.entries.iter().enumerate() {
+                let total = dp[pi] + pay(i - 1, pe.signature, ce.signature) + ce.score;
+                if total < next[ci] {
+                    next[ci] = total;
+                    from[ci] = pi;
+                }
+            }
+        }
+        dp = next;
+        back.push(from);
+    }
+
+    // Walk back from the best terminal entry.
+    let mut end = 0;
+    for (j, &score) in dp.iter().enumerate() {
+        if score < dp[end] {
+            end = j;
+        }
+    }
+    let joint_score = dp[end];
+    let mut choice = vec![0usize; stages.len()];
+    choice[stages.len() - 1] = end;
+    for i in (1..stages.len()).rev() {
+        choice[i - 1] = back[i - 1][choice[i]];
+    }
+
+    let picks: Vec<NodePick> = choice
+        .iter()
+        .zip(&frontiers)
+        .map(|(&j, f)| {
+            let e = &f.entries[j];
+            NodePick {
+                signature: e.signature,
+                evaluated: e.evaluated.clone(),
+                score: e.score,
+            }
+        })
+        .collect();
+    let edge_penalties: Vec<f64> = (0..stages.len().saturating_sub(1))
+        .map(|i| pay(i, picks[i].signature, picks[i + 1].signature))
+        .collect();
+    let fused_edges: Vec<bool> = edge_penalties.iter().map(|p| *p == 0.0).collect();
+
+    // Independent baseline: every stage's own optimum (entries[0]),
+    // paying whatever repacks those picks induce.
+    let independent_score = frontiers.iter().map(|f| f.best_score()).sum::<f64>()
+        + (0..stages.len().saturating_sub(1))
+            .map(|i| {
+                pay(
+                    i,
+                    frontiers[i].entries[0].signature,
+                    frontiers[i + 1].entries[0].signature,
+                )
+            })
+            .sum::<f64>();
+
+    Ok(ChainPlan {
+        picks,
+        edge_penalties,
+        fused_edges,
+        joint_score,
+        independent_score,
+        searches: stages.len(),
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{HwConfig, Style};
+    use crate::graph::ir::OpGraph;
+
+    fn chain_of(g: OpGraph) -> Chain {
+        g.lower().unwrap()
+    }
+
+    #[test]
+    fn joint_never_exceeds_independent() {
+        let chain = chain_of(
+            OpGraph::new("mlp")
+                .gemm(256, 512, 128)
+                .gemm(256, 128, 512)
+                .gemm(256, 64, 128),
+        );
+        for style in Style::ALL {
+            let acc = Accelerator::of_style(style, HwConfig::edge());
+            for objective in [Objective::Runtime, Objective::Energy, Objective::Edp] {
+                let plan = plan_chain(&acc, &chain, objective).unwrap();
+                assert!(
+                    plan.joint_score <= plan.independent_score + 1e-12,
+                    "{style} {objective}: joint {} > independent {}",
+                    plan.joint_score,
+                    plan.independent_score
+                );
+                assert_eq!(plan.searches, 3);
+                assert_eq!(plan.picks.len(), 3);
+                assert_eq!(plan.edge_penalties.len(), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn joint_score_is_picks_plus_penalties() {
+        let chain = chain_of(OpGraph::new("pair").gemm(128, 256, 64).gemm(128, 64, 256));
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let plan = plan_chain(&acc, &chain, Objective::Runtime).unwrap();
+        let recomputed: f64 = plan.picks.iter().map(|p| p.score).sum::<f64>()
+            + plan.edge_penalties.iter().sum::<f64>();
+        assert!((plan.joint_score - recomputed).abs() < 1e-9);
+        // fused edges pay nothing, unfused edges pay the full repack
+        for (f, p) in plan.fused_edges.iter().zip(&plan.edge_penalties) {
+            if *f {
+                assert_eq!(*p, 0.0);
+            } else {
+                assert!(*p > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_edges_never_fuse() {
+        use crate::workloads::Conv2d;
+        let g = OpGraph::new("block")
+            .conv(Conv2d {
+                name: "a".into(),
+                batch: 1,
+                in_ch: 16,
+                out_ch: 16,
+                in_hw: 14,
+                kernel: 1,
+                stride: 1,
+                padding: 0,
+            })
+            .conv(Conv2d {
+                name: "b".into(),
+                batch: 1,
+                in_ch: 16,
+                out_ch: 32,
+                in_hw: 14,
+                kernel: 3,
+                stride: 1,
+                padding: 1,
+            });
+        let chain = chain_of(g);
+        let acc = Accelerator::of_style(Style::Tpu, HwConfig::edge());
+        let plan = plan_chain(&acc, &chain, Objective::Runtime).unwrap();
+        assert!(!plan.fused_edges[0], "im2col edge must not fuse");
+        assert!(plan.edge_penalties[0] > 0.0);
+    }
+
+    #[test]
+    fn repack_penalty_units() {
+        let acc = Accelerator::of_style(Style::Maeri, HwConfig::edge());
+        let ms = repack_penalty(Objective::Runtime, &acc, 64, 32);
+        let want =
+            (2 * 64 * 32 * acc.config.elem_bytes) as f64 / acc.config.noc_bytes_per_sec * 1e3;
+        assert_eq!(ms, want);
+        let j = repack_penalty(Objective::Energy, &acc, 64, 32);
+        assert_eq!(j, 2.0 * 64.0 * 32.0 * EnergyModel::default().s2_access_j);
+        assert_eq!(repack_penalty(Objective::Edp, &acc, 64, 32), ms * j);
+    }
+}

@@ -1,0 +1,123 @@
+//! Shipped operator graphs: a BERT encoder layer and a ResNet-50
+//! bottleneck block, imported as first-class graphs from the same layer
+//! definitions the per-op workload suites use.
+//!
+//! These are the `repro graph` CLI traces and the bench/experiment
+//! subjects. The BERT layer is a single-head slice (hidden 256, head
+//! dim 64, FFN 512 — scaled so the chain executes in milliseconds on
+//! the CPU backend while exercising every edge kind the planner knows:
+//! the attention QK^T·V pair, biased/relu'd projections, and an all-
+//! direct fusable spine). The ResNet block is the real `res2` bottleneck
+//! from [`resnet50_layers`] — identity 1×1 convs at both ends (fusable
+//! direct edges) around the 3×3 gather edge that can never fuse.
+
+use crate::workloads::resnet50_layers;
+
+use super::ir::{EpilogueSpec, OpGraph};
+
+const BIAS_RELU: EpilogueSpec = EpilogueSpec {
+    scale: None,
+    bias: true,
+    relu: true,
+};
+const BIAS: EpilogueSpec = EpilogueSpec {
+    scale: None,
+    bias: true,
+    relu: false,
+};
+
+/// One BERT encoder layer, single-head slice: Q-projection → attention
+/// pair → output projection → FFN up → FFN down. Seven GEMM stages,
+/// every edge direct (fusable).
+pub fn bert_layer_graph() -> OpGraph {
+    let (seq, hidden, head, ffn) = (128, 256, 64, 512);
+    OpGraph::new("bert-layer")
+        .gemm(seq, head, hidden) // Q projection into the head
+        .attention(seq, head) // S = Q·K^T, O = S·V
+        .gemm(seq, hidden, head) // output projection
+        .epilogue(BIAS_RELU)
+        .gemm(seq, ffn, hidden) // FFN up
+        .epilogue(BIAS_RELU)
+        .gemm(seq, hidden, ffn) // FFN down
+        .epilogue(BIAS)
+}
+
+/// The ResNet-50 `res2` bottleneck block (1×1 → 3×3 → 1×1), taken
+/// verbatim from the shared conv layer table. The 1×1 convs are
+/// identity im2col (direct, fusable edges); the 3×3 is a real gather.
+pub fn resnet_block_graph(batch: u64) -> OpGraph {
+    let layers = resnet50_layers(batch);
+    let layer = |name: &str| {
+        layers
+            .iter()
+            .find(|c| c.name == name)
+            .unwrap_or_else(|| panic!("resnet50_layers is missing {name}"))
+            .clone()
+    };
+    OpGraph::new("resnet-res2")
+        .conv(layer("res2-1x1a"))
+        .epilogue(BIAS_RELU)
+        .conv(layer("res2-3x3"))
+        .epilogue(BIAS_RELU)
+        .conv(layer("res2-1x1b"))
+        .epilogue(BIAS)
+}
+
+/// The shipped traces by CLI name.
+pub fn by_name(name: &str) -> Option<OpGraph> {
+    match name {
+        "bert" => Some(bert_layer_graph()),
+        "resnet" => Some(resnet_block_graph(1)),
+        _ => None,
+    }
+}
+
+/// The shipped trace names, in CLI order.
+pub const TRACES: [&str; 2] = ["bert", "resnet"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_layer_lowers_to_an_all_direct_seven_stage_chain() {
+        let chain = bert_layer_graph().lower().unwrap();
+        assert_eq!(chain.stages.len(), 7);
+        assert!(chain.stages[1..].iter().all(|s| s.edge.fusable()));
+        assert_eq!(chain.input_shape(), (128, 256));
+        assert_eq!(chain.output_shape(), (128, 256));
+        // attention pair shapes: S then O
+        let s = &chain.stages[1].gemm;
+        let o = &chain.stages[2].gemm;
+        assert_eq!((s.m, s.n, s.k), (128, 128, 64));
+        assert_eq!((o.m, o.n, o.k), (128, 64, 128));
+    }
+
+    #[test]
+    fn resnet_block_pins_the_legacy_im2col_shapes() {
+        let chain = resnet_block_graph(1).lower().unwrap();
+        assert_eq!(chain.stages.len(), 3);
+        let shapes: Vec<(u64, u64, u64)> = chain
+            .stages
+            .iter()
+            .map(|s| (s.gemm.m, s.gemm.n, s.gemm.k))
+            .collect();
+        // 56×56 spatial, 64→64→256 channels, 3×3 gather in the middle
+        assert_eq!(
+            shapes,
+            vec![(3136, 64, 64), (3136, 64, 576), (3136, 256, 64)]
+        );
+        assert!(chain.stages[0].edge.from_input);
+        assert!(!chain.stages[1].edge.fusable(), "3×3 must gather");
+        assert!(chain.stages[2].edge.fusable(), "1×1 tail must fuse");
+    }
+
+    #[test]
+    fn trace_lookup_covers_the_shipped_names() {
+        for name in TRACES {
+            let g = by_name(name).unwrap();
+            g.lower().unwrap();
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -12,7 +12,9 @@
 //!   ([`arch::ArchSpec`] — serde-loadable TOML/JSON specs with the five
 //!   paper styles as built-in presets, plus `specs/*.toml`), dataflow directives
 //!   ([`dataflow`]), cost model ([`cost`]), the rayon-parallel FLASH
-//!   search with its shape-keyed mapping cache ([`flash`]), baselines
+//!   search with its shape-keyed mapping cache ([`flash`]), the
+//!   operator-graph IR with joint chain planning and fused packed
+//!   execution ([`graph`]), baselines
 //!   ([`baselines`]), a cycle-approximate simulator substrate ([`sim`]),
 //!   the execution runtime ([`runtime`]), the unified Query → Plan →
 //!   Response serving pipeline ([`engine`]), the sharded multi-worker
@@ -54,6 +56,7 @@ pub mod dataflow;
 pub mod engine;
 pub mod experiments;
 pub mod flash;
+pub mod graph;
 pub mod prop;
 pub mod report;
 pub mod runtime;

@@ -197,9 +197,27 @@ impl PackedGemm {
     pub fn pack(&self, a: &[f32], b: &[f32]) -> Result<PackedOperands> {
         ensure!(a.len() == self.m * self.k, "A len {} != {}", a.len(), self.m * self.k);
         ensure!(b.len() == self.k * self.n, "B len {} != {}", b.len(), self.k * self.n);
-        let (t, tt) = (self.t, self.t * self.t);
+        Ok(PackedOperands {
+            a_panels: self.pack_a_panels(a),
+            b_panels: self.pack_b_panels(b),
+        })
+    }
 
-        // A row-panels, k-major blocks.
+    /// Pack only the weights: a fused chain fills the A-panel arena
+    /// straight from its producer's output tiles
+    /// ([`PackedGemm::execute_fused_into_a_panels`]), so A is left as
+    /// the zeroed arena the pack would otherwise pad into.
+    pub fn pack_b(&self, b: &[f32]) -> Result<PackedOperands> {
+        ensure!(b.len() == self.k * self.n, "B len {} != {}", b.len(), self.k * self.n);
+        Ok(PackedOperands {
+            a_panels: vec![0f32; self.gm * self.gk * self.t * self.t],
+            b_panels: self.pack_b_panels(b),
+        })
+    }
+
+    /// A row-panels, k-major blocks (zero padded to tile multiples).
+    fn pack_a_panels(&self, a: &[f32]) -> Vec<f32> {
+        let (t, tt) = (self.t, self.t * self.t);
         let mut a_panels = vec![0f32; self.gm * self.gk * tt];
         for bi in 0..self.gm {
             let rows = t.min(self.m - bi * t);
@@ -214,8 +232,12 @@ impl PackedGemm {
                 }
             }
         }
+        a_panels
+    }
 
-        // B column-panels, row-major blocks.
+    /// B column-panels, row-major blocks (zero padded to tile multiples).
+    fn pack_b_panels(&self, b: &[f32]) -> Vec<f32> {
+        let (t, tt) = (self.t, self.t * self.t);
         let mut b_panels = vec![0f32; self.gn * self.gk * tt];
         for bj in 0..self.gn {
             let cols = t.min(self.n - bj * t);
@@ -228,8 +250,7 @@ impl PackedGemm {
                 }
             }
         }
-
-        Ok(PackedOperands { a_panels, b_panels })
+        b_panels
     }
 
     /// Accumulate output tile (i, j): reduce its gk k-blocks in
@@ -285,6 +306,90 @@ impl PackedGemm {
                 self.accumulate_tile(ops, ctile, scratch, i as usize, j as usize);
             }
         });
+    }
+
+    /// [`PackedGemm::execute_into`] with an elementwise epilogue applied
+    /// in-tile: after a tile's k-reduction finishes, `epi(tile, i, j,
+    /// rows, cols)` runs on it before the next tile starts (`rows`/`cols`
+    /// bound the valid region — the zero-padded lanes outside it must
+    /// stay untouched so a fused consumer reads the padding it expects).
+    /// The tile is row-major with stride `tile()`. Bit-identical to
+    /// executing first and applying the same elementwise function to the
+    /// unpacked matrix afterwards: each output element sees exactly one
+    /// epilogue application on the fully reduced value.
+    pub fn execute_epilogued_into<F>(&self, ops: &PackedOperands, c_tiles: &mut [f32], epi: &F)
+    where
+        F: Fn(&mut [f32], usize, usize, usize, usize) + Sync,
+    {
+        let (t, tt) = (self.t, self.t * self.t);
+        assert_eq!(c_tiles.len(), self.c_tiles_len(), "C-tile arena length");
+        c_tiles
+            .par_chunks_mut(tt)
+            .zip_eq(self.walk.par_iter())
+            .for_each(|(ctile, &(i, j))| {
+                let (i, j) = (i as usize, j as usize);
+                with_scratch(tt, |scratch| self.accumulate_tile(ops, ctile, scratch, i, j));
+                epi(ctile, i, j, t.min(self.m - i * t), t.min(self.n - j * t));
+            });
+    }
+
+    /// The fused chain hot path: execute this GEMM, apply the epilogue
+    /// in-tile, and write each finished tile **transposed** straight into
+    /// `consumer`'s A-panel arena (`next.a_panels`, from
+    /// [`PackedGemm::pack_b`]) — the intermediate matrix is never
+    /// unpacked or repacked. Legal when the consumer reads this output
+    /// directly as its A operand with the same tile size: its block
+    /// (i, kk) is exactly our output tile (i, j=kk) with rows and
+    /// columns swapped (A panels are k-major). Zero-padded lanes carry
+    /// straight through, which is why `epi` must not touch them.
+    pub fn execute_fused_into_a_panels<F>(
+        &self,
+        ops: &PackedOperands,
+        consumer: &PackedGemm,
+        next: &mut PackedOperands,
+        epi: &F,
+    ) -> Result<()>
+    where
+        F: Fn(&mut [f32], usize, usize, usize, usize) + Sync,
+    {
+        let (t, tt) = (self.t, self.t * self.t);
+        ensure!(
+            consumer.t == t && consumer.m == self.m && consumer.k == self.n,
+            "fused handoff shape mismatch: {}x{} t{} feeding m{} k{} t{}",
+            self.m,
+            self.n,
+            t,
+            consumer.m,
+            consumer.k,
+            consumer.t
+        );
+        ensure!(
+            next.a_panels.len() == consumer.gm * consumer.gk * tt,
+            "consumer A-panel arena length"
+        );
+        // one warm 2·t² grow per thread per size, outside the hot loop
+        warm_scratch(2 * tt);
+        next.a_panels
+            .par_chunks_mut(tt)
+            .enumerate()
+            .for_each(|(blk, panel)| {
+                // consumer block (i, kk) == our output tile (i, j=kk);
+                // output tiles are order-independent, so walking the
+                // consumer's panel order preserves bit-identity
+                let (i, j) = (blk / consumer.gk, blk % consumer.gk);
+                with_scratch(2 * tt, |s| {
+                    let (acc, scratch) = s.split_at_mut(tt);
+                    acc.fill(0.0);
+                    self.accumulate_tile(ops, acc, scratch, i, j);
+                    epi(acc, i, j, t.min(self.m - i * t), t.min(self.n - j * t));
+                    for r in 0..t {
+                        for c in 0..t {
+                            panel[c * t + r] = acc[r * t + c];
+                        }
+                    }
+                });
+            });
+        Ok(())
     }
 
     /// Scatter the walk-ordered C-tile arena into the unpadded row-major
@@ -595,6 +700,51 @@ mod tests {
         // tile 6 is not 4-aligned: blocked kernels must be rejected
         let odd = PackedGemm::new(&wl, 6, LoopOrder::MNK).unwrap();
         assert!(odd.with_kernel(KernelKind::Blocked4x4).is_err());
+    }
+
+    #[test]
+    fn fused_handoff_is_bit_identical_to_unfused_repack() {
+        // chain: C1 = epi(A·B1), C2 = C1·B2 — ragged in every dim
+        let wl1 = Gemm::new("s1", 5, 7, 3);
+        let wl2 = Gemm::new("s2", 5, 4, 7);
+        let t = 2usize;
+        let a: Vec<f32> = (0..15).map(|i| (i as f32).sin()).collect();
+        let b1: Vec<f32> = (0..21).map(|i| (i as f32).cos()).collect();
+        let b2: Vec<f32> = (0..28).map(|i| (i as f32 * 0.3).sin()).collect();
+        let p1 = PackedGemm::new(&wl1, t, LoopOrder::MNK).unwrap();
+        let p2 = PackedGemm::new(&wl2, t, LoopOrder::NKM).unwrap();
+        // scale + per-column bias + relu, valid region only
+        let epi = |tile: &mut [f32], _i: usize, j: usize, rows: usize, cols: usize| {
+            for r in 0..rows {
+                for c in 0..cols {
+                    let v = &mut tile[r * t + c];
+                    *v = (*v * 1.5 + (j * t + c) as f32).max(0.0);
+                }
+            }
+        };
+        // unfused reference: run, epilogue the matrix, repack, run
+        let mut c1 = p1.run(&a, &b1).unwrap();
+        for r in 0..5 {
+            for c in 0..7 {
+                let v = &mut c1[r * 7 + c];
+                *v = (*v * 1.5 + c as f32).max(0.0);
+            }
+        }
+        let want = p2.run(&c1, &b2).unwrap();
+        // in-tile epilogue path matches the matrix epilogue bit-for-bit
+        let ops1 = p1.pack(&a, &b1).unwrap();
+        let mut c_tiles = vec![0.0; p1.c_tiles_len()];
+        p1.execute_epilogued_into(&ops1, &mut c_tiles, &epi);
+        let mut got = vec![0.0; 5 * 7];
+        p1.unpack_into(&c_tiles, &mut got);
+        assert_eq!(got, c1);
+        // fused handoff: epilogued tiles land in p2's A panels directly
+        let mut ops2 = p2.pack_b(&b2).unwrap();
+        p1.execute_fused_into_a_panels(&ops1, &p2, &mut ops2, &epi)
+            .unwrap();
+        assert_eq!(p2.execute(&ops2), want);
+        // a shape-incompatible consumer is rejected, not silently fused
+        assert!(p1.execute_fused_into_a_panels(&ops1, &p1, &mut ops2, &epi).is_err());
     }
 
     #[test]

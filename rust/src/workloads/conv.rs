@@ -8,6 +8,7 @@
 //! channels × kernel window), so whole CNNs become GEMM workload suites.
 
 use super::gemm::Gemm;
+use super::im2col::Im2col;
 
 /// A CONV2D layer description (square kernels/strides, same-style padding).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -23,21 +24,29 @@ pub struct Conv2d {
 }
 
 impl Conv2d {
+    /// The im2col geometry of this layer — the one shape-derivation
+    /// authority, shared with the operator-graph importer.
+    pub fn im2col(&self) -> Im2col {
+        Im2col {
+            batch: self.batch,
+            in_ch: self.in_ch,
+            in_hw: self.in_hw,
+            kernel: self.kernel,
+            stride: self.stride,
+            padding: self.padding,
+        }
+    }
+
     /// Output spatial size.
     pub fn out_hw(&self) -> u64 {
-        (self.in_hw + 2 * self.padding - self.kernel) / self.stride + 1
+        self.im2col().out_hw()
     }
 
     /// The im2col GEMM this layer lowers to:
     /// (batch·out_hw²) × (in_ch·k²) @ (in_ch·k²) × out_ch.
     pub fn to_gemm(&self) -> Gemm {
-        let out = self.out_hw();
-        Gemm::new(
-            &self.name,
-            self.batch * out * out,
-            self.out_ch,
-            self.in_ch * self.kernel * self.kernel,
-        )
+        let (m, k) = self.im2col().gemm_mk();
+        Gemm::new(&self.name, m, self.out_ch, k)
     }
 
     /// MACs of the convolution (must equal the GEMM's MACs — im2col is
@@ -109,6 +118,23 @@ mod tests {
         let g = resnet50_gemms(1)[0].clone();
         // (1·112·112) × (3·49) @ ... × 64
         assert_eq!((g.m, g.n, g.k), (112 * 112, 64, 147));
+    }
+
+    #[test]
+    fn im2col_helper_reproduces_the_legacy_shape_derivation() {
+        // regression pin: the shared im2col helper must derive exactly
+        // the shapes the old inline formula produced for every layer
+        for c in resnet50_layers(3) {
+            let legacy_out = (c.in_hw + 2 * c.padding - c.kernel) / c.stride + 1;
+            let legacy = Gemm::new(
+                &c.name,
+                c.batch * legacy_out * legacy_out,
+                c.out_ch,
+                c.in_ch * c.kernel * c.kernel,
+            );
+            assert_eq!(c.to_gemm(), legacy, "{}", c.name);
+            assert_eq!(c.out_hw(), legacy_out, "{}", c.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! The single source of truth for conv-as-GEMM (im2col) lowering.
+//!
+//! Both the layer suites ([`super::Conv2d`]) and the operator-graph
+//! importer ([`crate::graph`]) derive their GEMM shapes here, and the
+//! graph executor uses [`gather`] to materialize the im2col matrix when
+//! a conv stage cannot consume its producer's output tiles directly.
+//!
+//! Layout convention: activation tensors flow between operators as
+//! row-major matrices with `rows = batch · height · width` (row index
+//! `(b·H + y)·W + x`) and `cols = channels`. That is exactly the shape a
+//! GEMM stage produces (`m = b·h·w`, `n = channels`), so a 1×1 stride-1
+//! unpadded conv consumes its producer verbatim ([`Im2col::is_identity`])
+//! and anything else is a gather with zero padding.
+
+/// The geometry of one im2col lowering (square kernel/stride/padding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Im2col {
+    pub batch: u64,
+    pub in_ch: u64,
+    pub in_hw: u64,
+    pub kernel: u64,
+    pub stride: u64,
+    pub padding: u64,
+}
+
+/// Output spatial size of a convolution: `(in + 2p − k)/s + 1`.
+pub fn out_hw(in_hw: u64, kernel: u64, stride: u64, padding: u64) -> u64 {
+    (in_hw + 2 * padding - kernel) / stride + 1
+}
+
+impl Im2col {
+    /// Output spatial size.
+    pub fn out_hw(&self) -> u64 {
+        out_hw(self.in_hw, self.kernel, self.stride, self.padding)
+    }
+
+    /// The (m, k) the lowered GEMM reads: `m = batch·out²` rows of
+    /// `k = in_ch·kernel²` gathered elements each (n = out_ch is the
+    /// weight count, not a property of the gather).
+    pub fn gemm_mk(&self) -> (u64, u64) {
+        let out = self.out_hw();
+        (
+            self.batch * out * out,
+            self.in_ch * self.kernel * self.kernel,
+        )
+    }
+
+    /// Rows of the activation matrix this gather consumes
+    /// (`batch·in_hw²` — its producer's `m`).
+    pub fn input_rows(&self) -> u64 {
+        self.batch * self.in_hw * self.in_hw
+    }
+
+    /// A 1×1 stride-1 unpadded conv gathers nothing: the im2col matrix
+    /// IS the input activation matrix, so the edge degenerates to a
+    /// direct tile handoff.
+    pub fn is_identity(&self) -> bool {
+        self.kernel == 1 && self.stride == 1 && self.padding == 0
+    }
+
+    /// Materialize the im2col matrix from an activation matrix laid out
+    /// per the module convention (`input[((b·H + y)·W + x) · in_ch + c]`,
+    /// i.e. `input_rows() × in_ch` row-major). Out-of-image taps read
+    /// the zero padding. Output is `gemm_mk()` row-major with column
+    /// index `(c·kernel + ky)·kernel + kx`.
+    pub fn gather(&self, input: &[f32]) -> Vec<f32> {
+        let (m, k) = self.gemm_mk();
+        assert_eq!(
+            input.len() as u64,
+            self.input_rows() * self.in_ch,
+            "activation matrix shape mismatch"
+        );
+        let (h, out, kn, s, p) = (
+            self.in_hw as i64,
+            self.out_hw() as i64,
+            self.kernel as i64,
+            self.stride as i64,
+            self.padding as i64,
+        );
+        let in_ch = self.in_ch as usize;
+        let mut cols = vec![0.0f32; (m * k) as usize];
+        let mut row = 0usize;
+        for b in 0..self.batch as i64 {
+            for oy in 0..out {
+                for ox in 0..out {
+                    let base = row * k as usize;
+                    for c in 0..in_ch as i64 {
+                        for ky in 0..kn {
+                            let y = oy * s + ky - p;
+                            if y < 0 || y >= h {
+                                continue; // stays zero (padding)
+                            }
+                            for kx in 0..kn {
+                                let x = ox * s + kx - p;
+                                if x < 0 || x >= h {
+                                    continue;
+                                }
+                                let in_row = (b * h + y) * h + x;
+                                let col = (c * kn + ky) * kn + kx;
+                                cols[base + col as usize] = input
+                                    [in_row as usize * in_ch + c as usize];
+                            }
+                        }
+                    }
+                    row += 1;
+                }
+            }
+        }
+        cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_conv_gather_is_the_input() {
+        let g = Im2col {
+            batch: 2,
+            in_ch: 3,
+            in_hw: 4,
+            kernel: 1,
+            stride: 1,
+            padding: 0,
+        };
+        assert!(g.is_identity());
+        assert_eq!(g.gemm_mk(), (2 * 16, 3));
+        let input: Vec<f32> = (0..(2 * 16 * 3)).map(|i| i as f32).collect();
+        assert_eq!(g.gather(&input), input);
+    }
+
+    #[test]
+    fn padded_3x3_reads_zero_outside_the_image() {
+        let g = Im2col {
+            batch: 1,
+            in_ch: 1,
+            in_hw: 2,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        };
+        assert_eq!(g.out_hw(), 2);
+        // image [[1,2],[3,4]]
+        let cols = g.gather(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(cols.len(), 4 * 9);
+        // output (0,0): window centered there; top row and left col padded
+        assert_eq!(&cols[0..9], &[0., 0., 0., 0., 1., 2., 0., 3., 4.]);
+        // output (1,1): bottom/right padded
+        assert_eq!(&cols[27..36], &[1., 2., 0., 3., 4., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn strided_gather_compute_matches_direct_convolution() {
+        // brute-force conv vs im2col × weights on a small case
+        let g = Im2col {
+            batch: 1,
+            in_ch: 2,
+            in_hw: 5,
+            kernel: 3,
+            stride: 2,
+            padding: 1,
+        };
+        let out = g.out_hw() as i64; // 3
+        assert_eq!(out, 3);
+        let input: Vec<f32> = (0..(25 * 2)).map(|i| (i as f32).sin()).collect();
+        let weights: Vec<f32> = (0..18).map(|i| (i as f32).cos()).collect(); // k=18, n=1
+        let cols = g.gather(&input);
+        let (m, k) = g.gemm_mk();
+        let gemm: Vec<f32> = (0..m as usize)
+            .map(|r| {
+                (0..k as usize)
+                    .map(|c| cols[r * k as usize + c] * weights[c])
+                    .sum()
+            })
+            .collect();
+        let mut direct = vec![0.0f32; (out * out) as usize];
+        for oy in 0..out {
+            for ox in 0..out {
+                let mut acc = 0.0f32;
+                for c in 0..2i64 {
+                    for ky in 0..3i64 {
+                        for kx in 0..3i64 {
+                            let y = oy * 2 + ky - 1;
+                            let x = ox * 2 + kx - 1;
+                            if y < 0 || y >= 5 || x < 0 || x >= 5 {
+                                continue;
+                            }
+                            let v = input[(y * 5 + x) as usize * 2 + c as usize];
+                            let w = weights[((c * 3 + ky) * 3 + kx) as usize];
+                            acc += v * w;
+                        }
+                    }
+                }
+                direct[(oy * out + ox) as usize] = acc;
+            }
+        }
+        // accumulation order differs (im2col skips zeros); allow float slop
+        for (a, b) in gemm.iter().zip(&direct) {
+            assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

@@ -3,10 +3,12 @@
 
 mod conv;
 mod gemm;
+mod im2col;
 mod mlp;
 mod trace;
 
 pub use conv::{resnet50_gemms, resnet50_layers, Conv2d};
 pub use gemm::{Gemm, WorkloadGen};
+pub use im2col::{out_hw, Im2col};
 pub use mlp::{mlp_layers, MlpSpec};
 pub use trace::{parse_trace, read_trace, write_trace};

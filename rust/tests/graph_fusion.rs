@@ -1,0 +1,252 @@
+//! Fusion-correctness and one-search-per-key guarantees for the
+//! operator-graph subsystem, exercised through the engine facade
+//! (`Engine::plan_graph` / `run_graph` / `run_graph_unfused`).
+//!
+//! The contract under test:
+//! * fused chain execution is **bit-identical** to the unfused
+//!   node-by-node reference — across ragged shapes, every epilogue
+//!   kind, the attention pair, im2col edges, and seeds;
+//! * joint planning performs exactly one search per distinct
+//!   (graph, architecture, objective) key, with negative caching of
+//!   infeasible chains;
+//! * the joint plan never costs more than independent per-op planning.
+
+use flash_gemm::arch::{Accelerator, ArchSpec, ClusterRule, HwConfig, Style};
+use flash_gemm::cost::Objective;
+use flash_gemm::engine::Engine;
+use flash_gemm::graph::{self, EpilogueSpec, OpGraph};
+use flash_gemm::workloads::Conv2d;
+
+fn engine_on(style: Style) -> Engine {
+    Engine::builder()
+        .accelerator(Accelerator::of_style(style, HwConfig::edge()))
+        .build()
+        .unwrap()
+}
+
+fn conv(name: &str, in_ch: u64, out_ch: u64, in_hw: u64, k: u64, s: u64, p: u64) -> Conv2d {
+    Conv2d {
+        name: name.into(),
+        batch: 1,
+        in_ch,
+        out_ch,
+        in_hw,
+        kernel: k,
+        stride: s,
+        padding: p,
+    }
+}
+
+/// Every epilogue combination, over a ragged two-stage chain, on two
+/// styles: fused output must equal the unfused reference bit for bit.
+#[test]
+fn fused_equals_unfused_for_every_epilogue_kind() {
+    let specs = [
+        EpilogueSpec::default(),
+        EpilogueSpec {
+            scale: Some(0.75),
+            ..Default::default()
+        },
+        EpilogueSpec {
+            bias: true,
+            ..Default::default()
+        },
+        EpilogueSpec {
+            relu: true,
+            ..Default::default()
+        },
+        EpilogueSpec {
+            scale: Some(-1.5),
+            bias: true,
+            relu: true,
+        },
+    ];
+    for style in [Style::Maeri, Style::Tpu] {
+        let engine = engine_on(style);
+        for (i, spec) in specs.iter().enumerate() {
+            let mut g = OpGraph::new(&format!("epi-{i}")).gemm(37, 23, 19);
+            if !spec.is_noop() {
+                g = g.epilogue(*spec);
+            }
+            let g = g.gemm(37, 29, 23);
+            let fused = engine.run_graph(&g, 5 + i as u64).unwrap();
+            let unfused = engine.run_graph_unfused(&g, 5 + i as u64).unwrap();
+            assert_eq!(
+                fused.output.output, unfused.output.output,
+                "{style} epilogue {i} must be bit-identical"
+            );
+            assert!(fused.output.fused_handoffs > 0, "direct edge must fuse");
+            assert_eq!(unfused.output.fused_handoffs, 0);
+        }
+    }
+}
+
+/// The shipped traces (attention pair, im2col edges, all epilogues) are
+/// bit-identical through the engine, across seeds.
+#[test]
+fn shipped_traces_are_bit_identical_through_the_engine() {
+    let engine = engine_on(Style::Maeri);
+    for name in graph::TRACES {
+        let g = graph::by_name(name).unwrap();
+        // two seeds for the light trace; one keeps the heavy resnet
+        // block affordable in debug test runs
+        let seeds: &[u64] = if name == "bert" { &[1, 0x5EED] } else { &[7] };
+        for &seed in seeds {
+            let fused = engine.run_graph(&g, seed).unwrap();
+            let unfused = engine.run_graph_unfused(&g, seed).unwrap();
+            assert_eq!(
+                fused.output.output, unfused.output.output,
+                "{name} seed {seed}"
+            );
+            assert_eq!(fused.output.digest(), unfused.output.digest());
+        }
+    }
+}
+
+/// A conv chain whose middle edge gathers: the im2col edge must not
+/// fuse, the identity-conv edge must, and bits must still match.
+#[test]
+fn gather_edges_stay_unfused_but_bit_identical() {
+    let g = OpGraph::new("block")
+        .conv(conv("a", 8, 16, 10, 1, 1, 0))
+        .epilogue(EpilogueSpec {
+            relu: true,
+            ..Default::default()
+        })
+        .conv(conv("b", 16, 16, 10, 3, 1, 1))
+        .epilogue(EpilogueSpec {
+            bias: true,
+            ..Default::default()
+        })
+        .conv(conv("c", 16, 32, 10, 1, 1, 0));
+    let engine = engine_on(Style::Eyeriss);
+    let fused = engine.run_graph(&g, 3).unwrap();
+    let unfused = engine.run_graph_unfused(&g, 3).unwrap();
+    assert_eq!(fused.output.output, unfused.output.output);
+    // exactly one fusable edge (the trailing 1×1); the 3×3 gathers
+    assert_eq!(fused.output.fused_handoffs, 1);
+}
+
+/// One joint search per distinct (graph, arch, objective) key, ever:
+/// repeat plans hit, a renamed-but-identical graph hits, and different
+/// objectives / architectures / shapes are separate keys.
+#[test]
+fn one_joint_search_per_distinct_key() {
+    let engine = engine_on(Style::Maeri);
+    let g = OpGraph::new("mlp").gemm(96, 64, 48).gemm(96, 48, 64);
+    let cache = engine.graph_cache();
+
+    let first = engine.plan_graph(&g, Objective::Runtime).unwrap();
+    assert!(!first.cache_hit, "first plan must search");
+    assert_eq!((cache.misses(), cache.hits()), (1, 0));
+
+    let again = engine.plan_graph(&g, Objective::Runtime).unwrap();
+    assert!(again.cache_hit, "repeat plan must not search");
+    assert_eq!((cache.misses(), cache.hits()), (1, 1));
+    assert_eq!(again.plan.joint_score, first.plan.joint_score);
+
+    // identity is the canonical encoding, not the graph name
+    let renamed = OpGraph::new("other-name").gemm(96, 64, 48).gemm(96, 48, 64);
+    assert!(engine.plan_graph(&renamed, Objective::Runtime).unwrap().cache_hit);
+    assert_eq!((cache.misses(), cache.hits()), (1, 2));
+
+    // a different objective is a different key
+    assert!(!engine.plan_graph(&g, Objective::Energy).unwrap().cache_hit);
+    assert_eq!(cache.misses(), 2);
+
+    // a different shape is a different key
+    let other = OpGraph::new("mlp").gemm(96, 64, 48).gemm(96, 48, 64).gemm(96, 32, 48);
+    assert!(!engine.plan_graph(&other, Objective::Runtime).unwrap().cache_hit);
+    assert_eq!(cache.misses(), 3);
+
+    // run_graph reuses the plan cache too — no new searches
+    engine.run_graph(&g, 1).unwrap();
+    assert_eq!(cache.misses(), 3);
+}
+
+/// Infeasible chains are negative-cached: the first plan fails after a
+/// real search attempt, repeats fail fast from the cache, and a pool
+/// with a feasible sibling still plans (scoring the doomed member None).
+#[test]
+fn infeasible_chains_are_negative_cached_in_the_engine() {
+    // a MAERI-style spec whose only cluster size exceeds every stage
+    // dimension enumerates zero mapping candidates
+    let mut spec = ArchSpec::preset(Style::Maeri);
+    spec.name = "maeri-huge-lambda".into();
+    spec.dataflow.cluster = ClusterRule::Fixed {
+        sizes: vec![512],
+        include_sqrt: false,
+    };
+    spec.validate().unwrap();
+    let doomed = Accelerator::from_spec(spec, HwConfig::edge());
+    let g = OpGraph::new("small").gemm(32, 32, 32).gemm(32, 32, 32);
+
+    let engine = Engine::builder().accelerator(doomed.clone()).build().unwrap();
+    let chain = g.lower().unwrap();
+    assert!(engine.plan_graph(&g, Objective::Runtime).is_err());
+    assert!(engine
+        .graph_cache()
+        .is_infeasible(&doomed, &chain, Objective::Runtime));
+    // the repeat fails fast without a search (miss counter unchanged)
+    assert!(engine.plan_graph(&g, Objective::Runtime).is_err());
+    assert_eq!(engine.graph_cache().misses(), 0);
+
+    // a mixed pool routes around the infeasible member
+    let engine = Engine::builder()
+        .accelerator(doomed.clone())
+        .accelerator(Accelerator::of_style(Style::Tpu, HwConfig::edge()))
+        .build()
+        .unwrap();
+    let plan = engine.plan_graph(&g, Objective::Runtime).unwrap();
+    assert_eq!(plan.accelerator_idx, 1);
+    assert_eq!(plan.scores[0], None);
+    assert!(plan.scores[1].is_some());
+    // and the second pass is all-cached (positive + negative entries)
+    assert!(engine.plan_graph(&g, Objective::Runtime).unwrap().cache_hit);
+}
+
+/// The headline acceptance bound, spot-checked through the engine on
+/// both shipped traces (the full 7-architecture sweep lives in
+/// `experiments::graphs`): joint ≤ independent.
+#[test]
+fn joint_plan_never_costs_more_than_independent() {
+    for style in [Style::Maeri, Style::ShiDianNao] {
+        let engine = engine_on(style);
+        for name in graph::TRACES {
+            let g = graph::by_name(name).unwrap();
+            for objective in [Objective::Runtime, Objective::Edp] {
+                let plan = engine.plan_graph(&g, objective).unwrap();
+                assert!(
+                    plan.plan.joint_score <= plan.plan.independent_score + 1e-12,
+                    "{style} {name} {objective}: joint {} > independent {}",
+                    plan.plan.joint_score,
+                    plan.plan.independent_score
+                );
+            }
+        }
+    }
+}
+
+/// Engines sharing a graph cache share joint plans (the sharded
+/// serving story: any instance's search warms every sharing instance).
+#[test]
+fn shared_graph_cache_spans_engines() {
+    use flash_gemm::graph::GraphPlanCache;
+    use std::sync::Arc;
+    let cache = Arc::new(GraphPlanCache::new());
+    let acc = Accelerator::of_style(Style::Nvdla, HwConfig::edge());
+    let a = Engine::builder()
+        .accelerator(acc.clone())
+        .shared_graph_cache(Arc::clone(&cache))
+        .build()
+        .unwrap();
+    let b = Engine::builder()
+        .accelerator(acc)
+        .shared_graph_cache(Arc::clone(&cache))
+        .build()
+        .unwrap();
+    let g = OpGraph::new("shared").gemm(64, 96, 32).gemm(64, 32, 96);
+    assert!(!a.plan_graph(&g, Objective::Runtime).unwrap().cache_hit);
+    assert!(b.plan_graph(&g, Objective::Runtime).unwrap().cache_hit);
+    assert_eq!((cache.misses(), cache.hits()), (1, 1));
+}
